@@ -1,0 +1,181 @@
+//! End-to-end driver (the repo's mandated full-system workload): proves
+//! all three layers compose on a real small workload.
+//!
+//! 1. Loads the AOT artifacts (Layer-1 Pallas kernel inside the Layer-2
+//!    JAX graphs) into the PJRT runtime — covariance panels on the Rust
+//!    request path run through them;
+//! 2. Simulates the paper's §7 setup (d = 5, ARD kernel);
+//! 3. Trains VIF, standalone Vecchia, FITC and SGPR models on the same
+//!    data (Gaussian likelihood), logging the optimization trace;
+//! 4. Trains a VIF-Laplace classifier with iterative methods;
+//! 5. Reports the comparison table the paper's headline claims predict
+//!    (VIF ≥ {Vecchia, FITC, SGPR}) plus runtime and engine statistics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example end_to_end
+//! ```
+//! Results are recorded in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use vifgp::baselines::{self, SgprModel};
+use vifgp::coordinator::ResultsTable;
+use vifgp::data;
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vif::gaussian::{GaussianParams, VifRegression};
+use vifgp::vif::laplace::{PredVarMethod, SolveMode, VifLaplaceModel};
+use vifgp::vif::VifConfig;
+
+fn main() {
+    let used_pjrt =
+        vifgp::runtime::init_from_artifacts(&vifgp::runtime::default_artifact_dir());
+    println!("PJRT engine: {}", if used_pjrt { "ACTIVE (AOT artifacts on the hot path)" } else { "unavailable — native fallback" });
+
+    // ------------------------------------------------------------------
+    // Workload: §7 simulation, d = 5 ARD 3/2-Matérn, n_train/n_test.
+    // ------------------------------------------------------------------
+    let (n_train, n_test) = (3000usize, 1000usize);
+    let d = 5;
+    let mut rng = Rng::seed_from(2026);
+    let x_all = data::uniform_inputs(&mut rng, n_train + n_test, d);
+    let true_ls = data::paper_length_scales(d, Smoothness::ThreeHalves);
+    let true_kernel = ArdMatern::new(1.0, true_ls.clone(), Smoothness::ThreeHalves);
+    let latent = data::simulate_latent_gp(&mut rng, &x_all, &true_kernel);
+    let noise = 0.05;
+    let y_all = data::simulate_response(
+        &mut rng,
+        &latent,
+        &Likelihood::Gaussian { variance: noise },
+    );
+    let idx: Vec<usize> = (0..n_train + n_test).collect();
+    let (tr, te) = idx.split_at(n_train);
+    let (xtr, ytr) = (data::subset_rows(&x_all, tr), data::subset_vec(&y_all, tr));
+    let (xte, yte) = (data::subset_rows(&x_all, te), data::subset_vec(&y_all, te));
+    println!(
+        "workload: n_train={n_train} n_test={n_test} d={d} (ARD 3/2-Matérn, σ²={noise})"
+    );
+
+    let mut table = ResultsTable::new("End-to-end: Gaussian regression (paper-headline shape)");
+    let smoothness = Smoothness::ThreeHalves;
+    let init_kernel = ArdMatern::isotropic(0.5, 0.5, d, smoothness);
+    let (m, m_v) = (100usize, 15usize);
+    let iters = 30;
+
+    // --- VIF ---
+    let config = VifConfig { smoothness, num_inducing: m, num_neighbors: m_v, seed: 1, ..Default::default() };
+    let t0 = Instant::now();
+    let mut vif = VifRegression::new(
+        xtr.clone(),
+        ytr.clone(),
+        config.clone(),
+        GaussianParams { kernel: init_kernel.clone(), noise: 0.2 },
+    );
+    let vif_nll = vif.fit(iters);
+    let vif_time = t0.elapsed().as_secs_f64();
+    println!(
+        "VIF fit: {:.1}s, NLL {:.2}, trace[0] {:.2} → trace[last] {:.2} ({} evals)",
+        vif_time,
+        vif_nll,
+        vif.fit_trace.first().unwrap_or(&f64::NAN),
+        vif.fit_trace.last().unwrap_or(&f64::NAN),
+        vif.fit_trace.len()
+    );
+    let (mean, var) = vif.predict(&xte);
+    record(&mut table, "VIF(m=100,mv=15)", &mean, &var, &yte, vif_time);
+
+    // --- Standalone Vecchia ---
+    let t0 = Instant::now();
+    let mut vec_model = VifRegression::new(
+        xtr.clone(),
+        ytr.clone(),
+        baselines::vecchia_config(m_v, &config),
+        GaussianParams { kernel: init_kernel.clone(), noise: 0.2 },
+    );
+    vec_model.fit(iters);
+    let vec_time = t0.elapsed().as_secs_f64();
+    let (mean, var) = vec_model.predict(&xte);
+    record(&mut table, "Vecchia(mv=15)", &mean, &var, &yte, vec_time);
+
+    // --- FITC ---
+    let t0 = Instant::now();
+    let mut fitc_model = VifRegression::new(
+        xtr.clone(),
+        ytr.clone(),
+        baselines::fitc_config(m, &config),
+        GaussianParams { kernel: init_kernel.clone(), noise: 0.2 },
+    );
+    fitc_model.fit(iters);
+    let fitc_time = t0.elapsed().as_secs_f64();
+    let (mean, var) = fitc_model.predict(&xte);
+    record(&mut table, "FITC(m=100)", &mean, &var, &yte, fitc_time);
+
+    // --- SGPR ---
+    let t0 = Instant::now();
+    let sgpr = SgprModel::fit(&xtr, &ytr, m, smoothness, init_kernel.clone(), 0.2, iters, 1);
+    let sgpr_time = t0.elapsed().as_secs_f64();
+    let (mean, var) = sgpr.predict(&xte);
+    record(&mut table, "SGPR(m=100)", &mean, &var, &yte, sgpr_time);
+
+    println!("\n{}", table.render());
+
+    // ------------------------------------------------------------------
+    // Non-Gaussian leg: Bernoulli VIFLA with iterative methods (Alg 1).
+    // ------------------------------------------------------------------
+    println!("--- VIF-Laplace classification (iterative, FITC preconditioner) ---");
+    let yb_all = data::simulate_response(&mut rng, &latent, &Likelihood::BernoulliLogit);
+    let (ybtr, ybte) = (data::subset_vec(&yb_all, tr), data::subset_vec(&yb_all, te));
+    let mode = SolveMode::Iterative(IterConfig {
+        precond: PrecondType::Fitc,
+        ell: 20,
+        fitc_k: m,
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    let mut clf = VifLaplaceModel::new(
+        xtr.clone(),
+        ybtr,
+        config.clone(),
+        mode,
+        init_kernel,
+        Likelihood::BernoulliLogit,
+    );
+    let clf_nll = clf.fit(20);
+    let clf_time = t0.elapsed().as_secs_f64();
+    let pred = clf.predict(&xte, PredVarMethod::Sbpv, 30);
+    let labels: Vec<bool> = ybte.iter().map(|&v| v > 0.5).collect();
+    println!(
+        "VIFLA fit {:.1}s (L {:.2}); test AUC {:.4} ACC {:.4} LS {:.4}",
+        clf_time,
+        clf_nll,
+        metrics::auc(&pred.response_mean, &labels),
+        metrics::accuracy(&pred.response_mean, &labels),
+        metrics::log_score_bernoulli(&pred.response_mean, &labels),
+    );
+
+    if let Some(engine) = vifgp::runtime::engine() {
+        let stats = *engine.stats.lock().unwrap();
+        println!(
+            "\nPJRT engine stats: {} panel executions served by the AOT artifacts, {} native fallbacks",
+            stats.pjrt_panels, stats.native_panels
+        );
+    }
+    println!("(record these numbers in EXPERIMENTS.md §End-to-end)");
+}
+
+fn record(
+    table: &mut ResultsTable,
+    name: &str,
+    mean: &[f64],
+    var: &[f64],
+    yte: &[f64],
+    time_s: f64,
+) {
+    table.record(name, "RMSE", metrics::rmse(mean, yte));
+    table.record(name, "LS", metrics::log_score_gaussian(mean, var, yte));
+    table.record(name, "CRPS", metrics::crps_gaussian(mean, var, yte));
+    table.record(name, "time_s", time_s);
+}

@@ -1,0 +1,90 @@
+//! Preconditioner shootout (paper §7.2 in miniature): compare VIFDU vs
+//! FITC preconditioned CG on the same VIF-Laplace system — iteration
+//! counts, wall time, and the accuracy of SLQ log-likelihoods against the
+//! Cholesky reference.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example precond_shootout
+//! ```
+
+use std::time::Instant;
+
+use vifgp::data;
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{nll, SolveMode};
+use vifgp::vif::{select_inducing, select_neighbors, VifStructure};
+
+fn main() {
+    vifgp::runtime::init_from_artifacts(&vifgp::runtime::default_artifact_dir());
+
+    let mut rng = Rng::seed_from(5);
+    let n = 1200;
+    let x = data::uniform_inputs(&mut rng, n, 5);
+    let kernel = ArdMatern::new(
+        1.0,
+        vec![0.15, 0.30, 0.45, 0.60, 0.75],
+        Smoothness::Gaussian,
+    );
+    let latent = data::simulate_latent_gp(&mut rng, &x, &kernel);
+    let y = data::simulate_response(&mut rng, &latent, &Likelihood::BernoulliLogit);
+
+    // Assemble one VIF structure (m = 100, m_v = 15).
+    let z = select_inducing(&x, &kernel, 100, 3, &mut rng, None);
+    let lr = z
+        .clone()
+        .map(|z| vifgp::vif::LowRank::build(&x, &kernel, z, 1e-8));
+    let nb = select_neighbors(
+        &x,
+        &kernel,
+        lr.as_ref(),
+        15,
+        NeighborSelection::CorrelationCoverTree,
+    );
+    let s = VifStructure::assemble(&x, &kernel, z, nb, 0.0, 1e-8, 0);
+    let lik = Likelihood::BernoulliLogit;
+
+    // Reference: dense Cholesky.
+    let t0 = Instant::now();
+    let (ref_nll, _) = nll(&s, &x, &kernel, &lik, &y, &SolveMode::Cholesky, &mut rng);
+    let t_chol = t0.elapsed().as_secs_f64();
+    println!("Cholesky reference: L = {ref_nll:.4}  ({t_chol:.2}s)");
+    println!("{:<10} {:>6} {:>12} {:>12} {:>10}", "precond", "ell", "L^VIFLA", "|err|", "time(s)");
+
+    for precond in [PrecondType::Vifdu, PrecondType::Fitc, PrecondType::None] {
+        for ell in [10usize, 50] {
+            let cfg = IterConfig {
+                precond,
+                ell,
+                cg_tol: 1e-2,
+                max_cg: 400,
+                fitc_k: 100,
+                seed: 9,
+            };
+            let t0 = Instant::now();
+            let (got, state) = nll(
+                &s,
+                &x,
+                &kernel,
+                &lik,
+                &y,
+                &SolveMode::Iterative(cfg),
+                &mut rng,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<10} {:>6} {:>12.4} {:>12.4} {:>10.2}   (newton iters {})",
+                format!("{precond:?}"),
+                ell,
+                got,
+                (got - ref_nll).abs(),
+                dt,
+                state.newton_iters
+            );
+        }
+    }
+    println!("\nExpected (paper Fig. 4): FITC beats VIFDU in accuracy and time;\nboth beat unpreconditioned CG; all are far cheaper than Cholesky at scale.");
+}

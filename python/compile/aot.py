@@ -1,0 +1,83 @@
+"""AOT driver: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Runs once at build time (``make artifacts``); Python is never on the
+Rust request path. HLO text (not ``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ../artifacts):
+
+    cov_cross_{half,three_halves,five_halves,gaussian}.hlo.txt
+    fitc_diag.hlo.txt
+    manifest.txt   (shape metadata consumed by rust/src/runtime/)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    xs, zs, var = model.example_args()
+    written = []
+
+    for smoothness in model.SMOOTHNESSES:
+        fn = functools.partial(model.cov_cross, smoothness=smoothness)
+        lowered = jax.jit(fn).lower(xs, zs, var)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"cov_cross_{smoothness}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((os.path.basename(path), len(text)))
+
+    vt = jax.ShapeDtypeStruct((model.PANEL_N, model.PANEL_M), jnp.float64)
+    lowered = jax.jit(model.fitc_diag).lower(vt, var)
+    path = os.path.join(out_dir, "fitc_diag.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    written.append((os.path.basename(path), os.path.getsize(path)))
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"panel_n={model.PANEL_N}\n")
+        f.write(f"panel_m={model.PANEL_M}\n")
+        f.write(f"d_pad={model.D_PAD}\n")
+        f.write(f"tile_n={model.TILE_N}\n")
+        f.write(f"tile_m={model.TILE_M}\n")
+        f.write("dtype=f64\n")
+        for smoothness in model.SMOOTHNESSES:
+            f.write(f"artifact=cov_cross_{smoothness}.hlo.txt\n")
+        f.write("artifact=fitc_diag.hlo.txt\n")
+
+    for name, size in written:
+        print(f"wrote {name} ({size} bytes)")
+    print(f"manifest -> {out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Layer-1 Pallas kernel: tiled ARD-Matérn cross-covariance blocks.
+
+The compute hot-spot of the VIF approximation is evaluating covariance
+panels ``Σ_mn = c_θ(X, Z)`` (paper §2.1): every likelihood evaluation
+builds an n×m cross-covariance plus n·m_v² residual blocks. This kernel
+computes one ``(TILE_N, TILE_M)`` block of the ARD-Matérn cross-covariance
+
+    k(x, z) = σ₁² · k_ν(‖(x − z) / λ‖)
+
+mapped to TPU idioms (DESIGN.md §Hardware-Adaptation):
+
+* the scaled squared distance uses the ‖a−b‖² = ‖a‖² + ‖b‖² − 2a·b
+  expansion, so the cross term is a single (TILE_N, D_PAD)×(D_PAD, TILE_M)
+  matmul that targets the MXU;
+* inputs are pre-scaled by 1/λ and feature-padded to ``D_PAD`` with zero
+  inverse length scales (a padded coordinate contributes nothing);
+* the elementwise Matérn radial profile runs on the VPU;
+* ``BlockSpec`` tiles the (N, M) output over a 2-D grid so each block's
+  VMEM footprint is 2·TILE·D_PAD + TILE² floats.
+
+The kernel MUST run with ``interpret=True`` on this image (CPU PJRT
+cannot execute Mosaic custom-calls); real-TPU performance is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tiling constants shared with the Rust runtime (rust/src/runtime/mod.rs).
+TILE_N = 128
+TILE_M = 128
+D_PAD = 8
+
+SQRT3 = 1.7320508075688772
+SQRT5 = 2.23606797749979
+
+
+def _radial_profile(r, smoothness: str):
+    """Matérn correlation k_ν(r) with k(0) = 1 (static smoothness)."""
+    if smoothness == "half":
+        return jnp.exp(-r)
+    if smoothness == "three_halves":
+        t = SQRT3 * r
+        return (1.0 + t) * jnp.exp(-t)
+    if smoothness == "five_halves":
+        t = SQRT5 * r
+        return (1.0 + t + t * t / 3.0) * jnp.exp(-t)
+    if smoothness == "gaussian":
+        return jnp.exp(-0.5 * r * r)
+    raise ValueError(f"unknown smoothness {smoothness!r}")
+
+
+def _cov_block_kernel(xs_ref, zs_ref, var_ref, out_ref, *, smoothness: str):
+    """One (TILE_N, TILE_M) covariance block.
+
+    ``xs_ref``/``zs_ref`` hold 1/λ-scaled coordinates; ``var_ref`` is a
+    (1, 1) block holding σ₁².
+    """
+    xs = xs_ref[...]  # (TILE_N, D_PAD), already scaled by 1/λ
+    zs = zs_ref[...]  # (TILE_M, D_PAD)
+    # MXU-mapped cross term + VPU norms.
+    xn = jnp.sum(xs * xs, axis=1, keepdims=True)          # (TILE_N, 1)
+    zn = jnp.sum(zs * zs, axis=1, keepdims=True).T        # (1, TILE_M)
+    cross = jax.lax.dot_general(
+        xs, zs, (((1,), (1,)), ((), ())),
+        preferred_element_type=xs.dtype,
+    )                                                      # (TILE_N, TILE_M)
+    r2 = jnp.maximum(xn + zn - 2.0 * cross, 0.0)
+    r = jnp.sqrt(r2)
+    out_ref[...] = var_ref[0, 0] * _radial_profile(r, smoothness)
+
+
+@functools.partial(jax.jit, static_argnames=("smoothness",))
+def cov_block(xs, zs, variance, *, smoothness: str):
+    """Cross-covariance of pre-scaled points via the Pallas kernel.
+
+    ``xs``: (N, D_PAD), ``zs``: (M, D_PAD) with N, M multiples of the tile
+    sizes; ``variance``: scalar σ₁² as shape (1, 1).
+    """
+    n, d = xs.shape
+    m, d2 = zs.shape
+    assert d == D_PAD and d2 == D_PAD, f"feature dim must be padded to {D_PAD}"
+    assert n % TILE_N == 0 and m % TILE_M == 0, "pad N, M to tile multiples"
+    grid = (n // TILE_N, m // TILE_M)
+    return pl.pallas_call(
+        functools.partial(_cov_block_kernel, smoothness=smoothness),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, D_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, D_PAD), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), xs.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xs, zs, variance)
+
+
+def scale_and_pad(x, inv_length_scales, rows, dtype=jnp.float64):
+    """Host-side helper mirroring the Rust runtime's pad-and-mask step."""
+    import numpy as np
+
+    n, d = x.shape
+    assert d <= D_PAD
+    out = np.zeros((rows, D_PAD), dtype=dtype)
+    out[:n, :d] = np.asarray(x) * np.asarray(inv_length_scales)[None, :]
+    return jnp.asarray(out)

@@ -1,0 +1,61 @@
+"""Layer-2 JAX compute graphs for the VIF covariance panels.
+
+These are the functions that get AOT-lowered (by ``aot.py``) into the
+HLO artifacts the Rust runtime executes. Each calls the Layer-1 Pallas
+kernel so the kernel lowers into the same HLO module. Shapes are fixed
+at export time; the Rust side pads inputs to the tile grid and discards
+padded rows/columns (see rust/src/runtime/).
+
+Exported graphs (per Matérn smoothness ν ∈ {1/2, 3/2, 5/2, ∞}):
+
+* ``cov_cross``  — (PANEL_N, D_PAD) × (PANEL_M, D_PAD) → (PANEL_N, PANEL_M)
+  cross-covariance panel (the Σ_mn / prediction hot path);
+* ``fitc_diag``  — the FITC/residual diagonal correction
+  ``σ₁² − Σᵢ (L_m⁻¹ k_i)²`` given a pre-solved panel, fused with the
+  covariance evaluation on the low-rank path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.ard_matern import D_PAD, TILE_M, TILE_N, cov_block
+
+# Panel shape exported to artifacts (Rust pads to these).
+PANEL_N = 512
+PANEL_M = 256
+
+SMOOTHNESSES = ("half", "three_halves", "five_halves", "gaussian")
+
+
+def cov_cross(xs, zs, variance, *, smoothness: str):
+    """Cross-covariance panel; inputs pre-scaled by 1/λ and padded."""
+    return (cov_block(xs, zs, variance, smoothness=smoothness),)
+
+
+def fitc_diag(vt_panel, variance):
+    """Residual diagonal ``σ₁² − ‖v_i‖²`` for a solved panel
+    ``vt_panel = (L_m⁻¹ Σ_m·)ᵀ`` (PANEL_N, PANEL_M-capped rank)."""
+    return (variance[0, 0] - jnp.sum(vt_panel * vt_panel, axis=1),)
+
+
+def example_args(dtype=jnp.float64):
+    import jax
+
+    xs = jax.ShapeDtypeStruct((PANEL_N, D_PAD), dtype)
+    zs = jax.ShapeDtypeStruct((PANEL_M, D_PAD), dtype)
+    var = jax.ShapeDtypeStruct((1, 1), dtype)
+    return xs, zs, var
+
+
+__all__ = [
+    "cov_cross",
+    "fitc_diag",
+    "example_args",
+    "PANEL_N",
+    "PANEL_M",
+    "D_PAD",
+    "TILE_N",
+    "TILE_M",
+    "SMOOTHNESSES",
+]

@@ -1,0 +1,64 @@
+"""Layer-2 checks: exported graph shapes and the AOT round trip."""
+
+import os
+import subprocess
+import sys
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import cov_block_ref
+
+
+def test_cov_cross_shapes_and_values():
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.uniform(size=(model.PANEL_N, model.D_PAD)))
+    zs = jnp.asarray(rng.uniform(size=(model.PANEL_M, model.D_PAD)))
+    var = jnp.full((1, 1), 1.3)
+    (out,) = model.cov_cross(xs, zs, var, smoothness="gaussian")
+    assert out.shape == (model.PANEL_N, model.PANEL_M)
+    want = cov_block_ref(xs, zs, jnp.ones(model.D_PAD), 1.3, "gaussian")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-9)
+
+
+def test_fitc_diag():
+    rng = np.random.default_rng(2)
+    vt = jnp.asarray(rng.normal(size=(model.PANEL_N, model.PANEL_M)) * 0.01)
+    var = jnp.full((1, 1), 2.0)
+    (diag,) = model.fitc_diag(vt, var)
+    assert diag.shape == (model.PANEL_N,)
+    want = 2.0 - np.sum(np.asarray(vt) ** 2, axis=1)
+    np.testing.assert_allclose(np.asarray(diag), want, rtol=1e-10)
+
+
+def test_lowering_produces_hlo_text():
+    import functools
+
+    from compile.aot import to_hlo_text
+
+    xs, zs, var = model.example_args()
+    fn = functools.partial(model.cov_cross, smoothness="half")
+    text = to_hlo_text(jax.jit(fn).lower(xs, zs, var))
+    assert "HloModule" in text
+    assert "f64" in text
+
+
+def test_aot_cli_writes_artifacts(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+        check=True,
+        env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert "manifest.txt" in names
+    for s in model.SMOOTHNESSES:
+        assert f"cov_cross_{s}.hlo.txt" in names
+    assert "fitc_diag.hlo.txt" in names

@@ -1,0 +1,91 @@
+//! Ablation (paper §6 claims + Fig 16):
+//! 1. correlation-distance Vecchia neighbors vs plain Euclidean neighbors
+//!    for the residual process — the paper's cover-tree contribution
+//!    should improve accuracy for anisotropic ARD kernels;
+//! 2. prediction-path runtime scaling in n_p (Fig 16's shape).
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::coordinator::ResultsTable;
+use vifgp::kernels::Smoothness;
+use vifgp::likelihoods::Likelihood;
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifStructure};
+
+fn main() {
+    common::init_runtime();
+    common::header("Ablation: neighbor-selection strategy + prediction runtime (Fig 16)");
+    let n_train = common::scaled(1500);
+    let n_test = common::scaled(600);
+    let noise = 0.001;
+    let (m, m_v) = (48usize, 8usize);
+
+    // -- part 1: selection strategy across dimensions --
+    let mut t = ResultsTable::new("RMSE by neighbor-selection strategy");
+    for d in [2usize, 10, 20] {
+        for rep in 0..3u64 {
+            let w = common::simulate(
+                500 + rep,
+                n_train,
+                n_test,
+                d,
+                Smoothness::ThreeHalves,
+                &Likelihood::Gaussian { variance: noise },
+            );
+            for (name, sel) in [
+                ("correlation", NeighborSelection::CorrelationCoverTree),
+                ("euclidean", NeighborSelection::EuclideanTransformed),
+            ] {
+                let mut rng = Rng::seed_from(5);
+                let z = select_inducing(&w.xtr, &w.kernel, m, 3, &mut rng, None);
+                let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+                let nb = select_neighbors(&w.xtr, &w.kernel, lr.as_ref(), m_v, sel);
+                let s = VifStructure::assemble(&w.xtr, &w.kernel, z, nb, noise, 1e-10, 1);
+                let (mean, _) = gaussian::predict(&s, &w.xtr, &w.kernel, &w.ytr, &w.xte, m_v, sel);
+                t.record(&format!("d={d}"), name, metrics::rmse(&mean, &w.yte));
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // -- part 2: prediction runtime vs n_p (Fig 16 shape) --
+    let w = common::simulate(
+        9,
+        n_train,
+        common::scaled(2400),
+        5,
+        Smoothness::ThreeHalves,
+        &Likelihood::Gaussian { variance: noise },
+    );
+    let mut rng = Rng::seed_from(5);
+    let z = select_inducing(&w.xtr, &w.kernel, m, 3, &mut rng, None);
+    let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+    let nb = select_neighbors(
+        &w.xtr,
+        &w.kernel,
+        lr.as_ref(),
+        m_v,
+        NeighborSelection::CorrelationCoverTree,
+    );
+    let s = VifStructure::assemble(&w.xtr, &w.kernel, z, nb, noise, 1e-10, 1);
+    println!("prediction runtime vs n_p (m={m}, mv={m_v}):");
+    for frac in [4usize, 2, 1] {
+        let np = w.xte.rows() / frac;
+        let xp = vifgp::data::subset_rows(&w.xte, &(0..np).collect::<Vec<_>>());
+        let (_, secs) = common::timed(|| {
+            gaussian::predict(
+                &s,
+                &w.xtr,
+                &w.kernel,
+                &w.ytr,
+                &xp,
+                m_v,
+                NeighborSelection::CorrelationCoverTree,
+            )
+        });
+        println!("  n_p={np:<8} {secs:>8.2}s");
+    }
+}

@@ -1,0 +1,82 @@
+//! Shared helpers for the per-table/figure bench harnesses.
+//!
+//! Every bench prints the same rows/series the paper's artifact reports,
+//! at sizes scaled for this single-core testbed (DESIGN.md §3). Bench
+//! scale can be bumped with `VIFGP_BENCH_SCALE` (default 1.0).
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use vifgp::data;
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::linalg::Mat;
+use vifgp::rng::Rng;
+
+pub fn scale() -> f64 {
+    std::env::var("VIFGP_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(64)
+}
+
+pub fn init_runtime() {
+    let dir = vifgp::runtime::default_artifact_dir();
+    vifgp::runtime::init_from_artifacts(&dir);
+}
+
+/// Simulated §7 workload: uniform inputs, Table-5 ARD scales, latent GP.
+pub struct Workload {
+    pub xtr: Mat,
+    pub ytr: Vec<f64>,
+    pub latent_tr: Vec<f64>,
+    pub xte: Mat,
+    pub yte: Vec<f64>,
+    pub latent_te: Vec<f64>,
+    pub kernel: ArdMatern,
+}
+
+pub fn simulate(
+    seed: u64,
+    n_train: usize,
+    n_test: usize,
+    d: usize,
+    smoothness: Smoothness,
+    lik: &Likelihood,
+) -> Workload {
+    let mut rng = Rng::seed_from(seed);
+    let x = data::uniform_inputs(&mut rng, n_train + n_test, d);
+    let kernel = ArdMatern::new(1.0, data::paper_length_scales(d, smoothness), smoothness);
+    let latent = data::simulate_latent_gp(&mut rng, &x, &kernel);
+    let y = data::simulate_response(&mut rng, &latent, lik);
+    let idx: Vec<usize> = (0..n_train + n_test).collect();
+    let (tr, te) = idx.split_at(n_train);
+    Workload {
+        xtr: data::subset_rows(&x, tr),
+        ytr: data::subset_vec(&y, tr),
+        latent_tr: data::subset_vec(&latent, tr),
+        xte: data::subset_rows(&x, te),
+        yte: data::subset_vec(&y, te),
+        latent_te: data::subset_vec(&latent, te),
+        kernel,
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "(scaled workload for this testbed; shapes/rankings are what the paper reports — see EXPERIMENTS.md)"
+    );
+}

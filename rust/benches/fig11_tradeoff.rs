@@ -1,0 +1,76 @@
+//! Figures 11/12: accuracy vs (training + prediction) runtime across
+//! approximation budgets (m, m_v), with the VIF's two inducing-to-
+//! neighbor ratios, at d = 10. Expected shape: VIF traces the best
+//! frontier; larger budgets help until saturation.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::kernels::Smoothness;
+use vifgp::likelihoods::Likelihood;
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifStructure};
+
+fn main() {
+    common::init_runtime();
+    common::header("Fig 11: accuracy-vs-runtime frontier across budgets (d=10)");
+    let n_train = common::scaled(1500);
+    let n_test = common::scaled(600);
+    let noise = 0.001;
+    let w = common::simulate(
+        77,
+        n_train,
+        n_test,
+        10,
+        Smoothness::ThreeHalves,
+        &Likelihood::Gaussian { variance: noise },
+    );
+
+    println!(
+        "{:<22} {:>10} {:>10} {:>10}",
+        "config", "RMSE", "LS", "time(s)"
+    );
+    // VIF at ratio m/mv = 5 and 10, plus pure baselines.
+    let budgets: &[(&str, usize, usize)] = &[
+        ("VIF m=20,mv=4", 20, 4),
+        ("VIF m=50,mv=10", 50, 10),
+        ("VIF m=100,mv=20", 100, 20),
+        ("VIF m=40,mv=4", 40, 4),
+        ("VIF m=100,mv=10", 100, 10),
+        ("FITC m=50", 50, 0),
+        ("FITC m=150", 150, 0),
+        ("Vecchia mv=10", 0, 10),
+        ("Vecchia mv=30", 0, 30),
+    ];
+    for &(name, m, m_v) in budgets {
+        let ((rmse, ls), secs) = common::timed(|| {
+            let mut rng = Rng::seed_from(5);
+            let z = select_inducing(&w.xtr, &w.kernel, m, 3, &mut rng, None);
+            let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+            let nb = select_neighbors(
+                &w.xtr,
+                &w.kernel,
+                lr.as_ref(),
+                m_v,
+                NeighborSelection::CorrelationCoverTree,
+            );
+            let s = VifStructure::assemble(&w.xtr, &w.kernel, z, nb, noise, 1e-10, 1);
+            let (mean, var) = gaussian::predict(
+                &s,
+                &w.xtr,
+                &w.kernel,
+                &w.ytr,
+                &w.xte,
+                m_v.max(10),
+                NeighborSelection::CorrelationCoverTree,
+            );
+            (
+                metrics::rmse(&mean, &w.yte),
+                metrics::log_score_gaussian(&mean, &var, &w.yte),
+            )
+        });
+        println!("{name:<22} {rmse:>10.4} {ls:>10.3} {secs:>10.2}");
+    }
+}

@@ -1,0 +1,72 @@
+//! Figure 15: FITC-preconditioner rank k sweep — log-marginal-likelihood
+//! error vs the Cholesky reference and runtime, for three VIF configs.
+//! Expected shape: accuracy improves with k; runtime is minimized at an
+//! intermediate k (the paper finds k ≈ 200 at its scale).
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::Smoothness;
+use vifgp::likelihoods::Likelihood;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{nll, SolveMode};
+use vifgp::vif::{select_inducing, select_neighbors, LowRank, VifStructure};
+
+fn main() {
+    common::init_runtime();
+    common::header("Fig 15: FITC-preconditioner rank k sweep");
+    let n = common::scaled(1500);
+    let lik = Likelihood::BernoulliLogit;
+    let w = common::simulate(3, n, 8, 5, Smoothness::Gaussian, &lik);
+
+    println!(
+        "{:<18} {:>6} {:>14} {:>10} {:>10}",
+        "VIF config", "k", "|loglik err|", "time(s)", "avg CG its"
+    );
+    for (cfg_name, m, m_v) in [("m=64,mv=10", 64usize, 10usize), ("m=32,mv=20", 32, 20), ("m=64,mv=4", 64, 4)] {
+        let mut rng = Rng::seed_from(31);
+        let z = select_inducing(&w.xtr, &w.kernel, m, 3, &mut rng, None);
+        let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+        let nb = select_neighbors(
+            &w.xtr,
+            &w.kernel,
+            lr.as_ref(),
+            m_v,
+            NeighborSelection::CorrelationCoverTree,
+        );
+        let s = VifStructure::assemble(&w.xtr, &w.kernel, z, nb, 0.0, 1e-10, 0);
+        let (reference, _) =
+            nll(&s, &w.xtr, &w.kernel, &lik, &w.ytr, &SolveMode::Cholesky, &mut rng);
+        for k in [8usize, 24, 64, 128, 256] {
+            let cfg = IterConfig {
+                precond: PrecondType::Fitc,
+                ell: 25,
+                cg_tol: 1e-2,
+                max_cg: 400,
+                fitc_k: k,
+                seed: 9,
+            };
+            let ((got, _), dt) = common::timed(|| {
+                nll(
+                    &s,
+                    &w.xtr,
+                    &w.kernel,
+                    &lik,
+                    &w.ytr,
+                    &SolveMode::Iterative(cfg),
+                    &mut rng,
+                )
+            });
+            println!(
+                "{:<18} {:>6} {:>14.4} {:>10.2} {:>10}",
+                cfg_name,
+                k,
+                (got - reference).abs(),
+                dt,
+                "-"
+            );
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Figure 3 (+ Fig 13): prediction accuracy of VIF vs FITC vs Vecchia
+//! across Matérn smoothness ν ∈ {1/2, 3/2, 5/2, ∞} at d = 10 (and d = 2).
+//! Expected shape: all improve with smoothness; Vecchia's gap to
+//! VIF/FITC widens as the kernel gets smoother; at d = 2 the gap closes.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::coordinator::ResultsTable;
+use vifgp::kernels::Smoothness;
+use vifgp::likelihoods::Likelihood;
+use vifgp::metrics;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifStructure};
+
+fn main() {
+    common::init_runtime();
+    common::header("Fig 3/13: accuracy vs smoothness ν (d = 10 and d = 2)");
+    let n_train = common::scaled(1500);
+    let n_test = common::scaled(800);
+    let noise = 0.001;
+    let (m, m_v) = (64usize, 10usize);
+    let reps = 3;
+
+    for d in [10usize, 2] {
+        let mut rmse_t = ResultsTable::new(&format!("RMSE (d={d})"));
+        let mut ls_t = ResultsTable::new(&format!("LS (d={d})"));
+        for (label, smoothness) in [
+            ("nu=1/2", Smoothness::Half),
+            ("nu=3/2", Smoothness::ThreeHalves),
+            ("nu=5/2", Smoothness::FiveHalves),
+            ("nu=inf", Smoothness::Gaussian),
+        ] {
+            for rep in 0..reps {
+                let w = common::simulate(
+                    2000 + rep,
+                    n_train,
+                    n_test,
+                    d,
+                    smoothness,
+                    &Likelihood::Gaussian { variance: noise },
+                );
+                for (name, mm, mv) in [("VIF", m, m_v), ("FITC", m, 0), ("Vecchia", 0, m_v)] {
+                    let (mean, var) = predict(&w, noise, mm, mv);
+                    rmse_t.record(label, name, metrics::rmse(&mean, &w.yte));
+                    ls_t.record(label, name, metrics::log_score_gaussian(&mean, &var, &w.yte));
+                }
+            }
+            eprintln!("[fig3] d={d} {label} done");
+        }
+        println!("{}", rmse_t.render());
+        println!("{}", ls_t.render());
+    }
+}
+
+fn predict(w: &common::Workload, noise: f64, m: usize, m_v: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = vifgp::rng::Rng::seed_from(5);
+    let z = select_inducing(&w.xtr, &w.kernel, m, 3, &mut rng, None);
+    let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+    let nb = select_neighbors(
+        &w.xtr,
+        &w.kernel,
+        lr.as_ref(),
+        m_v,
+        NeighborSelection::CorrelationCoverTree,
+    );
+    let s = VifStructure::assemble(&w.xtr, &w.kernel, z, nb, noise, 1e-10, 1);
+    gaussian::predict(
+        &s,
+        &w.xtr,
+        &w.kernel,
+        &w.ytr,
+        &w.xte,
+        m_v.max(10),
+        NeighborSelection::CorrelationCoverTree,
+    )
+}

@@ -1,0 +1,99 @@
+//! Figure 4: accuracy-vs-runtime of SLQ log-marginal-likelihoods under
+//! the VIFDU and FITC preconditioners against the Cholesky reference,
+//! for three VIF configurations and varying probe counts ℓ.
+//! Expected shape: FITC dominates VIFDU on both axes; both are orders of
+//! magnitude cheaper than Cholesky at scale.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::Smoothness;
+use vifgp::likelihoods::Likelihood;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{nll, SolveMode};
+use vifgp::vif::{select_inducing, select_neighbors, LowRank, VifStructure};
+
+fn main() {
+    common::init_runtime();
+    common::header("Fig 4: preconditioner accuracy-vs-runtime (binary likelihood)");
+    let n = common::scaled(1500);
+    let reps = 8;
+
+    let w = common::simulate(
+        7,
+        n,
+        16,
+        5,
+        Smoothness::Gaussian,
+        &Likelihood::BernoulliLogit,
+    );
+    let lik = Likelihood::BernoulliLogit;
+
+    println!(
+        "{:<22} {:<8} {:>4} {:>14} {:>12} {:>10}",
+        "VIF config", "precond", "ell", "RMSE(loglik)", "mean |err|", "time(s)"
+    );
+    for (cfg_name, m, m_v) in [("m=64,mv=10", 64usize, 10usize), ("m=32,mv=20", 32, 20), ("m=64,mv=4", 64, 4)] {
+        let mut rng = Rng::seed_from(17);
+        let z = select_inducing(&w.xtr, &w.kernel, m, 3, &mut rng, None);
+        let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+        let nb = select_neighbors(
+            &w.xtr,
+            &w.kernel,
+            lr.as_ref(),
+            m_v,
+            NeighborSelection::CorrelationCoverTree,
+        );
+        let s = VifStructure::assemble(&w.xtr, &w.kernel, z, nb, 0.0, 1e-10, 0);
+        // Cholesky reference (timed once).
+        let ((reference, _), t_chol) = common::timed(|| {
+            nll(&s, &w.xtr, &w.kernel, &lik, &w.ytr, &SolveMode::Cholesky, &mut rng)
+        });
+        println!(
+            "{:<22} {:<8} {:>4} {:>14} {:>12} {:>10.2}   <- reference",
+            cfg_name, "Cholesky", "-", "-", "-", t_chol
+        );
+        for precond in [PrecondType::Vifdu, PrecondType::Fitc] {
+            for ell in [10usize, 50] {
+                let mut sq = 0.0;
+                let mut abs = 0.0;
+                let mut secs = 0.0;
+                for rep in 0..reps {
+                    let cfg = IterConfig {
+                        precond,
+                        ell,
+                        cg_tol: 1e-2,
+                        max_cg: 400,
+                        fitc_k: 64,
+                        seed: 100 + rep,
+                    };
+                    let ((got, _), dt) = common::timed(|| {
+                        nll(
+                            &s,
+                            &w.xtr,
+                            &w.kernel,
+                            &lik,
+                            &w.ytr,
+                            &SolveMode::Iterative(cfg),
+                            &mut rng,
+                        )
+                    });
+                    sq += (got - reference) * (got - reference);
+                    abs += (got - reference).abs();
+                    secs += dt;
+                }
+                println!(
+                    "{:<22} {:<8} {:>4} {:>14.4} {:>12.4} {:>10.2}",
+                    cfg_name,
+                    format!("{precond:?}"),
+                    ell,
+                    (sq / reps as f64).sqrt(),
+                    abs / reps as f64,
+                    secs / reps as f64
+                );
+            }
+        }
+    }
+}

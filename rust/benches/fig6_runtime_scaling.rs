@@ -1,0 +1,126 @@
+//! Figure 6: marginal-likelihood evaluation time vs sample size n,
+//! inducing points m, and Vecchia neighbors m_v — Gaussian (top row) and
+//! Bernoulli (bottom row) likelihoods; VIF(FITC-precond), VIF(VIFDU),
+//! FITC, and Vecchia(VADU).
+//! Expected shape: ~linear in n; FITC-precond ≤ VIFDU; VIF ≈ Vecchia.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::Smoothness;
+use vifgp::likelihoods::Likelihood;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{nll as laplace_nll, SolveMode};
+use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifStructure};
+
+struct Config {
+    name: &'static str,
+    m: usize,
+    m_v: usize,
+    precond: PrecondType,
+}
+
+fn main() {
+    common::init_runtime();
+    common::header("Fig 6: log-likelihood evaluation time scaling");
+    let base_n = common::scaled(4000);
+    let (base_m, base_mv) = (64usize, 10usize);
+
+    println!("--- vary n (m={base_m}, mv={base_mv}) ---");
+    print_header();
+    for n in [base_n / 4, base_n / 2, base_n, base_n * 2] {
+        run_row(&format!("n={n}"), n, base_m, base_mv);
+    }
+    println!("--- vary m (n={base_n}, mv={base_mv}) ---");
+    print_header();
+    for m in [8usize, 32, 64, 128] {
+        run_row(&format!("m={m}"), base_n, m, base_mv);
+    }
+    println!("--- vary mv (n={base_n}, m={base_m}) ---");
+    print_header();
+    for mv in [2usize, 5, 10, 20] {
+        run_row(&format!("mv={mv}"), base_n, base_m, mv);
+    }
+}
+
+fn print_header() {
+    println!(
+        "{:<10} {:>14} {:>14} {:>14} {:>14} | {:>14} {:>14}",
+        "", "VIF-G(s)", "FITC-G(s)", "Vecchia-G(s)", "", "VIF-FITCp(s)", "VIF-VIFDUp(s)"
+    );
+}
+
+fn run_row(label: &str, n: usize, m: usize, m_v: usize) {
+    let lik_g = Likelihood::Gaussian { variance: 0.05 };
+    let w = common::simulate(9, n, 8, 5, Smoothness::Gaussian, &lik_g);
+    let configs = [
+        Config { name: "VIF", m, m_v, precond: PrecondType::Fitc },
+        Config { name: "FITC", m, m_v: 0, precond: PrecondType::Fitc },
+        Config { name: "Vecchia", m: 0, m_v, precond: PrecondType::Vifdu }, // VADU
+    ];
+    // Gaussian likelihood: exact (Cholesky-free) VIF evaluation.
+    let mut gauss_times = Vec::new();
+    let mut structures = Vec::new();
+    for c in &configs {
+        let mut rng = Rng::seed_from(3);
+        let z = select_inducing(&w.xtr, &w.kernel, c.m, 2, &mut rng, None);
+        let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+        let nb = select_neighbors(
+            &w.xtr,
+            &w.kernel,
+            lr.as_ref(),
+            c.m_v,
+            NeighborSelection::CorrelationCoverTree,
+        );
+        // time the structure assembly + evaluation (neighbor search excluded
+        // as in the paper)
+        let (s, t_build) = common::timed(|| {
+            VifStructure::assemble(&w.xtr, &w.kernel, z.clone(), nb.clone(), 0.05, 1e-10, 1)
+        });
+        let (_, t_eval) = common::timed(|| gaussian::nll(&s, &w.ytr));
+        gauss_times.push(t_build + t_eval);
+        // latent structure for the Bernoulli leg
+        let (sl, _) = common::timed(|| {
+            VifStructure::assemble(&w.xtr, &w.kernel, z, nb, 0.0, 1e-10, 0)
+        });
+        structures.push(sl);
+        let _ = s;
+    }
+    // Bernoulli: iterative VIFLA with FITC and VIFDU preconditioners on
+    // the VIF structure.
+    let lik_b = Likelihood::BernoulliLogit;
+    let yb: Vec<f64> = {
+        let mut rng = Rng::seed_from(77);
+        vifgp::data::simulate_response(&mut rng, &w.latent_tr, &lik_b)
+    };
+    let mut iter_times = Vec::new();
+    for precond in [PrecondType::Fitc, PrecondType::Vifdu] {
+        let cfg = IterConfig {
+            precond,
+            ell: 20,
+            cg_tol: 1e-2,
+            max_cg: 300,
+            fitc_k: m.max(8),
+            seed: 5,
+        };
+        let mut rng = Rng::seed_from(11);
+        let (_, dt) = common::timed(|| {
+            laplace_nll(
+                &structures[0],
+                &w.xtr,
+                &w.kernel,
+                &lik_b,
+                &yb,
+                &SolveMode::Iterative(cfg),
+                &mut rng,
+            )
+        });
+        iter_times.push(dt);
+    }
+    println!(
+        "{:<10} {:>14.2} {:>14.2} {:>14.2} {:>14} | {:>14.2} {:>14.2}",
+        label, gauss_times[0], gauss_times[1], gauss_times[2], "", iter_times[0], iter_times[1]
+    );
+}

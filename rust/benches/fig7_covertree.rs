@@ -1,0 +1,59 @@
+//! Figure 7: cover-tree construction + m_v-nearest-neighbor search time
+//! under the correlation distance, for varying n, d, m, and m_v.
+//! Expected shape: dominated by n and d; ~linear in m (the O(m)
+//! correlation evaluations); weak dependence on m_v.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::data;
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::{select_inducing, select_neighbors, LowRank};
+
+fn run(n: usize, d: usize, m: usize, m_v: usize) -> f64 {
+    let mut rng = Rng::seed_from(4);
+    let x = data::uniform_inputs(&mut rng, n, d);
+    let kernel = ArdMatern::new(
+        1.0,
+        data::paper_length_scales(d, Smoothness::ThreeHalves),
+        Smoothness::ThreeHalves,
+    );
+    let z = select_inducing(&x, &kernel, m, 2, &mut rng, None);
+    let lr = z.map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+    let (_, secs) = common::timed(|| {
+        select_neighbors(
+            &x,
+            &kernel,
+            lr.as_ref(),
+            m_v,
+            NeighborSelection::CorrelationCoverTree,
+        )
+    });
+    secs
+}
+
+fn main() {
+    common::init_runtime();
+    common::header("Fig 7: cover-tree construction + correlation kNN search time");
+    let base_n = common::scaled(8000);
+    let (base_d, base_m, base_mv) = (5usize, 64usize, 10usize);
+
+    println!("--- vary n (d={base_d}, m={base_m}, mv={base_mv}) ---");
+    for n in [base_n / 8, base_n / 4, base_n / 2, base_n] {
+        println!("n={n:<8} {:>8.2}s", run(n, base_d, base_m, base_mv));
+    }
+    println!("--- vary d (n={}) ---", base_n / 2);
+    for d in [2usize, 5, 10, 20] {
+        println!("d={d:<8} {:>8.2}s", run(base_n / 2, d, base_m, base_mv));
+    }
+    println!("--- vary m (n={}) ---", base_n / 2);
+    for m in [8usize, 32, 64, 128] {
+        println!("m={m:<8} {:>8.2}s", run(base_n / 2, base_d, m, base_mv));
+    }
+    println!("--- vary mv (n={}) ---", base_n / 2);
+    for mv in [2usize, 5, 10, 20, 30] {
+        println!("mv={mv:<7} {:>8.2}s", run(base_n / 2, base_d, base_m, mv));
+    }
+}

@@ -1,0 +1,85 @@
+//! §Perf: hot-path micro/macro profile used by the performance pass
+//! (EXPERIMENTS.md §Perf). Times the pipeline stages that dominate a
+//! marginal-likelihood evaluation:
+//!   covariance panels (PJRT vs native), low-rank solves, residual B/D
+//!   construction, CG matvec, and the full Gaussian NLL at scale.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::data;
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifStructure, VifResidualOracle};
+use vifgp::vecchia::ResidualFactor;
+
+fn main() {
+    common::header("§Perf: hot-path stage timings");
+    let n = common::scaled(10_000);
+    let (d, m, m_v) = (5usize, 100usize, 15usize);
+    let mut rng = Rng::seed_from(1);
+    let x = data::uniform_inputs(&mut rng, n, d);
+    let kernel = ArdMatern::new(
+        1.0,
+        data::paper_length_scales(d, Smoothness::ThreeHalves),
+        Smoothness::ThreeHalves,
+    );
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+    // 1. covariance panel: native vs PJRT
+    let z = select_inducing(&x, &kernel, m, 3, &mut rng, None).unwrap();
+    vifgp::runtime::init_from_artifacts(&vifgp::runtime::default_artifact_dir());
+    let (_, t_native) = common::timed(|| kernel.cross_cov(&x, &z));
+    println!("cov panel {n}x{m} native:        {t_native:.3}s");
+    if let Some(engine) = vifgp::runtime::engine() {
+        let (res, t_pjrt) = common::timed(|| engine.cross_cov(&x, &z, &kernel));
+        let _ = res;
+        println!("cov panel {n}x{m} PJRT/artifact: {t_pjrt:.3}s");
+    }
+
+    // 2. low-rank build (panel + triangular solves)
+    let (lr, t_lr) = common::timed(|| LowRank::build(&x, &kernel, z.clone(), 1e-10));
+    println!("LowRank::build (m={m}):          {t_lr:.3}s");
+
+    // 3. neighbor search (cover tree, correlation metric)
+    let (nb, t_nb) = common::timed(|| {
+        select_neighbors(&x, &kernel, Some(&lr), m_v, NeighborSelection::CorrelationCoverTree)
+    });
+    println!("cover-tree neighbors (mv={m_v}):   {t_nb:.3}s");
+
+    // 4. residual B/D construction
+    let oracle = VifResidualOracle { kernel: &kernel, x: &x, lr: Some(&lr), grad_aux: None, extra_params: 0 };
+    let (resid, t_bd) = common::timed(|| ResidualFactor::build(&oracle, nb.clone(), 0.05, 1e-10));
+    println!("residual B/D build:              {t_bd:.3}s");
+    let _ = resid;
+
+    // 5. full structure + NLL
+    let (s, t_asm) = common::timed(|| {
+        VifStructure::assemble(&x, &kernel, Some(z.clone()), nb.clone(), 0.05, 1e-10, 1)
+    });
+    println!("VifStructure::assemble:          {t_asm:.3}s");
+    let (nll_v, t_nll) = common::timed(|| gaussian::nll(&s, &y));
+    println!("gaussian::nll (apply+logdet):    {t_nll:.3}s  (value {nll_v:.1})");
+
+    // 6. Σ_†⁻¹ matvec (the CG hot op)
+    let v: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+    let reps = 50;
+    let (_, t_mv) = common::timed(|| {
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            let w = s.apply_sigma_dagger_inv(&v);
+            acc += w[0];
+        }
+        acc
+    });
+    println!(
+        "Σ_†⁻¹ matvec: {:.3} ms/op ({} reps)",
+        1e3 * t_mv / reps as f64,
+        reps
+    );
+
+    // 7. gradient evaluation (the optimizer hot path)
+    let (_, t_grad) = common::timed(|| gaussian::nll_and_grad(&s, &x, &kernel, &y));
+    println!("gaussian::nll_and_grad:          {t_grad:.3}s");
+}

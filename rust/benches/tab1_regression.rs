@@ -1,0 +1,81 @@
+//! Table 1 (+ Fig 8 left, Table 8): Gaussian-likelihood regression suite
+//! — VIF vs SGPR vs FITC vs Vecchia on the synthetic substitutes for the
+//! UCI/OpenML data sets (DESIGN.md §Substitutions).
+//! Expected shape: VIF best or tied everywhere; Vecchia strong at low d,
+//! inducing-point methods stronger at high d.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::baselines::{self, SgprModel};
+use vifgp::coordinator::ResultsTable;
+use vifgp::data;
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vif::gaussian::{GaussianParams, VifRegression};
+use vifgp::vif::VifConfig;
+
+fn main() {
+    common::init_runtime();
+    common::header("Table 1: regression suite (synthetic UCI substitutes)");
+    let (m, m_v, iters) = (48usize, 8usize, 12usize);
+    let mut rmse_t = ResultsTable::new("RMSE");
+    let mut ls_t = ResultsTable::new("log-score (LS)");
+    let mut crps_t = ResultsTable::new("CRPS");
+    let mut time_t = ResultsTable::new("train+predict seconds");
+
+    for spec in data::regression_suite() {
+        // scale down further for the bench budget
+        let spec = data::SuiteSpec { n: (spec.n / 2).min(common::scaled(2000)), ..spec };
+        let mut rng = Rng::seed_from(911);
+        let (x, y, _) = data::generate_suite_data(&spec, &mut rng);
+        let n_test = spec.n / 4;
+        let (tr, te) = data::train_test_split(&mut rng, spec.n, n_test);
+        let (xtr, ytr) = (data::subset_rows(&x, &tr), data::subset_vec(&y, &tr));
+        let (xte, yte) = (data::subset_rows(&x, &te), data::subset_vec(&y, &te));
+        let d = x.cols();
+        let smoothness = Smoothness::ThreeHalves;
+        let init = GaussianParams {
+            kernel: ArdMatern::isotropic(1.0, 0.5, d, smoothness),
+            noise: 0.3,
+        };
+        let base = VifConfig {
+            smoothness,
+            num_inducing: m,
+            num_neighbors: m_v,
+            seed: 1,
+            ..Default::default()
+        };
+        let configs: Vec<(&str, VifConfig)> = vec![
+            ("VIF", base.clone()),
+            ("Vecchia", baselines::vecchia_config(m_v, &base)),
+            ("FITC", baselines::fitc_config(m, &base)),
+        ];
+        for (name, cfg) in configs {
+            let ((mean, var), secs) = common::timed(|| {
+                let mut model = VifRegression::new(xtr.clone(), ytr.clone(), cfg, init.clone());
+                model.fit(iters);
+                model.predict(&xte)
+            });
+            rmse_t.record(spec.name, name, metrics::rmse(&mean, &yte));
+            ls_t.record(spec.name, name, metrics::log_score_gaussian(&mean, &var, &yte));
+            crps_t.record(spec.name, name, metrics::crps_gaussian(&mean, &var, &yte));
+            time_t.record(spec.name, name, secs);
+        }
+        // SGPR baseline
+        let ((mean, var), secs) = common::timed(|| {
+            let model = SgprModel::fit(&xtr, &ytr, m, smoothness, init.kernel.clone(), 0.3, iters, 1);
+            model.predict(&xte)
+        });
+        rmse_t.record(spec.name, "SGPR", metrics::rmse(&mean, &yte));
+        ls_t.record(spec.name, "SGPR", metrics::log_score_gaussian(&mean, &var, &yte));
+        crps_t.record(spec.name, "SGPR", metrics::crps_gaussian(&mean, &var, &yte));
+        time_t.record(spec.name, "SGPR", secs);
+        eprintln!("[tab1] {} done", spec.name);
+    }
+    println!("{}", rmse_t.render());
+    println!("{}", ls_t.render());
+    println!("{}", crps_t.render());
+    println!("{}", time_t.render());
+}

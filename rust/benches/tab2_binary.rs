@@ -1,0 +1,88 @@
+//! Table 2 (+ Fig 8 right, Table 9): binary-classification suite — VIF
+//! vs Vecchia vs FITC Laplace approximations with iterative methods on
+//! the synthetic substitutes. Expected shape: small differences between
+//! methods (binary data is weakly informative), VIF fastest/most stable.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::baselines;
+use vifgp::coordinator::ResultsTable;
+use vifgp::data;
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vif::laplace::{PredVarMethod, SolveMode, VifLaplaceModel};
+use vifgp::vif::VifConfig;
+
+fn main() {
+    common::init_runtime();
+    common::header("Table 2: binary classification suite (synthetic substitutes)");
+    let (m, m_v, iters) = (32usize, 6usize, 8usize);
+    let mut auc_t = ResultsTable::new("AUC");
+    let mut brier_t = ResultsTable::new("RMSE (Brier)");
+    let mut acc_t = ResultsTable::new("ACC");
+    let mut ls_t = ResultsTable::new("LS");
+    let mut time_t = ResultsTable::new("train+predict seconds");
+
+    for spec in data::binary_suite() {
+        let spec = data::SuiteSpec { n: (spec.n / 2).min(common::scaled(1400)), ..spec };
+        let mut rng = Rng::seed_from(417);
+        let (x, y, lik) = data::generate_suite_data(&spec, &mut rng);
+        let n_test = spec.n / 4;
+        let (tr, te) = data::train_test_split(&mut rng, spec.n, n_test);
+        let (xtr, ytr) = (data::subset_rows(&x, &tr), data::subset_vec(&y, &tr));
+        let (xte, yte) = (data::subset_rows(&x, &te), data::subset_vec(&y, &te));
+        let labels: Vec<bool> = yte.iter().map(|&v| v > 0.5).collect();
+        let d = x.cols();
+        let smoothness = Smoothness::ThreeHalves;
+        let base = VifConfig {
+            smoothness,
+            num_inducing: m,
+            num_neighbors: m_v,
+            seed: 1,
+            ..Default::default()
+        };
+        for (name, cfg, precond) in [
+            ("VIF", base.clone(), PrecondType::Fitc),
+            ("Vecchia", baselines::vecchia_config(m_v, &base), PrecondType::Vifdu), // VADU
+            ("FITC", baselines::fitc_config(m, &base), PrecondType::Fitc),
+        ] {
+            let mode = SolveMode::Iterative(IterConfig {
+                precond,
+                ell: 15,
+                fitc_k: m,
+                ..Default::default()
+            });
+            let init = ArdMatern::isotropic(1.0, 0.5, d, smoothness);
+            let (pred, secs) = common::timed(|| {
+                let mut model = VifLaplaceModel::new(
+                    xtr.clone(),
+                    ytr.clone(),
+                    cfg,
+                    mode,
+                    init,
+                    lik.clone(),
+                );
+                model.fit(iters);
+                model.predict(&xte, PredVarMethod::Sbpv, 20)
+            });
+            auc_t.record(spec.name, name, metrics::auc(&pred.response_mean, &labels));
+            brier_t.record(spec.name, name, metrics::brier_rmse(&pred.response_mean, &labels));
+            acc_t.record(spec.name, name, metrics::accuracy(&pred.response_mean, &labels));
+            ls_t.record(
+                spec.name,
+                name,
+                metrics::log_score_bernoulli(&pred.response_mean, &labels),
+            );
+            time_t.record(spec.name, name, secs);
+        }
+        eprintln!("[tab2] {} done", spec.name);
+    }
+    println!("{}", auc_t.render());
+    println!("{}", brier_t.render());
+    println!("{}", acc_t.render());
+    println!("{}", ls_t.render());
+    println!("{}", time_t.render());
+}

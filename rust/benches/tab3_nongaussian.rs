@@ -1,0 +1,80 @@
+//! Table 3: Poisson / Student-t / Gamma regression suite — VIF-Laplace
+//! vs Vecchia-Laplace vs FITC-Laplace with iterative methods on the
+//! synthetic substitutes. Expected shape: VIF best or tied on accuracy.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::baselines;
+use vifgp::coordinator::ResultsTable;
+use vifgp::data;
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vif::laplace::{PredVarMethod, SolveMode, VifLaplaceModel};
+use vifgp::vif::VifConfig;
+
+fn main() {
+    common::init_runtime();
+    common::header("Table 3: non-Gaussian regression suite (synthetic substitutes)");
+    let (m, m_v, iters) = (32usize, 6usize, 8usize);
+    let mut rmse_t = ResultsTable::new("RMSE (response)");
+    let mut ls_t = ResultsTable::new("LS (predictive log-score)");
+    let mut time_t = ResultsTable::new("train+predict seconds");
+
+    for spec in data::nongaussian_suite() {
+        let spec = data::SuiteSpec { n: (spec.n / 2).min(common::scaled(1200)), ..spec };
+        let mut rng = Rng::seed_from(1213);
+        let (x, y, lik) = data::generate_suite_data(&spec, &mut rng);
+        let n_test = spec.n / 4;
+        let (tr, te) = data::train_test_split(&mut rng, spec.n, n_test);
+        let (xtr, ytr) = (data::subset_rows(&x, &tr), data::subset_vec(&y, &tr));
+        let (xte, yte) = (data::subset_rows(&x, &te), data::subset_vec(&y, &te));
+        let d = x.cols();
+        let smoothness = Smoothness::ThreeHalves;
+        let base = VifConfig {
+            smoothness,
+            num_inducing: m,
+            num_neighbors: m_v,
+            seed: 1,
+            ..Default::default()
+        };
+        for (name, cfg, precond) in [
+            ("VIF", base.clone(), PrecondType::Fitc),
+            ("Vecchia", baselines::vecchia_config(m_v, &base), PrecondType::Vifdu),
+            ("FITC", baselines::fitc_config(m, &base), PrecondType::Fitc),
+        ] {
+            let mode = SolveMode::Iterative(IterConfig {
+                precond,
+                ell: 15,
+                fitc_k: m,
+                ..Default::default()
+            });
+            let init = ArdMatern::isotropic(1.0, 0.5, d, smoothness);
+            let ((pred, fitted_lik), secs) = common::timed(|| {
+                let mut model = VifLaplaceModel::new(
+                    xtr.clone(),
+                    ytr.clone(),
+                    cfg,
+                    mode,
+                    init,
+                    lik.clone(),
+                );
+                model.fit(iters);
+                (model.predict(&xte, PredVarMethod::Sbpv, 20), model.lik.clone())
+            });
+            rmse_t.record(spec.name, name, metrics::rmse(&pred.response_mean, &yte));
+            ls_t.record(
+                spec.name,
+                name,
+                fitted_lik.log_score(&yte, &pred.latent_mean, &pred.latent_var),
+            );
+            time_t.record(spec.name, name, secs);
+        }
+        eprintln!("[tab3] {} done", spec.name);
+    }
+    println!("{}", rmse_t.render());
+    println!("{}", ls_t.render());
+    println!("{}", time_t.render());
+}

@@ -1,0 +1,82 @@
+//! Table 6: SLQ log-marginal-likelihood accuracy and runtime across the
+//! CG convergence tolerance δ and the number of probe vectors ℓ, for
+//! both preconditioners. Expected shape: δ below 0.01 buys nothing;
+//! ℓ drives accuracy more than δ.
+
+#[path = "common.rs"]
+mod common;
+
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::Smoothness;
+use vifgp::likelihoods::Likelihood;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{nll, SolveMode};
+use vifgp::vif::{select_inducing, select_neighbors, LowRank, VifStructure};
+
+fn main() {
+    common::init_runtime();
+    common::header("Table 6: CG tolerance δ × probes ℓ grid");
+    let n = common::scaled(1200);
+    let (m, m_v) = (48usize, 8usize);
+    let lik = Likelihood::BernoulliLogit;
+    let w = common::simulate(5, n, 8, 5, Smoothness::Gaussian, &lik);
+    let reps = 5;
+
+    let mut rng = Rng::seed_from(61);
+    let z = select_inducing(&w.xtr, &w.kernel, m, 3, &mut rng, None);
+    let lr = z.clone().map(|z| LowRank::build(&w.xtr, &w.kernel, z, 1e-10));
+    let nb = select_neighbors(
+        &w.xtr,
+        &w.kernel,
+        lr.as_ref(),
+        m_v,
+        NeighborSelection::CorrelationCoverTree,
+    );
+    let s = VifStructure::assemble(&w.xtr, &w.kernel, z, nb, 0.0, 1e-10, 0);
+    let (reference, _) = nll(&s, &w.xtr, &w.kernel, &lik, &w.ytr, &SolveMode::Cholesky, &mut rng);
+    println!("Cholesky reference L = {reference:.4}");
+    println!(
+        "{:<8} {:<10} {:>6} {:>14} {:>10}",
+        "precond", "delta", "ell", "RMSE(loglik)", "time(s)"
+    );
+    for precond in [PrecondType::Fitc, PrecondType::Vifdu] {
+        for delta in [1.0f64, 0.1, 0.01, 0.001] {
+            for ell in [10usize, 50] {
+                let mut sq = 0.0;
+                let mut secs = 0.0;
+                for rep in 0..reps {
+                    let cfg = IterConfig {
+                        precond,
+                        ell,
+                        cg_tol: delta,
+                        max_cg: 500,
+                        fitc_k: m,
+                        seed: 500 + rep,
+                    };
+                    let ((got, _), dt) = common::timed(|| {
+                        nll(
+                            &s,
+                            &w.xtr,
+                            &w.kernel,
+                            &lik,
+                            &w.ytr,
+                            &SolveMode::Iterative(cfg),
+                            &mut rng,
+                        )
+                    });
+                    sq += (got - reference) * (got - reference);
+                    secs += dt;
+                }
+                println!(
+                    "{:<8} {:<10} {:>6} {:>14.4} {:>10.2}",
+                    format!("{precond:?}"),
+                    delta,
+                    ell,
+                    (sq / reps as f64).sqrt(),
+                    secs / reps as f64
+                );
+            }
+        }
+    }
+}

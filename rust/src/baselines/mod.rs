@@ -1,0 +1,49 @@
+//! Baseline GP approximations the paper compares against.
+//!
+//! * **Standalone Vecchia** — VIF with `m = 0` inducing points; for
+//!   non-Gaussian likelihoods the VIFDU preconditioner degenerates to
+//!   exactly the VADU preconditioner of Kündig & Sigrist (2025).
+//! * **FITC** — VIF with `m_v = 0` Vecchia neighbors.
+//! * **SGPR** (Titsias 2009) — the variational inducing-point baseline
+//!   standing in for the paper's GPyTorch comparator class (DESIGN.md
+//!   §Substitutions), implemented from the collapsed evidence lower
+//!   bound with Woodbury algebra.
+
+pub mod sgpr;
+
+pub use sgpr::SgprModel;
+
+use crate::vecchia::neighbors::NeighborSelection;
+use crate::vif::VifConfig;
+
+/// A standalone Vecchia approximation (m = 0), correlation-based
+/// neighbor selection as in §6.
+pub fn vecchia_config(m_v: usize, base: &VifConfig) -> VifConfig {
+    VifConfig {
+        num_inducing: 0,
+        num_neighbors: m_v,
+        selection: NeighborSelection::CorrelationCoverTree,
+        ..base.clone()
+    }
+}
+
+/// A FITC approximation (m_v = 0).
+pub fn fitc_config(m: usize, base: &VifConfig) -> VifConfig {
+    VifConfig { num_inducing: m, num_neighbors: 0, ..base.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_are_special_cases() {
+        let base = VifConfig::default();
+        let v = vecchia_config(25, &base);
+        assert_eq!(v.num_inducing, 0);
+        assert_eq!(v.num_neighbors, 25);
+        let f = fitc_config(150, &base);
+        assert_eq!(f.num_inducing, 150);
+        assert_eq!(f.num_neighbors, 0);
+    }
+}

@@ -1,0 +1,125 @@
+//! L3 coordinator: parallel execution substrate, experiment scheduling,
+//! and result aggregation.
+//!
+//! The offline registry has no `rayon`/`tokio`, so this module provides
+//! the coordination primitives the library needs from `std::thread`:
+//!
+//! * [`parallel_for_chunks`] / [`parallel_map`] — scoped data-parallel
+//!   loops used by the Vecchia factor build, covariance panels, CG probe
+//!   vectors, and cover-tree partitions;
+//! * [`ThreadPool`] — a long-lived work queue for heterogeneous jobs
+//!   (cross-validation folds, parameter sweeps);
+//! * [`ResultsTable`] — experiment-result accumulation and rendering in
+//!   the row format the paper's tables use.
+
+mod pool;
+mod table;
+
+pub use pool::ThreadPool;
+pub use table::ResultsTable;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (`VIFGP_THREADS` overrides the
+/// detected parallelism).
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("VIFGP_THREADS") {
+        if let Ok(v) = s.parse::<usize>() {
+            return v.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on the worker
+/// threads. `f` must be safe to run concurrently on disjoint ranges.
+pub fn parallel_for_chunks(n: usize, f: impl Fn(usize, usize) + Sync) {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 256 {
+        f(0, n);
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    // Dynamic scheduling in modest grains to balance uneven per-item cost
+    // (early Vecchia rows have fewer neighbors than later ones).
+    let grain = (n / (workers * 8)).max(32);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let start = counter.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                f(start, end);
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` writing `out[i] = f(i)`. The output vector is
+/// index-partitioned across threads.
+pub fn parallel_map<T: Send + Sync + Default + Clone>(
+    n: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SyncSlice(out.as_mut_ptr());
+        parallel_for_chunks(n, |start, end| {
+            for i in start..end {
+                // SAFETY: each index is visited exactly once across all chunks.
+                unsafe {
+                    *out_ptr.get().add(i) = f(i);
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Shares a raw pointer across scoped threads; callers guarantee disjoint
+/// index access. (A method accessor is used so the 2021-edition closure
+/// captures the wrapper, not the raw-pointer field.)
+pub struct SyncSlice<T>(pub *mut T);
+unsafe impl<T: Send> Sync for SyncSlice<T> {}
+impl<T> SyncSlice<T> {
+    #[inline]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_everything_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(n, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let out = parallel_map(5000, |i| (i * i) as u64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn small_n_runs_inline() {
+        let out = parallel_map(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,132 @@
+//! Experiment-result table: accumulate (row, column) → repeated values,
+//! render mean ± 2·SE in the format the paper's tables use.
+
+use std::collections::BTreeMap;
+
+/// A results table keyed by row label and column label; each cell holds
+/// all replicate values so means and standard errors can be reported.
+#[derive(Default)]
+pub struct ResultsTable {
+    title: String,
+    cells: BTreeMap<(String, String), Vec<f64>>,
+    row_order: Vec<String>,
+    col_order: Vec<String>,
+}
+
+impl ResultsTable {
+    pub fn new(title: &str) -> Self {
+        ResultsTable { title: title.to_string(), ..Default::default() }
+    }
+
+    /// Record one replicate value in cell (row, col).
+    pub fn record(&mut self, row: &str, col: &str, value: f64) {
+        if !self.row_order.iter().any(|r| r == row) {
+            self.row_order.push(row.to_string());
+        }
+        if !self.col_order.iter().any(|c| c == col) {
+            self.col_order.push(col.to_string());
+        }
+        self.cells
+            .entry((row.to_string(), col.to_string()))
+            .or_default()
+            .push(value);
+    }
+
+    /// Mean of a cell, NaN if empty.
+    pub fn mean(&self, row: &str, col: &str) -> f64 {
+        match self.cells.get(&(row.to_string(), col.to_string())) {
+            Some(v) if !v.is_empty() => v.iter().sum::<f64>() / v.len() as f64,
+            _ => f64::NAN,
+        }
+    }
+
+    /// Two standard errors of a cell (paper's ±2 SE convention).
+    pub fn two_se(&self, row: &str, col: &str) -> f64 {
+        match self.cells.get(&(row.to_string(), col.to_string())) {
+            Some(v) if v.len() > 1 => {
+                let n = v.len() as f64;
+                let mean = v.iter().sum::<f64>() / n;
+                let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+                2.0 * (var / n).sqrt()
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Render the table as aligned text (mean ± 2SE per cell).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let w = 22;
+        out.push_str(&format!("{:<18}", ""));
+        for c in &self.col_order {
+            out.push_str(&format!("{:>w$}", c, w = w));
+        }
+        out.push('\n');
+        for r in &self.row_order {
+            out.push_str(&format!("{:<18}", r));
+            for c in &self.col_order {
+                let m = self.mean(r, c);
+                let se = self.two_se(r, c);
+                let cell = if m.is_nan() {
+                    "—".to_string()
+                } else if se > 0.0 {
+                    format!("{m:.4}±{se:.4}")
+                } else {
+                    format!("{m:.4}")
+                };
+                out.push_str(&format!("{:>w$}", cell, w = w));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (one line per cell with all replicates averaged).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("row,col,mean,two_se,n\n");
+        for r in &self.row_order {
+            for c in &self.col_order {
+                if let Some(v) = self.cells.get(&(r.clone(), c.clone())) {
+                    out.push_str(&format!(
+                        "{r},{c},{},{},{}\n",
+                        self.mean(r, c),
+                        self.two_se(r, c),
+                        v.len()
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_se() {
+        let mut t = ResultsTable::new("t");
+        t.record("a", "rmse", 1.0);
+        t.record("a", "rmse", 3.0);
+        assert!((t.mean("a", "rmse") - 2.0).abs() < 1e-12);
+        // sample var = 2, se = sqrt(2/2)=1, 2se=2
+        assert!((t.two_se("a", "rmse") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_labels() {
+        let mut t = ResultsTable::new("demo");
+        t.record("VIF", "rmse", 0.5);
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains("VIF") && s.contains("rmse"));
+        assert!(t.to_csv().contains("VIF,rmse,0.5"));
+    }
+
+    #[test]
+    fn missing_cell_is_nan() {
+        let t = ResultsTable::new("x");
+        assert!(t.mean("nope", "nope").is_nan());
+    }
+}

@@ -1,0 +1,292 @@
+//! Modified cover tree for ordered correlation-distance neighbor search
+//! (paper §6, Algorithms 3 and 4).
+//!
+//! Differences from Beygelzimer et al. (2006), following the paper:
+//!
+//! * **Ordered insertion** — at every level the next knot extracted from a
+//!   cover set is the remaining point with the *smallest index*. As a
+//!   consequence every descendant of a knot has a larger index than the
+//!   knot itself, so an ordered-Vecchia query for point `i` may prune any
+//!   child with index `≥ i` together with its entire subtree.
+//! * **Bounded metric** — the correlation distance `d_c ∈ [0, 1]`, so the
+//!   root radius is `R_max = 1` and level `l` uses `R_l = 2^{−l}`.
+//!
+//! The metric is supplied as a closure over point indices, which lets the
+//! same tree code serve the residual-process correlation metric of the
+//! VIF approximation and the plain kernel-correlation metric of a
+//! standalone Vecchia approximation.
+
+/// Cover tree over points `0..n` under a metric bounded by 1.
+pub struct CoverTree {
+    /// `children[k]` = knots extracted from `k`'s cover set, ascending.
+    children: Vec<Vec<u32>>,
+    /// Number of levels (root at level 1).
+    depth: usize,
+}
+
+/// Per-query scratch buffers, reusable across queries to avoid the
+/// per-query allocation + hash-map overhead that dominated the original
+/// implementation (§Perf log in EXPERIMENTS.md).
+pub struct QueryScratch {
+    /// stamp-versioned distance cache: `dist[i]` valid iff `stamp[i] == cur`
+    dist: Vec<f64>,
+    stamp: Vec<u32>,
+    /// membership marker for candidate dedup, same stamping scheme
+    member: Vec<u32>,
+    cur: u32,
+}
+
+impl QueryScratch {
+    pub fn new(n: usize) -> Self {
+        QueryScratch {
+            dist: vec![0.0; n],
+            stamp: vec![0; n],
+            member: vec![0; n],
+            cur: 0,
+        }
+    }
+}
+
+impl CoverTree {
+    /// Build the tree (Algorithm 3). `dist(i, j)` must be symmetric,
+    /// nonnegative and `≤ 1`.
+    pub fn build(n: usize, dist: &(dyn Fn(usize, usize) -> f64 + Sync)) -> Self {
+        let mut children: Vec<Vec<u32>> = vec![vec![]; n];
+        if n == 0 {
+            return CoverTree { children, depth: 0 };
+        }
+        // Cover sets of the knots at the *current* level, as (knot, points).
+        // Point lists are kept ascending so "smallest index" is the front.
+        let mut level_sets: Vec<(u32, Vec<u32>)> = vec![(0, (1..n as u32).collect())];
+        let mut depth = 1usize;
+        let mut level = 1usize;
+        while !level_sets.is_empty() {
+            let r_l = 0.5f64.powi(level as i32);
+            let mut next_level: Vec<(u32, Vec<u32>)> = Vec::new();
+            for (knot, mut cover) in level_sets {
+                while !cover.is_empty() {
+                    // Extract the smallest-index point as a new knot.
+                    let new_knot = cover[0];
+                    children[knot as usize].push(new_knot);
+                    let rest = &cover[1..];
+                    // Partition remaining points by distance to the new knot.
+                    let mut mine: Vec<u32> = Vec::new();
+                    let mut keep: Vec<u32> = Vec::with_capacity(rest.len());
+                    for &s in rest {
+                        if dist(s as usize, new_knot as usize) <= r_l {
+                            mine.push(s);
+                        } else {
+                            keep.push(s);
+                        }
+                    }
+                    if !mine.is_empty() {
+                        next_level.push((new_knot, mine));
+                    }
+                    cover = keep;
+                }
+            }
+            if !next_level.is_empty() {
+                depth += 1;
+            }
+            level += 1;
+            level_sets = next_level;
+        }
+        CoverTree { children, depth }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Ordered m_v-nearest-neighbor query (Algorithm 4): the `m_v`
+    /// closest points with index `< i` under the tree's metric.
+    /// The returned indices are unsorted.
+    pub fn knn_ordered(
+        &self,
+        i: usize,
+        m_v: usize,
+        dist: &dyn Fn(usize, usize) -> f64,
+    ) -> Vec<u32> {
+        let mut scratch = QueryScratch::new(self.children.len());
+        self.knn_ordered_with(i, m_v, dist, &mut scratch)
+    }
+
+    /// [`Self::knn_ordered`] with caller-provided scratch buffers (the
+    /// batch path reuses one `QueryScratch` per worker — see §Perf).
+    pub fn knn_ordered_with(
+        &self,
+        i: usize,
+        m_v: usize,
+        dist: &dyn Fn(usize, usize) -> f64,
+        scratch: &mut QueryScratch,
+    ) -> Vec<u32> {
+        if i == 0 || m_v == 0 {
+            return vec![];
+        }
+        if i <= m_v {
+            // N(i) = {0..i-1} for i ≤ m_v (paper's convention).
+            return (0..i as u32).collect();
+        }
+        scratch.cur = scratch.cur.wrapping_add(1);
+        if scratch.cur == 0 {
+            // stamp wrapped: reset (rare)
+            scratch.stamp.iter_mut().for_each(|s| *s = 0);
+            scratch.member.iter_mut().for_each(|s| *s = 0);
+            scratch.cur = 1;
+        }
+        let cur = scratch.cur;
+        let iu = i as u32;
+        let dist_to = |s: u32, scratch: &mut QueryScratch| -> f64 {
+            let si = s as usize;
+            if scratch.stamp[si] == cur {
+                scratch.dist[si]
+            } else {
+                let d = dist(si, i);
+                scratch.stamp[si] = cur;
+                scratch.dist[si] = d;
+                d
+            }
+        };
+        let mut q: Vec<u32> = vec![0]; // root = point 0 (< i always here)
+        let mut dists: Vec<f64> = Vec::new();
+        let mut sorted: Vec<f64> = Vec::new();
+        for j in 1..=self.depth {
+            // C = Q ∪ {children of Q with index < i}, dedup via stamping.
+            let mut c: Vec<u32> = Vec::with_capacity(q.len() * 2);
+            for &s in &q {
+                if scratch.member[s as usize] != cur {
+                    scratch.member[s as usize] = cur;
+                    c.push(s);
+                }
+            }
+            for &k in &q {
+                for &ch in &self.children[k as usize] {
+                    if ch >= iu {
+                        break; // children ascending; subtree indices even larger
+                    }
+                    if scratch.member[ch as usize] != cur {
+                        scratch.member[ch as usize] = cur;
+                        c.push(ch);
+                    }
+                }
+            }
+            // clear membership stamps for the next level (cheap: only |c|)
+            for &s in &c {
+                scratch.member[s as usize] = cur.wrapping_sub(1);
+            }
+            // m_v-th smallest distance in C (1 if |C| < m_v).
+            dists.clear();
+            dists.extend(c.iter().map(|&s| dist_to(s, scratch)));
+            let d_mv = if dists.len() < m_v {
+                1.0
+            } else {
+                sorted.clear();
+                sorted.extend_from_slice(&dists);
+                sorted.select_nth_unstable_by(m_v - 1, |a, b| a.total_cmp(b));
+                sorted[m_v - 1]
+            };
+            let thresh = d_mv + 0.5f64.powi(j as i32 - 1);
+            q.clear();
+            for (idx, &s) in c.iter().enumerate() {
+                if dists[idx] <= thresh {
+                    q.push(s);
+                }
+            }
+            if q.len() <= m_v && j >= self.depth {
+                break;
+            }
+        }
+        // Brute force the m_v nearest within the candidate set.
+        let mut cand: Vec<(f64, u32)> = q
+            .into_iter()
+            .map(|s| (dist_to(s, scratch), s))
+            .collect();
+        if cand.len() > m_v {
+            cand.select_nth_unstable_by(m_v - 1, |a, b| a.0.total_cmp(&b.0));
+            cand.truncate(m_v);
+        }
+        cand.into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// Total number of parent→child edges (diagnostics).
+    pub fn num_edges(&self) -> usize {
+        self.children.iter().map(|c| c.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gauss_metric(x: Vec<(f64, f64)>, ls: f64) -> impl Fn(usize, usize) -> f64 + Sync {
+        move |i: usize, j: usize| {
+            let (dx, dy) = (x[i].0 - x[j].0, x[i].1 - x[j].1);
+            let r2 = (dx * dx + dy * dy) / (ls * ls);
+            (1.0f64 - (-0.5 * r2).exp()).sqrt()
+        }
+    }
+
+    #[test]
+    fn every_point_becomes_a_knot_exactly_once() {
+        let mut rng = Rng::seed_from(3);
+        let n = 200;
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+        let metric = gauss_metric(pts, 0.3);
+        let tree = CoverTree::build(n, &metric);
+        // Edges = n - 1 (every point except the root has exactly one parent).
+        assert_eq!(tree.num_edges(), n - 1);
+    }
+
+    #[test]
+    fn children_have_larger_indices_than_parent() {
+        let mut rng = Rng::seed_from(5);
+        let n = 150;
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+        let metric = gauss_metric(pts, 0.25);
+        let tree = CoverTree::build(n, &metric);
+        for (k, ch) in tree.children.iter().enumerate() {
+            for &c in ch {
+                assert!(c as usize > k, "child {c} not after parent {k}");
+            }
+            // ascending order (needed by the query's early break)
+            assert!(ch.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let mut rng = Rng::seed_from(11);
+        let n = 250;
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+        let metric = gauss_metric(pts, 0.2);
+        let tree = CoverTree::build(n, &metric);
+        for &i in &[10usize, 57, 123, 249] {
+            let mut got = tree.knn_ordered(i, 6, &metric);
+            got.sort_unstable();
+            let mut cand: Vec<(f64, u32)> =
+                (0..i).map(|j| (metric(i, j), j as u32)).collect();
+            cand.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let mut want: Vec<u32> = cand.iter().take(6).map(|&(_, j)| j).collect();
+            want.sort_unstable();
+            // distances must agree (ties may swap indices)
+            let gd: Vec<f64> = got.iter().map(|&j| metric(i, j as usize)).collect();
+            let wd: Vec<f64> = want.iter().map(|&j| metric(i, j as usize)).collect();
+            let (mut gd, mut wd) = (gd, wd);
+            gd.sort_by(f64::total_cmp);
+            wd.sort_by(f64::total_cmp);
+            for (a, b) in gd.iter().zip(&wd) {
+                assert!((a - b).abs() < 1e-12, "i={i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_index_queries_return_prefix() {
+        let pts: Vec<(f64, f64)> = (0..20).map(|i| (i as f64 / 20.0, 0.0)).collect();
+        let metric = gauss_metric(pts, 0.5);
+        let tree = CoverTree::build(20, &metric);
+        assert_eq!(tree.knn_ordered(0, 5, &metric), Vec::<u32>::new());
+        assert_eq!(tree.knn_ordered(3, 5, &metric), vec![0, 1, 2]);
+    }
+}

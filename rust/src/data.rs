@@ -1,0 +1,420 @@
+//! Data generation and workload substrates for the paper's experiments.
+//!
+//! Covers (§7) simulation from zero-mean GPs with ARD Matérn kernels —
+//! exact Cholesky sampling for small n and Vecchia-factor sampling
+//! (`y = B⁻¹D^{1/2}z`) for large n — response sampling for every
+//! likelihood, the paper's Table-5 length-scale profiles, and the
+//! synthetic substitutes for the §8 UCI/OpenML suites (documented in
+//! DESIGN.md §Substitutions: no network access in this environment).
+
+use crate::kernels::{ArdMatern, Smoothness};
+use crate::likelihoods::{sigmoid, Likelihood};
+use crate::linalg::{CholeskyFactor, Mat};
+use crate::rng::Rng;
+use crate::vecchia::{neighbors, ResidualCov, ResidualFactor};
+use crate::vif::VifResidualOracle;
+
+/// Uniform inputs on the unit hypercube (paper §7).
+pub fn uniform_inputs(rng: &mut Rng, n: usize, d: usize) -> Mat {
+    Mat::from_fn(n, d, |_, _| rng.uniform())
+}
+
+/// Clustered anisotropic inputs in [0,1]^d — the real-data substitute
+/// profile (real covariate clouds are not uniform).
+pub fn clustered_inputs(rng: &mut Rng, n: usize, d: usize, clusters: usize) -> Mat {
+    let clusters = clusters.max(1);
+    let centers: Vec<Vec<f64>> = (0..clusters)
+        .map(|_| (0..d).map(|_| rng.uniform_in(0.15, 0.85)).collect())
+        .collect();
+    let spreads: Vec<f64> = (0..clusters).map(|_| rng.uniform_in(0.03, 0.18)).collect();
+    Mat::from_fn(n, d, |i, j| {
+        let c = i % clusters;
+        (centers[c][j] + spreads[c] * rng.normal()).clamp(0.0, 1.0)
+    })
+}
+
+/// Sample a zero-mean latent GP at inputs `x`. Exact for `n ≤ 4000`,
+/// Vecchia-factor sampling (`m_v = 40` correlation neighbors) above.
+pub fn simulate_latent_gp(rng: &mut Rng, x: &Mat, kernel: &ArdMatern) -> Vec<f64> {
+    let n = x.rows();
+    if n <= 4000 {
+        let mut cov = kernel.sym_cov(x, 0.0);
+        cov.add_diag(1e-10 * kernel.variance);
+        let chol = CholeskyFactor::new_with_jitter(&cov, 1e-10).expect("sim cov not PD");
+        chol.mul_lower(&rng.normal_vec(n))
+    } else {
+        let oracle = VifResidualOracle {
+            kernel,
+            x,
+            lr: None,
+            grad_aux: None,
+            extra_params: 0,
+        };
+        let dist = |i: usize, j: usize| -> f64 {
+            let r: f64 = oracle.rho(i, j) / kernel.variance;
+            (1.0 - r.abs()).max(0.0_f64).sqrt()
+        };
+        let nb = neighbors::covertree_ordered_knn(n, 40, &dist);
+        let f = ResidualFactor::build(&oracle, nb, 0.0, 1e-10);
+        f.sample(&rng.normal_vec(n))
+    }
+}
+
+/// Sample responses given latent values, per likelihood.
+pub fn simulate_response(rng: &mut Rng, latent: &[f64], lik: &Likelihood) -> Vec<f64> {
+    latent
+        .iter()
+        .map(|&b| match *lik {
+            Likelihood::Gaussian { variance } => b + variance.sqrt() * rng.normal(),
+            Likelihood::BernoulliLogit => {
+                if rng.bernoulli(sigmoid(b)) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Likelihood::Poisson => rng.poisson(b.exp().min(1e6)) as f64,
+            Likelihood::Gamma { shape } => {
+                // E[y] = e^b: y = Gamma(shape, scale = e^b / shape)
+                rng.gamma(shape) * b.exp() / shape
+            }
+            Likelihood::StudentT { scale, df } => b + scale * rng.student_t(df),
+        })
+        .collect()
+}
+
+/// Table-5 length-scale profiles: linear interpolation from `lo` to `hi`
+/// across the `d` dimensions, with the paper's anchors per (d, ν).
+pub fn paper_length_scales(d: usize, smoothness: Smoothness) -> Vec<f64> {
+    // (d, lo, hi) anchors; 3/2-Matérn has the full Table-5 row, the other
+    // smoothnesses are anchored at d ∈ {2, 10} and follow the 3/2 shape
+    // elsewhere (same ratio to the d = 10 anchor).
+    let m32: &[(usize, f64, f64)] = &[
+        (2, 0.10, 0.22),
+        (5, 0.13, 1.5),
+        (10, 0.25, 2.2),
+        (20, 0.50, 5.5),
+        (50, 0.55, 6.0),
+        (100, 0.60, 7.0),
+    ];
+    let anchors: &[(usize, f64, f64)] = match smoothness {
+        Smoothness::Half => &[(2, 0.07, 0.30), (10, 0.15, 2.3)],
+        Smoothness::FiveHalves => &[(2, 0.12, 0.21), (10, 0.27, 2.1)],
+        Smoothness::Gaussian => &[(2, 0.13, 0.19), (10, 0.28, 2.0)],
+        _ => m32,
+    };
+    let lookup = |table: &[(usize, f64, f64)], d: usize| -> Option<(f64, f64)> {
+        table.iter().find(|(dd, _, _)| *dd == d).map(|&(_, lo, hi)| (lo, hi))
+    };
+    let (lo, hi) = match lookup(anchors, d) {
+        Some(v) => v,
+        None => {
+            // scale the 3/2 profile by the ratio at d = 10
+            let (l32, h32) = lookup(m32, d)
+                .or_else(|| lookup(m32, nearest_anchor(m32, d)))
+                .unwrap();
+            match lookup(anchors, 10) {
+                Some((lo10, hi10)) => {
+                    let (l3210, h3210) = lookup(m32, 10).unwrap();
+                    (l32 * lo10 / l3210, h32 * hi10 / h3210)
+                }
+                None => (l32, h32),
+            }
+        }
+    };
+    if d == 1 {
+        return vec![lo];
+    }
+    (0..d)
+        .map(|k| lo + (hi - lo) * k as f64 / (d - 1) as f64)
+        .collect()
+}
+
+fn nearest_anchor(table: &[(usize, f64, f64)], d: usize) -> usize {
+    table
+        .iter()
+        .min_by_key(|(dd, _, _)| dd.abs_diff(d))
+        .map(|(dd, _, _)| *dd)
+        .unwrap()
+}
+
+/// Shuffle + split into train/test index sets.
+pub fn train_test_split(rng: &mut Rng, n: usize, n_test: usize) -> (Vec<usize>, Vec<usize>) {
+    let perm = rng.permutation(n);
+    let n_test = n_test.min(n);
+    (
+        perm[n_test..].to_vec(),
+        perm[..n_test].to_vec(),
+    )
+}
+
+/// k-fold cross-validation index sets: `(train, test)` per fold.
+pub fn kfold(rng: &mut Rng, n: usize, k: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let perm = rng.permutation(n);
+    let k = k.max(2).min(n);
+    (0..k)
+        .map(|f| {
+            let lo = n * f / k;
+            let hi = n * (f + 1) / k;
+            let test: Vec<usize> = perm[lo..hi].to_vec();
+            let train: Vec<usize> = perm[..lo].iter().chain(&perm[hi..]).copied().collect();
+            (train, test)
+        })
+        .collect()
+}
+
+/// Row subset of a matrix.
+pub fn subset_rows(x: &Mat, idx: &[usize]) -> Mat {
+    let mut out = Mat::zeros(idx.len(), x.cols());
+    for (r, &i) in idx.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(x.row(i));
+    }
+    out
+}
+
+/// Element subset of a vector.
+pub fn subset_vec(v: &[f64], idx: &[usize]) -> Vec<f64> {
+    idx.iter().map(|&i| v[i]).collect()
+}
+
+/// Which response family a synthetic suite entry uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SuiteLikelihood {
+    Gaussian,
+    Bernoulli,
+    Poisson,
+    Gamma,
+    StudentT,
+}
+
+/// One entry of the synthetic real-data-substitute suites (§8,
+/// DESIGN.md §Substitutions). `n` is scaled down from the paper for the
+/// single-core testbed; `d` matches the real data set.
+#[derive(Clone, Debug)]
+pub struct SuiteSpec {
+    pub name: &'static str,
+    pub n: usize,
+    pub d: usize,
+    pub lik: SuiteLikelihood,
+    /// Base length scale (smaller → rougher surface, like 3dRoad).
+    pub length_scale: f64,
+    /// Gaussian-noise SD fraction (SNR control) or aux parameter.
+    pub noise: f64,
+    /// Input clusters (real covariate clouds are lumpy).
+    pub clusters: usize,
+}
+
+/// Table-1 substitutes: Gaussian-likelihood regression suite.
+pub fn regression_suite() -> Vec<SuiteSpec> {
+    vec![
+        SuiteSpec { name: "3dRoad*", n: 6000, d: 3, lik: SuiteLikelihood::Gaussian, length_scale: 0.05, noise: 0.05, clusters: 1 },
+        SuiteSpec { name: "KEGGU*", n: 3000, d: 26, lik: SuiteLikelihood::Gaussian, length_scale: 1.2, noise: 0.10, clusters: 12 },
+        SuiteSpec { name: "KEGG*", n: 3000, d: 18, lik: SuiteLikelihood::Gaussian, length_scale: 1.0, noise: 0.10, clusters: 10 },
+        SuiteSpec { name: "Elevators*", n: 2500, d: 17, lik: SuiteLikelihood::Gaussian, length_scale: 0.9, noise: 0.35, clusters: 8 },
+        SuiteSpec { name: "Protein*", n: 3000, d: 8, lik: SuiteLikelihood::Gaussian, length_scale: 0.25, noise: 0.45, clusters: 6 },
+        SuiteSpec { name: "Kin40K*", n: 3000, d: 8, lik: SuiteLikelihood::Gaussian, length_scale: 0.35, noise: 0.08, clusters: 1 },
+        SuiteSpec { name: "Ailerons*", n: 2500, d: 33, lik: SuiteLikelihood::Gaussian, length_scale: 1.4, noise: 0.35, clusters: 10 },
+    ]
+}
+
+/// Table-2 substitutes: binary classification suite.
+pub fn binary_suite() -> Vec<SuiteSpec> {
+    vec![
+        SuiteSpec { name: "Bank*", n: 3000, d: 16, lik: SuiteLikelihood::Bernoulli, length_scale: 0.9, noise: 0.0, clusters: 8 },
+        SuiteSpec { name: "Adult*", n: 3000, d: 14, lik: SuiteLikelihood::Bernoulli, length_scale: 0.8, noise: 0.0, clusters: 10 },
+        SuiteSpec { name: "Credit*", n: 2500, d: 22, lik: SuiteLikelihood::Bernoulli, length_scale: 1.1, noise: 0.0, clusters: 8 },
+        SuiteSpec { name: "MAGIC*", n: 2500, d: 9, lik: SuiteLikelihood::Bernoulli, length_scale: 0.4, noise: 0.0, clusters: 4 },
+    ]
+}
+
+/// Table-3 substitutes: non-Gaussian regression suite.
+pub fn nongaussian_suite() -> Vec<SuiteSpec> {
+    vec![
+        SuiteSpec { name: "Bike*", n: 2500, d: 12, lik: SuiteLikelihood::Poisson, length_scale: 0.7, noise: 0.0, clusters: 6 },
+        SuiteSpec { name: "House*", n: 2500, d: 8, lik: SuiteLikelihood::StudentT, length_scale: 0.4, noise: 0.15, clusters: 6 },
+        SuiteSpec { name: "Power*", n: 2500, d: 5, lik: SuiteLikelihood::Gamma, length_scale: 0.3, noise: 0.0, clusters: 3 },
+        SuiteSpec { name: "WaterVapor*", n: 3000, d: 2, lik: SuiteLikelihood::Gamma, length_scale: 0.12, noise: 0.0, clusters: 1 },
+    ]
+}
+
+/// Materialize a suite entry: inputs, responses and the likelihood
+/// (with its true auxiliary parameters).
+pub fn generate_suite_data(spec: &SuiteSpec, rng: &mut Rng) -> (Mat, Vec<f64>, Likelihood) {
+    let x = if spec.clusters <= 1 {
+        uniform_inputs(rng, spec.n, spec.d)
+    } else {
+        clustered_inputs(rng, spec.n, spec.d, spec.clusters)
+    };
+    // ARD scales spread around the base length scale.
+    let ls: Vec<f64> = (0..spec.d)
+        .map(|k| spec.length_scale * (1.0 + 1.5 * k as f64 / spec.d.max(1) as f64))
+        .collect();
+    let kernel = ArdMatern::new(1.0, ls, Smoothness::ThreeHalves);
+    let latent = simulate_latent_gp(rng, &x, &kernel);
+    let lik = match spec.lik {
+        SuiteLikelihood::Gaussian => Likelihood::Gaussian { variance: spec.noise * spec.noise },
+        SuiteLikelihood::Bernoulli => Likelihood::BernoulliLogit,
+        SuiteLikelihood::Poisson => Likelihood::Poisson,
+        SuiteLikelihood::Gamma => Likelihood::Gamma { shape: 2.0 },
+        SuiteLikelihood::StudentT => Likelihood::StudentT { scale: spec.noise.max(0.05), df: 4.0 },
+    };
+    let y = simulate_response(rng, &latent, &lik);
+    (x, y, lik)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latent_gp_has_unit_scale() {
+        let mut rng = Rng::seed_from(2);
+        let x = uniform_inputs(&mut rng, 500, 2);
+        let kernel = ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::ThreeHalves);
+        let b = simulate_latent_gp(&mut rng, &x, &kernel);
+        let var = b.iter().map(|v| v * v).sum::<f64>() / 500.0;
+        assert!(var > 0.3 && var < 3.0, "var {var}");
+    }
+
+    #[test]
+    fn large_n_uses_vecchia_path_and_stays_sane() {
+        let mut rng = Rng::seed_from(3);
+        let x = uniform_inputs(&mut rng, 4500, 2);
+        let kernel = ArdMatern::new(1.0, vec![0.2, 0.2], Smoothness::ThreeHalves);
+        let b = simulate_latent_gp(&mut rng, &x, &kernel);
+        assert_eq!(b.len(), 4500);
+        let var = b.iter().map(|v| v * v).sum::<f64>() / 4500.0;
+        assert!(var > 0.3 && var < 3.0, "var {var}");
+        // neighboring points should be correlated: sort by first coord
+        let mut idx: Vec<usize> = (0..4500).collect();
+        idx.sort_by(|&a, &c| x.get(a, 0).total_cmp(&x.get(c, 0)));
+        let _ = idx;
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let mut rng = Rng::seed_from(4);
+        let folds = kfold(&mut rng, 103, 5);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; 103];
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 103);
+            for &t in test {
+                seen[t] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn paper_length_scales_shapes() {
+        for d in [2usize, 5, 10, 20, 50, 100] {
+            let ls = paper_length_scales(d, Smoothness::ThreeHalves);
+            assert_eq!(ls.len(), d);
+            assert!(ls.windows(2).all(|w| w[1] >= w[0]));
+        }
+        let l2 = paper_length_scales(2, Smoothness::Gaussian);
+        assert!((l2[0] - 0.13).abs() < 1e-12 && (l2[1] - 0.19).abs() < 1e-12);
+        // fallback path for ν=1/2, d=50
+        let l50 = paper_length_scales(50, Smoothness::Half);
+        assert_eq!(l50.len(), 50);
+    }
+
+    #[test]
+    fn responses_match_likelihood_support() {
+        let mut rng = Rng::seed_from(5);
+        let latent: Vec<f64> = (0..200).map(|_| rng.normal() * 0.5).collect();
+        let bern = simulate_response(&mut rng, &latent, &Likelihood::BernoulliLogit);
+        assert!(bern.iter().all(|&y| y == 0.0 || y == 1.0));
+        let pois = simulate_response(&mut rng, &latent, &Likelihood::Poisson);
+        assert!(pois.iter().all(|&y| y >= 0.0 && y.fract() == 0.0));
+        let gam = simulate_response(&mut rng, &latent, &Likelihood::Gamma { shape: 2.0 });
+        assert!(gam.iter().all(|&y| y > 0.0));
+    }
+
+    #[test]
+    fn suites_generate() {
+        let mut rng = Rng::seed_from(6);
+        for spec in [regression_suite().remove(0), binary_suite().remove(0)] {
+            let small = SuiteSpec { n: 200, ..spec };
+            let (x, y, _) = generate_suite_data(&small, &mut rng);
+            assert_eq!(x.rows(), 200);
+            assert_eq!(y.len(), 200);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal CSV I/O (no csv crate offline): last column is the response.
+// ---------------------------------------------------------------------
+
+/// Write `(x | y)` as headerless CSV.
+pub fn save_csv(path: &std::path::Path, x: &Mat, y: &[f64]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..x.rows() {
+        for v in x.row(i) {
+            write!(f, "{v},")?;
+        }
+        writeln!(f, "{}", y[i])?;
+    }
+    Ok(())
+}
+
+/// Read headerless CSV with the response in the last column.
+pub fn load_csv(path: &std::path::Path) -> std::io::Result<(Mat, Vec<f64>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> = line.split(',').map(|t| t.trim().parse::<f64>()).collect();
+        match vals {
+            Ok(v) if v.len() >= 2 => rows.push(v),
+            _ => {
+                if lineno == 0 {
+                    continue; // tolerate a header line
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad csv line {}", lineno + 1),
+                ));
+            }
+        }
+    }
+    if rows.is_empty() {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "empty csv"));
+    }
+    let d = rows[0].len() - 1;
+    let n = rows.len();
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for (i, r) in rows.iter().enumerate() {
+        if r.len() != d + 1 {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "ragged csv"));
+        }
+        x.row_mut(i).copy_from_slice(&r[..d]);
+        y[i] = r[d];
+    }
+    Ok((x, y))
+}
+
+#[cfg(test)]
+mod csv_tests {
+    use super::*;
+
+    #[test]
+    fn csv_round_trip() {
+        let mut rng = Rng::seed_from(1);
+        let x = uniform_inputs(&mut rng, 20, 3);
+        let y: Vec<f64> = (0..20).map(|i| i as f64 * 0.5).collect();
+        let path = std::env::temp_dir().join("vifgp_csv_test.csv");
+        save_csv(&path, &x, &y).unwrap();
+        let (x2, y2) = load_csv(&path).unwrap();
+        assert!(x2.max_abs_diff(&x) < 1e-12);
+        assert_eq!(y, y2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

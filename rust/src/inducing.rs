@@ -1,0 +1,193 @@
+//! Inducing-point selection via kMeans++ (paper §6).
+//!
+//! Following Gyger et al. (2026), inducing points are chosen as kMeans++
+//! cluster centers in the λ-transformed input space `q_λ(s) = s/λ`, with
+//! optional Lloyd refinement, and support warm starting from the centers
+//! of a previous optimization iteration (the paper re-determines inducing
+//! points at power-of-two optimization iterations).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// kMeans++ seeding + `lloyd_iters` Lloyd steps over the rows of
+/// `x_scaled` (already transformed by 1/λ). Returns an m×d matrix of
+/// centers (in the *scaled* space — callers undo the scaling).
+pub fn kmeanspp(x_scaled: &Mat, m: usize, lloyd_iters: usize, rng: &mut Rng) -> Mat {
+    let n = x_scaled.rows();
+    let d = x_scaled.cols();
+    assert!(m >= 1 && m <= n, "need 1 <= m <= n (m={m}, n={n})");
+    let mut centers = Mat::zeros(m, d);
+    // -- kMeans++ seeding --
+    let first = rng.below(n);
+    centers.row_mut(0).copy_from_slice(x_scaled.row(first));
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| sqdist(x_scaled.row(i), centers.row(0)))
+        .collect();
+    for k in 1..m {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut idx = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centers.row_mut(k).copy_from_slice(x_scaled.row(pick));
+        for i in 0..n {
+            let nd = sqdist(x_scaled.row(i), centers.row(k));
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    lloyd(x_scaled, centers, lloyd_iters)
+}
+
+/// Lloyd refinement starting from given centers — used for warm starts
+/// from a previous optimization iteration (§6).
+pub fn lloyd(x_scaled: &Mat, mut centers: Mat, iters: usize) -> Mat {
+    let n = x_scaled.rows();
+    let d = x_scaled.cols();
+    let m = centers.rows();
+    for _ in 0..iters {
+        let mut sums = Mat::zeros(m, d);
+        let mut counts = vec![0usize; m];
+        for i in 0..n {
+            let xi = x_scaled.row(i);
+            let k = nearest_center(xi, &centers);
+            counts[k] += 1;
+            for (s, v) in sums.row_mut(k).iter_mut().zip(xi) {
+                *s += v;
+            }
+        }
+        let mut moved = 0.0;
+        for k in 0..m {
+            if counts[k] == 0 {
+                continue; // keep empty-cluster center in place
+            }
+            let inv = 1.0 / counts[k] as f64;
+            let mut delta = 0.0;
+            for (c, s) in centers.row_mut(k).iter_mut().zip(sums.row(k)) {
+                let newc = s * inv;
+                delta += (newc - *c) * (newc - *c);
+                *c = newc;
+            }
+            moved += delta;
+        }
+        if moved < 1e-12 {
+            break;
+        }
+    }
+    centers
+}
+
+fn nearest_center(x: &[f64], centers: &Mat) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for k in 0..centers.rows() {
+        let d = sqdist(x, centers.row(k));
+        if d < best_d {
+            best_d = d;
+            best = k;
+        }
+    }
+    best
+}
+
+#[inline]
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum()
+}
+
+/// Scale inputs by 1/λ per dimension (the `q_λ` transformation).
+pub fn scale_inputs(x: &Mat, length_scales: &[f64]) -> Mat {
+    assert_eq!(x.cols(), length_scales.len());
+    Mat::from_fn(x.rows(), x.cols(), |i, j| x.get(i, j) / length_scales[j])
+}
+
+/// Undo the `q_λ` transformation on a set of centers.
+pub fn unscale_inputs(x_scaled: &Mat, length_scales: &[f64]) -> Mat {
+    Mat::from_fn(x_scaled.rows(), x_scaled.cols(), |i, j| {
+        x_scaled.get(i, j) * length_scales[j]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centers_land_on_clusters() {
+        // Two tight clusters; 2 centers must split them.
+        let mut rng = Rng::seed_from(2);
+        let mut data = Vec::new();
+        for _ in 0..50 {
+            data.push(0.0 + 0.01 * rng.normal());
+            data.push(0.0 + 0.01 * rng.normal());
+        }
+        for _ in 0..50 {
+            data.push(5.0 + 0.01 * rng.normal());
+            data.push(5.0 + 0.01 * rng.normal());
+        }
+        let x = Mat::from_vec(100, 2, data);
+        let c = kmeanspp(&x, 2, 10, &mut rng);
+        let mut near_origin = 0;
+        let mut near_five = 0;
+        for k in 0..2 {
+            let r = c.row(k);
+            if r[0] < 1.0 && r[1] < 1.0 {
+                near_origin += 1;
+            }
+            if r[0] > 4.0 && r[1] > 4.0 {
+                near_five += 1;
+            }
+        }
+        assert_eq!((near_origin, near_five), (1, 1));
+    }
+
+    #[test]
+    fn m_equals_n_returns_all_points() {
+        let mut rng = Rng::seed_from(8);
+        let x = crate::testing::random_points(&mut rng, 10, 3);
+        let c = kmeanspp(&x, 10, 0, &mut rng);
+        assert_eq!(c.rows(), 10);
+    }
+
+    #[test]
+    fn scaling_round_trip() {
+        let mut rng = Rng::seed_from(4);
+        let x = crate::testing::random_points(&mut rng, 7, 3);
+        let ls = [0.5, 2.0, 1.5];
+        let xs = scale_inputs(&x, &ls);
+        let back = unscale_inputs(&xs, &ls);
+        assert!(back.max_abs_diff(&x) < 1e-14);
+    }
+
+    #[test]
+    fn lloyd_reduces_inertia() {
+        let mut rng = Rng::seed_from(6);
+        let x = crate::testing::random_points(&mut rng, 200, 2);
+        let seed_centers = kmeanspp(&x, 8, 0, &mut rng);
+        let refined = lloyd(&x, seed_centers.clone(), 15);
+        let inertia = |c: &Mat| -> f64 {
+            (0..x.rows())
+                .map(|i| {
+                    (0..c.rows())
+                        .map(|k| sqdist(x.row(i), c.row(k)))
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .sum()
+        };
+        assert!(inertia(&refined) <= inertia(&seed_centers) + 1e-12);
+    }
+}

@@ -1,0 +1,248 @@
+//! Preconditioned conjugate gradients with Lanczos tridiagonal recovery.
+//!
+//! Following Gardner et al. (2018) / Saad (2003) §6.7.3, the CG step
+//! sizes α_k and direction coefficients β_k reconstruct the tridiagonal
+//! matrix of the Lanczos process on `P^{-1/2} A P^{-1/2}` started at
+//! `P^{-1/2} b / ‖·‖`, so SLQ log-determinants come for free from the
+//! same solves (paper §4.1).
+
+use crate::linalg::{dot, SymTridiag};
+use crate::rng::Rng;
+
+/// A symmetric positive definite linear operator.
+pub trait LinOp: Sync {
+    fn n(&self) -> usize;
+    fn apply(&self, v: &[f64]) -> Vec<f64>;
+}
+
+/// A symmetric positive definite preconditioner `P`.
+pub trait Preconditioner: Sync {
+    fn n(&self) -> usize;
+    /// `P⁻¹ v`.
+    fn solve(&self, v: &[f64]) -> Vec<f64>;
+    /// Draw `z ~ N(0, P)`.
+    fn sample(&self, rng: &mut Rng) -> Vec<f64>;
+    /// `log det P`.
+    fn logdet(&self) -> f64;
+}
+
+/// Identity preconditioner (plain CG).
+pub struct IdentityPrecond(pub usize);
+
+impl Preconditioner for IdentityPrecond {
+    fn n(&self) -> usize {
+        self.0
+    }
+    fn solve(&self, v: &[f64]) -> Vec<f64> {
+        v.to_vec()
+    }
+    fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        rng.normal_vec(self.0)
+    }
+    fn logdet(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Output of a PCG solve.
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub converged: bool,
+    /// Lanczos tridiagonal of the preconditioned operator (if requested).
+    pub tridiag: Option<SymTridiag>,
+}
+
+/// Solve `A x = b` by preconditioned CG. `tol` is relative to `‖b‖`.
+pub fn pcg(
+    op: &dyn LinOp,
+    pre: &dyn Preconditioner,
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+    want_tridiag: bool,
+) -> CgResult {
+    pcg_with_min(op, pre, b, tol, 0, max_iter, want_tridiag)
+}
+
+/// [`pcg`] with a minimum iteration count: SLQ probes keep iterating past
+/// convergence so the recovered Lanczos tridiagonal has enough degree for
+/// an unbiased log-determinant quadrature (a loose CG tolerance otherwise
+/// biases Eq. 18/19 — see EXPERIMENTS.md §Fig 4 note).
+pub fn pcg_with_min(
+    op: &dyn LinOp,
+    pre: &dyn Preconditioner,
+    b: &[f64],
+    tol: f64,
+    min_iter: usize,
+    max_iter: usize,
+    want_tridiag: bool,
+) -> CgResult {
+    let n = b.len();
+    assert_eq!(op.n(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z = pre.solve(&r);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let b_norm = dot(b, b).sqrt().max(1e-300);
+    let mut alphas: Vec<f64> = Vec::new();
+    let mut betas: Vec<f64> = Vec::new();
+    let mut converged = false;
+    let mut iters = 0;
+
+    for _ in 0..max_iter {
+        let ap = op.apply(&p);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            break; // loss of positive definiteness — return best effort
+        }
+        let alpha = rz / pap;
+        alphas.push(alpha);
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        iters += 1;
+        if iters >= min_iter && dot(&r, &r).sqrt() <= tol * b_norm {
+            converged = true;
+            break;
+        }
+        z = pre.solve(&r);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        betas.push(beta);
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+
+    let tridiag = if want_tridiag && !alphas.is_empty() {
+        // T_kk = 1/α_k + β_{k-1}/α_{k-1};  T_{k,k+1} = sqrt(β_k)/α_k.
+        let k = alphas.len();
+        let mut d = Vec::with_capacity(k);
+        let mut e = Vec::with_capacity(k.saturating_sub(1));
+        for i in 0..k {
+            let mut di = 1.0 / alphas[i];
+            if i > 0 {
+                di += betas[i - 1] / alphas[i - 1];
+            }
+            d.push(di);
+            if i + 1 < k {
+                e.push(betas[i].max(0.0).sqrt() / alphas[i]);
+            }
+        }
+        Some(SymTridiag::new(d, e))
+    } else {
+        None
+    };
+
+    CgResult { x, iters, converged, tridiag }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CholeskyFactor, Mat};
+
+    struct DenseOp(Mat);
+    impl LinOp for DenseOp {
+        fn n(&self) -> usize {
+            self.0.rows()
+        }
+        fn apply(&self, v: &[f64]) -> Vec<f64> {
+            self.0.matvec(v)
+        }
+    }
+
+    struct JacobiPrecond(Vec<f64>);
+    impl Preconditioner for JacobiPrecond {
+        fn n(&self) -> usize {
+            self.0.len()
+        }
+        fn solve(&self, v: &[f64]) -> Vec<f64> {
+            v.iter().zip(&self.0).map(|(x, d)| x / d).collect()
+        }
+        fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+            self.0.iter().map(|d| rng.normal() * d.sqrt()).collect()
+        }
+        fn logdet(&self) -> f64 {
+            self.0.iter().map(|d| d.ln()).sum()
+        }
+    }
+
+    fn spd(n: usize) -> Mat {
+        let g = Mat::from_fn(n, n, |i, j| ((i * 13 + j * 7) as f64).sin());
+        let mut a = g.matmul_nt(&g);
+        a.add_diag(n as f64 * 0.5);
+        a
+    }
+
+    #[test]
+    fn plain_cg_solves() {
+        let a = spd(30);
+        let b: Vec<f64> = (0..30).map(|i| (i as f64 * 0.3).cos()).collect();
+        let res = pcg(&DenseOp(a.clone()), &IdentityPrecond(30), &b, 1e-10, 200, false);
+        assert!(res.converged);
+        let want = CholeskyFactor::new(&a).unwrap().solve(&b);
+        for (g, w) in res.x.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn jacobi_preconditioning_helps_ill_conditioned_system() {
+        // Strongly scaled diagonal: Jacobi preconditioner fixes it.
+        let n = 40;
+        let mut a = spd(n);
+        for i in 0..n {
+            let s = 10.0f64.powi((i % 5) as i32);
+            for j in 0..n {
+                let v = a.get(i, j) * s.sqrt();
+                a.set(i, j, v);
+                let v = a.get(j, i) * s.sqrt();
+                a.set(j, i, v);
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let plain = pcg(&DenseOp(a.clone()), &IdentityPrecond(n), &b, 1e-9, 500, false);
+        let jac = pcg(
+            &DenseOp(a.clone()),
+            &JacobiPrecond(a.diag()),
+            &b,
+            1e-9,
+            500,
+            false,
+        );
+        assert!(jac.converged);
+        assert!(jac.iters <= plain.iters, "jacobi {} vs plain {}", jac.iters, plain.iters);
+    }
+
+    #[test]
+    fn lanczos_recovery_reproduces_quadratic_form() {
+        // e1ᵀ f(T) e1 scaled by ‖P^{-1/2}b‖² estimates bᵀP^{-1/2}f(Ã)P^{-1/2}b.
+        // With P=I and f=inverse: ‖b‖²·e1ᵀT⁻¹e1 should equal bᵀA⁻¹b.
+        let a = spd(25);
+        let b: Vec<f64> = (0..25).map(|i| 1.0 + (i as f64 * 0.11).sin()).collect();
+        let res = pcg(&DenseOp(a.clone()), &IdentityPrecond(25), &b, 1e-12, 100, true);
+        let t = res.tridiag.unwrap();
+        let quad = t.quadrature(|lam| 1.0 / lam) * dot(&b, &b);
+        let want = dot(&b, &CholeskyFactor::new(&a).unwrap().solve(&b));
+        assert!(
+            (quad - want).abs() < 1e-6 * want.abs(),
+            "{quad} vs {want}"
+        );
+    }
+
+    #[test]
+    fn tridiag_eigenvalues_lie_in_spectrum() {
+        let a = spd(20);
+        let b: Vec<f64> = (0..20).map(|i| (i as f64).cos()).collect();
+        let res = pcg(&DenseOp(a.clone()), &IdentityPrecond(20), &b, 1e-12, 100, true);
+        let t = res.tridiag.unwrap();
+        let (eigs, _) = crate::linalg::tridiag_eigen(&t);
+        // Ritz values must be positive for an SPD operator.
+        assert!(eigs.iter().all(|&l| l > 0.0));
+    }
+}

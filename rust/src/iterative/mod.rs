@@ -1,0 +1,44 @@
+//! Iterative methods for VIF-Laplace approximations (paper §4):
+//! preconditioned conjugate gradients with Lanczos-coefficient recovery,
+//! stochastic Lanczos quadrature for log-determinants, stochastic trace
+//! estimation for gradients, the VIFDU and FITC preconditioners, and the
+//! simulation-based predictive-variance estimators (Algorithms 1–2).
+
+mod cg;
+mod precond;
+mod pred_var;
+pub mod slq;
+
+pub use cg::{pcg, pcg_with_min, CgResult, IdentityPrecond, LinOp, Preconditioner};
+pub use precond::{FitcPrecond, PrecondType, VifduPrecond};
+pub use pred_var::{sbpv_diag, spv_diag};
+pub use slq::{slq_logdet, SlqProbe, SlqRun};
+
+/// Configuration of the iterative solvers (paper defaults: δ = 0.01,
+/// ℓ = 50 SLQ probes, FITC preconditioner with k = 200).
+#[derive(Clone, Debug)]
+pub struct IterConfig {
+    pub precond: PrecondType,
+    /// Probe vectors ℓ for SLQ / STE.
+    pub ell: usize,
+    /// Relative CG convergence tolerance δ.
+    pub cg_tol: f64,
+    /// Max CG iterations per solve.
+    pub max_cg: usize,
+    /// FITC-preconditioner rank k.
+    pub fitc_k: usize,
+    pub seed: u64,
+}
+
+impl Default for IterConfig {
+    fn default() -> Self {
+        IterConfig {
+            precond: PrecondType::Fitc,
+            ell: 50,
+            cg_tol: 1e-2,
+            max_cg: 1000,
+            fitc_k: 200,
+            seed: 1234,
+        }
+    }
+}

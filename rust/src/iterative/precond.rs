@@ -1,0 +1,361 @@
+//! The VIFDU and FITC preconditioners (paper §4.3, Appendix E).
+
+use crate::inducing;
+use crate::kernels::ArdMatern;
+use crate::linalg::{dot, CholeskyFactor, Mat};
+use crate::rng::Rng;
+use crate::vif::VifStructure;
+
+use super::cg::Preconditioner;
+
+/// Which preconditioner the iterative solvers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecondType {
+    /// "VIF with diagonal update" (§4.3.1) on the system `W + Σ_†⁻¹` (16).
+    Vifdu,
+    /// FITC preconditioner (§4.3.2) on the system `W⁻¹ + Σ_†` (17).
+    Fitc,
+    /// No preconditioning (diagnostics).
+    None,
+}
+
+impl PrecondType {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "vifdu" | "VIFDU" => Some(PrecondType::Vifdu),
+            "fitc" | "FITC" => Some(PrecondType::Fitc),
+            "none" => Some(PrecondType::None),
+            _ => None,
+        }
+    }
+}
+
+/// VIFDU preconditioner `P̂ = Bᵀ W B + Σ_†⁻¹
+///                          = Bᵀ(W + D⁻¹ − D⁻¹BΣ_mnᵀ M⁻¹ Σ_mn Bᵀ D⁻¹)B`
+/// for the system `(W + Σ_†⁻¹) u = v` (Appendix E.1). With `m = 0` this
+/// is exactly the VADU preconditioner of Kündig & Sigrist (2025), used by
+/// the standalone-Vecchia baseline.
+pub struct VifduPrecond<'a> {
+    s: &'a VifStructure,
+    w: Vec<f64>,
+    /// `(W + D⁻¹)⁻¹` diagonal.
+    wd_inv: Vec<f64>,
+    /// Cholesky of `M₃ = M − Hᵀ(W+D⁻¹)⁻¹·D⁻¹BΣ_mnᵀ`-style core (m×m).
+    chol_m3: Option<CholeskyFactor>,
+}
+
+impl<'a> VifduPrecond<'a> {
+    pub fn new(s: &'a VifStructure, w: &[f64]) -> Self {
+        let n = s.n();
+        assert_eq!(w.len(), n);
+        let wd_inv: Vec<f64> = w
+            .iter()
+            .zip(&s.resid.d)
+            .map(|(wi, di)| 1.0 / (wi + 1.0 / di))
+            .collect();
+        let chol_m3 = s.chol_mcal.as_ref().map(|cm| {
+            // M₃ = M − hᵀ diag((W+D⁻¹)⁻¹) h,  h = D⁻¹BΣ_mnᵀ (structure.h)
+            let m = s.m();
+            let mut m3 = cm.l().matmul_nt(cm.l()); // reconstruct M
+            let mut hw = s.h.clone();
+            hw.scale_rows(&wd_inv);
+            let corr = s.h.matmul_tn(&hw);
+            m3.sub_assign(&corr);
+            let _ = m;
+            CholeskyFactor::new_with_jitter(&m3, 1e-10).expect("M3 not PD")
+        });
+        VifduPrecond { s, w: w.to_vec(), wd_inv, chol_m3 }
+    }
+}
+
+impl<'a> Preconditioner for VifduPrecond<'a> {
+    fn n(&self) -> usize {
+        self.s.n()
+    }
+
+    fn solve(&self, v: &[f64]) -> Vec<f64> {
+        // P̂⁻¹v = B⁻¹[(W+D⁻¹)⁻¹ + (W+D⁻¹)⁻¹ h M₃⁻¹ hᵀ (W+D⁻¹)⁻¹] B⁻ᵀ v
+        let t = self.s.resid.solve_bt(v);
+        let mut t1: Vec<f64> = t.iter().zip(&self.wd_inv).map(|(a, b)| a * b).collect();
+        if let Some(chol_m3) = &self.chol_m3 {
+            let t2 = self.s.h.matvec_t(&t1);
+            let t3 = chol_m3.solve(&t2);
+            let t4 = self.s.h.matvec(&t3);
+            for ((t1i, t4i), wdi) in t1.iter_mut().zip(&t4).zip(&self.wd_inv) {
+                *t1i += wdi * t4i;
+            }
+        }
+        self.s.resid.solve_b(&t1)
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        // BᵀW^{1/2}ε₃ + Σ_†⁻¹ (sample from N(0, Σ_†))   (§4.3.1)
+        let n = self.n();
+        let sig_sample = self.s.sample(rng);
+        let mut out = self.s.apply_sigma_dagger_inv(&sig_sample);
+        let e3: Vec<f64> = rng
+            .normal_vec(n)
+            .iter()
+            .zip(&self.w)
+            .map(|(e, w)| e * w.sqrt())
+            .collect();
+        let bt = self.s.resid.mul_bt(&e3);
+        for (o, b) in out.iter_mut().zip(&bt) {
+            *o += b;
+        }
+        out
+    }
+
+    fn logdet(&self) -> f64 {
+        // log det P̂ = Σ log(W+D⁻¹) − log det M + log det M₃
+        let mut ld: f64 = self.wd_inv.iter().map(|wd| -(wd.ln())).sum();
+        if let (Some(cm), Some(m3)) = (&self.s.chol_mcal, &self.chol_m3) {
+            ld += m3.logdet() - cm.logdet();
+        }
+        ld
+    }
+}
+
+/// FITC preconditioner `P̂ = Σ_knᵀ Σ_k⁻¹ Σ_kn + diag(Σ − Q_nn) + W⁻¹`
+/// for the system `(Σ_† + W⁻¹) u = v` (Appendix E.2). Its inducing set
+/// may differ from (and be larger than) the VIF approximation's.
+pub struct FitcPrecond {
+    /// `K(X, Ẑ)` stored n×k.
+    sigma_nk: Mat,
+    /// `(L_k⁻¹ Σ_kn)ᵀ` n×k.
+    vt: Mat,
+    /// `D_V = diag(Σ − Q_nn) + W⁻¹`.
+    dv: Vec<f64>,
+    chol_k: CholeskyFactor,
+    chol_mv: CholeskyFactor,
+}
+
+impl FitcPrecond {
+    /// Build with `k` inducing points selected by kMeans++ on the λ-scaled
+    /// inputs. `w` is the Laplace weight diagonal.
+    pub fn new(x: &Mat, kernel: &ArdMatern, k: usize, w: &[f64], seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let xs = inducing::scale_inputs(x, &kernel.length_scales);
+        let k = k.min(x.rows());
+        let centers = inducing::unscale_inputs(
+            &inducing::kmeanspp(&xs, k, 3, &mut rng),
+            &kernel.length_scales,
+        );
+        Self::with_inducing(x, kernel, centers, w)
+    }
+
+    /// Build with explicit inducing points.
+    pub fn with_inducing(x: &Mat, kernel: &ArdMatern, z: Mat, w: &[f64]) -> Self {
+        let n = x.rows();
+        let k = z.rows();
+        let mut sig_k = kernel.sym_cov(&z, 0.0);
+        sig_k.add_diag(1e-10 * kernel.variance);
+        let chol_k =
+            CholeskyFactor::new_with_jitter(&sig_k, 1e-10).expect("FITC precond Σ_k not PD");
+        let mut sigma_nk = Mat::zeros(n, k);
+        let mut vt = Mat::zeros(n, k);
+        let mut dv = vec![0.0; n];
+        for i in 0..n {
+            let mut krow = vec![0.0; k];
+            for l in 0..k {
+                krow[l] = kernel.cov(x.row(i), z.row(l));
+            }
+            let mut v = krow.clone();
+            chol_k.solve_lower_in_place(&mut v);
+            dv[i] = (kernel.variance - dot(&v, &v)).max(1e-12) + 1.0 / w[i];
+            sigma_nk.row_mut(i).copy_from_slice(&krow);
+            vt.row_mut(i).copy_from_slice(&v);
+        }
+        // M_V = Σ_k + Σ_kn D_V⁻¹ Σ_knᵀ
+        let mut snd = sigma_nk.clone();
+        snd.scale_rows(&dv.iter().map(|d| 1.0 / d).collect::<Vec<_>>());
+        let mut mv = sigma_nk.matmul_tn(&snd);
+        mv.add_assign(&sig_k);
+        let chol_mv = CholeskyFactor::new_with_jitter(&mv, 1e-10).expect("M_V not PD");
+        FitcPrecond { sigma_nk, vt, dv, chol_k, chol_mv }
+    }
+
+    pub fn k(&self) -> usize {
+        self.sigma_nk.cols()
+    }
+}
+
+impl Preconditioner for FitcPrecond {
+    fn n(&self) -> usize {
+        self.dv.len()
+    }
+
+    fn solve(&self, v: &[f64]) -> Vec<f64> {
+        // P̂⁻¹w = D_V⁻¹w − D_V⁻¹Σ_knᵀ M_V⁻¹ Σ_kn D_V⁻¹ w
+        let mut t: Vec<f64> = v.iter().zip(&self.dv).map(|(a, d)| a / d).collect();
+        let u = self.sigma_nk.matvec_t(&t);
+        let s = self.chol_mv.solve(&u);
+        let c = self.sigma_nk.matvec(&s);
+        for ((ti, ci), di) in t.iter_mut().zip(&c).zip(&self.dv) {
+            *ti -= ci / di;
+        }
+        t
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        // D_V^{1/2} ε₂ + Σ_knᵀ L_k⁻ᵀ ε₁  ~ N(0, D_V + Σ_knᵀΣ_k⁻¹Σ_kn)
+        let e1 = rng.normal_vec(self.k());
+        let low = self.vt.matvec(&e1);
+        self.dv
+            .iter()
+            .zip(rng.normal_vec(self.n()))
+            .zip(&low)
+            .map(|((d, e), l)| d.sqrt() * e + l)
+            .collect()
+    }
+
+    fn logdet(&self) -> f64 {
+        self.dv.iter().map(|d| d.ln()).sum::<f64>() - self.chol_k.logdet()
+            + self.chol_mv.logdet()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Smoothness;
+    use crate::testing::random_points;
+    use crate::vecchia::neighbors::NeighborSelection;
+    use crate::vif::{select_inducing, select_neighbors, VifStructure};
+
+    fn setup(n: usize) -> (Mat, ArdMatern, VifStructure, Vec<f64>) {
+        let mut rng = Rng::seed_from(77);
+        let x = random_points(&mut rng, n, 2);
+        let kernel = ArdMatern::new(1.1, vec![0.3, 0.4], Smoothness::ThreeHalves);
+        let z = select_inducing(&x, &kernel, 6, 2, &mut rng, None);
+        let nb = select_neighbors(&x, &kernel, None, 4, NeighborSelection::EuclideanTransformed);
+        // latent scale: nugget = 0
+        let s = VifStructure::assemble(&x, &kernel, z, nb, 0.0, 1e-10, 0);
+        let w: Vec<f64> = (0..n).map(|i| 0.15 + 0.1 * ((i as f64).sin().abs())).collect();
+        (x, kernel, s, w)
+    }
+
+    fn dense_from_precond(p: &dyn Preconditioner) -> Mat {
+        // P = (P⁻¹)⁻¹ via solving columns of the identity.
+        let n = p.n();
+        let mut pinv = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = p.solve(&e);
+            for i in 0..n {
+                pinv.set(i, j, col[i]);
+            }
+        }
+        CholeskyFactor::new(&pinv).unwrap().inverse()
+    }
+
+    #[test]
+    fn vifdu_matches_definition() {
+        let (_, _, s, w) = setup(25);
+        let p = VifduPrecond::new(&s, &w);
+        // P̂ = BᵀWB + Σ_†⁻¹ densely.
+        let n = 25;
+        let mut want = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let be = s.resid.mul_b(&e);
+            let wbe: Vec<f64> = be.iter().zip(&w).map(|(a, b)| a * b).collect();
+            let btw = s.resid.mul_bt(&wbe);
+            let sd = s.apply_sigma_dagger_inv(&e);
+            for i in 0..n {
+                want.set(i, j, btw[i] + sd[i]);
+            }
+        }
+        let got = dense_from_precond(&p);
+        assert!(got.max_abs_diff(&want) < 1e-6, "diff {}", got.max_abs_diff(&want));
+        // logdet agrees
+        let chol = CholeskyFactor::new(&want).unwrap();
+        assert!((p.logdet() - chol.logdet()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vifdu_sampling_covariance() {
+        let (_, _, s, w) = setup(12);
+        let p = VifduPrecond::new(&s, &w);
+        let want = dense_from_precond(&p);
+        let mut rng = Rng::seed_from(5);
+        let reps = 60_000;
+        let mut acc = Mat::zeros(12, 12);
+        for _ in 0..reps {
+            let x = p.sample(&mut rng);
+            for i in 0..12 {
+                for j in 0..12 {
+                    acc.add_to(i, j, x[i] * x[j]);
+                }
+            }
+        }
+        acc.scale(1.0 / reps as f64);
+        let scale = want.fro_norm() / 12.0;
+        assert!(
+            acc.max_abs_diff(&want) < 0.15 * scale.max(1.0),
+            "diff {} scale {scale}",
+            acc.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn fitc_matches_definition() {
+        let (x, kernel, _, w) = setup(20);
+        let mut rng = Rng::seed_from(8);
+        let z = select_inducing(&x, &kernel, 5, 2, &mut rng, None).unwrap();
+        let p = FitcPrecond::with_inducing(&x, &kernel, z.clone(), &w);
+        // Dense definition.
+        let n = 20;
+        let sig_k = {
+            let mut s = kernel.sym_cov(&z, 0.0);
+            s.add_diag(1e-10 * kernel.variance);
+            s
+        };
+        let chol_k = CholeskyFactor::new(&sig_k).unwrap();
+        let mut want = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let ki: Vec<f64> = (0..5).map(|l| kernel.cov(x.row(i), z.row(l))).collect();
+                let kj: Vec<f64> = (0..5).map(|l| kernel.cov(x.row(j), z.row(l))).collect();
+                let q = dot(&ki, &chol_k.solve(&kj));
+                let mut v = q;
+                if i == j {
+                    v += (kernel.variance - q).max(1e-12) + 1.0 / w[i];
+                }
+                want.set(i, j, v);
+            }
+        }
+        let got = dense_from_precond(&p);
+        assert!(got.max_abs_diff(&want) < 1e-5, "diff {}", got.max_abs_diff(&want));
+        let chol = CholeskyFactor::new(&want).unwrap();
+        assert!((p.logdet() - chol.logdet()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn fitc_sampling_covariance() {
+        let (x, kernel, _, w) = setup(12);
+        let mut rng = Rng::seed_from(9);
+        let z = select_inducing(&x, &kernel, 4, 2, &mut rng, None).unwrap();
+        let p = FitcPrecond::with_inducing(&x, &kernel, z, &w[..12]);
+        let want = dense_from_precond(&p);
+        let reps = 60_000;
+        let mut acc = Mat::zeros(12, 12);
+        for _ in 0..reps {
+            let s = p.sample(&mut rng);
+            for i in 0..12 {
+                for j in 0..12 {
+                    acc.add_to(i, j, s[i] * s[j]);
+                }
+            }
+        }
+        acc.scale(1.0 / reps as f64);
+        let scale = want.fro_norm() / 12.0;
+        assert!(
+            acc.max_abs_diff(&want) < 0.2 * scale.max(1.0),
+            "diff {}",
+            acc.max_abs_diff(&want)
+        );
+    }
+}

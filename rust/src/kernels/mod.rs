@@ -1,0 +1,456 @@
+//! ARD Matérn covariance functions with analytic gradients.
+//!
+//! The paper (§2, §6, §7) works with automatic-relevance-determination
+//! (ARD) Matérn kernels
+//!
+//! ```text
+//! c_θ(s, s') = σ₁² · k_ν(r),    r = ‖q_λ(s) − q_λ(s')‖,
+//! q_λ(s) = (s₁/λ₁, …, s_d/λ_d)
+//! ```
+//!
+//! with smoothness ν ∈ {1/2, 3/2, 5/2, ∞(Gaussian)} in closed form plus a
+//! general-ν path via the modified Bessel function `K_ν` (used for the
+//! §8.3 smoothness-estimation experiments).
+//!
+//! Gradients are taken with respect to *log*-parameters (log σ₁²,
+//! log λ₁…λ_d, log ν), matching how the optimizer parameterizes the model.
+
+pub mod bessel;
+
+use crate::linalg::Mat;
+use bessel::{bessel_k, ln_gamma};
+
+/// Matérn smoothness parameter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Smoothness {
+    /// ν = 1/2 (exponential kernel)
+    Half,
+    /// ν = 3/2
+    ThreeHalves,
+    /// ν = 5/2
+    FiveHalves,
+    /// ν = ∞ (Gaussian / squared-exponential kernel)
+    Gaussian,
+    /// General fractional ν > 0, evaluated via Bessel K_ν.
+    General(f64),
+}
+
+impl Smoothness {
+    /// Numeric ν (`f64::INFINITY` for the Gaussian kernel).
+    pub fn nu(&self) -> f64 {
+        match *self {
+            Smoothness::Half => 0.5,
+            Smoothness::ThreeHalves => 1.5,
+            Smoothness::FiveHalves => 2.5,
+            Smoothness::Gaussian => f64::INFINITY,
+            Smoothness::General(v) => v,
+        }
+    }
+
+    /// Canonicalize `General` values that hit a closed form.
+    pub fn canonical(v: f64) -> Smoothness {
+        if (v - 0.5).abs() < 1e-12 {
+            Smoothness::Half
+        } else if (v - 1.5).abs() < 1e-12 {
+            Smoothness::ThreeHalves
+        } else if (v - 2.5).abs() < 1e-12 {
+            Smoothness::FiveHalves
+        } else if v.is_infinite() {
+            Smoothness::Gaussian
+        } else {
+            Smoothness::General(v)
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Smoothness> {
+        match s {
+            "0.5" | "half" | "exp" | "matern12" => Some(Smoothness::Half),
+            "1.5" | "matern32" => Some(Smoothness::ThreeHalves),
+            "2.5" | "matern52" => Some(Smoothness::FiveHalves),
+            "inf" | "gaussian" | "rbf" | "sqexp" => Some(Smoothness::Gaussian),
+            other => other.parse::<f64>().ok().map(Smoothness::canonical),
+        }
+    }
+}
+
+/// An ARD Matérn covariance function `c_θ`.
+#[derive(Clone, Debug)]
+pub struct ArdMatern {
+    /// Marginal (signal) variance σ₁².
+    pub variance: f64,
+    /// Per-dimension length scales λ₁…λ_d.
+    pub length_scales: Vec<f64>,
+    /// Matérn smoothness ν.
+    pub smoothness: Smoothness,
+}
+
+/// Alias used throughout the library: the single covariance family the
+/// paper's experiments use.
+pub type CovFunction = ArdMatern;
+
+impl ArdMatern {
+    pub fn new(variance: f64, length_scales: Vec<f64>, smoothness: Smoothness) -> Self {
+        assert!(variance > 0.0);
+        assert!(length_scales.iter().all(|&l| l > 0.0));
+        ArdMatern { variance, length_scales, smoothness }
+    }
+
+    /// Isotropic shorthand: one shared length scale across `d` dimensions.
+    pub fn isotropic(variance: f64, length_scale: f64, d: usize, smoothness: Smoothness) -> Self {
+        Self::new(variance, vec![length_scale; d], smoothness)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.length_scales.len()
+    }
+
+    /// Number of covariance parameters (σ₁² + d length scales).
+    pub fn num_params(&self) -> usize {
+        1 + self.dim()
+    }
+
+    /// Scaled distance r between two points.
+    #[inline]
+    pub fn scaled_dist(&self, a: &[f64], b: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for ((&x, &y), &l) in a.iter().zip(b).zip(&self.length_scales) {
+            let u = (x - y) / l;
+            s += u * u;
+        }
+        s.sqrt()
+    }
+
+    /// Radial profile `k_ν(r)` with k(0)=1 (correlation form, σ₁² applied
+    /// by the caller).
+    #[inline]
+    pub fn corr_of_dist(&self, r: f64) -> f64 {
+        match self.smoothness {
+            Smoothness::Half => (-r).exp(),
+            Smoothness::ThreeHalves => {
+                let t = SQRT3 * r;
+                (1.0 + t) * (-t).exp()
+            }
+            Smoothness::FiveHalves => {
+                let t = SQRT5 * r;
+                (1.0 + t + t * t / 3.0) * (-t).exp()
+            }
+            Smoothness::Gaussian => (-0.5 * r * r).exp(),
+            Smoothness::General(nu) => matern_general(nu, r),
+        }
+    }
+
+    /// Derivative `d k_ν / d r` of the radial profile.
+    #[inline]
+    pub fn dcorr_dr(&self, r: f64) -> f64 {
+        match self.smoothness {
+            Smoothness::Half => -(-r).exp(),
+            Smoothness::ThreeHalves => -3.0 * r * (-SQRT3 * r).exp(),
+            Smoothness::FiveHalves => {
+                let t = SQRT5 * r;
+                -(5.0 / 3.0) * r * (1.0 + t) * (-t).exp()
+            }
+            Smoothness::Gaussian => -r * (-0.5 * r * r).exp(),
+            Smoothness::General(nu) => {
+                // d/dr [ 2^{1-ν}/Γ(ν) (√(2ν)r)^ν K_ν(√(2ν)r) ]
+                //   = -2^{1-ν}/Γ(ν) √(2ν) (√(2ν)r)^ν K_{ν-1}(√(2ν)r)
+                // using K_ν'(x) = -(K_{ν-1}+K_{ν+1})/2 and the recurrence.
+                if r <= 0.0 {
+                    return 0.0;
+                }
+                let s = (2.0 * nu).sqrt();
+                let x = s * r;
+                let c = (2.0f64.ln() * (1.0 - nu) - ln_gamma(nu)).exp();
+                -c * s * x.powf(nu) * bessel_k((nu - 1.0).abs(), x)
+            }
+        }
+    }
+
+    /// Covariance between two points.
+    #[inline]
+    pub fn cov(&self, a: &[f64], b: &[f64]) -> f64 {
+        self.variance * self.corr_of_dist(self.scaled_dist(a, b))
+    }
+
+    /// Cross-covariance matrix `[c_θ(a_i, b_j)]` (rows over `a`).
+    pub fn cross_cov(&self, a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.rows());
+        for i in 0..a.rows() {
+            let ra = a.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..b.rows() {
+                orow[j] = self.variance * self.corr_of_dist(self.scaled_dist(ra, b.row(j)));
+            }
+        }
+        out
+    }
+
+    /// Symmetric covariance matrix over one point set, with optional nugget.
+    pub fn sym_cov(&self, a: &Mat, nugget: f64) -> Mat {
+        let n = a.rows();
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            out.set(i, i, self.variance + nugget);
+            for j in 0..i {
+                let v = self.variance * self.corr_of_dist(self.scaled_dist(a.row(i), a.row(j)));
+                out.set(i, j, v);
+                out.set(j, i, v);
+            }
+        }
+        out
+    }
+
+    /// Covariance and its gradient wrt `[log σ₁², log λ₁…λ_d]`
+    /// evaluated at a single pair. Returns `(cov, grad)`.
+    pub fn cov_and_grad(&self, a: &[f64], b: &[f64]) -> (f64, Vec<f64>) {
+        let mut grad = vec![0.0; 1 + self.dim()];
+        let c = self.cov_and_grad_into(a, b, &mut grad);
+        (c, grad)
+    }
+
+    /// Allocation-free [`Self::cov_and_grad`] — the inner loop of the
+    /// Appendix-A gradient pass calls this millions of times (§Perf).
+    /// `grad` must have length `1 + d`; returns the covariance.
+    #[inline]
+    pub fn cov_and_grad_into(&self, a: &[f64], b: &[f64], grad: &mut [f64]) -> f64 {
+        let d = self.dim();
+        debug_assert_eq!(grad.len(), 1 + d);
+        let mut r2 = 0.0;
+        for j in 0..d {
+            let u = (a[j] - b[j]) / self.length_scales[j];
+            r2 += u * u;
+        }
+        let r = r2.sqrt();
+        let k = self.corr_of_dist(r);
+        let c = self.variance * k;
+        grad[0] = c; // ∂c/∂log σ₁² = c
+        if r > 0.0 {
+            let dkdr_over_r = self.variance * self.dcorr_dr(r) / r;
+            for j in 0..d {
+                // ∂r/∂log λ_j = −u_j²/r
+                let u = (a[j] - b[j]) / self.length_scales[j];
+                grad[1 + j] = -dkdr_over_r * u * u;
+            }
+        } else {
+            grad[1..].iter_mut().for_each(|g| *g = 0.0);
+        }
+        c
+    }
+
+    /// Gradient of a full cross-covariance matrix wrt log-parameter `p`
+    /// (0 = log σ₁², 1+j = log λ_j).
+    pub fn cross_cov_grad(&self, a: &Mat, b: &Mat, p: usize) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.rows());
+        for i in 0..a.rows() {
+            let ra = a.row(i);
+            for j in 0..b.rows() {
+                let (_, g) = self.cov_and_grad(ra, b.row(j));
+                out.set(i, j, g[p]);
+            }
+        }
+        out
+    }
+
+    /// Gradient of the symmetric covariance matrix wrt log-parameter `p`.
+    pub fn sym_cov_grad(&self, a: &Mat, p: usize) -> Mat {
+        let n = a.rows();
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            if p == 0 {
+                out.set(i, i, self.variance);
+            }
+            for j in 0..i {
+                let (_, g) = self.cov_and_grad(a.row(i), a.row(j));
+                out.set(i, j, g[p]);
+                out.set(j, i, g[p]);
+            }
+        }
+        out
+    }
+
+    /// Pack `[log σ₁², log λ…]` (the optimizer's view of this kernel).
+    pub fn log_params(&self) -> Vec<f64> {
+        let mut p = Vec::with_capacity(self.num_params());
+        p.push(self.variance.ln());
+        p.extend(self.length_scales.iter().map(|l| l.ln()));
+        p
+    }
+
+    /// Rebuild from packed log-parameters.
+    pub fn from_log_params(p: &[f64], smoothness: Smoothness) -> Self {
+        assert!(p.len() >= 2);
+        ArdMatern::new(
+            p[0].exp(),
+            p[1..].iter().map(|x| x.exp()).collect(),
+            smoothness,
+        )
+    }
+}
+
+const SQRT3: f64 = 1.7320508075688772;
+const SQRT5: f64 = 2.23606797749979;
+
+/// General-ν Matérn correlation `2^{1-ν}/Γ(ν) (√(2ν)r)^ν K_ν(√(2ν)r)`.
+fn matern_general(nu: f64, r: f64) -> f64 {
+    if r <= 1e-14 {
+        return 1.0;
+    }
+    let x = (2.0 * nu).sqrt() * r;
+    if x > 700.0 {
+        return 0.0; // underflow guard
+    }
+    let lg = 2.0f64.ln() * (1.0 - nu) - ln_gamma(nu) + nu * x.ln();
+    let k = bessel_k(nu, x);
+    if k <= 0.0 {
+        return 0.0;
+    }
+    (lg + k.ln()).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kern(s: Smoothness) -> ArdMatern {
+        ArdMatern::new(1.7, vec![0.4, 0.9, 1.3], s)
+    }
+
+    #[test]
+    fn cov_at_zero_distance_is_variance() {
+        for s in [
+            Smoothness::Half,
+            Smoothness::ThreeHalves,
+            Smoothness::FiveHalves,
+            Smoothness::Gaussian,
+            Smoothness::General(0.8),
+        ] {
+            let k = kern(s);
+            let p = [0.3, -0.2, 0.5];
+            assert!((k.cov(&p, &p) - 1.7).abs() < 1e-10, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn general_matches_closed_forms() {
+        // General(1/2 ± 0) should agree with the closed forms.
+        for (nu, closed) in [
+            (0.5, Smoothness::Half),
+            (1.5, Smoothness::ThreeHalves),
+            (2.5, Smoothness::FiveHalves),
+        ] {
+            let kg = ArdMatern::new(1.0, vec![0.7, 0.7], Smoothness::General(nu));
+            let kc = ArdMatern::new(1.0, vec![0.7, 0.7], closed);
+            for t in 1..10 {
+                let a = [0.0, 0.0];
+                let b = [0.1 * t as f64, 0.05 * t as f64];
+                let (g, c) = (kg.cov(&a, &b), kc.cov(&a, &b));
+                assert!(
+                    (g - c).abs() < 1e-8,
+                    "nu={nu} t={t} general={g} closed={c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_distance() {
+        for s in [
+            Smoothness::Half,
+            Smoothness::ThreeHalves,
+            Smoothness::FiveHalves,
+            Smoothness::Gaussian,
+            Smoothness::General(3.7),
+        ] {
+            let k = kern(s);
+            let mut last = f64::INFINITY;
+            for t in 0..20 {
+                let v = k.corr_of_dist(0.2 * t as f64);
+                assert!(v <= last + 1e-12, "{s:?}");
+                last = v;
+            }
+        }
+    }
+
+    #[test]
+    fn dcorr_dr_matches_finite_difference() {
+        for s in [
+            Smoothness::Half,
+            Smoothness::ThreeHalves,
+            Smoothness::FiveHalves,
+            Smoothness::Gaussian,
+            Smoothness::General(1.9),
+        ] {
+            let k = kern(s);
+            for t in 1..8 {
+                let r = 0.3 * t as f64;
+                let h = 1e-6;
+                let fd = (k.corr_of_dist(r + h) - k.corr_of_dist(r - h)) / (2.0 * h);
+                let an = k.dcorr_dr(r);
+                assert!(
+                    (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                    "{s:?} r={r} fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn param_gradients_match_finite_difference() {
+        for s in [Smoothness::ThreeHalves, Smoothness::Gaussian, Smoothness::General(0.9)] {
+            let k = kern(s);
+            let a = [0.3, 0.1, -0.4];
+            let b = [-0.2, 0.6, 0.2];
+            let (_, grad) = k.cov_and_grad(&a, &b);
+            let p0 = k.log_params();
+            for pi in 0..p0.len() {
+                let h = 1e-6;
+                let mut pp = p0.clone();
+                pp[pi] += h;
+                let kp = ArdMatern::from_log_params(&pp, s);
+                let mut pm = p0.clone();
+                pm[pi] -= h;
+                let km = ArdMatern::from_log_params(&pm, s);
+                let fd = (kp.cov(&a, &b) - km.cov(&a, &b)) / (2.0 * h);
+                assert!(
+                    (fd - grad[pi]).abs() < 1e-5 * (1.0 + grad[pi].abs()),
+                    "{s:?} param {pi}: fd={fd} an={}",
+                    grad[pi]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_cov_shapes_and_symmetry() {
+        let k = kern(Smoothness::ThreeHalves);
+        let a = Mat::from_fn(4, 3, |i, j| (i as f64) * 0.1 + (j as f64) * 0.05);
+        let b = Mat::from_fn(6, 3, |i, j| (i as f64) * 0.07 - (j as f64) * 0.02);
+        let c = k.cross_cov(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (4, 6));
+        let s = k.sym_cov(&a, 0.01);
+        for i in 0..4 {
+            assert!((s.get(i, i) - (1.7 + 0.01)).abs() < 1e-12);
+            for j in 0..4 {
+                assert!((s.get(i, j) - s.get(j, i)).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn log_param_round_trip() {
+        let k = kern(Smoothness::FiveHalves);
+        let p = k.log_params();
+        let k2 = ArdMatern::from_log_params(&p, Smoothness::FiveHalves);
+        assert!((k.variance - k2.variance).abs() < 1e-12);
+        for (a, b) in k.length_scales.iter().zip(&k2.length_scales) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn smoothness_parse() {
+        assert_eq!(Smoothness::parse("1.5"), Some(Smoothness::ThreeHalves));
+        assert_eq!(Smoothness::parse("gaussian"), Some(Smoothness::Gaussian));
+        assert_eq!(Smoothness::parse("0.7"), Some(Smoothness::General(0.7)));
+        assert_eq!(Smoothness::parse("bogus"), None);
+    }
+}

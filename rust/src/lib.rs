@@ -1,0 +1,40 @@
+//! # vifgp — Vecchia-Inducing-points Full-scale (VIF) Gaussian processes
+//!
+//! A production-quality reproduction of *"Vecchia-Inducing-Points Full-Scale
+//! Approximations for Gaussian Processes"* (Gyger, Furrer & Sigrist, 2025),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — tiled ARD-Matérn cross-covariance
+//!   kernels authored in Pallas (`python/compile/kernels/`), validated
+//!   against a pure-`jnp` oracle and lowered (interpret mode) into HLO.
+//! * **Layer 2 (JAX, build time)** — covariance-block compute graphs
+//!   (`python/compile/model.py`) AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (Rust, runtime)** — everything else: the VIF approximation,
+//!   Vecchia residual factors, iterative methods (preconditioned CG, SLQ,
+//!   stochastic trace estimation), Laplace approximations, cover-tree
+//!   correlation neighbor search, the experiment coordinator, and the CLI.
+//!   Python is never on the request path; the Rust binary executes the HLO
+//!   artifacts through PJRT (`runtime`) with a native fallback.
+//!
+//! Quick start: see `examples/quickstart.rs`.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod covertree;
+pub mod data;
+pub mod inducing;
+pub mod iterative;
+pub mod kernels;
+pub mod likelihoods;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod vecchia;
+pub mod vif;
+
+pub use kernels::{CovFunction, Smoothness};
+pub use linalg::Mat;
+pub use rng::Rng;

@@ -1,0 +1,456 @@
+//! Response-variable likelihoods `p(y | μ, ξ)` for latent Gaussian
+//! process models (paper §3).
+//!
+//! Each likelihood provides the per-observation log density and its
+//! first three derivatives with respect to the latent value `b` (the
+//! Laplace approximation needs `W = −∂² log p` and its derivative
+//! `∂W/∂b = −∂³ log p`), plus derivatives with respect to auxiliary
+//! parameters ξ (Gamma shape, Student-t scale).
+//!
+//! Link functions follow the paper's experiments: logit for Bernoulli,
+//! log for Poisson and Gamma, identity for Student-t.
+
+use crate::kernels::bessel::{digamma, ln_gamma};
+
+/// A single-parameter response likelihood with latent parameter `b`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Likelihood {
+    /// Gaussian with error variance σ² (used to validate the Laplace path:
+    /// Laplace is exact for Gaussian likelihoods).
+    Gaussian { variance: f64 },
+    /// Bernoulli with logit link: P(y=1) = σ(b).
+    BernoulliLogit,
+    /// Poisson with log link: y ~ Pois(e^b).
+    Poisson,
+    /// Gamma with log link and shape α: E[y] = e^b.
+    Gamma { shape: f64 },
+    /// Student-t with location b, scale s and fixed dof ν.
+    StudentT { scale: f64, df: f64 },
+}
+
+impl Likelihood {
+    /// Number of auxiliary parameters ξ estimated for this likelihood.
+    pub fn num_aux(&self) -> usize {
+        match self {
+            Likelihood::Gaussian { .. } => 1,  // log σ²
+            Likelihood::BernoulliLogit => 0,
+            Likelihood::Poisson => 0,
+            Likelihood::Gamma { .. } => 1,     // log α
+            Likelihood::StudentT { .. } => 1,  // log s (df held fixed)
+        }
+    }
+
+    /// Pack auxiliary parameters as logs.
+    pub fn pack_aux(&self) -> Vec<f64> {
+        match self {
+            Likelihood::Gaussian { variance } => vec![variance.ln()],
+            Likelihood::Gamma { shape } => vec![shape.ln()],
+            Likelihood::StudentT { scale, .. } => vec![scale.ln()],
+            _ => vec![],
+        }
+    }
+
+    /// Rebuild with new packed auxiliary parameters.
+    pub fn with_aux(&self, aux: &[f64]) -> Likelihood {
+        match self {
+            Likelihood::Gaussian { .. } => Likelihood::Gaussian { variance: aux[0].exp() },
+            Likelihood::Gamma { .. } => Likelihood::Gamma { shape: aux[0].exp() },
+            Likelihood::StudentT { df, .. } => {
+                Likelihood::StudentT { scale: aux[0].exp(), df: *df }
+            }
+            other => other.clone(),
+        }
+    }
+
+    /// Log density of one observation.
+    pub fn log_density(&self, y: f64, b: f64) -> f64 {
+        match *self {
+            Likelihood::Gaussian { variance } => {
+                let r = y - b;
+                -0.5 * ((2.0 * std::f64::consts::PI * variance).ln() + r * r / variance)
+            }
+            Likelihood::BernoulliLogit => {
+                // y ∈ {0, 1}: y·b − log(1 + e^b), numerically stable.
+                y * b - softplus(b)
+            }
+            Likelihood::Poisson => y * b - b.exp() - ln_gamma(y + 1.0),
+            Likelihood::Gamma { shape } => {
+                shape * (shape.ln() - b) + (shape - 1.0) * y.ln()
+                    - shape * y * (-b).exp()
+                    - ln_gamma(shape)
+            }
+            Likelihood::StudentT { scale, df } => {
+                let r = (y - b) / scale;
+                ln_gamma((df + 1.0) / 2.0)
+                    - ln_gamma(df / 2.0)
+                    - 0.5 * (df * std::f64::consts::PI).ln()
+                    - scale.ln()
+                    - 0.5 * (df + 1.0) * (1.0 + r * r / df).ln()
+            }
+        }
+    }
+
+    /// Total log density over a data set.
+    pub fn log_density_sum(&self, y: &[f64], b: &[f64]) -> f64 {
+        y.iter()
+            .zip(b)
+            .map(|(yi, bi)| self.log_density(*yi, *bi))
+            .sum()
+    }
+
+    /// First derivative `∂ log p / ∂b`.
+    pub fn d1(&self, y: f64, b: f64) -> f64 {
+        match *self {
+            Likelihood::Gaussian { variance } => (y - b) / variance,
+            Likelihood::BernoulliLogit => y - sigmoid(b),
+            Likelihood::Poisson => y - b.exp(),
+            Likelihood::Gamma { shape } => -shape + shape * y * (-b).exp(),
+            Likelihood::StudentT { scale, df } => {
+                let r = y - b;
+                (df + 1.0) * r / (df * scale * scale + r * r)
+            }
+        }
+    }
+
+    /// Second derivative `∂² log p / ∂b²` (≤ 0 for log-concave families).
+    pub fn d2(&self, y: f64, b: f64) -> f64 {
+        match *self {
+            Likelihood::Gaussian { variance } => -1.0 / variance,
+            Likelihood::BernoulliLogit => {
+                let p = sigmoid(b);
+                -p * (1.0 - p)
+            }
+            Likelihood::Poisson => -b.exp(),
+            Likelihood::Gamma { shape } => -shape * y * (-b).exp(),
+            Likelihood::StudentT { scale, df } => {
+                let r = y - b;
+                let s2 = df * scale * scale;
+                (df + 1.0) * (r * r - s2) / ((s2 + r * r) * (s2 + r * r))
+            }
+        }
+    }
+
+    /// Third derivative `∂³ log p / ∂b³` (for `∂W/∂b` in the Laplace
+    /// gradients).
+    pub fn d3(&self, y: f64, b: f64) -> f64 {
+        match *self {
+            Likelihood::Gaussian { .. } => 0.0,
+            Likelihood::BernoulliLogit => {
+                let p = sigmoid(b);
+                -p * (1.0 - p) * (1.0 - 2.0 * p)
+            }
+            Likelihood::Poisson => -b.exp(),
+            Likelihood::Gamma { shape } => shape * y * (-b).exp(),
+            Likelihood::StudentT { scale, df } => {
+                let r = y - b;
+                let s2 = df * scale * scale;
+                let den = s2 + r * r;
+                // d2(b) = (ν+1)(r²−s2)/den², r = y−b → ∂/∂b = −∂/∂r
+                -(df + 1.0) * (2.0 * r * den - (r * r - s2) * 4.0 * r) / (den * den * den)
+            }
+        }
+    }
+
+    /// `W_ii = −∂² log p / ∂b²` (paper Eq. 11), floored for the
+    /// non-log-concave Student-t tails (documented deviation: Fisher-style
+    /// clamp keeps `W + Σ_†⁻¹` positive definite for iterative solvers).
+    pub fn w(&self, y: f64, b: f64) -> f64 {
+        (-self.d2(y, b)).max(1e-10)
+    }
+
+    /// `∂ log p / ∂ log ξ_l` for the packed auxiliary parameters.
+    pub fn d_aux(&self, y: f64, b: f64) -> Vec<f64> {
+        match *self {
+            Likelihood::Gaussian { variance } => {
+                let r = y - b;
+                vec![-0.5 + 0.5 * r * r / variance]
+            }
+            Likelihood::Gamma { shape } => {
+                // ∂logp/∂log α = α ∂logp/∂α
+                let a = shape;
+                vec![a * (a.ln() + 1.0 - b + y.ln() - y * (-b).exp() - digamma(a))]
+            }
+            Likelihood::StudentT { scale, df } => {
+                // ∂logp/∂log s = s ∂/∂s
+                let r = (y - b) / scale;
+                vec![-1.0 + (df + 1.0) * r * r / (df + r * r)]
+            }
+            _ => vec![],
+        }
+    }
+
+    /// `∂² log p / ∂ log ξ_l ∂b` (for the implicit mode derivative).
+    pub fn d_aux_db(&self, y: f64, b: f64) -> Vec<f64> {
+        match *self {
+            Likelihood::Gaussian { variance } => vec![-(y - b) / variance],
+            Likelihood::Gamma { shape } => {
+                // ∂/∂logα of d1 = α(−1 + y e^{−b})
+                vec![shape * (-1.0 + y * (-b).exp())]
+            }
+            Likelihood::StudentT { scale, df } => {
+                // d1 = (ν+1)r/(νs²+r²); ∂/∂log s = s ∂/∂s
+                let r = y - b;
+                let s2 = df * scale * scale;
+                let den = s2 + r * r;
+                vec![-(df + 1.0) * r * 2.0 * s2 / (den * den)]
+            }
+            _ => vec![],
+        }
+    }
+
+    /// `∂W_ii / ∂ log ξ_l`.
+    pub fn d_w_aux(&self, y: f64, b: f64) -> Vec<f64> {
+        match *self {
+            Likelihood::Gaussian { variance } => vec![-1.0 / variance], // W = 1/σ²
+            Likelihood::Gamma { shape } => {
+                // W = α y e^{−b}; ∂W/∂log α = W
+                vec![shape * y * (-b).exp()]
+            }
+            Likelihood::StudentT { scale, df } => {
+                // W clamped; numeric in log s (simple + matches w()).
+                let h = 1e-6;
+                let lp = Likelihood::StudentT { scale: scale * (1.0 + h), df };
+                let lm = Likelihood::StudentT { scale: scale * (1.0 - h), df };
+                vec![(lp.w(y, b) - lm.w(y, b)) / (2.0 * h)]
+            }
+            _ => vec![],
+        }
+    }
+
+    /// Predictive response mean given a latent Gaussian `N(mu, var)`:
+    /// closed forms where available, else 20-node Gauss–Hermite.
+    pub fn predictive_mean(&self, mu: f64, var: f64) -> f64 {
+        match *self {
+            Likelihood::Gaussian { .. } => mu,
+            Likelihood::StudentT { .. } => mu,
+            Likelihood::Poisson | Likelihood::Gamma { .. } => (mu + 0.5 * var).exp(),
+            Likelihood::BernoulliLogit => gauss_hermite_mean(mu, var, sigmoid),
+        }
+    }
+
+    /// Predictive response variance given latent `N(mu, var)` (law of
+    /// total variance).
+    pub fn predictive_var(&self, mu: f64, var: f64) -> f64 {
+        match *self {
+            Likelihood::Gaussian { variance } => var + variance,
+            Likelihood::StudentT { scale, df } => {
+                var + if df > 2.0 {
+                    scale * scale * df / (df - 2.0)
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Likelihood::Poisson => {
+                let m = (mu + 0.5 * var).exp();
+                let e2 = (2.0 * mu + 2.0 * var).exp();
+                m + e2 - m * m
+            }
+            Likelihood::Gamma { shape } => {
+                let m = (mu + 0.5 * var).exp();
+                let e2 = (2.0 * mu + 2.0 * var).exp();
+                e2 * (1.0 + 1.0 / shape) - m * m
+            }
+            Likelihood::BernoulliLogit => {
+                let p = self.predictive_mean(mu, var);
+                p * (1.0 - p)
+            }
+        }
+    }
+
+    /// Mean negative predictive log-density (log-score) of observations
+    /// given latent Gaussians, by Gauss–Hermite quadrature.
+    pub fn log_score(&self, y: &[f64], mu: &[f64], var: &[f64]) -> f64 {
+        let n = y.len() as f64;
+        y.iter()
+            .zip(mu)
+            .zip(var)
+            .map(|((yi, m), v)| {
+                let dens = gauss_hermite_mean(*m, *v, |b| self.log_density(*yi, b).exp());
+                -(dens.max(1e-300)).ln()
+            })
+            .sum::<f64>()
+            / n
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        0.0
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+/// 20-node Gauss–Hermite expectation `E[f(b)]`, `b ~ N(mu, var)`, with
+/// nodes/weights computed at first use from the Jacobi matrix via the
+/// library's own symmetric tridiagonal eigensolver (Golub–Welsch).
+pub fn gauss_hermite_mean(mu: f64, var: f64, f: impl Fn(f64) -> f64) -> f64 {
+    let (nodes, weights) = gh_nodes();
+    let s = var.max(0.0).sqrt() * std::f64::consts::SQRT_2;
+    let mut acc = 0.0;
+    for (x, w) in nodes.iter().zip(weights) {
+        acc += w * f(mu + s * x);
+    }
+    acc / std::f64::consts::PI.sqrt()
+}
+
+fn gh_nodes() -> (&'static [f64], &'static [f64]) {
+    use once_cell::sync::Lazy;
+    static NODES: Lazy<(Vec<f64>, Vec<f64>)> = Lazy::new(|| {
+        // Golub–Welsch: the Hermite Jacobi matrix has zero diagonal and
+        // off-diagonals sqrt(k/2); weights = sqrt(pi)·(first components)².
+        let k = 20usize;
+        let d = vec![0.0; k];
+        let e: Vec<f64> = (1..k).map(|i| (i as f64 / 2.0).sqrt()).collect();
+        let t = crate::linalg::SymTridiag::new(d, e);
+        let (eigs, first) = crate::linalg::tridiag_eigen(&t);
+        let mut pairs: Vec<(f64, f64)> = eigs
+            .into_iter()
+            .zip(first)
+            .map(|(x, w)| (x, std::f64::consts::PI.sqrt() * w * w))
+            .collect();
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        (
+            pairs.iter().map(|p| p.0).collect(),
+            pairs.iter().map(|p| p.1).collect(),
+        )
+    });
+    (&NODES.0, &NODES.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_checks(lik: &Likelihood, y: f64, b: f64) {
+        let h = 1e-6;
+        let d1_fd = (lik.log_density(y, b + h) - lik.log_density(y, b - h)) / (2.0 * h);
+        assert!(
+            (lik.d1(y, b) - d1_fd).abs() < 1e-5 * (1.0 + d1_fd.abs()),
+            "{lik:?} d1: {} vs {d1_fd}",
+            lik.d1(y, b)
+        );
+        let d2_fd = (lik.d1(y, b + h) - lik.d1(y, b - h)) / (2.0 * h);
+        assert!(
+            (lik.d2(y, b) - d2_fd).abs() < 1e-5 * (1.0 + d2_fd.abs()),
+            "{lik:?} d2: {} vs {d2_fd}",
+            lik.d2(y, b)
+        );
+        let d3_fd = (lik.d2(y, b + h) - lik.d2(y, b - h)) / (2.0 * h);
+        assert!(
+            (lik.d3(y, b) - d3_fd).abs() < 1e-4 * (1.0 + d3_fd.abs()),
+            "{lik:?} d3: {} vs {d3_fd}",
+            lik.d3(y, b)
+        );
+    }
+
+    #[test]
+    fn derivative_chains_match_fd() {
+        fd_checks(&Likelihood::Gaussian { variance: 0.3 }, 1.2, 0.4);
+        fd_checks(&Likelihood::BernoulliLogit, 1.0, 0.7);
+        fd_checks(&Likelihood::BernoulliLogit, 0.0, -1.3);
+        fd_checks(&Likelihood::Poisson, 3.0, 0.9);
+        fd_checks(&Likelihood::Gamma { shape: 2.5 }, 1.7, 0.2);
+        fd_checks(&Likelihood::StudentT { scale: 0.8, df: 5.0 }, 2.0, 0.5);
+    }
+
+    #[test]
+    fn aux_gradients_match_fd() {
+        let cases: Vec<(Likelihood, f64, f64)> = vec![
+            (Likelihood::Gaussian { variance: 0.4 }, 0.9, 0.2),
+            (Likelihood::Gamma { shape: 1.8 }, 2.1, 0.3),
+            (Likelihood::StudentT { scale: 0.7, df: 4.0 }, 1.1, -0.2),
+        ];
+        for (lik, y, b) in cases {
+            let aux0 = lik.pack_aux();
+            let h = 1e-6;
+            let g = lik.d_aux(y, b);
+            let g_db = lik.d_aux_db(y, b);
+            let g_w = lik.d_w_aux(y, b);
+            for l in 0..aux0.len() {
+                let mut ap = aux0.clone();
+                ap[l] += h;
+                let lp = lik.with_aux(&ap);
+                let mut am = aux0.clone();
+                am[l] -= h;
+                let lm = lik.with_aux(&am);
+                let fd = (lp.log_density(y, b) - lm.log_density(y, b)) / (2.0 * h);
+                assert!(
+                    (g[l] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "{lik:?} daux {l}: {} vs {fd}",
+                    g[l]
+                );
+                let fd_db = (lp.d1(y, b) - lm.d1(y, b)) / (2.0 * h);
+                assert!(
+                    (g_db[l] - fd_db).abs() < 1e-4 * (1.0 + fd_db.abs()),
+                    "{lik:?} daux_db {l}: {} vs {fd_db}",
+                    g_db[l]
+                );
+                let fd_w = (lp.w(y, b) - lm.w(y, b)) / (2.0 * h);
+                assert!(
+                    (g_w[l] - fd_w).abs() < 1e-3 * (1.0 + fd_w.abs()),
+                    "{lik:?} dw_aux {l}: {} vs {fd_w}",
+                    g_w[l]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_hermite_integrates_polynomials() {
+        // E[b²] for N(2, 3) = 4 + 3 = 7.
+        let m2 = gauss_hermite_mean(2.0, 3.0, |b| b * b);
+        assert!((m2 - 7.0).abs() < 1e-8, "{m2}");
+        // E[e^b] for N(0.5, 0.8) = exp(0.9)
+        let me = gauss_hermite_mean(0.5, 0.8, f64::exp);
+        assert!((me - (0.9f64).exp()).abs() < 1e-6, "{me}");
+    }
+
+    #[test]
+    fn bernoulli_predictive_mean_bounds() {
+        let lik = Likelihood::BernoulliLogit;
+        let p = lik.predictive_mean(1.0, 2.0);
+        assert!(p > 0.5 && p < sigmoid(1.0));
+        let p0 = lik.predictive_mean(1.0, 0.0);
+        assert!((p0 - sigmoid(1.0)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn poisson_predictive_moments() {
+        let lik = Likelihood::Poisson;
+        let (mu, var) = (0.7, 0.4);
+        let m = lik.predictive_mean(mu, var);
+        assert!((m - (0.9f64).exp()).abs() < 1e-10);
+        assert!(lik.predictive_var(mu, var) > m); // overdispersed
+    }
+
+    #[test]
+    fn gaussian_log_score_matches_closed_form() {
+        let lik = Likelihood::Gaussian { variance: 0.3 };
+        let got = lik.log_score(&[1.0], &[0.5], &[0.2]);
+        // y ~ N(0.5, 0.5) → -log N(1.0; 0.5, 0.5)
+        let want = 0.5 * ((2.0 * std::f64::consts::PI * 0.5f64).ln() + 0.25 / 0.5);
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn digamma_reference() {
+        // ψ(1) = −γ
+        assert!((digamma(1.0) + 0.5772156649015329).abs() < 1e-10);
+        // ψ(0.5) = −γ − 2 ln 2
+        assert!((digamma(0.5) + 0.5772156649015329 + 2.0 * (2.0f64).ln()).abs() < 1e-9);
+    }
+}

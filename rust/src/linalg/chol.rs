@@ -1,0 +1,227 @@
+//! Cholesky factorization and triangular solves.
+
+use super::{dot, Mat};
+
+/// Error returned when a matrix is not (numerically) positive definite.
+#[derive(Debug, thiserror::Error)]
+#[error("matrix not positive definite at pivot {pivot} (value {value:.3e})")]
+pub struct CholeskyError {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+#[derive(Clone, Debug)]
+pub struct CholeskyFactor {
+    l: Mat,
+}
+
+impl CholeskyFactor {
+    /// Factorize a symmetric positive definite matrix.
+    pub fn new(a: &Mat) -> Result<Self, CholeskyError> {
+        assert_eq!(a.rows(), a.cols(), "Cholesky needs a square matrix");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // s = A[i,j] - sum_k L[i,k] L[j,k]
+                let s = a.get(i, j)
+                    - dot(&l.row(i)[..j], &l.row(j)[..j]);
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return Err(CholeskyError { pivot: i, value: s });
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    let ljj = l.get(j, j);
+                    l.set(i, j, s / ljj);
+                }
+            }
+        }
+        Ok(CholeskyFactor { l })
+    }
+
+    /// Factorize with escalating diagonal jitter (used when the residual
+    /// covariance is numerically on the PSD boundary).
+    pub fn new_with_jitter(a: &Mat, base_jitter: f64) -> Result<Self, CholeskyError> {
+        match Self::new(a) {
+            Ok(f) => Ok(f),
+            Err(_) => {
+                let mut jitter = base_jitter.max(1e-12);
+                let mut last = None;
+                for _ in 0..10 {
+                    let mut aj = a.clone();
+                    aj.add_diag(jitter);
+                    match Self::new(&aj) {
+                        Ok(f) => return Ok(f),
+                        Err(e) => last = Some(e),
+                    }
+                    jitter *= 10.0;
+                }
+                Err(last.unwrap())
+            }
+        }
+    }
+
+    /// The lower factor.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// `log det A = 2 Σ log L_ii`.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve `L x = b` (forward substitution), in place.
+    pub fn solve_lower_in_place(&self, b: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        for i in 0..n {
+            let s = b[i] - dot(&self.l.row(i)[..i], &b[..i]);
+            b[i] = s / self.l.get(i, i);
+        }
+    }
+
+    /// Solve `Lᵀ x = b` (backward substitution), in place.
+    pub fn solve_upper_in_place(&self, b: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in i + 1..n {
+                s -= self.l.get(k, i) * b[k];
+            }
+            b[i] = s / self.l.get(i, i);
+        }
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_lower_in_place(&mut x);
+        self.solve_upper_in_place(&mut x);
+        x
+    }
+
+    /// Solve `A X = B` column-wise for a matrix RHS.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        // Work column-blocked on the transpose for contiguity.
+        let bt = b.t();
+        let mut xt = Mat::zeros(b.cols(), n);
+        for j in 0..b.cols() {
+            let mut col = bt.row(j).to_vec();
+            self.solve_lower_in_place(&mut col);
+            self.solve_upper_in_place(&mut col);
+            xt.row_mut(j).copy_from_slice(&col);
+        }
+        xt.t()
+    }
+
+    /// Solve `L X = B` for a matrix RHS (forward only).
+    pub fn solve_lower_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let bt = b.t();
+        let mut xt = Mat::zeros(b.cols(), n);
+        for j in 0..b.cols() {
+            let mut col = bt.row(j).to_vec();
+            self.solve_lower_in_place(&mut col);
+            xt.row_mut(j).copy_from_slice(&col);
+        }
+        xt.t()
+    }
+
+    /// Explicit inverse `A⁻¹` (small matrices only: Woodbury cores).
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.n()))
+    }
+
+    /// `L v` (multiply by lower factor), for sampling `N(0, A)`.
+    pub fn mul_lower(&self, v: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(v.len(), n);
+        (0..n).map(|i| dot(&self.l.row(i)[..=i], &v[..=i])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize) -> Mat {
+        // A = G Gᵀ + n I with a deterministic G.
+        let g = Mat::from_fn(n, n, |i, j| ((i * 31 + j * 17) as f64).sin());
+        let mut a = g.matmul_nt(&g);
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(8);
+        let f = CholeskyFactor::new(&a).unwrap();
+        let rec = f.l().matmul_nt(f.l());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = spd(6);
+        let f = CholeskyFactor::new(&a).unwrap();
+        let b: Vec<f64> = (0..6).map(|i| (i as f64).cos()).collect();
+        let x = f.solve(&b);
+        let ax = a.matvec(&x);
+        for (l, r) in ax.iter().zip(&b) {
+            assert!((l - r).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_mat_matches_vector_solves() {
+        let a = spd(5);
+        let f = CholeskyFactor::new(&a).unwrap();
+        let b = Mat::from_fn(5, 3, |i, j| (i + 2 * j) as f64);
+        let x = f.solve_mat(&b);
+        for j in 0..3 {
+            let xj = f.solve(&b.col(j));
+            for i in 0..5 {
+                assert!((x.get(i, j) - xj[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let f = CholeskyFactor::new(&a).unwrap();
+        assert!((f.logdet() - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn not_pd_detected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(CholeskyFactor::new(&a).is_err());
+        // ... but jitter rescues a barely-indefinite matrix.
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0 - 1e-14]);
+        assert!(CholeskyFactor::new_with_jitter(&b, 1e-10).is_ok());
+    }
+
+    #[test]
+    fn mul_lower_round_trip() {
+        let a = spd(7);
+        let f = CholeskyFactor::new(&a).unwrap();
+        let v: Vec<f64> = (0..7).map(|i| i as f64 - 3.0).collect();
+        let mut w = f.mul_lower(&v);
+        f.solve_lower_in_place(&mut w);
+        for (l, r) in w.iter().zip(&v) {
+            assert!((l - r).abs() < 1e-10);
+        }
+    }
+}

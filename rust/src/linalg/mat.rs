@@ -1,0 +1,355 @@
+//! Row-major dense matrix with blocked multiply.
+
+use super::dot;
+
+/// A dense, row-major `f64` matrix.
+///
+/// This is the workhorse container for all dense blocks in the VIF
+/// approximation: `Σ_m` (m×m), `Σ_mn` panels, Woodbury cores, and the
+/// small per-point Vecchia systems.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of shape `(rows, cols)`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector. Panics if sizes mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len(), "Mat::from_vec size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// A column vector (n×1) from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_to(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] += v;
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Underlying data (row-major).
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column `j` copied into a fresh vector.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Simple cache-blocked transpose.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// `selfᵀ * x` without forming the transpose.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len(), "matvec_t shape mismatch");
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (o, r) in out.iter_mut().zip(row) {
+                *o += xi * r;
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other`, blocked i-k-j loop order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // i-k-j with the inner j loop over contiguous rows of `other`:
+        // streams both `other` and `out` rows — autovectorizes well.
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &aik) in arow.iter().enumerate().take(k) {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without forming the transpose.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = self.row(kk);
+            let brow = other.row(kk);
+            for (i, &aki) in arow.iter().enumerate().take(m) {
+                if aki == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += aki * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * otherᵀ`.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                out.data[i * n + j] = dot(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// Symmetric rank-k style product `selfᵀ * self` (upper computed, mirrored).
+    pub fn gram_t(&self) -> Mat {
+        let (k, m) = (self.rows, self.cols);
+        let mut out = Mat::zeros(m, m);
+        for kk in 0..k {
+            let row = self.row(kk);
+            for i in 0..m {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                for j in i..m {
+                    out.data[i * m + j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..m {
+            for j in 0..i {
+                out.data[i * m + j] = out.data[j * m + i];
+            }
+        }
+        out
+    }
+
+    /// Elementwise in-place add.
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise in-place subtract.
+    pub fn sub_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Add `alpha` to the diagonal.
+    pub fn add_diag(&mut self, alpha: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    /// Scale row `i` by `d[i]` (left-multiply by diag(d)).
+    pub fn scale_rows(&mut self, d: &[f64]) {
+        assert_eq!(d.len(), self.rows);
+        for i in 0..self.rows {
+            let di = d[i];
+            for v in self.row_mut(i) {
+                *v *= di;
+            }
+        }
+    }
+
+    /// Diagonal as a vector.
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry difference to `other` (for tests).
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a() -> Mat {
+        Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn matmul_basic() {
+        let b = Mat::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a().matmul(&b);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let b = Mat::from_vec(2, 4, (0..8).map(|i| i as f64).collect());
+        let c1 = a().matmul_tn(&b);
+        let c2 = a().t().matmul(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-14);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let b = Mat::from_vec(4, 3, (0..12).map(|i| i as f64).collect());
+        let c1 = a().matmul_nt(&b);
+        let c2 = a().matmul(&b.t());
+        assert!(c1.max_abs_diff(&c2) < 1e-14);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let m = Mat::from_vec(4, 3, (0..12).map(|i| (i as f64).sin()).collect());
+        let g1 = m.gram_t();
+        let g2 = m.t().matmul(&m);
+        assert!(g1.max_abs_diff(&g2) < 1e-14);
+    }
+
+    #[test]
+    fn matvec_and_t() {
+        let m = a();
+        assert_eq!(m.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(m.matvec_t(&[1.0, -1.0]), vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Mat::from_vec(5, 7, (0..35).map(|i| i as f64).collect());
+        assert!(m.t().t().max_abs_diff(&m) < 1e-15);
+    }
+
+    #[test]
+    fn diag_ops() {
+        let mut m = Mat::eye(3);
+        m.add_diag(2.0);
+        assert_eq!(m.diag(), vec![3.0, 3.0, 3.0]);
+        m.scale_rows(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.diag(), vec![3.0, 6.0, 9.0]);
+    }
+}

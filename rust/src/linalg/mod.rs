@@ -1,0 +1,92 @@
+//! Dense linear algebra substrate.
+//!
+//! The offline crate registry contains no BLAS/LAPACK bindings, so the
+//! dense kernels the VIF approximation needs — blocked matrix multiply,
+//! Cholesky factorization, triangular solves, and a symmetric tridiagonal
+//! eigensolver for stochastic Lanczos quadrature — are implemented here
+//! from scratch. Matrices are row-major `f64`.
+
+mod chol;
+mod mat;
+mod tridiag;
+
+pub use chol::{CholeskyError, CholeskyFactor};
+pub use mat::Mat;
+pub use tridiag::{tridiag_eigen, SymTridiag};
+
+/// Dot product of two equal-length slices (unrolled by 4 for ILP).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = 4 * i;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in 4 * chunks..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// Elementwise product accumulate: `out[i] += a[i] * b[i]`.
+#[inline]
+pub fn hadamard_acc(a: &[f64], b: &[f64], out: &mut [f64]) {
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o += x * y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..13).map(|i| (13 - i) as f64).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert!((norm2_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,174 @@
+//! Symmetric tridiagonal eigensolver (implicit QL with Wilkinson shift).
+//!
+//! Stochastic Lanczos quadrature (§4.1, Eq. 18/19 of the paper) needs
+//! `e₁ᵀ log(T̃) e₁` for the small tridiagonal matrices recovered from the
+//! CG coefficients. We compute the full eigendecomposition of `T̃` and
+//! evaluate `Σ_k w_k² log(λ_k)` with `w_k` the first components of the
+//! eigenvectors — the classic Golub–Welsch quadrature identity.
+
+/// A symmetric tridiagonal matrix with diagonal `d` (len k) and
+/// off-diagonal `e` (len k-1).
+#[derive(Clone, Debug, Default)]
+pub struct SymTridiag {
+    pub d: Vec<f64>,
+    pub e: Vec<f64>,
+}
+
+impl SymTridiag {
+    pub fn new(d: Vec<f64>, e: Vec<f64>) -> Self {
+        assert!(e.len() + 1 == d.len() || (d.is_empty() && e.is_empty()));
+        SymTridiag { d, e }
+    }
+
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    /// Quadrature form `e₁ᵀ f(T) e₁ = Σ_k w_k² f(λ_k)`.
+    pub fn quadrature(&self, f: impl Fn(f64) -> f64) -> f64 {
+        let (eigs, first_row) = tridiag_eigen(self);
+        eigs.iter()
+            .zip(&first_row)
+            .map(|(&lam, &w)| w * w * f(lam))
+            .sum()
+    }
+}
+
+/// Eigenvalues and the *first row* of the eigenvector matrix of a
+/// symmetric tridiagonal matrix, via implicit QL with Wilkinson shifts.
+///
+/// Returns `(eigenvalues, first_components)`; only the first eigenvector
+/// components are accumulated since that is all SLQ needs.
+pub fn tridiag_eigen(t: &SymTridiag) -> (Vec<f64>, Vec<f64>) {
+    let n = t.n();
+    if n == 0 {
+        return (vec![], vec![]);
+    }
+    let mut d = t.d.clone();
+    let mut e = t.e.clone();
+    e.push(0.0); // sentinel
+    // z holds the first row of the accumulated rotation product.
+    let mut z = vec![0.0; n];
+    z[0] = 1.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal element.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tridiag_eigen: too many QL iterations");
+            // Wilkinson shift.
+            let g0 = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let r0 = g0.hypot(1.0);
+            let mut g = d[m] - d[l] + e[l] / (g0 + if g0 >= 0.0 { r0 } else { -r0 });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                let r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                let r2 = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r2;
+                d[i + 1] = g + p;
+                g = c * r2 - b;
+                // Accumulate first-row components only.
+                f = z[i + 1];
+                z[i + 1] = s * z[i] + c * f;
+                z[i] = c * z[i] - s * f;
+            }
+            if e[m] == 0.0 && m > l + 1 {
+                // restarted via r == 0 branch
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    (d, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn dense(t: &SymTridiag) -> Mat {
+        let n = t.n();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, t.d[i]);
+            if i + 1 < n {
+                m.set(i, i + 1, t.e[i]);
+                m.set(i + 1, i, t.e[i]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn eigenvalues_2x2_closed_form() {
+        let t = SymTridiag::new(vec![2.0, 1.0], vec![0.5]);
+        let (mut eigs, _) = tridiag_eigen(&t);
+        eigs.sort_by(f64::total_cmp);
+        // closed form: (3 ± sqrt(1+1))/2
+        let disc = (1.0f64 + 1.0).sqrt();
+        assert!((eigs[0] - (3.0 - disc) / 2.0).abs() < 1e-12);
+        assert!((eigs[1] - (3.0 + disc) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_and_logdet_preserved() {
+        let t = SymTridiag::new(vec![4.0, 5.0, 6.0, 7.0, 8.0], vec![0.3, 0.2, 0.5, 0.1]);
+        let (eigs, w) = tridiag_eigen(&t);
+        let trace: f64 = eigs.iter().sum();
+        assert!((trace - 30.0).abs() < 1e-10);
+        // first-row weights sum to 1 (orthogonal rows)
+        let wsum: f64 = w.iter().map(|x| x * x).sum();
+        assert!((wsum - 1.0).abs() < 1e-10);
+        // e1' T e1 = d[0] via quadrature with identity
+        let q = t.quadrature(|x| x);
+        assert!((q - 4.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn quadrature_log_matches_dense_logdet_weighted() {
+        // e1' log(T) e1 computed by dense eigen through 3x3 explicit check:
+        // verify with matrix power series via diagonalization from our own
+        // routine against f(x)=x^2, where e1' T^2 e1 = (T^2)[0,0].
+        let t = SymTridiag::new(vec![3.0, 2.0, 4.0], vec![0.7, 0.4]);
+        let m = dense(&t);
+        let m2 = m.matmul(&m);
+        let q = t.quadrature(|x| x * x);
+        assert!((q - m2.get(0, 0)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn handles_diagonal_matrix() {
+        let t = SymTridiag::new(vec![1.0, 2.0, 3.0], vec![0.0, 0.0]);
+        let (mut eigs, _) = tridiag_eigen(&t);
+        eigs.sort_by(f64::total_cmp);
+        assert!((eigs[0] - 1.0).abs() < 1e-14);
+        assert!((eigs[2] - 3.0).abs() < 1e-14);
+    }
+}

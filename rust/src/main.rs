@@ -1,0 +1,284 @@
+//! `vifgp` — command-line entry point for the VIF Gaussian-process
+//! library (Layer-3 leader binary).
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline registry):
+//!
+//! ```text
+//! vifgp info
+//! vifgp simulate --n 5000 --d 2 [--smoothness 1.5] [--likelihood gaussian]
+//!                [--seed 0] --out data.csv
+//! vifgp train    --data data.csv [--m 200] [--mv 30] [--smoothness 1.5]
+//!                [--likelihood gaussian|bernoulli|poisson|gamma|student_t]
+//!                [--precond fitc|vifdu|none] [--iters 50] [--test-frac 0.2]
+//! vifgp experiment <fig2|fig4|tab1|...>   (thin wrappers over the benches)
+//! ```
+
+use std::collections::HashMap;
+
+use vifgp::data;
+use vifgp::iterative::{IterConfig, PrecondType};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::gaussian::{GaussianParams, VifRegression};
+use vifgp::vif::laplace::{PredVarMethod, SolveMode, VifLaplaceModel};
+use vifgp::vif::VifConfig;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage();
+        std::process::exit(2);
+    };
+    let flags = parse_flags(&args[1..]);
+    let code = match cmd.as_str() {
+        "info" => cmd_info(),
+        "simulate" => cmd_simulate(&flags),
+        "train" => cmd_train(&flags),
+        "experiment" => cmd_experiment(&args[1..]),
+        "help" | "--help" | "-h" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "vifgp — Vecchia-inducing-points full-scale GP approximations
+USAGE:
+  vifgp info
+  vifgp simulate --n N --d D [--smoothness S] [--likelihood L] [--seed K] --out FILE
+  vifgp train --data FILE [--m M] [--mv MV] [--smoothness S] [--likelihood L]
+              [--precond fitc|vifdu|none] [--iters I] [--test-frac F] [--seed K]
+  vifgp experiment NAME   (see rust/benches/ for the table/figure harnesses)"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags
+        .get(key)
+        .and_then(|v| v.parse::<T>().ok())
+        .unwrap_or(default)
+}
+
+fn parse_likelihood(flags: &HashMap<String, String>) -> Likelihood {
+    match flags.get("likelihood").map(|s| s.as_str()).unwrap_or("gaussian") {
+        "gaussian" => Likelihood::Gaussian { variance: 0.1 },
+        "bernoulli" | "binary" => Likelihood::BernoulliLogit,
+        "poisson" => Likelihood::Poisson,
+        "gamma" => Likelihood::Gamma { shape: 2.0 },
+        "student_t" | "studentt" => Likelihood::StudentT { scale: 0.2, df: 4.0 },
+        other => {
+            eprintln!("unknown likelihood `{other}`, using gaussian");
+            Likelihood::Gaussian { variance: 0.1 }
+        }
+    }
+}
+
+fn init_runtime() {
+    let dir = vifgp::runtime::default_artifact_dir();
+    if vifgp::runtime::init_from_artifacts(&dir) {
+        eprintln!("[vifgp] PJRT engine loaded from {dir:?}");
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("vifgp {} — three-layer Rust + JAX + Pallas VIF GP library", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", vifgp::coordinator::num_threads());
+    let dir = vifgp::runtime::default_artifact_dir();
+    if vifgp::runtime::init_from_artifacts(&dir) {
+        let e = vifgp::runtime::engine().unwrap();
+        let m = e.manifest();
+        println!(
+            "PJRT engine: loaded ({:?}; panel {}x{} d_pad {} tile {}x{})",
+            dir, m.panel_n, m.panel_m, m.d_pad, m.tile_n, m.tile_m
+        );
+    } else {
+        println!("PJRT engine: unavailable (run `make artifacts`); native covariance path");
+    }
+    0
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
+    let n: usize = flag(flags, "n", 5000);
+    let d: usize = flag(flags, "d", 2);
+    let seed: u64 = flag(flags, "seed", 0);
+    let smoothness = Smoothness::parse(flags.get("smoothness").map(|s| s.as_str()).unwrap_or("1.5"))
+        .unwrap_or(Smoothness::ThreeHalves);
+    let lik = parse_likelihood(flags);
+    let Some(out) = flags.get("out") else {
+        eprintln!("--out FILE required");
+        return 2;
+    };
+    let mut rng = Rng::seed_from(seed);
+    let x = data::uniform_inputs(&mut rng, n, d);
+    let kernel = ArdMatern::new(1.0, data::paper_length_scales(d, smoothness), smoothness);
+    let latent = data::simulate_latent_gp(&mut rng, &x, &kernel);
+    let y = data::simulate_response(&mut rng, &latent, &lik);
+    match data::save_csv(std::path::Path::new(out), &x, &y) {
+        Ok(()) => {
+            println!("wrote {n}×{d} (+response) to {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> i32 {
+    init_runtime();
+    let Some(path) = flags.get("data") else {
+        eprintln!("--data FILE required");
+        return 2;
+    };
+    let (x, y) = match data::load_csv(std::path::Path::new(path)) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("load failed: {e}");
+            return 1;
+        }
+    };
+    let n = x.rows();
+    let d = x.cols();
+    let seed: u64 = flag(flags, "seed", 0);
+    let test_frac: f64 = flag(flags, "test-frac", 0.2);
+    let m: usize = flag(flags, "m", 200);
+    let mv: usize = flag(flags, "mv", 30);
+    let iters: usize = flag(flags, "iters", 50);
+    let smoothness = Smoothness::parse(flags.get("smoothness").map(|s| s.as_str()).unwrap_or("1.5"))
+        .unwrap_or(Smoothness::ThreeHalves);
+    let lik = parse_likelihood(flags);
+    let precond = PrecondType::parse(flags.get("precond").map(|s| s.as_str()).unwrap_or("fitc"))
+        .unwrap_or(PrecondType::Fitc);
+
+    let mut rng = Rng::seed_from(seed);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (tr, te) = data::train_test_split(&mut rng, n, n_test);
+    let (xtr, ytr) = (data::subset_rows(&x, &tr), data::subset_vec(&y, &tr));
+    let (xte, yte) = (data::subset_rows(&x, &te), data::subset_vec(&y, &te));
+    println!("loaded {n}×{d}; train {} / test {}", tr.len(), te.len());
+
+    let config = VifConfig {
+        smoothness,
+        num_inducing: m.min(xtr.rows()),
+        num_neighbors: mv,
+        selection: NeighborSelection::CorrelationCoverTree,
+        seed,
+        ..Default::default()
+    };
+    let init_kernel = ArdMatern::isotropic(1.0, 0.5, d, smoothness);
+    let t0 = std::time::Instant::now();
+    match lik {
+        Likelihood::Gaussian { .. } => {
+            let init = GaussianParams { kernel: init_kernel, noise: 0.2 };
+            let mut model = VifRegression::new(xtr, ytr, config, init);
+            let nll = model.fit(iters);
+            println!("fit done in {:.1}s  NLL {:.3}", t0.elapsed().as_secs_f64(), nll);
+            println!(
+                "  σ₁² {:.4}  σ² {:.4}  λ {:?}",
+                model.params.kernel.variance,
+                model.params.noise,
+                model
+                    .params
+                    .kernel
+                    .length_scales
+                    .iter()
+                    .map(|l| (l * 1e4).round() / 1e4)
+                    .collect::<Vec<_>>()
+            );
+            if !yte.is_empty() {
+                let (mean, var) = model.predict(&xte);
+                println!(
+                    "  test RMSE {:.4}  LS {:.4}  CRPS {:.4}",
+                    metrics::rmse(&mean, &yte),
+                    metrics::log_score_gaussian(&mean, &var, &yte),
+                    metrics::crps_gaussian(&mean, &var, &yte)
+                );
+            }
+        }
+        _ => {
+            let mode = SolveMode::Iterative(IterConfig {
+                precond,
+                seed,
+                ..Default::default()
+            });
+            let mut model = VifLaplaceModel::new(xtr, ytr, config, mode, init_kernel, lik.clone());
+            let nll = model.fit(iters);
+            println!("fit done in {:.1}s  L^VIFLA {:.3}", t0.elapsed().as_secs_f64(), nll);
+            println!(
+                "  σ₁² {:.4}  λ {:?}  ξ {:?}",
+                model.kernel.variance,
+                model
+                    .kernel
+                    .length_scales
+                    .iter()
+                    .map(|l| (l * 1e4).round() / 1e4)
+                    .collect::<Vec<_>>(),
+                model.lik.pack_aux().iter().map(|a| a.exp()).collect::<Vec<_>>()
+            );
+            if !yte.is_empty() {
+                let pred = model.predict(&xte, PredVarMethod::Sbpv, 100);
+                match lik {
+                    Likelihood::BernoulliLogit => {
+                        let labels: Vec<bool> = yte.iter().map(|&v| v > 0.5).collect();
+                        println!(
+                            "  test AUC {:.4}  ACC {:.4}  Brier-RMSE {:.4}",
+                            metrics::auc(&pred.response_mean, &labels),
+                            metrics::accuracy(&pred.response_mean, &labels),
+                            metrics::brier_rmse(&pred.response_mean, &labels)
+                        );
+                    }
+                    _ => {
+                        println!(
+                            "  test RMSE {:.4}  LS {:.4}",
+                            metrics::rmse(&pred.response_mean, &yte),
+                            model.lik.log_score(&yte, &pred.latent_mean, &pred.latent_var)
+                        );
+                    }
+                }
+            }
+        }
+    }
+    0
+}
+
+fn cmd_experiment(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!("experiment NAME required; see rust/benches/");
+        return 2;
+    };
+    eprintln!(
+        "experiment `{name}` is served by the bench harnesses: run\n  cargo bench --bench {name}_*\nor see rust/benches/ for the full list."
+    );
+    0
+}

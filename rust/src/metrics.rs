@@ -1,0 +1,222 @@
+//! Prediction-accuracy metrics used across the paper's experiments (§7–§8):
+//! RMSE, Gaussian log-score, CRPS, and the binary-classification metrics
+//! (AUC, accuracy, Brier-RMSE, Bernoulli log-score).
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let n = pred.len() as f64;
+    (pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / n)
+        .sqrt()
+}
+
+/// Standard normal pdf.
+#[inline]
+pub fn phi(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via erf.
+#[inline]
+pub fn big_phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Error function via the complementary error function (NR `erfcc`
+/// Chebyshev fit, |relative err| < 1.2e-7; adequate for scoring).
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Mean Gaussian negative log-score
+/// `−1/n Σ log N(y*_i; μ_i, σ_i²)` (paper's LS definition uses the
+/// standardized density; this is the standard predictive-density form).
+pub fn log_score_gaussian(mu: &[f64], var: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(mu.len(), truth.len());
+    assert_eq!(var.len(), truth.len());
+    let n = mu.len() as f64;
+    mu.iter()
+        .zip(var)
+        .zip(truth)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-300);
+            0.5 * ((2.0 * std::f64::consts::PI * v).ln() + (t - m) * (t - m) / v)
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Mean continuous ranked probability score for Gaussian predictive
+/// distributions (closed form, §7.1).
+pub fn crps_gaussian(mu: &[f64], var: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(mu.len(), truth.len());
+    let n = mu.len() as f64;
+    mu.iter()
+        .zip(var)
+        .zip(truth)
+        .map(|((m, v), t)| {
+            let s = v.max(1e-300).sqrt();
+            let z = (t - m) / s;
+            s * (z * (2.0 * big_phi(z) - 1.0) + 2.0 * phi(z) - 1.0 / std::f64::consts::PI.sqrt())
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Area under the ROC curve (rank statistic with tie handling).
+pub fn auc(score: &[f64], label: &[bool]) -> f64 {
+    assert_eq!(score.len(), label.len());
+    let mut idx: Vec<usize> = (0..score.len()).collect();
+    idx.sort_by(|&a, &b| score[a].total_cmp(&score[b]));
+    // average ranks with ties
+    let mut rank = vec![0.0; score.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && score[idx[j + 1]] == score[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            rank[k] = avg;
+        }
+        i = j + 1;
+    }
+    let n_pos = label.iter().filter(|&&l| l).count() as f64;
+    let n_neg = label.len() as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return f64::NAN;
+    }
+    let sum_pos: f64 = rank
+        .iter()
+        .zip(label)
+        .filter(|(_, &l)| l)
+        .map(|(r, _)| r)
+        .sum();
+    (sum_pos - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+/// Classification accuracy at threshold 0.5.
+pub fn accuracy(prob: &[f64], label: &[bool]) -> f64 {
+    assert_eq!(prob.len(), label.len());
+    let hits = prob
+        .iter()
+        .zip(label)
+        .filter(|(p, &l)| (**p >= 0.5) == l)
+        .count();
+    hits as f64 / prob.len() as f64
+}
+
+/// Square root of the Brier score (paper Table 2's "RMSE").
+pub fn brier_rmse(prob: &[f64], label: &[bool]) -> f64 {
+    let t: Vec<f64> = label.iter().map(|&l| if l { 1.0 } else { 0.0 }).collect();
+    rmse(prob, &t)
+}
+
+/// Mean Bernoulli negative log-score.
+pub fn log_score_bernoulli(prob: &[f64], label: &[bool]) -> f64 {
+    assert_eq!(prob.len(), label.len());
+    let n = prob.len() as f64;
+    prob.iter()
+        .zip(label)
+        .map(|(p, &l)| {
+            let p = p.clamp(1e-12, 1.0 - 1e-12);
+            if l {
+                -p.ln()
+            } else {
+                -(1.0 - p).ln()
+            }
+        })
+        .sum::<f64>()
+        / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_basic() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erf_reference() {
+        // erfcc approximation is accurate to ~1.2e-7 relative.
+        assert!(erf(0.0).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 2e-7);
+        assert!((erf(-1.0) + 0.8427007929497149).abs() < 2e-7);
+    }
+
+    #[test]
+    fn cdf_symmetry() {
+        assert!((big_phi(0.0) - 0.5).abs() < 1e-7);
+        assert!((big_phi(1.96) - 0.975).abs() < 1e-3);
+        assert!((big_phi(1.0) + big_phi(-1.0) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn crps_perfect_forecast_small() {
+        // tight forecast centered on truth -> tiny CRPS
+        let c = crps_gaussian(&[1.0], &[1e-8], &[1.0]);
+        assert!(c.abs() < 1e-4);
+        // CRPS grows with miss distance
+        let far = crps_gaussian(&[0.0], &[1.0], &[3.0]);
+        let near = crps_gaussian(&[0.0], &[1.0], &[0.5]);
+        assert!(far > near);
+    }
+
+    #[test]
+    fn log_score_matches_density() {
+        let ls = log_score_gaussian(&[0.0], &[1.0], &[0.0]);
+        assert!((ls - 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let labels = [true, true, false, false];
+        assert!((auc(&[0.9, 0.8, 0.2, 0.1], &labels) - 1.0).abs() < 1e-12);
+        assert!((auc(&[0.1, 0.2, 0.8, 0.9], &labels)).abs() < 1e-12);
+        assert!((auc(&[0.5, 0.5, 0.5, 0.5], &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_and_brier() {
+        let labels = [true, false, true];
+        assert!((accuracy(&[0.9, 0.4, 0.3], &labels) - 2.0 / 3.0).abs() < 1e-12);
+        assert!(brier_rmse(&[1.0, 0.0, 1.0], &labels).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bernoulli_log_score() {
+        let ls = log_score_bernoulli(&[0.5, 0.5], &[true, false]);
+        assert!((ls - (2.0f64).ln()).abs() < 1e-12);
+    }
+}

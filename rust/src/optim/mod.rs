@@ -1,0 +1,272 @@
+//! Optimizers for marginal-likelihood minimization.
+//!
+//! The paper trains with (limited-memory) BFGS on log-parameters; this
+//! module implements L-BFGS with a backtracking Armijo line search plus
+//! Adam and a 1-D golden-section search (used for the Matérn smoothness
+//! ν in §8.3).
+
+use crate::linalg::dot;
+
+/// Result of an optimization run.
+#[derive(Clone, Debug)]
+pub struct OptResult {
+    pub x: Vec<f64>,
+    pub value: f64,
+    pub iters: usize,
+    /// Objective value after each accepted step.
+    pub trace: Vec<f64>,
+    pub converged: bool,
+}
+
+/// L-BFGS (history 8) minimizing `f`, which returns `(value, gradient)`.
+/// Stops when the gradient inf-norm falls below `tol` or after
+/// `max_iters` accepted steps.
+pub fn lbfgs(
+    f: &dyn Fn(&[f64]) -> (f64, Vec<f64>),
+    x0: &[f64],
+    max_iters: usize,
+    tol: f64,
+) -> OptResult {
+    const M: usize = 8;
+    let _n = x0.len();
+    let mut x = x0.to_vec();
+    let (mut fx, mut g) = f(&x);
+    let mut trace = vec![fx];
+    let mut s_hist: Vec<Vec<f64>> = Vec::new();
+    let mut y_hist: Vec<Vec<f64>> = Vec::new();
+    let mut rho_hist: Vec<f64> = Vec::new();
+    let mut converged = false;
+    let mut iters = 0;
+
+    for _ in 0..max_iters {
+        if inf_norm(&g) < tol {
+            converged = true;
+            break;
+        }
+        // Two-loop recursion for d = −H g.
+        let mut q = g.clone();
+        let k = s_hist.len();
+        let mut alpha = vec![0.0; k];
+        for i in (0..k).rev() {
+            alpha[i] = rho_hist[i] * dot(&s_hist[i], &q);
+            for (qj, yj) in q.iter_mut().zip(&y_hist[i]) {
+                *qj -= alpha[i] * yj;
+            }
+        }
+        // Initial scaling γ = sᵀy / yᵀy.
+        let gamma = if k > 0 {
+            let sy = dot(&s_hist[k - 1], &y_hist[k - 1]);
+            let yy = dot(&y_hist[k - 1], &y_hist[k - 1]);
+            (sy / yy).max(1e-8)
+        } else {
+            1.0 / inf_norm(&g).max(1.0)
+        };
+        for qj in q.iter_mut() {
+            *qj *= gamma;
+        }
+        for i in 0..k {
+            let beta = rho_hist[i] * dot(&y_hist[i], &q);
+            for (qj, sj) in q.iter_mut().zip(&s_hist[i]) {
+                *qj += (alpha[i] - beta) * sj;
+            }
+        }
+        let d: Vec<f64> = q.iter().map(|v| -v).collect();
+        let dir_deriv = dot(&g, &d);
+        // Ensure descent; otherwise restart with steepest descent.
+        let (d, dir_deriv) = if dir_deriv < 0.0 {
+            (d, dir_deriv)
+        } else {
+            s_hist.clear();
+            y_hist.clear();
+            rho_hist.clear();
+            let d: Vec<f64> = g.iter().map(|v| -v).collect();
+            let dd = -dot(&g, &g);
+            (d, dd)
+        };
+        // Backtracking Armijo line search with max-step clamp (log-params:
+        // steps > ~2 in log space explode kernels).
+        let max_step = 2.0 / inf_norm(&d).max(1e-12);
+        let mut t = max_step.min(1.0);
+        let c1 = 1e-4;
+        let mut accepted = false;
+        for _ in 0..30 {
+            let xt: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + t * di).collect();
+            let (ft, gt) = f(&xt);
+            if ft.is_finite() && ft <= fx + c1 * t * dir_deriv {
+                // Update history.
+                let s_vec: Vec<f64> = xt.iter().zip(&x).map(|(a, b)| a - b).collect();
+                let y_vec: Vec<f64> = gt.iter().zip(&g).map(|(a, b)| a - b).collect();
+                let sy = dot(&s_vec, &y_vec);
+                if sy > 1e-10 * dot(&y_vec, &y_vec).max(1e-300) {
+                    if s_hist.len() == M {
+                        s_hist.remove(0);
+                        y_hist.remove(0);
+                        rho_hist.remove(0);
+                    }
+                    rho_hist.push(1.0 / sy);
+                    s_hist.push(s_vec);
+                    y_hist.push(y_vec);
+                }
+                x = xt;
+                fx = ft;
+                g = gt;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        iters += 1;
+        if !accepted {
+            converged = true; // line search exhausted: local flatness
+            break;
+        }
+        trace.push(fx);
+        let len = trace.len();
+        if len >= 2 && (trace[len - 2] - fx).abs() < 1e-9 * (1.0 + fx.abs()) {
+            converged = true;
+            break;
+        }
+    }
+    OptResult { x, value: fx, iters, trace, converged }
+}
+
+/// Adam (for stochastic objectives where L-BFGS line searches are
+/// unreliable, e.g. SLQ-noised likelihoods).
+pub fn adam(
+    f: &dyn Fn(&[f64]) -> (f64, Vec<f64>),
+    x0: &[f64],
+    lr: f64,
+    max_iters: usize,
+    tol: f64,
+) -> OptResult {
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let (mut fx, mut g) = f(&x);
+    let mut trace = vec![fx];
+    let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+    let mut m = vec![0.0; n];
+    let mut v = vec![0.0; n];
+    let mut converged = false;
+    let mut iters = 0;
+    let mut best = x.clone();
+    let mut best_f = fx;
+    for t in 1..=max_iters {
+        if inf_norm(&g) < tol {
+            converged = true;
+            break;
+        }
+        for i in 0..n {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            let mh = m[i] / (1.0 - b1f(t, b1));
+            let vh = v[i] / (1.0 - b1f(t, b2));
+            x[i] -= lr * mh / (vh.sqrt() + eps);
+        }
+        let (ft, gt) = f(&x);
+        fx = ft;
+        g = gt;
+        trace.push(fx);
+        if fx < best_f {
+            best_f = fx;
+            best = x.clone();
+        }
+        iters = t;
+    }
+    OptResult { x: best, value: best_f, iters, trace, converged }
+}
+
+fn b1f(t: usize, b: f64) -> f64 {
+    b.powi(t as i32)
+}
+
+/// Golden-section minimization of a univariate function on `[lo, hi]`.
+pub fn golden_section(f: &dyn Fn(f64) -> f64, lo: f64, hi: f64, iters: usize) -> (f64, f64) {
+    let phi = (5.0f64.sqrt() - 1.0) / 2.0;
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - phi * (b - a);
+    let mut d = a + phi * (b - a);
+    let (mut fc, mut fd) = (f(c), f(d));
+    for _ in 0..iters {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - phi * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + phi * (b - a);
+            fd = f(d);
+        }
+    }
+    if fc < fd {
+        (c, fc)
+    } else {
+        (d, fd)
+    }
+}
+
+fn inf_norm(v: &[f64]) -> f64 {
+    v.iter().fold(0.0, |a, b| a.max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rosenbrock(x: &[f64]) -> (f64, Vec<f64>) {
+        let (a, b) = (1.0, 100.0);
+        let f = (a - x[0]).powi(2) + b * (x[1] - x[0] * x[0]).powi(2);
+        let g = vec![
+            -2.0 * (a - x[0]) - 4.0 * b * x[0] * (x[1] - x[0] * x[0]),
+            2.0 * b * (x[1] - x[0] * x[0]),
+        ];
+        (f, g)
+    }
+
+    #[test]
+    fn lbfgs_solves_rosenbrock() {
+        let res = lbfgs(&rosenbrock, &[-1.2, 1.0], 500, 1e-8);
+        assert!(res.value < 1e-10, "value {}", res.value);
+        assert!((res.x[0] - 1.0).abs() < 1e-4 && (res.x[1] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lbfgs_quadratic_fast() {
+        let f = |x: &[f64]| -> (f64, Vec<f64>) {
+            let v = x.iter().enumerate().map(|(i, xi)| (i + 1) as f64 * xi * xi).sum::<f64>();
+            let g = x.iter().enumerate().map(|(i, xi)| 2.0 * (i + 1) as f64 * xi).collect();
+            (v, g)
+        };
+        let res = lbfgs(&f, &[3.0, -2.0, 1.0, 5.0], 100, 1e-10);
+        assert!(res.value < 1e-12);
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn trace_is_monotone_for_lbfgs() {
+        let res = lbfgs(&rosenbrock, &[0.5, 0.5], 200, 1e-8);
+        for w in res.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn adam_decreases_quadratic() {
+        let f = |x: &[f64]| -> (f64, Vec<f64>) {
+            (x[0] * x[0] + x[1] * x[1], vec![2.0 * x[0], 2.0 * x[1]])
+        };
+        let res = adam(&f, &[2.0, -3.0], 0.1, 300, 1e-8);
+        assert!(res.value < 1e-3, "value {}", res.value);
+    }
+
+    #[test]
+    fn golden_section_finds_minimum() {
+        let f = |x: f64| (x - 2.7).powi(2) + 1.0;
+        let (xm, fm) = golden_section(&f, 0.0, 5.0, 60);
+        assert!((xm - 2.7).abs() < 1e-6);
+        assert!((fm - 1.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,300 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The offline registry carries no `rand` crate, so the library ships its
+//! own xoshiro256++ generator (seeded via splitmix64) together with the
+//! samplers the paper's experiments need: standard normals (Box–Muller),
+//! Rademacher probe vectors (Hutchinson/STE), gamma (Marsaglia–Tsang),
+//! Poisson, and Student-t variates.
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    cached_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Deterministic generator from a 64-bit seed.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent stream (for per-thread RNGs).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        Rng::seed_from(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> double in [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.cached_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Rademacher ±1 vector (STE probe vectors, Algorithm 2).
+    pub fn rademacher_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Gamma(shape, scale=1) via Marsaglia–Tsang (2000).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: X_a = X_{a+1} * U^{1/a}
+            let x = self.gamma(shape + 1.0);
+            let u: f64 = self.uniform().max(f64::MIN_POSITIVE);
+            return x * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let mut x;
+            let mut v;
+            loop {
+                x = self.normal();
+                v = 1.0 + c * x;
+                if v > 0.0 {
+                    break;
+                }
+            }
+            v = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Poisson(mean) — Knuth for small means, normal approximation tail.
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        assert!(mean >= 0.0);
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // Gaussian approximation with continuity correction.
+            let z = self.normal();
+            let v = mean + mean.sqrt() * z + 0.5;
+            if v < 0.0 {
+                0
+            } else {
+                v.floor() as u64
+            }
+        }
+    }
+
+    /// Student-t with `df` degrees of freedom.
+    pub fn student_t(&mut self, df: f64) -> f64 {
+        let z = self.normal();
+        let g = self.gamma(df / 2.0) * 2.0; // chi2(df)
+        z / (g / df).sqrt()
+    }
+
+    /// Bernoulli with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::seed_from(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(7);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_var() {
+        let mut r = Rng::seed_from(9);
+        let shape = 3.5;
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gamma(shape)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - shape).abs() < 0.06, "mean {mean}");
+        assert!((var - shape).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut r = Rng::seed_from(10);
+        let shape = 0.4;
+        let n = 40_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+        assert!((mean - shape).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::seed_from(11);
+        for &mu in &[0.5, 4.0, 60.0] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| r.poisson(mu) as f64).sum::<f64>() / n as f64;
+            assert!((mean - mu).abs() < 0.05 * mu.max(1.0), "mu {mu} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn rademacher_is_pm_one() {
+        let mut r = Rng::seed_from(3);
+        let v = r.rademacher_vec(1000);
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+        let mean: f64 = v.iter().sum::<f64>() / 1000.0;
+        assert!(mean.abs() < 0.1);
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut r = Rng::seed_from(5);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn student_t_symmetric() {
+        let mut r = Rng::seed_from(13);
+        let n = 40_000;
+        let mean: f64 = (0..n).map(|_| r.student_t(8.0)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut base = Rng::seed_from(1);
+        let mut a = base.split(0);
+        let mut b = base.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

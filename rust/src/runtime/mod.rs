@@ -1,0 +1,273 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts from the Rust
+//! request path (Python is build-time only).
+//!
+//! `make artifacts` lowers the Layer-2 JAX graphs (which embed the
+//! Layer-1 Pallas kernel) to HLO text; this module compiles them on the
+//! PJRT CPU client (`xla` crate) and serves covariance panels through
+//! [`CovEngine`]. Shapes are fixed at export: panels are padded to
+//! `(panel_n, panel_m, d_pad)` with zero inverse length scales masking
+//! unused feature dimensions, and padded rows discarded on readback.
+//!
+//! A native fallback covers shapes the artifacts cannot serve
+//! (d > d_pad, general-ν Matérn) and environments without artifacts.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::kernels::{ArdMatern, Smoothness};
+use crate::linalg::Mat;
+
+/// Artifact metadata (mirrors python/compile/aot.py's manifest).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub panel_n: usize,
+    pub panel_m: usize,
+    pub d_pad: usize,
+    pub tile_n: usize,
+    pub tile_m: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut kv = std::collections::HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("manifest bad {k}"))
+        };
+        Ok(Manifest {
+            panel_n: get("panel_n")?,
+            panel_m: get("panel_m")?,
+            d_pad: get("d_pad")?,
+            tile_n: get("tile_n")?,
+            tile_m: get("tile_m")?,
+        })
+    }
+}
+
+struct Executables {
+    #[allow(dead_code)] // keeps the PJRT client alive for the executables
+    client: xla::PjRtClient,
+    cov_cross: std::collections::HashMap<&'static str, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla crate's client/executable handles are `Rc`-based and
+// hence `!Send`, but every access in this module happens under the
+// `Mutex` in `PjrtCovEngine` and no handle is ever cloned out of the
+// guard, so at most one thread touches them at any time.
+unsafe impl Send for Executables {}
+
+/// The PJRT-backed covariance engine.
+pub struct PjrtCovEngine {
+    manifest: Manifest,
+    // PJRT executables are not Sync; guard with a mutex (the panel calls
+    // are coarse enough that contention is negligible).
+    exe: Mutex<Executables>,
+    /// Panels served / fallbacks taken (diagnostics).
+    pub stats: Mutex<EngineStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub pjrt_panels: u64,
+    pub native_panels: u64,
+}
+
+fn smoothness_key(s: Smoothness) -> Option<&'static str> {
+    match s {
+        Smoothness::Half => Some("half"),
+        Smoothness::ThreeHalves => Some("three_halves"),
+        Smoothness::FiveHalves => Some("five_halves"),
+        Smoothness::Gaussian => Some("gaussian"),
+        Smoothness::General(_) => None,
+    }
+}
+
+impl PjrtCovEngine {
+    /// Load all artifacts from a directory (errors if any is missing).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("no manifest in {dir:?} — run `make artifacts`"))?;
+        let manifest = Manifest::parse(&manifest_text)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut cov_cross = std::collections::HashMap::new();
+        for key in ["half", "three_halves", "five_halves", "gaussian"] {
+            let path = dir.join(format!("cov_cross_{key}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("utf8 path")?,
+            )
+            .with_context(|| format!("parse {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {key}"))?;
+            cov_cross.insert(
+                match key {
+                    "half" => "half",
+                    "three_halves" => "three_halves",
+                    "five_halves" => "five_halves",
+                    _ => "gaussian",
+                },
+                exe,
+            );
+        }
+        Ok(PjrtCovEngine {
+            manifest,
+            exe: Mutex::new(Executables { client, cov_cross }),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Whether this engine can serve the kernel (dimension and smoothness).
+    pub fn supports(&self, kernel: &ArdMatern) -> bool {
+        kernel.dim() <= self.manifest.d_pad && smoothness_key(kernel.smoothness).is_some()
+    }
+
+    /// One padded panel execution: cross-covariance of up to
+    /// (panel_n × panel_m) points.
+    fn run_panel(
+        &self,
+        xs_pad: &[f64],
+        zs_pad: &[f64],
+        variance: f64,
+        key: &'static str,
+    ) -> Result<Vec<f64>> {
+        let mf = &self.manifest;
+        let guard = self.exe.lock().unwrap();
+        let xs = xla::Literal::vec1(xs_pad)
+            .reshape(&[mf.panel_n as i64, mf.d_pad as i64])?;
+        let zs = xla::Literal::vec1(zs_pad)
+            .reshape(&[mf.panel_m as i64, mf.d_pad as i64])?;
+        let var = xla::Literal::vec1(&[variance]).reshape(&[1, 1])?;
+        let exe = guard.cov_cross.get(key).context("missing executable")?;
+        let result = exe.execute::<xla::Literal>(&[xs, zs, var])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Cross-covariance panel `K(X, Z)` (n×m) through the artifacts,
+    /// tiling over the fixed panel shape.
+    pub fn cross_cov(&self, x: &Mat, z: &Mat, kernel: &ArdMatern) -> Result<Mat> {
+        let key = smoothness_key(kernel.smoothness).context("unsupported smoothness")?;
+        let mf = &self.manifest;
+        anyhow::ensure!(kernel.dim() <= mf.d_pad, "d > d_pad");
+        let (n, m) = (x.rows(), z.rows());
+        let inv_ls: Vec<f64> = kernel.length_scales.iter().map(|l| 1.0 / l).collect();
+        let mut out = Mat::zeros(n, m);
+        let pad_points = |pts: &Mat, lo: usize, hi: usize, rows: usize| -> Vec<f64> {
+            let mut buf = vec![0.0; rows * mf.d_pad];
+            for (r, i) in (lo..hi).enumerate() {
+                for (k, &il) in inv_ls.iter().enumerate() {
+                    buf[r * mf.d_pad + k] = pts.get(i, k) * il;
+                }
+            }
+            buf
+        };
+        let mut row0 = 0;
+        while row0 < n {
+            let row1 = (row0 + mf.panel_n).min(n);
+            let xs_pad = pad_points(x, row0, row1, mf.panel_n);
+            let mut col0 = 0;
+            while col0 < m {
+                let col1 = (col0 + mf.panel_m).min(m);
+                let zs_pad = pad_points(z, col0, col1, mf.panel_m);
+                let panel = self.run_panel(&xs_pad, &zs_pad, kernel.variance, key)?;
+                for (r, i) in (row0..row1).enumerate() {
+                    for (c, j) in (col0..col1).enumerate() {
+                        out.set(i, j, panel[r * mf.panel_m + c]);
+                    }
+                }
+                self.stats.lock().unwrap().pjrt_panels += 1;
+                col0 = col1;
+            }
+            row0 = row1;
+        }
+        Ok(out)
+    }
+}
+
+/// Global engine, installed once at process start (CLI / examples call
+/// [`init_from_artifacts`]); covariance panel builders consult it.
+static ENGINE: once_cell::sync::OnceCell<Option<PjrtCovEngine>> =
+    once_cell::sync::OnceCell::new();
+
+/// Install the PJRT engine from an artifact directory. Returns whether
+/// artifacts were found and compiled. Safe to call more than once.
+pub fn init_from_artifacts(dir: &Path) -> bool {
+    ENGINE
+        .get_or_init(|| match PjrtCovEngine::load(dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("[runtime] PJRT engine unavailable ({err:#}); using native covariance path");
+                None
+            }
+        })
+        .is_some()
+}
+
+/// Disable the engine explicitly (tests / benchmarking native path).
+pub fn init_native_only() {
+    let _ = ENGINE.set(None);
+}
+
+pub fn engine() -> Option<&'static PjrtCovEngine> {
+    ENGINE.get().and_then(|e| e.as_ref())
+}
+
+/// Default artifact directory: `$VIFGP_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("VIFGP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Cross-covariance panel through the engine when available + supported,
+/// else the native Rust path. This is the single entry point the VIF
+/// structure uses for its low-rank panels.
+pub fn cross_cov_panel(x: &Mat, z: &Mat, kernel: &ArdMatern) -> Mat {
+    if let Some(engine) = engine() {
+        if engine.supports(kernel) {
+            match engine.cross_cov(x, z, kernel) {
+                Ok(out) => return out,
+                Err(err) => {
+                    eprintln!("[runtime] PJRT panel failed ({err:#}); native fallback");
+                }
+            }
+        }
+        engine.stats.lock().unwrap().native_panels += 1;
+    }
+    kernel.cross_cov(x, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            "panel_n=512\npanel_m=256\nd_pad=8\ntile_n=128\ntile_m=128\ndtype=f64\n",
+        )
+        .unwrap();
+        assert_eq!(m.panel_n, 512);
+        assert_eq!(m.d_pad, 8);
+    }
+
+    #[test]
+    fn manifest_missing_key_errors() {
+        assert!(Manifest::parse("panel_n=512\n").is_err());
+    }
+
+    // PJRT round-trip tests live in rust/tests/pjrt_roundtrip.rs (they
+    // need built artifacts).
+}

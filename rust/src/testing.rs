@@ -1,0 +1,107 @@
+//! Lightweight property-testing and gradient-checking substrate.
+//!
+//! The offline registry has no `proptest`, so this module provides a
+//! small seeded-random property harness: generators draw random cases,
+//! a failing case is reported with its seed, and numeric helpers check
+//! gradients against central finite differences.
+
+use crate::rng::Rng;
+
+/// Run `prop` over `cases` randomly generated inputs. On failure, panics
+/// with the case index and seed so the case can be replayed
+/// deterministically (inputs need not be `Debug` — regenerate from the
+/// reported seed).
+pub fn check<T>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::seed_from(seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (replay seed {}):\n  {msg}",
+                seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Relative-tolerance comparison helper.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * a.abs().max(b.abs()) {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (rtol {rtol}, atol {atol})"))
+    }
+}
+
+/// Check an analytic gradient of `f: R^p -> R` against central finite
+/// differences at `x0`. `h` is the FD step; tolerance is relative.
+pub fn check_gradient(
+    f: impl Fn(&[f64]) -> f64,
+    grad: &[f64],
+    x0: &[f64],
+    h: f64,
+    rtol: f64,
+    atol: f64,
+) -> Result<(), String> {
+    for i in 0..x0.len() {
+        let mut xp = x0.to_vec();
+        xp[i] += h;
+        let mut xm = x0.to_vec();
+        xm[i] -= h;
+        let fd = (f(&xp) - f(&xm)) / (2.0 * h);
+        if (fd - grad[i]).abs() > atol + rtol * fd.abs().max(grad[i].abs()) {
+            return Err(format!(
+                "gradient component {i}: analytic {} vs finite-diff {fd}",
+                grad[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Random points in the unit hypercube as a `Mat` (n × d).
+pub fn random_points(rng: &mut Rng, n: usize, d: usize) -> crate::linalg::Mat {
+    crate::linalg::Mat::from_fn(n, d, |_, _| rng.uniform())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(
+            "abs-nonneg",
+            50,
+            1,
+            |r| r.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn check_reports_failure() {
+        check("always-fails", 3, 7, |r| r.uniform(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gradient_checker_quadratic() {
+        let f = |x: &[f64]| x[0] * x[0] + 3.0 * x[1];
+        let x0 = [2.0, -1.0];
+        check_gradient(f, &[4.0, 3.0], &x0, 1e-6, 1e-6, 1e-8).unwrap();
+        assert!(check_gradient(f, &[4.1, 3.0], &x0, 1e-6, 1e-6, 1e-8).is_err());
+    }
+}

@@ -1,0 +1,566 @@
+//! The Vecchia-inducing-points full-scale (VIF) approximation (paper §2).
+//!
+//! `Σ̃_† = Σˡ + Σ̃ˢ` with `Σˡ = Σ_mnᵀ Σ_m⁻¹ Σ_mn` the predictive-process
+//! low-rank part over `m` inducing points and `Σ̃ˢ ≈ Cov(b_s)` a Vecchia
+//! approximation of the residual process. This module holds the shared
+//! structure: the low-rank blocks, the residual-covariance oracle, the
+//! Woodbury core `M = Σ_m + Σ_mn Bᵀ D⁻¹ B Σ_mnᵀ`, and the linear-algebra
+//! entry points that the Gaussian likelihood (`gaussian`), the Laplace
+//! approximation (`laplace`), and the iterative methods build on.
+//!
+//! Special cases: `m = 0` reduces to a classical Vecchia approximation;
+//! `m_v = 0` reduces to FITC. Both reductions are exercised in tests and
+//! used for the paper's baselines.
+
+pub mod gaussian;
+pub mod laplace;
+
+use crate::inducing;
+use crate::kernels::{ArdMatern, Smoothness};
+use crate::linalg::{dot, CholeskyFactor, Mat};
+use crate::rng::Rng;
+use crate::vecchia::neighbors::{self, NeighborSelection};
+use crate::vecchia::{ResidualCov, ResidualFactor};
+
+/// Configuration of a VIF approximation.
+#[derive(Clone, Debug)]
+pub struct VifConfig {
+    /// Matérn smoothness ν of the ARD kernel.
+    pub smoothness: Smoothness,
+    /// Number of inducing points m (0 → pure Vecchia approximation).
+    pub num_inducing: usize,
+    /// Number of Vecchia neighbors m_v (0 → FITC approximation).
+    pub num_neighbors: usize,
+    /// Neighbor-selection strategy (§6).
+    pub selection: NeighborSelection,
+    /// Diagonal jitter for the small Cholesky factorizations.
+    pub jitter: f64,
+    /// Lloyd refinement iterations after kMeans++ seeding.
+    pub lloyd_iters: usize,
+    /// RNG seed for kMeans++ (and everything stochastic downstream).
+    pub seed: u64,
+}
+
+impl Default for VifConfig {
+    fn default() -> Self {
+        VifConfig {
+            smoothness: Smoothness::ThreeHalves,
+            num_inducing: 200,
+            num_neighbors: 30,
+            selection: NeighborSelection::CorrelationCoverTree,
+            jitter: 1e-8,
+            lloyd_iters: 5,
+            seed: 0,
+        }
+    }
+}
+
+/// Low-rank (predictive-process) blocks for a fixed kernel and inducing
+/// set: `Σ_m = K(Z,Z)`, `Σ_mn = K(Z,X)` and the two solved panels used
+/// everywhere downstream.
+pub struct LowRank {
+    /// Inducing inputs Z (m×d).
+    pub z: Mat,
+    /// Cholesky of `Σ_m` (+ jitter).
+    pub chol_m: CholeskyFactor,
+    /// `K(X, Z)` stored n×m (row i = Σ_mi ᵀ).
+    pub sigma_nm: Mat,
+    /// `(L_m⁻¹ Σ_mn)ᵀ` n×m — residual correction is `ρ(i,j) = k(i,j) − v_i·v_j`.
+    pub vt: Mat,
+    /// `(Σ_m⁻¹ Σ_mn)ᵀ` n×m — rows `e_i` used by gradients and predictions.
+    pub et: Mat,
+}
+
+impl LowRank {
+    /// Build low-rank blocks for inducing inputs `z`.
+    pub fn build(x: &Mat, kernel: &ArdMatern, z: Mat, jitter: f64) -> Self {
+        let m = z.rows();
+        let n = x.rows();
+        let mut sig_m = kernel.sym_cov(&z, 0.0);
+        sig_m.add_diag(jitter.max(1e-10) * kernel.variance);
+        let chol_m = CholeskyFactor::new_with_jitter(&sig_m, jitter.max(1e-10))
+            .expect("inducing-point covariance not PD");
+        // Σ_mn panel: served by the AOT/PJRT engine when available (the
+        // Layer-1 Pallas kernel), native fallback otherwise.
+        let sigma_nm = crate::runtime::cross_cov_panel(x, &z, kernel);
+        let vt = Mat::zeros(n, m);
+        let et = Mat::zeros(n, m);
+        crate::coordinator::parallel_for_chunks(n, |start, end| {
+            for i in start..end {
+                let mut v = sigma_nm.row(i).to_vec();
+                chol_m.solve_lower_in_place(&mut v);
+                let mut e = v.clone();
+                chol_m.solve_upper_in_place(&mut e);
+                // SAFETY: disjoint rows per index (parallel_for_chunks).
+                unsafe {
+                    let vtp = vt.data().as_ptr() as *mut f64;
+                    let etp = et.data().as_ptr() as *mut f64;
+                    std::ptr::copy_nonoverlapping(v.as_ptr(), vtp.add(i * m), m);
+                    std::ptr::copy_nonoverlapping(e.as_ptr(), etp.add(i * m), m);
+                }
+            }
+        });
+        LowRank { z, chol_m, sigma_nm, vt, et }
+    }
+
+    pub fn m(&self) -> usize {
+        self.z.rows()
+    }
+}
+
+/// Precomputed low-rank gradient panels `T^p = ∂Σ_mnᵀ/∂θ_p − ½ E ∂Σ_m/∂θ_p`
+/// (n×m per kernel parameter), so that
+/// `∂ρ(i,j)/∂θ_p = ∂k(i,j)/∂θ_p − T^p_i·e_j − e_i·T^p_j`.
+pub struct GradAux {
+    pub t: Vec<Mat>,
+    /// `∂Σ_m/∂θ_p` (m×m per kernel parameter) for the m×m contractions.
+    pub dsig_m: Vec<Mat>,
+    /// Raw `∂K(X,Z)/∂θ_p` panels (n×m per kernel parameter), used by the
+    /// Laplace derivative products.
+    pub dsig_nm: Vec<Mat>,
+}
+
+impl GradAux {
+    pub fn build(x: &Mat, kernel: &ArdMatern, lr: &LowRank) -> Self {
+        let m = lr.m();
+        let n = x.rows();
+        let np = kernel.num_params();
+        // dΣ_m per parameter.
+        let mut dsig_m: Vec<Mat> = (0..np).map(|_| Mat::zeros(m, m)).collect();
+        let mut g = vec![0.0; np];
+        for a in 0..m {
+            for b in 0..=a {
+                kernel.cov_and_grad_into(lr.z.row(a), lr.z.row(b), &mut g);
+                for p in 0..np {
+                    dsig_m[p].set(a, b, g[p]);
+                    dsig_m[p].set(b, a, g[p]);
+                }
+            }
+        }
+        // Half-corrections: ½ E dΣ_m (n×m each).
+        let half_e: Vec<Mat> = (0..np)
+            .map(|p| {
+                let mut he = lr.et.matmul(&dsig_m[p]);
+                he.scale(0.5);
+                he
+            })
+            .collect();
+        // T^p = dK(X,Z)^p − ½ E dΣ_m^p, keeping the raw panel too.
+        let t: Vec<Mat> = (0..np).map(|_| Mat::zeros(n, m)).collect();
+        let dsig_nm: Vec<Mat> = (0..np).map(|_| Mat::zeros(n, m)).collect();
+        crate::coordinator::parallel_for_chunks(n, |start, end| {
+            let mut g = vec![0.0; np];
+            for i in start..end {
+                for l in 0..m {
+                    kernel.cov_and_grad_into(x.row(i), lr.z.row(l), &mut g);
+                    for p in 0..np {
+                        // SAFETY: disjoint (i, l) cells per chunk.
+                        unsafe {
+                            let tp = t[p].data().as_ptr() as *mut f64;
+                            *tp.add(i * m + l) = g[p] - half_e[p].get(i, l);
+                            let dp = dsig_nm[p].data().as_ptr() as *mut f64;
+                            *dp.add(i * m + l) = g[p];
+                        }
+                    }
+                }
+            }
+        });
+        GradAux { t, dsig_m, dsig_nm }
+    }
+}
+
+/// Residual-covariance oracle `ρ(i,j) = k(x_i,x_j) − v_i·v_j` with
+/// optional gradients. `extra_params` appends zero-gradient slots after
+/// the kernel parameters (e.g. the Gaussian noise, whose contribution is
+/// added by the nugget plumbing in [`ResidualFactor`]).
+pub struct VifResidualOracle<'a> {
+    pub kernel: &'a ArdMatern,
+    pub x: &'a Mat,
+    pub lr: Option<&'a LowRank>,
+    pub grad_aux: Option<&'a GradAux>,
+    pub extra_params: usize,
+}
+
+impl<'a> ResidualCov for VifResidualOracle<'a> {
+    fn rho(&self, i: usize, j: usize) -> f64 {
+        let k = if i == j {
+            self.kernel.variance
+        } else {
+            self.kernel.cov(self.x.row(i), self.x.row(j))
+        };
+        match self.lr {
+            Some(lr) => k - dot(lr.vt.row(i), lr.vt.row(j)),
+            None => k,
+        }
+    }
+
+    fn num_params(&self) -> usize {
+        self.kernel.num_params() + self.extra_params
+    }
+
+    fn rho_and_grad(&self, i: usize, j: usize, grad: &mut [f64]) -> f64 {
+        let nk = self.kernel.num_params();
+        let k = self
+            .kernel
+            .cov_and_grad_into(self.x.row(i), self.x.row(j), &mut grad[..nk]);
+        for gp in grad[nk..].iter_mut() {
+            *gp = 0.0;
+        }
+        match self.lr {
+            Some(lr) => {
+                let aux = self
+                    .grad_aux
+                    .expect("rho_and_grad with inducing points needs GradAux");
+                let (ei, ej) = (lr.et.row(i), lr.et.row(j));
+                for (p, gp) in grad[..nk].iter_mut().enumerate() {
+                    *gp -= dot(aux.t[p].row(i), ej) + dot(ei, aux.t[p].row(j));
+                }
+                k - dot(lr.vt.row(i), lr.vt.row(j))
+            }
+            None => k,
+        }
+    }
+}
+
+/// The assembled VIF structure for one parameter vector θ.
+pub struct VifStructure {
+    /// Low-rank part (None when m = 0 → pure Vecchia).
+    pub lr: Option<LowRank>,
+    /// Residual Vecchia factor (B, D).
+    pub resid: ResidualFactor,
+    /// `B Σ_mnᵀ` (n×m).
+    pub bsig: Mat,
+    /// `H = D⁻¹ B Σ_mnᵀ` (n×m).
+    pub h: Mat,
+    /// `S Σ_mnᵀ = Bᵀ H` (n×m).
+    pub ssig: Mat,
+    /// `SS = Σ_mn S Σ_mnᵀ` (m×m).
+    pub ss: Mat,
+    /// Cholesky of `M = Σ_m + SS`.
+    pub chol_mcal: Option<CholeskyFactor>,
+    /// Error-variance nugget baked into the residual factor (0 = latent scale).
+    pub nugget: f64,
+}
+
+impl VifStructure {
+    /// Assemble the structure: low-rank blocks, residual factor, Woodbury
+    /// core. `z` — inducing inputs (empty Mat → none); `neighbors` —
+    /// conditioning sets; `nugget` — error variance on the residual diag.
+    pub fn assemble(
+        x: &Mat,
+        kernel: &ArdMatern,
+        z: Option<Mat>,
+        neighbors: Vec<Vec<u32>>,
+        nugget: f64,
+        jitter: f64,
+        extra_params: usize,
+    ) -> Self {
+        let lr = z.map(|z| LowRank::build(x, kernel, z, jitter));
+        let oracle = VifResidualOracle {
+            kernel,
+            x,
+            lr: lr.as_ref(),
+            grad_aux: None,
+            extra_params,
+        };
+        let resid = ResidualFactor::build(&oracle, neighbors, nugget, jitter);
+        let (bsig, h, ssig, ss, chol_mcal) = match &lr {
+            Some(lr) => {
+                let bsig = resid.mul_b_mat(&lr.sigma_nm);
+                let mut h = bsig.clone();
+                h.scale_rows(&resid.d.iter().map(|d| 1.0 / d).collect::<Vec<_>>());
+                let ssig = resid.mul_bt_mat(&h);
+                // M = Σ_m + (BΣ_mnᵀ)ᵀ H;   SS = Σ_mnᵀ-weighted: sigma_nmᵀ ssig
+                let ss = lr.sigma_nm.matmul_tn(&ssig);
+                let mut mcal = bsig.matmul_tn(&h);
+                // mcal = (BΣ)ᵀ H = Σ_mn Bᵀ D⁻¹ B Σ_mnᵀ = SS (same thing,
+                // numerically symmetric by construction); add Σ_m.
+                let sig_m = lr.chol_m.l().matmul_nt(lr.chol_m.l());
+                mcal.add_assign(&sig_m);
+                let chol_mcal = CholeskyFactor::new_with_jitter(&mcal, jitter.max(1e-10))
+                    .expect("Woodbury core M not PD");
+                (bsig, h, ssig, ss, Some(chol_mcal))
+            }
+            None => (
+                Mat::zeros(0, 0),
+                Mat::zeros(0, 0),
+                Mat::zeros(0, 0),
+                Mat::zeros(0, 0),
+                None,
+            ),
+        };
+        VifStructure { lr, resid, bsig, h, ssig, ss, chol_mcal, nugget }
+    }
+
+    pub fn n(&self) -> usize {
+        self.resid.n()
+    }
+
+    pub fn m(&self) -> usize {
+        self.lr.as_ref().map(|l| l.m()).unwrap_or(0)
+    }
+
+    /// `Σ̃_†⁻¹ v = S v − (SΣ_mnᵀ) M⁻¹ (Σ_mn S v)` (Sherman–Woodbury–Morrison).
+    pub fn apply_sigma_dagger_inv(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = self.resid.apply_s(v);
+        if let Some(chol_mcal) = &self.chol_mcal {
+            let svt = self.ssig.matvec_t(v); // (SΣ_mnᵀ)ᵀ v = Σ_mn S v
+            let c = chol_mcal.solve(&svt);
+            let corr = self.ssig.matvec(&c);
+            for (o, r) in out.iter_mut().zip(&corr) {
+                *o -= r;
+            }
+        }
+        out
+    }
+
+    /// `Σ̃_† v = Σ_mnᵀ Σ_m⁻¹ Σ_mn v + B⁻¹ D B⁻ᵀ v`.
+    pub fn apply_sigma_dagger(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = self.resid.apply_s_inv(v);
+        if let Some(lr) = &self.lr {
+            let w = lr.vt.matvec_t(v); // (L⁻¹Σ_mn) v
+            let corr = lr.vt.matvec(&w); // Σ_mnᵀ Σ_m⁻¹ Σ_mn v
+            for (o, r) in out.iter_mut().zip(&corr) {
+                *o += r;
+            }
+        }
+        out
+    }
+
+    /// `log det Σ̃_† = log det M − log det Σ_m + log det D`.
+    pub fn logdet(&self) -> f64 {
+        let mut ld = self.resid.logdet();
+        if let (Some(lr), Some(cm)) = (&self.lr, &self.chol_mcal) {
+            ld += cm.logdet() - lr.chol_m.logdet();
+        }
+        ld
+    }
+
+    /// Sample `x ~ N(0, Σ̃_†)`: low-rank part `Σ_mnᵀ Σ_m^{-T/2} ε₁` plus
+    /// residual part `B⁻¹ D^{1/2} ε₂` (used by Algorithm 1 line 4 and for
+    /// data simulation).
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        let n = self.n();
+        let mut out = self.resid.sample(&rng.normal_vec(n));
+        if let Some(lr) = &self.lr {
+            // Σ_mnᵀ Σ_m⁻¹ L_m ε = Σ_mnᵀ L_m⁻ᵀ ε = vtᵀ... : vt row i = L⁻¹Σ_mi,
+            // so vt · ε has covariance Σ_mnᵀ Σ_m⁻¹ Σ_mn.
+            let eps = rng.normal_vec(lr.m());
+            let low = lr.vt.matvec(&eps);
+            for (o, l) in out.iter_mut().zip(&low) {
+                *o += l;
+            }
+        }
+        out
+    }
+
+    /// Densify `Σ̃_†` (tests / small n only).
+    pub fn dense_sigma_dagger(&self) -> Mat {
+        let n = self.n();
+        let mut out = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = self.apply_sigma_dagger(&e);
+            for i in 0..n {
+                out.set(i, j, col[i]);
+            }
+        }
+        out
+    }
+}
+
+/// Select inducing points per §6: kMeans++ in the λ-scaled space,
+/// optionally warm-started from previous centers.
+pub fn select_inducing(
+    x: &Mat,
+    kernel: &ArdMatern,
+    m: usize,
+    lloyd_iters: usize,
+    rng: &mut Rng,
+    warm: Option<&Mat>,
+) -> Option<Mat> {
+    if m == 0 {
+        return None;
+    }
+    let xs = inducing::scale_inputs(x, &kernel.length_scales);
+    let centers_scaled = match warm {
+        Some(w) => {
+            let ws = inducing::scale_inputs(w, &kernel.length_scales);
+            inducing::lloyd(&xs, ws, lloyd_iters.max(1))
+        }
+        None => inducing::kmeanspp(&xs, m, lloyd_iters, rng),
+    };
+    Some(inducing::unscale_inputs(&centers_scaled, &kernel.length_scales))
+}
+
+/// Select Vecchia conditioning sets per §6 for the residual process of a
+/// given kernel + optional low-rank part.
+pub fn select_neighbors(
+    x: &Mat,
+    kernel: &ArdMatern,
+    lr: Option<&LowRank>,
+    m_v: usize,
+    selection: NeighborSelection,
+) -> Vec<Vec<u32>> {
+    let n = x.rows();
+    if m_v == 0 {
+        return vec![vec![]; n];
+    }
+    match selection {
+        NeighborSelection::EuclideanTransformed => {
+            let inv: Vec<f64> = kernel.length_scales.iter().map(|l| 1.0 / l).collect();
+            neighbors::euclidean_ordered_knn(x, &inv, m_v)
+        }
+        NeighborSelection::CorrelationCoverTree | NeighborSelection::CorrelationBruteForce => {
+            let oracle = VifResidualOracle {
+                kernel,
+                x,
+                lr,
+                grad_aux: None,
+                extra_params: 0,
+            };
+            // d_c(i,j) = sqrt(1 − |ρ_ij / sqrt(ρ_ii ρ_jj)|)  (§6)
+            let diag: Vec<f64> = (0..n).map(|i| oracle.rho(i, i).max(1e-300)).collect();
+            let dist = |i: usize, j: usize| -> f64 {
+                let r = oracle.rho(i, j) / (diag[i] * diag[j]).sqrt();
+                (1.0 - r.abs()).max(0.0).sqrt()
+            };
+            if selection == NeighborSelection::CorrelationCoverTree {
+                neighbors::covertree_ordered_knn(n, m_v, &dist)
+            } else {
+                neighbors::brute_force_ordered_knn(n, m_v, &dist)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::random_points;
+
+    fn setup(n: usize, m: usize, m_v: usize) -> (Mat, ArdMatern, VifStructure) {
+        let mut rng = Rng::seed_from(42);
+        let x = random_points(&mut rng, n, 2);
+        let kernel = ArdMatern::new(1.3, vec![0.3, 0.4], Smoothness::ThreeHalves);
+        let z = select_inducing(&x, &kernel, m, 3, &mut rng, None);
+        let lr_tmp = z
+            .clone()
+            .map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+        let nb = select_neighbors(
+            &x,
+            &kernel,
+            lr_tmp.as_ref(),
+            m_v,
+            NeighborSelection::CorrelationBruteForce,
+        );
+        let s = VifStructure::assemble(&x, &kernel, z, nb, 0.05, 1e-10, 0);
+        (x, kernel, s)
+    }
+
+    #[test]
+    fn inverse_is_consistent() {
+        let (_, _, s) = setup(40, 8, 5);
+        let v: Vec<f64> = (0..40).map(|i| (i as f64 * 0.3).sin()).collect();
+        let w = s.apply_sigma_dagger_inv(&s.apply_sigma_dagger(&v));
+        for (a, b) in w.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn logdet_matches_dense() {
+        let (_, _, s) = setup(35, 6, 4);
+        let dense = s.dense_sigma_dagger();
+        let chol = CholeskyFactor::new(&dense).unwrap();
+        assert!(
+            (s.logdet() - chol.logdet()).abs() < 1e-7,
+            "{} vs {}",
+            s.logdet(),
+            chol.logdet()
+        );
+    }
+
+    #[test]
+    fn full_conditioning_recovers_exact_covariance() {
+        // With N(i)={0..i-1} and any m, Σ̃_† should equal Σ + σ²I exactly:
+        // the Vecchia factor of the residual is exact, and low-rank +
+        // exact-residual = full covariance.
+        let mut rng = Rng::seed_from(7);
+        let n = 25;
+        let x = random_points(&mut rng, n, 2);
+        let kernel = ArdMatern::new(0.9, vec![0.25, 0.35], Smoothness::FiveHalves);
+        let nb: Vec<Vec<u32>> = (0..n).map(|i| (0..i as u32).collect()).collect();
+        let z = select_inducing(&x, &kernel, 5, 2, &mut rng, None);
+        let s = VifStructure::assemble(&x, &kernel, z, nb, 0.01, 1e-12, 0);
+        let dense = s.dense_sigma_dagger();
+        let exact = kernel.sym_cov(&x, 0.01);
+        assert!(
+            dense.max_abs_diff(&exact) < 1e-5,
+            "diff {}",
+            dense.max_abs_diff(&exact)
+        );
+    }
+
+    #[test]
+    fn m_zero_equals_vecchia_and_mv_zero_equals_fitc() {
+        let mut rng = Rng::seed_from(3);
+        let n = 30;
+        let x = random_points(&mut rng, n, 2);
+        let kernel = ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::ThreeHalves);
+        // m=0: Σ̃_† = B⁻¹DB⁻ᵀ of the plain covariance
+        let nb = select_neighbors(
+            &x,
+            &kernel,
+            None,
+            4,
+            NeighborSelection::CorrelationBruteForce,
+        );
+        let s = VifStructure::assemble(&x, &kernel, None, nb, 0.02, 1e-12, 0);
+        assert!(s.lr.is_none());
+        let v: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let w1 = s.apply_sigma_dagger(&v);
+        let w2 = s.resid.apply_s_inv(&v);
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // m_v=0: FITC — Σ̃_† = low-rank + diag
+        let z = select_inducing(&x, &kernel, 6, 2, &mut rng, None);
+        let s = VifStructure::assemble(&x, &kernel, z, vec![vec![]; n], 0.02, 1e-12, 0);
+        let dense = s.dense_sigma_dagger();
+        // off-diagonal equals pure low-rank part
+        let lr = s.lr.as_ref().unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    let low = dot(lr.vt.row(i), lr.vt.row(j));
+                    assert!((dense.get(i, j) - low).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sample_covariance_close_to_sigma_dagger() {
+        let (_, _, s) = setup(15, 4, 3);
+        let dense = s.dense_sigma_dagger();
+        let mut rng = Rng::seed_from(100);
+        let reps = 30_000;
+        let mut acc = Mat::zeros(15, 15);
+        for _ in 0..reps {
+            let smp = s.sample(&mut rng);
+            for i in 0..15 {
+                for j in 0..15 {
+                    acc.add_to(i, j, smp[i] * smp[j]);
+                }
+            }
+        }
+        acc.scale(1.0 / reps as f64);
+        assert!(
+            acc.max_abs_diff(&dense) < 0.08,
+            "diff {}",
+            acc.max_abs_diff(&dense)
+        );
+    }
+}

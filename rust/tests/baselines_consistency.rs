@@ -1,0 +1,131 @@
+//! Baseline-reduction consistency: the VIF approximation degenerates to
+//! its two named special cases exactly (paper §2.1), and the SGPR bound
+//! behaves like a bound.
+
+use vifgp::data;
+use vifgp::baselines::sgpr::neg_elbo;
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::linalg::{dot, CholeskyFactor};
+use vifgp::rng::Rng;
+use vifgp::testing::random_points;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::gaussian::nll;
+use vifgp::vif::{select_inducing, select_neighbors, VifStructure};
+
+const LN_2PI: f64 = 1.8378770664093453;
+
+#[test]
+fn vif_with_mv0_equals_fitc_likelihood() {
+    // m_v = 0: Σ_† = Q_nn + diag(Σ − Q_nn) + σ²I — the FITC marginal.
+    let mut rng = Rng::seed_from(4);
+    let n = 80;
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.2, vec![0.3, 0.4], Smoothness::ThreeHalves);
+    let noise = 0.07;
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let z = select_inducing(&x, &kernel, 12, 3, &mut rng, None).unwrap();
+    let s = VifStructure::assemble(&x, &kernel, Some(z.clone()), vec![vec![]; n], noise, 1e-12, 1);
+    let got = nll(&s, &y);
+    // dense FITC marginal
+    let mut sig_m = kernel.sym_cov(&z, 0.0);
+    sig_m.add_diag(1e-10 * kernel.variance);
+    let chol_m = CholeskyFactor::new(&sig_m).unwrap();
+    let mut cov = vifgp::linalg::Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let ki: Vec<f64> = (0..12).map(|l| kernel.cov(x.row(i), z.row(l))).collect();
+            let kj: Vec<f64> = (0..12).map(|l| kernel.cov(x.row(j), z.row(l))).collect();
+            let q = dot(&ki, &chol_m.solve(&kj));
+            let mut v = q;
+            if i == j {
+                v += (kernel.variance - q) + noise;
+            }
+            cov.set(i, j, v);
+        }
+    }
+    let chol = CholeskyFactor::new_with_jitter(&cov, 1e-10).unwrap();
+    let alpha = chol.solve(&y);
+    let want = 0.5 * (n as f64 * LN_2PI + chol.logdet() + dot(&y, &alpha));
+    assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+}
+
+#[test]
+fn vif_with_m0_equals_vecchia_likelihood() {
+    // m = 0: Σ_† = B⁻¹DB⁻ᵀ of the response covariance — plain Vecchia.
+    let mut rng = Rng::seed_from(6);
+    let n = 60;
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(0.9, vec![0.25, 0.35], Smoothness::FiveHalves);
+    let noise = 0.1;
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let nb = select_neighbors(&x, &kernel, None, 5, NeighborSelection::CorrelationBruteForce);
+    let s = VifStructure::assemble(&x, &kernel, None, nb.clone(), noise, 1e-12, 1);
+    let got = nll(&s, &y);
+    // direct Vecchia NLL: ½Σ[log 2π + log D_i + r_i²/D_i], r = B y
+    let by = s.resid.mul_b(&y);
+    let want = 0.5
+        * by.iter()
+            .zip(&s.resid.d)
+            .map(|(r, d)| LN_2PI + d.ln() + r * r / d)
+            .sum::<f64>();
+    assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+}
+
+#[test]
+fn sgpr_bound_dominates_exact_nll_for_any_inducing_subset() {
+    let mut rng = Rng::seed_from(8);
+    let n = 70;
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.0, vec![0.4, 0.5], Smoothness::Gaussian);
+    let noise = 0.15;
+    let cov = kernel.sym_cov(&x, noise);
+    let chol = CholeskyFactor::new(&cov).unwrap();
+    let y = chol.mul_lower(&rng.normal_vec(n));
+    let alpha = chol.solve(&y);
+    let exact = 0.5 * (n as f64 * LN_2PI + chol.logdet() + dot(&y, &alpha));
+    for m in [5usize, 15, 40] {
+        let z = data::subset_rows(&x, &(0..m).collect::<Vec<_>>());
+        let bound = neg_elbo(&x, &y, &kernel, noise, &z);
+        assert!(
+            bound >= exact - 1e-6,
+            "m={m}: bound {bound} below exact {exact}"
+        );
+    }
+}
+
+#[test]
+fn vif_interpolates_between_fitc_and_exact() {
+    // With m fixed, increasing m_v should (weakly) improve the VIF NLL's
+    // agreement with the exact marginal NLL.
+    let mut rng = Rng::seed_from(12);
+    let n = 70;
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.0, vec![0.2, 0.3], Smoothness::ThreeHalves);
+    let noise = 0.05;
+    let cov = kernel.sym_cov(&x, noise);
+    let chol = CholeskyFactor::new(&cov).unwrap();
+    let y = chol.mul_lower(&rng.normal_vec(n));
+    let alpha = chol.solve(&y);
+    let exact = 0.5 * (n as f64 * LN_2PI + chol.logdet() + dot(&y, &alpha));
+    let z = select_inducing(&x, &kernel, 8, 3, &mut rng, None);
+    let mut errs = Vec::new();
+    for m_v in [0usize, 4, 20, n - 1] {
+        let nb: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let lo = i.saturating_sub(m_v);
+                (lo..i).map(|j| j as u32).collect()
+            })
+            .collect();
+        let s = VifStructure::assemble(&x, &kernel, z.clone(), nb, noise, 1e-12, 1);
+        errs.push((nll(&s, &y) - exact).abs());
+    }
+    // full conditioning is exact
+    assert!(errs[3] < 1e-5, "full conditioning err {}", errs[3]);
+    // and more neighbors should not make things dramatically worse
+    assert!(
+        errs[2] <= errs[0] + 1e-6,
+        "m_v=20 err {} vs FITC err {}",
+        errs[2],
+        errs[0]
+    );
+}

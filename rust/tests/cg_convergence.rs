@@ -1,0 +1,121 @@
+//! Empirical validation of the convergence theory (§5, Theorems 5.1–5.2):
+//!
+//! * both preconditioners accelerate CG over no preconditioning;
+//! * with the FITC preconditioner, more inducing points `m` → fewer CG
+//!   iterations (λ_{m+1} shrinks), and fewer Vecchia neighbors `m_v` →
+//!   no slower convergence;
+//! * the FITC preconditioner is less sensitive to the marginal variance
+//!   σ₁² (≈ λ₁ scaling) than VIFDU — Theorem 5.2's λ₁-independence.
+
+use vifgp::data;
+use vifgp::iterative::{pcg, FitcPrecond, IdentityPrecond, VifduPrecond};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::rng::Rng;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{OpWPlusPrec, OpWinvPlusCov};
+use vifgp::vif::{select_inducing, select_neighbors, VifStructure};
+
+struct Setup {
+    x: vifgp::linalg::Mat,
+    kernel: ArdMatern,
+    s: VifStructure,
+    w: Vec<f64>,
+    rhs: Vec<f64>,
+}
+
+fn setup(n: usize, m: usize, m_v: usize, variance: f64, seed: u64) -> Setup {
+    let mut rng = Rng::seed_from(seed);
+    let x = data::uniform_inputs(&mut rng, n, 2);
+    let kernel = ArdMatern::new(variance, vec![0.2, 0.3], Smoothness::ThreeHalves);
+    let z = select_inducing(&x, &kernel, m, 3, &mut rng, None);
+    let lr = z
+        .clone()
+        .map(|z| vifgp::vif::LowRank::build(&x, &kernel, z, 1e-8));
+    let nb = select_neighbors(
+        &x,
+        &kernel,
+        lr.as_ref(),
+        m_v,
+        NeighborSelection::CorrelationCoverTree,
+    );
+    let s = VifStructure::assemble(&x, &kernel, z, nb, 0.0, 1e-8, 0);
+    let latent = data::simulate_latent_gp(&mut rng, &x, &kernel);
+    let lik = Likelihood::BernoulliLogit;
+    let y = data::simulate_response(&mut rng, &latent, &lik);
+    let w: Vec<f64> = y
+        .iter()
+        .zip(&latent)
+        .map(|(yi, bi)| lik.w(*yi, *bi))
+        .collect();
+    let rhs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    Setup { x, kernel, s, w, rhs }
+}
+
+fn iters_vifdu(su: &Setup) -> usize {
+    let op = OpWPlusPrec { s: &su.s, w: &su.w };
+    let pre = VifduPrecond::new(&su.s, &su.w);
+    pcg(&op, &pre, &su.rhs, 1e-8, 2000, false).iters
+}
+
+fn iters_fitc(su: &Setup, k: usize) -> usize {
+    let op = OpWinvPlusCov { s: &su.s, w: &su.w };
+    let pre = FitcPrecond::new(&su.x, &su.kernel, k, &su.w, 99);
+    pcg(&op, &pre, &su.rhs, 1e-8, 2000, false).iters
+}
+
+fn iters_plain(su: &Setup) -> usize {
+    let op = OpWPlusPrec { s: &su.s, w: &su.w };
+    pcg(&op, &IdentityPrecond(su.rhs.len()), &su.rhs, 1e-8, 2000, false).iters
+}
+
+#[test]
+fn preconditioning_accelerates_cg() {
+    let su = setup(600, 50, 10, 4.0, 1);
+    let plain = iters_plain(&su);
+    let vifdu = iters_vifdu(&su);
+    let fitc = iters_fitc(&su, 50);
+    assert!(
+        vifdu < plain,
+        "VIFDU {vifdu} should beat plain {plain}"
+    );
+    assert!(fitc < plain, "FITC {fitc} should beat plain {plain}");
+}
+
+#[test]
+fn fitc_more_inducing_points_fewer_iterations() {
+    // Theorem 5.2: λ_{m+1} decreases with k → faster convergence.
+    let su = setup(600, 50, 10, 1.0, 2);
+    let small = iters_fitc(&su, 10);
+    let large = iters_fitc(&su, 100);
+    assert!(
+        large <= small,
+        "k=100 took {large} vs k=10 {small} iterations"
+    );
+}
+
+#[test]
+fn fewer_neighbors_no_slower_convergence() {
+    // Both theorems: smaller m_v → smaller bound.
+    let su_big = setup(500, 40, 20, 1.0, 3);
+    let su_small = setup(500, 40, 3, 1.0, 3);
+    let big = iters_fitc(&su_big, 40);
+    let small = iters_fitc(&su_small, 40);
+    assert!(
+        small <= big + 2,
+        "m_v=3 took {small} vs m_v=20 {big} iterations"
+    );
+}
+
+#[test]
+fn fitc_less_sensitive_to_marginal_variance_than_vifdu() {
+    // Theorem 5.1's bound grows with λ₁ (∝ σ₁²); Theorem 5.2's does not.
+    let lo = setup(500, 40, 8, 1.0, 4);
+    let hi = setup(500, 40, 8, 25.0, 4);
+    let vifdu_growth = iters_vifdu(&hi) as f64 / iters_vifdu(&lo).max(1) as f64;
+    let fitc_growth = iters_fitc(&hi, 40) as f64 / iters_fitc(&lo, 40).max(1) as f64;
+    assert!(
+        fitc_growth <= vifdu_growth + 0.5,
+        "FITC growth {fitc_growth:.2} vs VIFDU growth {vifdu_growth:.2}"
+    );
+}

@@ -1,0 +1,135 @@
+//! End-to-end Gaussian regression: simulate → fit → predict, verifying
+//! the paper's qualitative claims on a small workload: parameter
+//! recovery, VIF ≥ {Vecchia, FITC} prediction accuracy, and calibrated
+//! predictive intervals.
+
+use vifgp::baselines;
+use vifgp::data;
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::metrics;
+use vifgp::rng::Rng;
+use vifgp::vif::gaussian::{GaussianParams, VifRegression};
+use vifgp::vif::VifConfig;
+
+struct Workload {
+    xtr: vifgp::linalg::Mat,
+    ytr: Vec<f64>,
+    xte: vifgp::linalg::Mat,
+    yte: Vec<f64>,
+}
+
+fn workload(seed: u64, n_train: usize, n_test: usize, d: usize, noise: f64) -> Workload {
+    let mut rng = Rng::seed_from(seed);
+    let x = data::uniform_inputs(&mut rng, n_train + n_test, d);
+    let kernel = ArdMatern::new(
+        1.0,
+        data::paper_length_scales(d, Smoothness::ThreeHalves),
+        Smoothness::ThreeHalves,
+    );
+    let latent = data::simulate_latent_gp(&mut rng, &x, &kernel);
+    let y = data::simulate_response(&mut rng, &latent, &Likelihood::Gaussian { variance: noise });
+    let idx: Vec<usize> = (0..n_train + n_test).collect();
+    let (tr, te) = idx.split_at(n_train);
+    Workload {
+        xtr: data::subset_rows(&x, tr),
+        ytr: data::subset_vec(&y, tr),
+        xte: data::subset_rows(&x, te),
+        yte: data::subset_vec(&y, te),
+    }
+}
+
+fn fit_and_score(w: &Workload, config: VifConfig) -> (f64, f64, GaussianParams) {
+    let init = GaussianParams {
+        kernel: ArdMatern::isotropic(0.5, 0.5, w.xtr.cols(), config.smoothness),
+        noise: 0.2,
+    };
+    let mut model = VifRegression::new(w.xtr.clone(), w.ytr.clone(), config, init);
+    model.fit(30);
+    let (mean, var) = model.predict(&w.xte);
+    (
+        metrics::rmse(&mean, &w.yte),
+        metrics::log_score_gaussian(&mean, &var, &w.yte),
+        model.params.clone(),
+    )
+}
+
+#[test]
+fn vif_beats_or_matches_baselines_and_recovers_noise() {
+    let w = workload(3, 800, 300, 2, 0.05);
+    let base = VifConfig {
+        smoothness: Smoothness::ThreeHalves,
+        num_inducing: 40,
+        num_neighbors: 8,
+        seed: 1,
+        ..Default::default()
+    };
+    let (rmse_vif, ls_vif, pars) = fit_and_score(&w, base.clone());
+    let (rmse_vec, _, _) = fit_and_score(&w, baselines::vecchia_config(8, &base));
+    let (rmse_fitc, _, _) = fit_and_score(&w, baselines::fitc_config(40, &base));
+    // paper headline: VIF at least as accurate as both baselines (margin
+    // for stochastic selection).
+    assert!(
+        rmse_vif <= rmse_vec * 1.10,
+        "VIF {rmse_vif} vs Vecchia {rmse_vec}"
+    );
+    assert!(
+        rmse_vif <= rmse_fitc * 1.10,
+        "VIF {rmse_vif} vs FITC {rmse_fitc}"
+    );
+    // the fitted noise should be near the true 0.05
+    assert!(
+        pars.noise > 0.01 && pars.noise < 0.2,
+        "noise estimate {}",
+        pars.noise
+    );
+    assert!(ls_vif < 0.5, "log-score {ls_vif}");
+}
+
+#[test]
+fn predictive_intervals_are_calibrated() {
+    let w = workload(5, 700, 400, 2, 0.1);
+    let base = VifConfig {
+        smoothness: Smoothness::ThreeHalves,
+        num_inducing: 30,
+        num_neighbors: 8,
+        seed: 2,
+        ..Default::default()
+    };
+    let init = GaussianParams {
+        kernel: ArdMatern::isotropic(0.5, 0.5, 2, base.smoothness),
+        noise: 0.2,
+    };
+    let mut model = VifRegression::new(w.xtr.clone(), w.ytr.clone(), base, init);
+    model.fit(30);
+    let (mean, var) = model.predict(&w.xte);
+    // ±2 sd coverage should be near 95%
+    let covered = mean
+        .iter()
+        .zip(&var)
+        .zip(&w.yte)
+        .filter(|((m, v), y)| (*y - **m).abs() <= 2.0 * v.sqrt())
+        .count() as f64
+        / w.yte.len() as f64;
+    assert!(covered > 0.85 && covered <= 1.0, "coverage {covered}");
+}
+
+#[test]
+fn accuracy_improves_with_budget() {
+    // More inducing points + neighbors → no worse accuracy (Fig 11 shape).
+    let w = workload(7, 700, 300, 5, 0.05);
+    let small = VifConfig {
+        smoothness: Smoothness::ThreeHalves,
+        num_inducing: 10,
+        num_neighbors: 2,
+        seed: 3,
+        ..Default::default()
+    };
+    let big = VifConfig { num_inducing: 60, num_neighbors: 12, ..small.clone() };
+    let (rmse_small, _, _) = fit_and_score(&w, small);
+    let (rmse_big, _, _) = fit_and_score(&w, big);
+    assert!(
+        rmse_big <= rmse_small * 1.05,
+        "budget: small {rmse_small} vs big {rmse_big}"
+    );
+}

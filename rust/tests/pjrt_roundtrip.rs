@@ -1,0 +1,61 @@
+//! Integration test: the python-AOT → rust-PJRT path produces the same
+//! covariance panels as the native Rust kernels (requires
+//! `make artifacts` to have run; skips otherwise).
+
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::linalg::Mat;
+use vifgp::rng::Rng;
+use vifgp::runtime::PjrtCovEngine;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}
+
+#[test]
+fn pjrt_cross_cov_matches_native() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = PjrtCovEngine::load(&dir).expect("engine load");
+    let mut rng = Rng::seed_from(42);
+    for (smoothness, d) in [
+        (Smoothness::Half, 2),
+        (Smoothness::ThreeHalves, 3),
+        (Smoothness::FiveHalves, 5),
+        (Smoothness::Gaussian, 8),
+    ] {
+        let kernel = ArdMatern::new(
+            1.4,
+            (0..d).map(|k| 0.25 + 0.1 * k as f64).collect(),
+            smoothness,
+        );
+        // sizes that exercise padding and multi-panel tiling
+        for (n, m) in [(37usize, 20usize), (600, 300)] {
+            let x = Mat::from_fn(n, d, |_, _| rng.uniform());
+            let z = Mat::from_fn(m, d, |_, _| rng.uniform());
+            let got = engine.cross_cov(&x, &z, &kernel).expect("panel");
+            let want = kernel.cross_cov(&x, &z);
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-10, "{smoothness:?} n={n} m={m}: diff {diff}");
+        }
+    }
+    let stats = *engine.stats.lock().unwrap();
+    assert!(stats.pjrt_panels > 0);
+}
+
+#[test]
+fn engine_rejects_unsupported_kernels() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    let engine = PjrtCovEngine::load(&dir).expect("engine load");
+    let too_wide = ArdMatern::new(1.0, vec![0.3; 20], Smoothness::Gaussian);
+    assert!(!engine.supports(&too_wide));
+    let general = ArdMatern::new(1.0, vec![0.3; 2], Smoothness::General(0.8));
+    assert!(!engine.supports(&general));
+}

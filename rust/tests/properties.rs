@@ -1,0 +1,217 @@
+//! Property-based tests over the library's core invariants, using the
+//! in-tree seeded property harness (`vifgp::testing::check`).
+
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::linalg::{CholeskyFactor, Mat};
+use vifgp::rng::Rng;
+use vifgp::testing::{check, random_points};
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::{select_inducing, select_neighbors, VifStructure};
+
+fn random_kernel(rng: &mut Rng, d: usize) -> ArdMatern {
+    let smoothness = match rng.below(4) {
+        0 => Smoothness::Half,
+        1 => Smoothness::ThreeHalves,
+        2 => Smoothness::FiveHalves,
+        _ => Smoothness::Gaussian,
+    };
+    ArdMatern::new(
+        rng.uniform_in(0.3, 2.5),
+        (0..d).map(|_| rng.uniform_in(0.15, 0.9)).collect(),
+        smoothness,
+    )
+}
+
+fn random_structure(rng: &mut Rng) -> (Mat, ArdMatern, VifStructure, f64) {
+    let n = 20 + rng.below(25);
+    let d = 1 + rng.below(3);
+    let x = random_points(rng, n, d);
+    let kernel = random_kernel(rng, d);
+    let m = rng.below(8); // 0 → pure Vecchia
+    let m_v = rng.below(6); // 0 → FITC
+    let nugget = rng.uniform_in(0.01, 0.3);
+    let z = select_inducing(&x, &kernel, m, 2, rng, None);
+    let lr = z
+        .clone()
+        .map(|z| vifgp::vif::LowRank::build(&x, &kernel, z, 1e-10));
+    let nb = select_neighbors(
+        &x,
+        &kernel,
+        lr.as_ref(),
+        m_v,
+        NeighborSelection::CorrelationBruteForce,
+    );
+    let s = VifStructure::assemble(&x, &kernel, z, nb, nugget, 1e-10, 0);
+    (x, kernel, s, nugget)
+}
+
+#[test]
+fn prop_sigma_dagger_is_spd() {
+    check(
+        "Σ_† dense matrix is symmetric positive definite",
+        25,
+        42,
+        |rng| random_structure(rng),
+        |(_, _, s, _)| {
+            let dense = s.dense_sigma_dagger();
+            let sym_err = dense.max_abs_diff(&dense.t());
+            if sym_err > 1e-8 {
+                return Err(format!("asymmetry {sym_err}"));
+            }
+            CholeskyFactor::new_with_jitter(&dense, 1e-12)
+                .map(|_| ())
+                .map_err(|e| format!("not PD: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_inverse_consistency() {
+    check(
+        "Σ_†⁻¹ Σ_† v = v",
+        25,
+        7,
+        |rng| {
+            let (x, k, s, ng) = random_structure(rng);
+            let v = rng.normal_vec(s.n());
+            (x, k, s, ng, v)
+        },
+        |(_, _, s, _, v)| {
+            let w = s.apply_sigma_dagger_inv(&s.apply_sigma_dagger(v));
+            for (a, b) in w.iter().zip(v) {
+                if (a - b).abs() > 1e-6 * (1.0 + b.abs()) {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_logdet_matches_dense() {
+    check(
+        "structure logdet equals dense Cholesky logdet",
+        20,
+        9,
+        |rng| random_structure(rng),
+        |(_, _, s, _)| {
+            let dense = s.dense_sigma_dagger();
+            let chol = CholeskyFactor::new_with_jitter(&dense, 1e-12)
+                .map_err(|e| e.to_string())?;
+            let (a, b) = (s.logdet(), chol.logdet());
+            if (a - b).abs() > 1e-6 * (1.0 + b.abs()) {
+                return Err(format!("logdet {a} vs {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_conditional_variances_decrease_with_more_neighbors() {
+    // D_i is the conditional variance given N(i); conditioning on a
+    // superset cannot increase it.
+    check(
+        "Vecchia D_i monotone under neighbor-set growth",
+        15,
+        21,
+        |rng| {
+            let n = 25 + rng.below(15);
+            let x = random_points(rng, n, 2);
+            let kernel = random_kernel(rng, 2);
+            (x, kernel)
+        },
+        |(x, kernel)| {
+            let nb_small = select_neighbors(x, kernel, None, 2, NeighborSelection::EuclideanTransformed);
+            let nb_big: Vec<Vec<u32>> = (0..x.rows()).map(|i| (0..i as u32).collect()).collect();
+            let s_small = VifStructure::assemble(x, kernel, None, nb_small, 0.05, 1e-10, 0);
+            let s_big = VifStructure::assemble(x, kernel, None, nb_big, 0.05, 1e-10, 0);
+            for i in 0..x.rows() {
+                if s_big.resid.d[i] > s_small.resid.d[i] + 1e-8 {
+                    return Err(format!(
+                        "i={i}: full-cond D {} > truncated D {}",
+                        s_big.resid.d[i], s_small.resid.d[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_covertree_neighbors_match_brute_force() {
+    check(
+        "cover-tree kNN distances equal brute-force kNN distances",
+        10,
+        33,
+        |rng| {
+            let n = 60 + rng.below(120);
+            let x = random_points(rng, n, 2);
+            let kernel = random_kernel(rng, 2);
+            (x, kernel)
+        },
+        |(x, kernel)| {
+            let bf = select_neighbors(x, kernel, None, 4, NeighborSelection::CorrelationBruteForce);
+            let ct = select_neighbors(x, kernel, None, 4, NeighborSelection::CorrelationCoverTree);
+            // compare multisets of kernel correlations (ties may reorder)
+            for i in 0..x.rows() {
+                let mut db: Vec<f64> = bf[i]
+                    .iter()
+                    .map(|&j| kernel.cov(x.row(i), x.row(j as usize)))
+                    .collect();
+                let mut dc: Vec<f64> = ct[i]
+                    .iter()
+                    .map(|&j| kernel.cov(x.row(i), x.row(j as usize)))
+                    .collect();
+                db.sort_by(f64::total_cmp);
+                dc.sort_by(f64::total_cmp);
+                for (a, b) in db.iter().zip(&dc) {
+                    if (a - b).abs() > 1e-10 {
+                        return Err(format!("i={i}: corr {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sampling_has_right_first_two_moments() {
+    check(
+        "Σ_† samples have zero mean and matching variance scale",
+        6,
+        55,
+        |rng| {
+            let (x, k, s, ng) = random_structure(rng);
+            let seed = rng.next_u64();
+            (x, k, s, ng, seed)
+        },
+        |(_, _, s, _, seed)| {
+            let dense = s.dense_sigma_dagger();
+            let mut rng = Rng::seed_from(*seed);
+            let reps = 4000;
+            let n = s.n();
+            let mut mean = vec![0.0; n];
+            let mut var = vec![0.0; n];
+            for _ in 0..reps {
+                let smp = s.sample(&mut rng);
+                for i in 0..n {
+                    mean[i] += smp[i];
+                    var[i] += smp[i] * smp[i];
+                }
+            }
+            for i in 0..n {
+                mean[i] /= reps as f64;
+                var[i] = var[i] / reps as f64 - mean[i] * mean[i];
+                let want = dense.get(i, i);
+                if (var[i] - want).abs() > 0.25 * want.max(0.1) {
+                    return Err(format!("var[{i}] {} vs {}", var[i], want));
+                }
+            }
+            Ok(())
+        },
+    );
+}

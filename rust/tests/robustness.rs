@@ -1,0 +1,147 @@
+//! Failure-injection and edge-case robustness tests.
+
+use vifgp::iterative::{pcg, IdentityPrecond, LinOp};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::linalg::{CholeskyFactor, Mat};
+use vifgp::rng::Rng;
+use vifgp::testing::random_points;
+use vifgp::vecchia::neighbors::{self, NeighborSelection};
+use vifgp::vif::laplace::{find_mode, SolveMode};
+use vifgp::vif::{select_neighbors, VifStructure};
+
+#[test]
+fn cg_reports_non_convergence_gracefully() {
+    struct Ill(Mat);
+    impl LinOp for Ill {
+        fn n(&self) -> usize {
+            self.0.rows()
+        }
+        fn apply(&self, v: &[f64]) -> Vec<f64> {
+            self.0.matvec(v)
+        }
+    }
+    let n = 50;
+    // condition number ~1e8
+    let a = Mat::from_fn(n, n, |i, j| {
+        if i == j {
+            1e-4 + (i as f64 / n as f64).powi(4) * 1e4
+        } else {
+            0.0
+        }
+    });
+    let b = vec![1.0; n];
+    let res = pcg(&Ill(a), &IdentityPrecond(n), &b, 1e-12, 3, false);
+    assert!(!res.converged);
+    assert_eq!(res.iters, 3);
+    assert!(res.x.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn cholesky_error_reports_pivot() {
+    let a = Mat::from_vec(3, 3, vec![1.0, 0.0, 0.0, 0.0, -2.0, 0.0, 0.0, 0.0, 1.0]);
+    let err = CholeskyFactor::new(&a).unwrap_err();
+    assert_eq!(err.pivot, 1);
+    assert!(err.to_string().contains("positive definite"));
+}
+
+#[test]
+fn covertree_tolerates_duplicate_points() {
+    // Several exactly coincident points → zero correlation distances.
+    let n = 60;
+    let mut data = Vec::new();
+    for i in 0..n {
+        let base = (i % 10) as f64 / 10.0;
+        data.push(base);
+        data.push(base * 0.5);
+    }
+    let x = Mat::from_vec(n, 2, data);
+    let kernel = ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::ThreeHalves);
+    let nb = select_neighbors(
+        &x,
+        &kernel,
+        None,
+        5,
+        NeighborSelection::CorrelationCoverTree,
+    );
+    assert_eq!(nb.len(), n);
+    for (i, set) in nb.iter().enumerate() {
+        assert!(set.len() <= 5.max(i));
+        assert!(set.iter().all(|&j| (j as usize) < i || i == 0));
+    }
+}
+
+#[test]
+fn mode_finding_survives_degenerate_labels() {
+    // All-positive labels: the mode drifts upward but must remain finite
+    // and the Newton loop must terminate.
+    let mut rng = Rng::seed_from(2);
+    let n = 60;
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::ThreeHalves);
+    let nb = select_neighbors(&x, &kernel, None, 4, NeighborSelection::EuclideanTransformed);
+    let s = VifStructure::assemble(&x, &kernel, None, nb, 0.0, 1e-10, 0);
+    let y = vec![1.0; n];
+    let state = find_mode(
+        &s,
+        &x,
+        &kernel,
+        &Likelihood::BernoulliLogit,
+        &y,
+        &SolveMode::Cholesky,
+        None,
+    );
+    assert!(state.b.iter().all(|b| b.is_finite()));
+    assert!(state.b.iter().all(|&b| b > 0.0)); // pushed toward +
+    assert!(state.newton_iters <= 100);
+}
+
+#[test]
+fn empty_and_tiny_neighbor_sets_work() {
+    let mut rng = Rng::seed_from(3);
+    let x = random_points(&mut rng, 5, 2);
+    let kernel = ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::Gaussian);
+    // n smaller than m_v
+    let nb = neighbors::prefix_neighbors(5, 30);
+    let s = VifStructure::assemble(&x, &kernel, None, nb, 0.1, 1e-10, 0);
+    let v = vec![1.0; 5];
+    assert!(s.apply_sigma_dagger_inv(&v).iter().all(|x| x.is_finite()));
+    // single point
+    let x1 = random_points(&mut rng, 1, 2);
+    let s1 = VifStructure::assemble(&x1, &kernel, None, vec![vec![]], 0.1, 1e-10, 0);
+    assert!((s1.logdet() - (1.1f64).ln()).abs() < 1e-10);
+}
+
+#[test]
+fn huge_and_tiny_length_scales_stay_finite() {
+    let mut rng = Rng::seed_from(5);
+    let x = random_points(&mut rng, 40, 2);
+    for ls in [1e-4, 1e4] {
+        let kernel = ArdMatern::new(1.0, vec![ls; 2], Smoothness::ThreeHalves);
+        let nb = select_neighbors(&x, &kernel, None, 4, NeighborSelection::EuclideanTransformed);
+        let s = VifStructure::assemble(&x, &kernel, None, nb, 0.01, 1e-10, 1);
+        let y: Vec<f64> = (0..40).map(|i| (i as f64).sin()).collect();
+        let v = vifgp::vif::gaussian::nll(&s, &y);
+        assert!(v.is_finite(), "ls={ls} nll={v}");
+        let (_, g) = vifgp::vif::gaussian::nll_and_grad(&s, &x, &kernel, &y);
+        assert!(g.iter().all(|x| x.is_finite()), "ls={ls} grad={g:?}");
+    }
+}
+
+#[test]
+fn csv_loader_rejects_garbage() {
+    let dir = std::env::temp_dir();
+    let p = dir.join("vifgp_bad.csv");
+    std::fs::write(&p, "1,2,3\n4,not_a_number,6\n").unwrap();
+    assert!(vifgp::data::load_csv(&p).is_err());
+    std::fs::write(&p, "1,2,3\n1,2\n").unwrap();
+    assert!(vifgp::data::load_csv(&p).is_err()); // ragged
+    std::fs::write(&p, "").unwrap();
+    assert!(vifgp::data::load_csv(&p).is_err());
+    // header tolerated
+    std::fs::write(&p, "x1,x2,y\n0.1,0.2,1.0\n0.3,0.4,2.0\n").unwrap();
+    let (x, y) = vifgp::data::load_csv(&p).unwrap();
+    assert_eq!((x.rows(), x.cols()), (2, 2));
+    assert_eq!(y, vec![1.0, 2.0]);
+    let _ = std::fs::remove_file(&p);
+}
