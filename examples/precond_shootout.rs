@@ -62,6 +62,7 @@ fn main() {
                 cg_tol: 1e-2,
                 max_cg: 400,
                 fitc_k: 100,
+                slq_min_iter: 25,
                 seed: 9,
             };
             let t0 = Instant::now();

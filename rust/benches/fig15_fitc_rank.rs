@@ -46,6 +46,7 @@ fn main() {
                 cg_tol: 1e-2,
                 max_cg: 400,
                 fitc_k: k,
+                slq_min_iter: 25,
                 seed: 9,
             };
             let ((got, _), dt) = common::timed(|| {

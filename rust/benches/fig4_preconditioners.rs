@@ -67,6 +67,7 @@ fn main() {
                         cg_tol: 1e-2,
                         max_cg: 400,
                         fitc_k: 64,
+                        slq_min_iter: 25,
                         seed: 100 + rep,
                     };
                     let ((got, _), dt) = common::timed(|| {

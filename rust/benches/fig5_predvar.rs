@@ -60,6 +60,7 @@ fn main() {
                     cg_tol: 1e-2,
                     max_cg: 300,
                     fitc_k: m,
+                    slq_min_iter: 25,
                     seed: 7,
                 };
                 let (got, dt) = common::timed(|| {

@@ -103,6 +103,7 @@ fn run_row(label: &str, n: usize, m: usize, m_v: usize) {
             cg_tol: 1e-2,
             max_cg: 300,
             fitc_k: m.max(8),
+            slq_min_iter: 25,
             seed: 5,
         };
         let mut rng = Rng::seed_from(11);

@@ -8,11 +8,39 @@
 mod common;
 
 use vifgp::data;
+use vifgp::iterative::{
+    pcg_with_min, slq_logdet, FitcPrecond, LinOp, Preconditioner, VifduPrecond,
+};
 use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::linalg::dot;
 use vifgp::rng::Rng;
 use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{OpWPlusPrec, OpWinvPlusCov};
 use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifStructure, VifResidualOracle};
 use vifgp::vecchia::ResidualFactor;
+
+/// The seed's per-probe SLQ loop (one sequential `pcg_with_min` per
+/// probe), kept as the baseline the batched engine is measured against.
+fn slq_sequential(
+    op: &dyn LinOp,
+    pre: &dyn Preconditioner,
+    ell: usize,
+    rng: &mut Rng,
+    cg_tol: f64,
+    max_cg: usize,
+) -> f64 {
+    let mut acc = 0.0;
+    for _ in 0..ell {
+        let z = pre.sample(rng);
+        let pinv_z = pre.solve(&z);
+        let norm2 = dot(&z, &pinv_z);
+        let min_iter = 25.min(op.n());
+        let res = pcg_with_min(op, pre, &z, cg_tol, min_iter, max_cg, true);
+        let t = res.tridiag.expect("tridiag requested");
+        acc += norm2 * t.quadrature(|lam| lam.max(1e-300).ln());
+    }
+    acc / ell as f64 + pre.logdet()
+}
 
 fn main() {
     common::header("§Perf: hot-path stage timings");
@@ -82,4 +110,45 @@ fn main() {
     // 7. gradient evaluation (the optimizer hot path)
     let (_, t_grad) = common::timed(|| gaussian::nll_and_grad(&s, &x, &kernel, &y));
     println!("gaussian::nll_and_grad:          {t_grad:.3}s");
+
+    // 8. SLQ log-determinant: batched multi-probe engine vs the seed's
+    // sequential per-probe loop, on the same probe seeds (ℓ = 20).
+    let ell = 20usize;
+    let wvec: Vec<f64> = (0..n)
+        .map(|i| 0.2 + 0.05 * ((i as f64 * 0.13).sin().abs()))
+        .collect();
+    {
+        let op = OpWPlusPrec { s: &s, w: &wvec };
+        let pre = VifduPrecond::new(&s, &wvec);
+        let (ld_seq, t_seq) = common::timed(|| {
+            let mut r = Rng::seed_from(42);
+            slq_sequential(&op, &pre, ell, &mut r, 1e-2, 200)
+        });
+        let (run, t_bat) = common::timed(|| {
+            let mut r = Rng::seed_from(42);
+            slq_logdet(&op, &pre, ell, &mut r, 1e-2, 200)
+        });
+        println!(
+            "SLQ logdet VIFDU (l={ell}): seq {t_seq:.3}s ({ld_seq:.1})  batched {t_bat:.3}s ({:.1})  speedup {:.2}x",
+            run.logdet,
+            t_seq / t_bat.max(1e-9)
+        );
+    }
+    {
+        let op = OpWinvPlusCov { s: &s, w: &wvec };
+        let pre = FitcPrecond::new(&x, &kernel, m, &wvec, 7);
+        let (ld_seq, t_seq) = common::timed(|| {
+            let mut r = Rng::seed_from(42);
+            slq_sequential(&op, &pre, ell, &mut r, 1e-2, 200)
+        });
+        let (run, t_bat) = common::timed(|| {
+            let mut r = Rng::seed_from(42);
+            slq_logdet(&op, &pre, ell, &mut r, 1e-2, 200)
+        });
+        println!(
+            "SLQ logdet FITC  (l={ell}): seq {t_seq:.3}s ({ld_seq:.1})  batched {t_bat:.3}s ({:.1})  speedup {:.2}x",
+            run.logdet,
+            t_seq / t_bat.max(1e-9)
+        );
+    }
 }

@@ -37,45 +37,52 @@ fn main() {
     let (reference, _) = nll(&s, &w.xtr, &w.kernel, &lik, &w.ytr, &SolveMode::Cholesky, &mut rng);
     println!("Cholesky reference L = {reference:.4}");
     println!(
-        "{:<8} {:<10} {:>6} {:>14} {:>10}",
-        "precond", "delta", "ell", "RMSE(loglik)", "time(s)"
+        "{:<8} {:<10} {:>6} {:>9} {:>14} {:>10}",
+        "precond", "delta", "ell", "min_iter", "RMSE(loglik)", "time(s)"
     );
     for precond in [PrecondType::Fitc, PrecondType::Vifdu] {
         for delta in [1.0f64, 0.1, 0.01, 0.001] {
             for ell in [10usize, 50] {
-                let mut sq = 0.0;
-                let mut secs = 0.0;
-                for rep in 0..reps {
-                    let cfg = IterConfig {
-                        precond,
+                // Sweep the Lanczos-degree floor: a loose δ with a small
+                // floor biases the log quadrature (EXPERIMENTS.md §Fig 4
+                // note); the default 25 removes that bias.
+                for min_iter in [5usize, 25] {
+                    let mut sq = 0.0;
+                    let mut secs = 0.0;
+                    for rep in 0..reps {
+                        let cfg = IterConfig {
+                            precond,
+                            ell,
+                            cg_tol: delta,
+                            max_cg: 500,
+                            fitc_k: m,
+                            slq_min_iter: min_iter,
+                            seed: 500 + rep,
+                        };
+                        let ((got, _), dt) = common::timed(|| {
+                            nll(
+                                &s,
+                                &w.xtr,
+                                &w.kernel,
+                                &lik,
+                                &w.ytr,
+                                &SolveMode::Iterative(cfg),
+                                &mut rng,
+                            )
+                        });
+                        sq += (got - reference) * (got - reference);
+                        secs += dt;
+                    }
+                    println!(
+                        "{:<8} {:<10} {:>6} {:>9} {:>14.4} {:>10.2}",
+                        format!("{precond:?}"),
+                        delta,
                         ell,
-                        cg_tol: delta,
-                        max_cg: 500,
-                        fitc_k: m,
-                        seed: 500 + rep,
-                    };
-                    let ((got, _), dt) = common::timed(|| {
-                        nll(
-                            &s,
-                            &w.xtr,
-                            &w.kernel,
-                            &lik,
-                            &w.ytr,
-                            &SolveMode::Iterative(cfg),
-                            &mut rng,
-                        )
-                    });
-                    sq += (got - reference) * (got - reference);
-                    secs += dt;
+                        min_iter,
+                        (sq / reps as f64).sqrt(),
+                        secs / reps as f64
+                    );
                 }
-                println!(
-                    "{:<8} {:<10} {:>6} {:>14.4} {:>10.2}",
-                    format!("{precond:?}"),
-                    delta,
-                    ell,
-                    (sq / reps as f64).sqrt(),
-                    secs / reps as f64
-                );
             }
         }
     }

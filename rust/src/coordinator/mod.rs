@@ -15,10 +15,11 @@
 mod pool;
 mod table;
 
-pub use pool::ThreadPool;
+pub use pool::{in_pool_worker, ThreadPool};
 pub use table::ResultsTable;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Number of worker threads to use (`VIFGP_THREADS` overrides the
 /// detected parallelism).
@@ -31,6 +32,31 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// The process-wide worker pool used by the batched iterative solvers
+/// (column blocks, probe fan-out). Lazily created with [`num_threads`]
+/// workers and kept alive for the process lifetime, so per-call thread
+/// spawning is amortized across the many small dispatches a blocked CG
+/// iteration makes.
+pub fn global_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(num_threads()))
+}
+
+/// Parallel map for *small counts of heavy items* (grain = 1): dispatches
+/// each item to the global pool even when `n` is far below the
+/// [`parallel_for_chunks`] threshold. Runs inline when parallelism is
+/// unavailable or the caller is already on a pool worker.
+pub fn parallel_map_heavy<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    if n <= 1 || num_threads() <= 1 || in_pool_worker() {
+        return (0..n).map(&f).collect();
+    }
+    let fref = &f;
+    let jobs: Vec<Box<dyn FnOnce() -> T + Send + '_>> = (0..n)
+        .map(|i| Box::new(move || fref(i)) as Box<dyn FnOnce() -> T + Send + '_>)
+        .collect();
+    global_pool().run_scoped(jobs)
 }
 
 /// Run `f(start, end)` over disjoint chunks of `0..n` on the worker

@@ -1,16 +1,31 @@
 //! A minimal long-lived thread pool for heterogeneous jobs
-//! (cross-validation folds, sweep points). Jobs are boxed closures; the
-//! pool is dropped by joining all workers after the queue closes.
+//! (cross-validation folds, sweep points, batched-solver column blocks).
+//! Jobs are boxed closures; the pool is dropped by joining all workers
+//! after the queue closes.
 
+use std::cell::Cell;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Fixed-size worker pool with a shared FIFO queue.
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Whether the current thread is one of a [`ThreadPool`]'s workers.
+/// Scoped batch submitters consult this to run nested work inline instead
+/// of re-entering the queue (which could deadlock a saturated pool).
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// Fixed-size worker pool with a shared FIFO queue. The sender side is
+/// mutex-wrapped so a pool can live in a `static` and be used from many
+/// threads at once.
 pub struct ThreadPool {
-    sender: Option<mpsc::Sender<Job>>,
+    sender: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -23,19 +38,22 @@ impl ThreadPool {
         let workers = (0..size)
             .map(|_| {
                 let rx = Arc::clone(&receiver);
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break, // channel closed
+                std::thread::spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
                     }
                 })
             })
             .collect();
-        ThreadPool { sender: Some(sender), workers }
+        ThreadPool { sender: Some(Mutex::new(sender)), workers }
     }
 
     /// Submit a job.
@@ -43,6 +61,8 @@ impl ThreadPool {
         self.sender
             .as_ref()
             .expect("pool closed")
+            .lock()
+            .unwrap()
             .send(Box::new(job))
             .expect("worker hung up");
     }
@@ -67,6 +87,53 @@ impl ThreadPool {
             slots[i] = Some(out);
         }
         slots.into_iter().map(|s| s.expect("job lost")).collect()
+    }
+
+    /// Run a batch of *borrowing* jobs to completion, returning outputs in
+    /// order. Unlike [`run_batch`](Self::run_batch), the jobs may borrow
+    /// from the caller's stack: this call blocks until every job has
+    /// finished (panics included), so no borrow escapes.
+    ///
+    /// Called from inside a pool worker, the jobs run inline on the
+    /// current thread — a saturated pool waiting on its own queue would
+    /// otherwise deadlock.
+    pub fn run_scoped<'env, T: Send + 'env>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<T> {
+        use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+        if in_pool_worker() {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let njobs = jobs.len();
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
+                let _ = tx.send((i, out));
+            });
+            // SAFETY: the receive loop below blocks until every submitted
+            // job has sent its result — catch_unwind guarantees a send even
+            // on panic — so no job (or its borrows) outlives this call.
+            let wrapped: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(wrapped) };
+            self.execute(wrapped);
+        }
+        drop(tx);
+        let mut slots: Vec<Option<std::thread::Result<T>>> = (0..njobs).map(|_| None).collect();
+        for _ in 0..njobs {
+            let (i, out) = rx.recv().expect("pool worker lost");
+            slots[i] = Some(out);
+        }
+        let mut out = Vec::with_capacity(njobs);
+        for slot in slots {
+            match slot.expect("job result missing") {
+                Ok(v) => out.push(v),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        out
     }
 }
 
@@ -105,5 +172,37 @@ mod tests {
             (0..20usize).map(|i| Box::new(move || i * 7) as _).collect();
         let out = pool.run_batch(jobs);
         assert_eq!(out, (0..20).map(|i| i * 7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_scoped_borrows_from_stack() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<usize> = (0..50).collect();
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send + '_>> = data
+            .iter()
+            .map(|v| Box::new(move || v * 3) as Box<dyn FnOnce() -> usize + Send + '_>)
+            .collect();
+        let out = pool.run_scoped(jobs);
+        assert_eq!(out, (0..50).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_scoped_nested_runs_inline() {
+        // A scoped batch submitted from inside a worker must not deadlock.
+        let outer = ThreadPool::new(1);
+        let inner = Arc::new(ThreadPool::new(1));
+        let i2 = Arc::clone(&inner);
+        let (tx, rx) = mpsc::channel();
+        outer.execute(move || {
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+                (0..4usize).map(|i| Box::new(move || i + 1) as _).collect();
+            let out = i2.run_scoped(jobs);
+            let _ = tx.send(out.iter().sum::<usize>());
+        });
+        assert_eq!(rx.recv().unwrap(), 10);
+        // Join the outer worker first so `inner`'s last Arc drops on this
+        // thread (a pool must never be dropped from its own worker).
+        drop(outer);
+        drop(inner);
     }
 }

@@ -6,13 +6,21 @@
 //! `P^{-1/2} b / ‖·‖`, so SLQ log-determinants come for free from the
 //! same solves (paper §4.1).
 
-use crate::linalg::{dot, SymTridiag};
+use crate::linalg::{dot, Mat, SymTridiag};
 use crate::rng::Rng;
 
 /// A symmetric positive definite linear operator.
 pub trait LinOp: Sync {
     fn n(&self) -> usize;
     fn apply(&self, v: &[f64]) -> Vec<f64>;
+
+    /// `A V` for a column-blocked RHS matrix `V` (n×k, one system per
+    /// column). The default maps [`apply`](Self::apply) over the columns
+    /// through the shared worker pool; structured operators override this
+    /// with fused blocked applications (see `iterative::batch`).
+    fn apply_batch(&self, v: &Mat) -> Mat {
+        super::batch::map_columns(v, |col| self.apply(col))
+    }
 }
 
 /// A symmetric positive definite preconditioner `P`.
@@ -24,6 +32,14 @@ pub trait Preconditioner: Sync {
     fn sample(&self, rng: &mut Rng) -> Vec<f64>;
     /// `log det P`.
     fn logdet(&self) -> f64;
+
+    /// `P⁻¹ V` for a column-blocked RHS matrix `V` (n×k). The default
+    /// maps [`solve`](Self::solve) over the columns through the shared
+    /// worker pool; the structured preconditioners override this so their
+    /// m×m Cholesky cores are applied to all columns at once.
+    fn solve_batch(&self, v: &Mat) -> Mat {
+        super::batch::map_columns(v, |col| self.solve(col))
+    }
 }
 
 /// Identity preconditioner (plain CG).
@@ -118,27 +134,38 @@ pub fn pcg_with_min(
         }
     }
 
-    let tridiag = if want_tridiag && !alphas.is_empty() {
-        // T_kk = 1/α_k + β_{k-1}/α_{k-1};  T_{k,k+1} = sqrt(β_k)/α_k.
-        let k = alphas.len();
-        let mut d = Vec::with_capacity(k);
-        let mut e = Vec::with_capacity(k.saturating_sub(1));
-        for i in 0..k {
-            let mut di = 1.0 / alphas[i];
-            if i > 0 {
-                di += betas[i - 1] / alphas[i - 1];
-            }
-            d.push(di);
-            if i + 1 < k {
-                e.push(betas[i].max(0.0).sqrt() / alphas[i]);
-            }
-        }
-        Some(SymTridiag::new(d, e))
+    let tridiag = if want_tridiag {
+        lanczos_tridiag_from_cg(&alphas, &betas)
     } else {
         None
     };
 
     CgResult { x, iters, converged, tridiag }
+}
+
+/// Reconstruct the Lanczos tridiagonal of the preconditioned operator
+/// from CG step sizes and direction coefficients:
+/// `T_kk = 1/α_k + β_{k-1}/α_{k-1}`, `T_{k,k+1} = sqrt(β_k)/α_k`.
+/// Returns `None` when no iteration completed. Shared by the scalar and
+/// batched PCG paths so their SLQ semantics are identical.
+pub(crate) fn lanczos_tridiag_from_cg(alphas: &[f64], betas: &[f64]) -> Option<SymTridiag> {
+    if alphas.is_empty() {
+        return None;
+    }
+    let k = alphas.len();
+    let mut d = Vec::with_capacity(k);
+    let mut e = Vec::with_capacity(k.saturating_sub(1));
+    for i in 0..k {
+        let mut di = 1.0 / alphas[i];
+        if i > 0 {
+            di += betas[i - 1] / alphas[i - 1];
+        }
+        d.push(di);
+        if i + 1 < k {
+            e.push(betas[i].max(0.0).sqrt() / alphas[i]);
+        }
+    }
+    Some(SymTridiag::new(d, e))
 }
 
 #[cfg(test)]

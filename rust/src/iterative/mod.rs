@@ -3,16 +3,48 @@
 //! stochastic Lanczos quadrature for log-determinants, stochastic trace
 //! estimation for gradients, the VIFDU and FITC preconditioners, and the
 //! simulation-based predictive-variance estimators (Algorithms 1–2).
+//!
+//! # Batch API
+//!
+//! Everything that fans a shared operator out over many right-hand sides
+//! — the ℓ SLQ probes of [`slq_logdet`], the SBPV/SPV variance probes,
+//! and the fused gradient/trace solves of the likelihood drivers — goes
+//! through the batched engine in [`mod@batch`]:
+//!
+//! * [`LinOp::apply_batch`] / [`Preconditioner::solve_batch`] take a
+//!   column-blocked `Mat` (n×k, one system per column). Defaults map the
+//!   scalar `apply`/`solve` over columns; the VIF operators and both
+//!   preconditioners override them with fused blocked applications whose
+//!   m×m Cholesky cores hit all columns in one `solve_mat`/`matmul`.
+//! * [`pcg_batch`] / [`pcg_batch_with_min`] run k CG recurrences in
+//!   lockstep with per-column stopping and per-column Lanczos
+//!   tridiagonals — semantics identical to k sequential [`pcg`] solves.
+//!
+//! **When to use which parallelism:** *column blocking* amortizes one
+//! operator traversal across the k systems of a single batch (SIMD-wide
+//! inner loops, shared m×m factorizations) and is always on inside
+//! [`pcg_batch`]. *Probe-level threading* splits a column block into
+//! per-worker chunks on the process-wide
+//! [`ThreadPool`](crate::coordinator::ThreadPool); it applies whenever
+//! chunks are independent — which every multi-RHS solve here is — and
+//! composes with column blocking (chunks are themselves column blocks).
+//! Independent *batches* (different `W`, different operators) can
+//! additionally be fanned out on the same pool by the caller.
 
+pub mod batch;
 mod cg;
 mod precond;
 mod pred_var;
 pub mod slq;
 
+pub use batch::{
+    apply_chunked, map_columns, pcg_batch, pcg_batch_with_min, solve_chunked, BatchCgResult,
+    BatchColumnResult,
+};
 pub use cg::{pcg, pcg_with_min, CgResult, IdentityPrecond, LinOp, Preconditioner};
 pub use precond::{FitcPrecond, PrecondType, VifduPrecond};
 pub use pred_var::{sbpv_diag, spv_diag};
-pub use slq::{slq_logdet, SlqProbe, SlqRun};
+pub use slq::{slq_logdet, slq_logdet_opts, SlqOptions, SlqProbe, SlqRun};
 
 /// Configuration of the iterative solvers (paper defaults: δ = 0.01,
 /// ℓ = 50 SLQ probes, FITC preconditioner with k = 200).
@@ -27,6 +59,9 @@ pub struct IterConfig {
     pub max_cg: usize,
     /// FITC-preconditioner rank k.
     pub fitc_k: usize,
+    /// Minimum CG iterations per SLQ probe (Lanczos degree floor; see
+    /// [`SlqOptions::min_iter`]).
+    pub slq_min_iter: usize,
     pub seed: u64,
 }
 
@@ -38,7 +73,15 @@ impl Default for IterConfig {
             cg_tol: 1e-2,
             max_cg: 1000,
             fitc_k: 200,
+            slq_min_iter: 25,
             seed: 1234,
         }
+    }
+}
+
+impl IterConfig {
+    /// The [`SlqOptions`] this configuration implies.
+    pub fn slq_options(&self) -> SlqOptions {
+        SlqOptions { min_iter: self.slq_min_iter, ..SlqOptions::default() }
     }
 }

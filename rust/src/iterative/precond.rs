@@ -20,10 +20,16 @@ pub enum PrecondType {
 }
 
 impl PrecondType {
+    /// Accepted spellings for [`parse`](Self::parse), for error messages.
+    pub const VALID_NAMES: &'static [&'static str] = &["vifdu", "fitc", "none"];
+
+    /// Parse a preconditioner name, case-insensitively (`"Fitc"`,
+    /// `"VIFDU"`, ... all work). Returns `None` for unknown names; the
+    /// consumer should list [`Self::VALID_NAMES`] in its error.
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "vifdu" | "VIFDU" => Some(PrecondType::Vifdu),
-            "fitc" | "FITC" => Some(PrecondType::Fitc),
+        match s.to_ascii_lowercase().as_str() {
+            "vifdu" => Some(PrecondType::Vifdu),
+            "fitc" => Some(PrecondType::Fitc),
             "none" => Some(PrecondType::None),
             _ => None,
         }
@@ -53,15 +59,14 @@ impl<'a> VifduPrecond<'a> {
             .zip(&s.resid.d)
             .map(|(wi, di)| 1.0 / (wi + 1.0 / di))
             .collect();
-        let chol_m3 = s.chol_mcal.as_ref().map(|cm| {
-            // M₃ = M − hᵀ diag((W+D⁻¹)⁻¹) h,  h = D⁻¹BΣ_mnᵀ (structure.h)
-            let m = s.m();
-            let mut m3 = cm.l().matmul_nt(cm.l()); // reconstruct M
+        let chol_m3 = s.mcal.as_ref().map(|mcal| {
+            // M₃ = M − hᵀ diag((W+D⁻¹)⁻¹) h,  h = D⁻¹BΣ_mnᵀ (structure.h).
+            // M is kept by the structure, so no O(m³) L·Lᵀ reconstruction.
+            let mut m3 = mcal.clone();
             let mut hw = s.h.clone();
             hw.scale_rows(&wd_inv);
             let corr = s.h.matmul_tn(&hw);
             m3.sub_assign(&corr);
-            let _ = m;
             CholeskyFactor::new_with_jitter(&m3, 1e-10).expect("M3 not PD")
         });
         VifduPrecond { s, w: w.to_vec(), wd_inv, chol_m3 }
@@ -113,6 +118,26 @@ impl<'a> Preconditioner for VifduPrecond<'a> {
             ld += m3.logdet() - cm.logdet();
         }
         ld
+    }
+
+    fn solve_batch(&self, v: &Mat) -> Mat {
+        // Column-blocked P̂⁻¹V: one sparse Bᵀ/B sweep over all columns and
+        // the m×m core applied to the whole block in one solve_mat.
+        let n = self.n();
+        let mut t1 = self.s.resid.solve_bt_mat(v);
+        t1.scale_rows(&self.wd_inv);
+        if let Some(chol_m3) = &self.chol_m3 {
+            let t2 = self.s.h.matmul_tn(&t1); // m×k
+            let t3 = chol_m3.solve_mat(&t2); // m×k
+            let t4 = self.s.h.matmul(&t3); // n×k
+            for i in 0..n {
+                let wdi = self.wd_inv[i];
+                for (t1i, t4i) in t1.row_mut(i).iter_mut().zip(t4.row(i)) {
+                    *t1i += wdi * t4i;
+                }
+            }
+        }
+        self.s.resid.solve_b_mat(&t1)
     }
 }
 
@@ -212,6 +237,29 @@ impl Preconditioner for FitcPrecond {
     fn logdet(&self) -> f64 {
         self.dv.iter().map(|d| d.ln()).sum::<f64>() - self.chol_k.logdet()
             + self.chol_mv.logdet()
+    }
+
+    fn solve_batch(&self, v: &Mat) -> Mat {
+        // Column-blocked P̂⁻¹V with the k×k core M_V factor applied to all
+        // columns in one solve_mat.
+        let n = self.n();
+        let mut t = v.clone();
+        for i in 0..n {
+            let di = self.dv[i];
+            for x in t.row_mut(i) {
+                *x /= di;
+            }
+        }
+        let u = self.sigma_nk.matmul_tn(&t); // k_ind × k
+        let s = self.chol_mv.solve_mat(&u);
+        let c = self.sigma_nk.matmul(&s); // n × k
+        for i in 0..n {
+            let di = self.dv[i];
+            for (ti, ci) in t.row_mut(i).iter_mut().zip(c.row(i)) {
+                *ti -= ci / di;
+            }
+        }
+        t
     }
 }
 
@@ -331,6 +379,50 @@ mod tests {
         assert!(got.max_abs_diff(&want) < 1e-5, "diff {}", got.max_abs_diff(&want));
         let chol = CholeskyFactor::new(&want).unwrap();
         assert!((p.logdet() - chol.logdet()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(PrecondType::parse("Fitc"), Some(PrecondType::Fitc));
+        assert_eq!(PrecondType::parse("VIFDU"), Some(PrecondType::Vifdu));
+        assert_eq!(PrecondType::parse("NONE"), Some(PrecondType::None));
+        assert_eq!(PrecondType::parse("cholesky"), None);
+        assert!(PrecondType::VALID_NAMES.contains(&"fitc"));
+    }
+
+    #[test]
+    fn solve_batch_matches_columnwise_solve() {
+        let (x, kernel, s, w) = setup(25);
+        let n = 25;
+        let v = Mat::from_fn(n, 6, |i, j| ((i * 5 + j * 17) as f64 * 0.13).sin());
+        let vifdu = VifduPrecond::new(&s, &w);
+        let got = vifdu.solve_batch(&v);
+        for j in 0..6 {
+            let want = vifdu.solve(&v.col(j));
+            for i in 0..n {
+                assert!(
+                    (got.get(i, j) - want[i]).abs() < 1e-11,
+                    "vifdu col {j} row {i}: {} vs {}",
+                    got.get(i, j),
+                    want[i]
+                );
+            }
+        }
+        let mut rng = Rng::seed_from(12);
+        let z = select_inducing(&x, &kernel, 5, 2, &mut rng, None).unwrap();
+        let fitc = FitcPrecond::with_inducing(&x, &kernel, z, &w);
+        let got = fitc.solve_batch(&v);
+        for j in 0..6 {
+            let want = fitc.solve(&v.col(j));
+            for i in 0..n {
+                assert!(
+                    (got.get(i, j) - want[i]).abs() < 1e-11,
+                    "fitc col {j} row {i}: {} vs {}",
+                    got.get(i, j),
+                    want[i]
+                );
+            }
+        }
     }
 
     #[test]

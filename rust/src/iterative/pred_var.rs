@@ -2,8 +2,18 @@
 //! Algorithm 1 (SBPV) and Algorithm 2 (SPV). Both estimate the diagonal
 //! of the stochastic correction term (21); the deterministic part (20)
 //! is computed in closed form by the prediction code.
+//!
+//! The ℓ probe systems share one operator, so both estimators consume
+//! *batched* solve/apply closures over column-blocked `Mat` operands and
+//! route them through the batched PCG engine (`iterative::batch`); probe
+//! draws stay sequential on the caller's RNG so probe streams match the
+//! scalar implementations.
 
+use crate::linalg::Mat;
 use crate::rng::Rng;
+
+/// Column-block width for the probe batches (bounds working-set memory).
+const PROBE_BLOCK: usize = 64;
 
 /// Algorithm 1 (SBPV): the correction matrix is `Q A⁻¹ Qᵀ` with
 /// `A = Σ_†⁻¹ + W`; sampling `z₆ ~ N(0, A)` gives
@@ -11,26 +21,35 @@ use crate::rng::Rng;
 /// unbiased, consistent estimator of its diagonal (Proposition 4.1).
 ///
 /// * `sample_z6` draws one `z₆ ~ N(0, Σ_†⁻¹ + W)` (lines 3–6),
-/// * `solve` computes `A⁻¹ z₆` (line 7, preconditioned CG),
+/// * `solve_batch` computes `A⁻¹ Z₆` for a column block (line 7,
+///   batched preconditioned CG),
 /// * `project` applies `Q = (Σ_mn_pᵀΣ_m⁻¹Σ_mn − B_p⁻¹B_po S⁻¹) Σ_†⁻¹`
-///   (line 8), returning an `n_p` vector.
+///   (line 8) to one solved column, returning an `n_p` vector.
 pub fn sbpv_diag(
     ell: usize,
     n_p: usize,
     rng: &mut Rng,
     mut sample_z6: impl FnMut(&mut Rng) -> Vec<f64>,
-    solve: impl Fn(&[f64]) -> Vec<f64>,
-    project: impl Fn(&[f64]) -> Vec<f64>,
+    solve_batch: impl Fn(&Mat) -> Mat,
+    project: impl Fn(&[f64]) -> Vec<f64> + Sync,
 ) -> Vec<f64> {
     let mut acc = vec![0.0; n_p];
-    for _ in 0..ell {
-        let z6 = sample_z6(rng);
-        let z7 = solve(&z6);
-        let z8 = project(&z7);
-        debug_assert_eq!(z8.len(), n_p);
-        for (a, z) in acc.iter_mut().zip(&z8) {
-            *a += z * z;
+    let mut done = 0;
+    while done < ell {
+        let width = (ell - done).min(PROBE_BLOCK);
+        let z6: Vec<Vec<f64>> = (0..width).map(|_| sample_z6(rng)).collect();
+        let n = z6[0].len();
+        let zmat = Mat::from_fn(n, width, |i, j| z6[j][i]);
+        let z7 = solve_batch(&zmat);
+        let z8s: Vec<Vec<f64>> =
+            crate::coordinator::parallel_map_heavy(width, |j| project(&z7.col(j)));
+        for z8 in &z8s {
+            debug_assert_eq!(z8.len(), n_p);
+            for (a, z) in acc.iter_mut().zip(z8) {
+                *a += z * z;
+            }
         }
+        done += width;
     }
     for a in acc.iter_mut() {
         *a /= ell as f64;
@@ -40,21 +59,27 @@ pub fn sbpv_diag(
 
 /// Algorithm 2 (SPV): Bekas-style diagonal estimator
 /// `diag(C) ≈ (1/ℓ) Σ z ∘ (C z)` with Rademacher probes `z ∈ {±1}^{n_p}`
-/// (Proposition 4.2). `apply_c` applies the full correction matrix
-/// `Q A⁻¹ Qᵀ` to an `n_p` vector.
+/// (Proposition 4.2). `apply_c_batch` applies the full correction matrix
+/// `Q A⁻¹ Qᵀ` to a column block of `n_p` probes.
 pub fn spv_diag(
     ell: usize,
     n_p: usize,
     rng: &mut Rng,
-    apply_c: impl Fn(&[f64]) -> Vec<f64>,
+    apply_c_batch: impl Fn(&Mat) -> Mat,
 ) -> Vec<f64> {
     let mut acc = vec![0.0; n_p];
-    for _ in 0..ell {
-        let z = rng.rademacher_vec(n_p);
-        let cz = apply_c(&z);
-        for ((a, zi), ci) in acc.iter_mut().zip(&z).zip(&cz) {
-            *a += zi * ci;
+    let mut done = 0;
+    while done < ell {
+        let width = (ell - done).min(PROBE_BLOCK);
+        let zs: Vec<Vec<f64>> = (0..width).map(|_| rng.rademacher_vec(n_p)).collect();
+        let zmat = Mat::from_fn(n_p, width, |i, j| zs[j][i]);
+        let cz = apply_c_batch(&zmat);
+        for (j, z) in zs.iter().enumerate() {
+            for (i, zi) in z.iter().enumerate() {
+                acc[i] += zi * cz.get(i, j);
+            }
         }
+        done += width;
     }
     for a in acc.iter_mut() {
         *a /= ell as f64;
@@ -65,6 +90,7 @@ pub fn spv_diag(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::iterative::batch::map_columns;
     use crate::linalg::{CholeskyFactor, Mat};
 
     #[test]
@@ -75,7 +101,7 @@ mod tests {
         let mut c = g.matmul_nt(&g);
         c.add_diag(1.0);
         let mut rng = Rng::seed_from(5);
-        let est = spv_diag(4000, n, &mut rng, |z| c.matvec(z));
+        let est = spv_diag(4000, n, &mut rng, |z| c.matmul(z));
         for i in 0..n {
             assert!(
                 (est[i] - c.get(i, i)).abs() < 0.1 * c.get(i, i),
@@ -109,7 +135,7 @@ mod tests {
             n_p,
             &mut rng,
             |rng| chol.mul_lower(&rng.normal_vec(n)), // z ~ N(0, A)
-            |z| chol.solve(z),
+            |z| map_columns(z, |col| chol.solve(col)),
             |z| q.matvec(z),
         );
         for p in 0..n_p {

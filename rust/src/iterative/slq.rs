@@ -13,11 +13,36 @@
 //! `z_iᵀP⁻¹z_i`, which has the same cost and strictly lower variance.)
 //! The probes and their solves are retained so the stochastic trace
 //! estimation of the gradients (Appendix D) can reuse them.
+//!
+//! All ℓ probe systems share the operator and preconditioner, so they are
+//! solved in column blocks by [`pcg_batch_with_min`] (see
+//! `iterative::batch` for the parallelism model); per-probe quantities
+//! are identical to the sequential path on the same probe seeds.
 
-use crate::linalg::dot;
+use crate::linalg::{dot, Mat};
 use crate::rng::Rng;
 
-use super::cg::{pcg_with_min, LinOp, Preconditioner};
+use super::batch::pcg_batch_with_min;
+use super::cg::{LinOp, Preconditioner};
+
+/// Tuning knobs of the SLQ estimator beyond the CG tolerance.
+#[derive(Clone, Debug)]
+pub struct SlqOptions {
+    /// Minimum CG iterations per probe: the log quadrature needs enough
+    /// Lanczos degree even when the preconditioner is strong (a loose CG
+    /// tolerance otherwise biases Eq. 18/19 — see EXPERIMENTS.md §Fig 4
+    /// note). Clamped to `op.n()`. Paper-default 25.
+    pub min_iter: usize,
+    /// Column-block size for the batched solves (bounds the n×block
+    /// working-set memory). Paper runs use ℓ ≤ 50, i.e. one block.
+    pub block_size: usize,
+}
+
+impl Default for SlqOptions {
+    fn default() -> Self {
+        SlqOptions { min_iter: 25, block_size: 64 }
+    }
+}
 
 /// One retained SLQ probe.
 pub struct SlqProbe {
@@ -38,7 +63,8 @@ pub struct SlqRun {
     pub avg_iters: f64,
 }
 
-/// Estimate `log det A` with ℓ probes, retaining solves for STE reuse.
+/// Estimate `log det A` with ℓ probes and default [`SlqOptions`],
+/// retaining solves for STE reuse.
 pub fn slq_logdet(
     op: &dyn LinOp,
     pre: &dyn Preconditioner,
@@ -47,21 +73,47 @@ pub fn slq_logdet(
     cg_tol: f64,
     max_cg: usize,
 ) -> SlqRun {
+    slq_logdet_opts(op, pre, ell, rng, cg_tol, max_cg, &SlqOptions::default())
+}
+
+/// [`slq_logdet`] with explicit [`SlqOptions`] (min-iteration sweeps,
+/// block-size tuning).
+pub fn slq_logdet_opts(
+    op: &dyn LinOp,
+    pre: &dyn Preconditioner,
+    ell: usize,
+    rng: &mut Rng,
+    cg_tol: f64,
+    max_cg: usize,
+    opts: &SlqOptions,
+) -> SlqRun {
+    let n = op.n();
+    let min_iter = opts.min_iter.min(n);
+    let block = opts.block_size.max(1);
+    // Draw every probe up front: the solves consume no randomness, so the
+    // stream order matches the per-probe (sequential) draws exactly.
+    let mut zs: Vec<Vec<f64>> = (0..ell).map(|_| pre.sample(rng)).collect();
     let mut acc = 0.0;
     let mut probes = Vec::with_capacity(ell);
     let mut total_iters = 0usize;
-    for _ in 0..ell {
-        let z = pre.sample(rng);
-        let pinv_z = pre.solve(&z);
-        let norm2 = dot(&z, &pinv_z); // ‖P^{-1/2} z‖²
-        // Keep iterating past convergence: the log quadrature needs
-        // enough Lanczos degree even when the preconditioner is strong.
-        let min_iter = 25.min(op.n());
-        let res = pcg_with_min(op, pre, &z, cg_tol, min_iter, max_cg, true);
-        let t = res.tridiag.expect("tridiag requested");
-        acc += norm2 * t.quadrature(|lam| lam.max(1e-300).ln());
-        total_iters += res.iters;
-        probes.push(SlqProbe { z, pinv_z, ainv_z: res.x });
+    let mut start = 0;
+    while start < ell {
+        let end = (start + block).min(ell);
+        let width = end - start;
+        let zmat = Mat::from_fn(n, width, |i, j| zs[start + j][i]);
+        let pinv = pre.solve_batch(&zmat);
+        let res = pcg_batch_with_min(op, pre, &zmat, cg_tol, min_iter, max_cg, true);
+        for j in 0..width {
+            let z = std::mem::take(&mut zs[start + j]);
+            let pinv_z = pinv.col(j);
+            let norm2 = dot(&z, &pinv_z); // ‖P^{-1/2} z‖²
+            let col = &res.columns[j];
+            let t = col.tridiag.as_ref().expect("tridiag requested");
+            acc += norm2 * t.quadrature(|lam| lam.max(1e-300).ln());
+            total_iters += col.iters;
+            probes.push(SlqProbe { z, pinv_z, ainv_z: res.x.col(j) });
+        }
+        start = end;
     }
     SlqRun {
         logdet: acc / ell as f64 + pre.logdet(),
@@ -89,16 +141,18 @@ pub fn diag_inv_estimate(probes: &[SlqProbe]) -> Vec<f64> {
 
 /// Stochastic trace estimate `Tr(A⁻¹ G) ≈ (1/ℓ) Σ (A⁻¹z_i)ᵀ G (P⁻¹z_i)`
 /// from retained probes, where `apply_g` applies the (symmetric) G.
+/// The per-probe G applications are independent and fan out on the
+/// global worker pool.
 pub fn trace_estimate(
     probes: &[SlqProbe],
-    apply_g: impl Fn(&[f64]) -> Vec<f64>,
+    apply_g: impl Fn(&[f64]) -> Vec<f64> + Sync,
 ) -> f64 {
-    let mut acc = 0.0;
-    for p in probes {
+    let terms = crate::coordinator::parallel_map_heavy(probes.len(), |i| {
+        let p = &probes[i];
         let gz = apply_g(&p.pinv_z);
-        acc += dot(&p.ainv_z, &gz);
-    }
-    acc / probes.len() as f64
+        dot(&p.ainv_z, &gz)
+    });
+    terms.iter().sum::<f64>() / probes.len() as f64
 }
 
 #[cfg(test)]
@@ -137,6 +191,67 @@ mod tests {
             "slq {} vs exact {exact}",
             run.logdet
         );
+    }
+
+    #[test]
+    fn slq_matches_sequential_reference_on_same_probes() {
+        // Batched SLQ must reproduce the per-probe sequential path on the
+        // same probe stream.
+        let n = 40;
+        let a = spd(n);
+        let op = DenseOp(a);
+        let pre = IdentityPrecond(n);
+        let opts = SlqOptions { min_iter: 25, block_size: 7 }; // force multiple blocks
+        let mut rng = Rng::seed_from(11);
+        let run = slq_logdet_opts(&op, &pre, 20, &mut rng, 1e-10, 200, &opts);
+        // Sequential reference (the pre-batching implementation).
+        let mut rng = Rng::seed_from(11);
+        let mut acc = 0.0;
+        for i in 0..20 {
+            let z = pre.sample(&mut rng);
+            let pinv_z = pre.solve(&z);
+            let norm2 = dot(&z, &pinv_z);
+            let res = crate::iterative::cg::pcg_with_min(
+                &op,
+                &pre,
+                &z,
+                1e-10,
+                25.min(n),
+                200,
+                true,
+            );
+            let t = res.tridiag.expect("tridiag");
+            acc += norm2 * t.quadrature(|lam| lam.max(1e-300).ln());
+            // Retained probes line up one-to-one.
+            for (a_b, a_s) in run.probes[i].ainv_z.iter().zip(&res.x) {
+                assert!((a_b - a_s).abs() < 1e-9, "probe {i}: {a_b} vs {a_s}");
+            }
+            assert_eq!(run.probes[i].z, z, "probe stream diverged at {i}");
+        }
+        let want = acc / 20.0 + pre.logdet();
+        assert!(
+            (run.logdet - want).abs() < 1e-8 * (1.0 + want.abs()),
+            "batched {} vs sequential {want}",
+            run.logdet
+        );
+    }
+
+    #[test]
+    fn min_iter_option_controls_lanczos_degree() {
+        let n = 50;
+        let a = spd(n);
+        let op = DenseOp(a);
+        let pre = IdentityPrecond(n);
+        for (min_iter, floor) in [(5usize, 5.0), (30, 30.0)] {
+            let opts = SlqOptions { min_iter, ..Default::default() };
+            let mut rng = Rng::seed_from(9);
+            let run = slq_logdet_opts(&op, &pre, 10, &mut rng, 1e-1, 200, &opts);
+            assert!(
+                run.avg_iters >= floor,
+                "min_iter={min_iter}: avg {} below floor",
+                run.avg_iters
+            );
+        }
     }
 
     #[test]

@@ -308,8 +308,9 @@ pub fn gauss_hermite_mean(mu: f64, var: f64, f: impl Fn(f64) -> f64) -> f64 {
 }
 
 fn gh_nodes() -> (&'static [f64], &'static [f64]) {
-    use once_cell::sync::Lazy;
-    static NODES: Lazy<(Vec<f64>, Vec<f64>)> = Lazy::new(|| {
+    use std::sync::OnceLock;
+    static NODES: OnceLock<(Vec<f64>, Vec<f64>)> = OnceLock::new();
+    let nodes = NODES.get_or_init(|| {
         // Golub–Welsch: the Hermite Jacobi matrix has zero diagonal and
         // off-diagonals sqrt(k/2); weights = sqrt(pi)·(first components)².
         let k = 20usize;
@@ -328,7 +329,7 @@ fn gh_nodes() -> (&'static [f64], &'static [f64]) {
             pairs.iter().map(|p| p.1).collect(),
         )
     });
-    (&NODES.0, &NODES.1)
+    (&nodes.0, &nodes.1)
 }
 
 #[cfg(test)]

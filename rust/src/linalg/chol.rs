@@ -3,12 +3,23 @@
 use super::{dot, Mat};
 
 /// Error returned when a matrix is not (numerically) positive definite.
-#[derive(Debug, thiserror::Error)]
-#[error("matrix not positive definite at pivot {pivot} (value {value:.3e})")]
+#[derive(Debug)]
 pub struct CholeskyError {
     pub pivot: usize,
     pub value: f64,
 }
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix not positive definite at pivot {} (value {:.3e})",
+            self.pivot, self.value
+        )
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
 #[derive(Clone, Debug)]

@@ -107,6 +107,30 @@ impl Mat {
         (0..self.rows).map(|i| self.get(i, j)).collect()
     }
 
+    /// Columns `lo..hi` copied into a fresh `rows×(hi-lo)` matrix
+    /// (column-block extraction for the batched solvers).
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols, "cols_range out of bounds");
+        let k = hi - lo;
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.data[i * k..(i + 1) * k]
+                .copy_from_slice(&self.data[i * self.cols + lo..i * self.cols + hi]);
+        }
+        out
+    }
+
+    /// Write `block` (rows×(hi-lo)) into columns `lo..hi` of `self`.
+    pub fn set_cols_range(&mut self, lo: usize, block: &Mat) {
+        let k = block.cols;
+        assert!(lo + k <= self.cols, "set_cols_range out of bounds");
+        assert_eq!(block.rows, self.rows, "set_cols_range row mismatch");
+        for i in 0..self.rows {
+            self.data[i * self.cols + lo..i * self.cols + lo + k]
+                .copy_from_slice(&block.data[i * k..(i + 1) * k]);
+        }
+    }
+
     /// Transpose.
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);

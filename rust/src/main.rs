@@ -178,8 +178,14 @@ fn cmd_train(flags: &HashMap<String, String>) -> i32 {
     let smoothness = Smoothness::parse(flags.get("smoothness").map(|s| s.as_str()).unwrap_or("1.5"))
         .unwrap_or(Smoothness::ThreeHalves);
     let lik = parse_likelihood(flags);
-    let precond = PrecondType::parse(flags.get("precond").map(|s| s.as_str()).unwrap_or("fitc"))
-        .unwrap_or(PrecondType::Fitc);
+    let precond_name = flags.get("precond").map(|s| s.as_str()).unwrap_or("fitc");
+    let Some(precond) = PrecondType::parse(precond_name) else {
+        eprintln!(
+            "unknown --precond `{precond_name}`; valid names (case-insensitive): {}",
+            PrecondType::VALID_NAMES.join(", ")
+        );
+        return 2;
+    };
 
     let mut rng = Rng::seed_from(seed);
     let n_test = ((n as f64) * test_frac).round() as usize;

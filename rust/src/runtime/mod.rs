@@ -2,21 +2,23 @@
 //! request path (Python is build-time only).
 //!
 //! `make artifacts` lowers the Layer-2 JAX graphs (which embed the
-//! Layer-1 Pallas kernel) to HLO text; this module compiles them on the
-//! PJRT CPU client (`xla` crate) and serves covariance panels through
-//! [`CovEngine`]. Shapes are fixed at export: panels are padded to
-//! `(panel_n, panel_m, d_pad)` with zero inverse length scales masking
-//! unused feature dimensions, and padded rows discarded on readback.
+//! Layer-1 Pallas kernel) to HLO text; the `pjrt` feature compiles them
+//! on the PJRT CPU client (`xla` crate) and serves covariance panels
+//! through [`PjrtCovEngine`]. Shapes are fixed at export: panels are
+//! padded to `(panel_n, panel_m, d_pad)` with zero inverse length scales
+//! masking unused feature dimensions, and padded rows discarded on
+//! readback.
 //!
-//! A native fallback covers shapes the artifacts cannot serve
-//! (d > d_pad, general-ν Matérn) and environments without artifacts.
+//! The default (offline) build has no `xla`/`anyhow` dependencies: the
+//! engine is a stub that always reports "unavailable" and every panel is
+//! served by the native Rust kernels. A native fallback also covers
+//! shapes the artifacts cannot serve (d > d_pad, general-ν Matérn) when
+//! the real engine is present.
 
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
-use anyhow::{Context, Result};
-
-use crate::kernels::{ArdMatern, Smoothness};
+use crate::kernels::ArdMatern;
 use crate::linalg::Mat;
 
 /// Artifact metadata (mirrors python/compile/aot.py's manifest).
@@ -30,18 +32,18 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn parse(text: &str) -> Result<Manifest> {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
         let mut kv = std::collections::HashMap::new();
         for line in text.lines() {
             if let Some((k, v)) = line.split_once('=') {
                 kv.insert(k.trim().to_string(), v.trim().to_string());
             }
         }
-        let get = |k: &str| -> Result<usize> {
+        let get = |k: &str| -> Result<usize, String> {
             kv.get(k)
-                .with_context(|| format!("manifest missing {k}"))?
+                .ok_or_else(|| format!("manifest missing {k}"))?
                 .parse::<usize>()
-                .with_context(|| format!("manifest bad {k}"))
+                .map_err(|e| format!("manifest bad {k}: {e}"))
         };
         Ok(Manifest {
             panel_n: get("panel_n")?,
@@ -53,153 +55,196 @@ impl Manifest {
     }
 }
 
-struct Executables {
-    #[allow(dead_code)] // keeps the PJRT client alive for the executables
-    client: xla::PjRtClient,
-    cov_cross: std::collections::HashMap<&'static str, xla::PjRtLoadedExecutable>,
-}
-
-// SAFETY: the xla crate's client/executable handles are `Rc`-based and
-// hence `!Send`, but every access in this module happens under the
-// `Mutex` in `PjrtCovEngine` and no handle is ever cloned out of the
-// guard, so at most one thread touches them at any time.
-unsafe impl Send for Executables {}
-
-/// The PJRT-backed covariance engine.
-pub struct PjrtCovEngine {
-    manifest: Manifest,
-    // PJRT executables are not Sync; guard with a mutex (the panel calls
-    // are coarse enough that contention is negligible).
-    exe: Mutex<Executables>,
-    /// Panels served / fallbacks taken (diagnostics).
-    pub stats: Mutex<EngineStats>,
-}
-
+/// Panels served / fallbacks taken (diagnostics).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     pub pjrt_panels: u64,
     pub native_panels: u64,
 }
 
-fn smoothness_key(s: Smoothness) -> Option<&'static str> {
-    match s {
-        Smoothness::Half => Some("half"),
-        Smoothness::ThreeHalves => Some("three_halves"),
-        Smoothness::FiveHalves => Some("five_halves"),
-        Smoothness::Gaussian => Some("gaussian"),
-        Smoothness::General(_) => None,
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+    use crate::kernels::Smoothness;
+    use anyhow::{Context, Result};
+
+    struct Executables {
+        #[allow(dead_code)] // keeps the PJRT client alive for the executables
+        client: xla::PjRtClient,
+        cov_cross: std::collections::HashMap<&'static str, xla::PjRtLoadedExecutable>,
+    }
+
+    // SAFETY: the xla crate's client/executable handles are `Rc`-based and
+    // hence `!Send`, but every access in this module happens under the
+    // `Mutex` in `PjrtCovEngine` and no handle is ever cloned out of the
+    // guard, so at most one thread touches them at any time.
+    unsafe impl Send for Executables {}
+
+    /// The PJRT-backed covariance engine.
+    pub struct PjrtCovEngine {
+        manifest: Manifest,
+        // PJRT executables are not Sync; guard with a mutex (the panel calls
+        // are coarse enough that contention is negligible).
+        exe: Mutex<Executables>,
+        /// Panels served / fallbacks taken (diagnostics).
+        pub stats: Mutex<EngineStats>,
+    }
+
+    fn smoothness_key(s: Smoothness) -> Option<&'static str> {
+        match s {
+            Smoothness::Half => Some("half"),
+            Smoothness::ThreeHalves => Some("three_halves"),
+            Smoothness::FiveHalves => Some("five_halves"),
+            Smoothness::Gaussian => Some("gaussian"),
+            Smoothness::General(_) => None,
+        }
+    }
+
+    impl PjrtCovEngine {
+        /// Load all artifacts from a directory (errors if any is missing).
+        pub fn load(dir: &Path) -> Result<Self> {
+            let manifest_text = std::fs::read_to_string(dir.join("manifest.txt"))
+                .with_context(|| format!("no manifest in {dir:?} — run `make artifacts`"))?;
+            let manifest = Manifest::parse(&manifest_text).map_err(anyhow::Error::msg)?;
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let mut cov_cross = std::collections::HashMap::new();
+            for key in ["half", "three_halves", "five_halves", "gaussian"] {
+                let path = dir.join(format!("cov_cross_{key}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("utf8 path")?,
+                )
+                .with_context(|| format!("parse {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).with_context(|| format!("compile {key}"))?;
+                cov_cross.insert(
+                    match key {
+                        "half" => "half",
+                        "three_halves" => "three_halves",
+                        "five_halves" => "five_halves",
+                        _ => "gaussian",
+                    },
+                    exe,
+                );
+            }
+            Ok(PjrtCovEngine {
+                manifest,
+                exe: Mutex::new(Executables { client, cov_cross }),
+                stats: Mutex::new(EngineStats::default()),
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Whether this engine can serve the kernel (dimension and smoothness).
+        pub fn supports(&self, kernel: &ArdMatern) -> bool {
+            kernel.dim() <= self.manifest.d_pad && smoothness_key(kernel.smoothness).is_some()
+        }
+
+        /// One padded panel execution: cross-covariance of up to
+        /// (panel_n × panel_m) points.
+        fn run_panel(
+            &self,
+            xs_pad: &[f64],
+            zs_pad: &[f64],
+            variance: f64,
+            key: &'static str,
+        ) -> Result<Vec<f64>> {
+            let mf = &self.manifest;
+            let guard = self.exe.lock().unwrap();
+            let xs = xla::Literal::vec1(xs_pad)
+                .reshape(&[mf.panel_n as i64, mf.d_pad as i64])?;
+            let zs = xla::Literal::vec1(zs_pad)
+                .reshape(&[mf.panel_m as i64, mf.d_pad as i64])?;
+            let var = xla::Literal::vec1(&[variance]).reshape(&[1, 1])?;
+            let exe = guard.cov_cross.get(key).context("missing executable")?;
+            let result = exe.execute::<xla::Literal>(&[xs, zs, var])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f64>()?)
+        }
+
+        /// Cross-covariance panel `K(X, Z)` (n×m) through the artifacts,
+        /// tiling over the fixed panel shape.
+        pub fn cross_cov(&self, x: &Mat, z: &Mat, kernel: &ArdMatern) -> Result<Mat> {
+            let key = smoothness_key(kernel.smoothness).context("unsupported smoothness")?;
+            let mf = &self.manifest;
+            anyhow::ensure!(kernel.dim() <= mf.d_pad, "d > d_pad");
+            let (n, m) = (x.rows(), z.rows());
+            let inv_ls: Vec<f64> = kernel.length_scales.iter().map(|l| 1.0 / l).collect();
+            let mut out = Mat::zeros(n, m);
+            let pad_points = |pts: &Mat, lo: usize, hi: usize, rows: usize| -> Vec<f64> {
+                let mut buf = vec![0.0; rows * mf.d_pad];
+                for (r, i) in (lo..hi).enumerate() {
+                    for (k, &il) in inv_ls.iter().enumerate() {
+                        buf[r * mf.d_pad + k] = pts.get(i, k) * il;
+                    }
+                }
+                buf
+            };
+            let mut row0 = 0;
+            while row0 < n {
+                let row1 = (row0 + mf.panel_n).min(n);
+                let xs_pad = pad_points(x, row0, row1, mf.panel_n);
+                let mut col0 = 0;
+                while col0 < m {
+                    let col1 = (col0 + mf.panel_m).min(m);
+                    let zs_pad = pad_points(z, col0, col1, mf.panel_m);
+                    let panel = self.run_panel(&xs_pad, &zs_pad, kernel.variance, key)?;
+                    for (r, i) in (row0..row1).enumerate() {
+                        for (c, j) in (col0..col1).enumerate() {
+                            out.set(i, j, panel[r * mf.panel_m + c]);
+                        }
+                    }
+                    self.stats.lock().unwrap().pjrt_panels += 1;
+                    col0 = col1;
+                }
+                row0 = row1;
+            }
+            Ok(out)
+        }
     }
 }
 
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtCovEngine;
+
+/// Stub engine for builds without the `pjrt` feature: never loads, never
+/// serves a panel. Keeps the public surface (and its consumers in the
+/// benches/examples/tests) compiling in the offline registry.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtCovEngine {
+    manifest: Manifest,
+    /// Panels served / fallbacks taken (diagnostics).
+    pub stats: Mutex<EngineStats>,
+}
+
+#[cfg(not(feature = "pjrt"))]
 impl PjrtCovEngine {
-    /// Load all artifacts from a directory (errors if any is missing).
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest_text = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("no manifest in {dir:?} — run `make artifacts`"))?;
-        let manifest = Manifest::parse(&manifest_text)?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let mut cov_cross = std::collections::HashMap::new();
-        for key in ["half", "three_halves", "five_halves", "gaussian"] {
-            let path = dir.join(format!("cov_cross_{key}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("utf8 path")?,
-            )
-            .with_context(|| format!("parse {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {key}"))?;
-            cov_cross.insert(
-                match key {
-                    "half" => "half",
-                    "three_halves" => "three_halves",
-                    "five_halves" => "five_halves",
-                    _ => "gaussian",
-                },
-                exe,
-            );
-        }
-        Ok(PjrtCovEngine {
-            manifest,
-            exe: Mutex::new(Executables { client, cov_cross }),
-            stats: Mutex::new(EngineStats::default()),
-        })
+    /// Always errors: this build has no PJRT client.
+    pub fn load(_dir: &Path) -> Result<Self, String> {
+        Err("built without the `pjrt` feature; native covariance path only".to_string())
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Whether this engine can serve the kernel (dimension and smoothness).
-    pub fn supports(&self, kernel: &ArdMatern) -> bool {
-        kernel.dim() <= self.manifest.d_pad && smoothness_key(kernel.smoothness).is_some()
+    pub fn supports(&self, _kernel: &ArdMatern) -> bool {
+        false
     }
 
-    /// One padded panel execution: cross-covariance of up to
-    /// (panel_n × panel_m) points.
-    fn run_panel(
-        &self,
-        xs_pad: &[f64],
-        zs_pad: &[f64],
-        variance: f64,
-        key: &'static str,
-    ) -> Result<Vec<f64>> {
-        let mf = &self.manifest;
-        let guard = self.exe.lock().unwrap();
-        let xs = xla::Literal::vec1(xs_pad)
-            .reshape(&[mf.panel_n as i64, mf.d_pad as i64])?;
-        let zs = xla::Literal::vec1(zs_pad)
-            .reshape(&[mf.panel_m as i64, mf.d_pad as i64])?;
-        let var = xla::Literal::vec1(&[variance]).reshape(&[1, 1])?;
-        let exe = guard.cov_cross.get(key).context("missing executable")?;
-        let result = exe.execute::<xla::Literal>(&[xs, zs, var])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f64>()?)
-    }
-
-    /// Cross-covariance panel `K(X, Z)` (n×m) through the artifacts,
-    /// tiling over the fixed panel shape.
-    pub fn cross_cov(&self, x: &Mat, z: &Mat, kernel: &ArdMatern) -> Result<Mat> {
-        let key = smoothness_key(kernel.smoothness).context("unsupported smoothness")?;
-        let mf = &self.manifest;
-        anyhow::ensure!(kernel.dim() <= mf.d_pad, "d > d_pad");
-        let (n, m) = (x.rows(), z.rows());
-        let inv_ls: Vec<f64> = kernel.length_scales.iter().map(|l| 1.0 / l).collect();
-        let mut out = Mat::zeros(n, m);
-        let pad_points = |pts: &Mat, lo: usize, hi: usize, rows: usize| -> Vec<f64> {
-            let mut buf = vec![0.0; rows * mf.d_pad];
-            for (r, i) in (lo..hi).enumerate() {
-                for (k, &il) in inv_ls.iter().enumerate() {
-                    buf[r * mf.d_pad + k] = pts.get(i, k) * il;
-                }
-            }
-            buf
-        };
-        let mut row0 = 0;
-        while row0 < n {
-            let row1 = (row0 + mf.panel_n).min(n);
-            let xs_pad = pad_points(x, row0, row1, mf.panel_n);
-            let mut col0 = 0;
-            while col0 < m {
-                let col1 = (col0 + mf.panel_m).min(m);
-                let zs_pad = pad_points(z, col0, col1, mf.panel_m);
-                let panel = self.run_panel(&xs_pad, &zs_pad, kernel.variance, key)?;
-                for (r, i) in (row0..row1).enumerate() {
-                    for (c, j) in (col0..col1).enumerate() {
-                        out.set(i, j, panel[r * mf.panel_m + c]);
-                    }
-                }
-                self.stats.lock().unwrap().pjrt_panels += 1;
-                col0 = col1;
-            }
-            row0 = row1;
-        }
-        Ok(out)
+    /// Native fallback so call sites remain functional if an engine value
+    /// is ever constructed (it is not, in this build).
+    pub fn cross_cov(&self, x: &Mat, z: &Mat, kernel: &ArdMatern) -> Result<Mat, String> {
+        self.stats.lock().unwrap().native_panels += 1;
+        Ok(kernel.cross_cov(x, z))
     }
 }
 
 /// Global engine, installed once at process start (CLI / examples call
 /// [`init_from_artifacts`]); covariance panel builders consult it.
-static ENGINE: once_cell::sync::OnceCell<Option<PjrtCovEngine>> =
-    once_cell::sync::OnceCell::new();
+static ENGINE: OnceLock<Option<PjrtCovEngine>> = OnceLock::new();
 
 /// Install the PJRT engine from an artifact directory. Returns whether
 /// artifacts were found and compiled. Safe to call more than once.
@@ -208,7 +253,9 @@ pub fn init_from_artifacts(dir: &Path) -> bool {
         .get_or_init(|| match PjrtCovEngine::load(dir) {
             Ok(e) => Some(e),
             Err(err) => {
-                eprintln!("[runtime] PJRT engine unavailable ({err:#}); using native covariance path");
+                eprintln!(
+                    "[runtime] PJRT engine unavailable ({err:#}); using native covariance path"
+                );
                 None
             }
         })
@@ -269,5 +316,5 @@ mod tests {
     }
 
     // PJRT round-trip tests live in rust/tests/pjrt_roundtrip.rs (they
-    // need built artifacts).
+    // need built artifacts and the `pjrt` feature).
 }

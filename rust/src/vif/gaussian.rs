@@ -774,15 +774,8 @@ mod tests {
 /// Generalized-least-squares estimate `β̂ = (XᵀΣ_†⁻¹X)⁻¹ XᵀΣ_†⁻¹ y` for a
 /// fixed-effects design matrix `f` (n×p).
 pub fn gls_beta(s: &VifStructure, f: &Mat, y: &[f64]) -> Vec<f64> {
-    let p = f.cols();
-    // Σ_†⁻¹ X column by column (p is small).
-    let mut sx = Mat::zeros(f.rows(), p);
-    for j in 0..p {
-        let col = s.apply_sigma_dagger_inv(&f.col(j));
-        for i in 0..f.rows() {
-            sx.set(i, j, col[i]);
-        }
-    }
+    // Σ_†⁻¹ X for all design columns in one blocked application.
+    let sx = s.apply_sigma_dagger_inv_batch(f);
     let xtx = f.matmul_tn(&sx); // XᵀΣ⁻¹X (p×p)
     let xty = sx.matvec_t(y); // (Σ⁻¹X)ᵀy
     let chol = crate::linalg::CholeskyFactor::new_with_jitter(&xtx, 1e-10)

@@ -12,8 +12,8 @@
 //!   probe reuse for the gradients (Appendix D).
 
 use crate::iterative::{
-    pcg, sbpv_diag, slq_logdet, spv_diag, FitcPrecond, IterConfig, LinOp, PrecondType,
-    SlqRun, VifduPrecond,
+    map_columns, pcg, pcg_batch, sbpv_diag, slq_logdet_opts, spv_diag, FitcPrecond, IterConfig,
+    LinOp, PrecondType, SlqRun, VifduPrecond,
 };
 use crate::kernels::ArdMatern;
 use crate::likelihoods::Likelihood;
@@ -48,6 +48,16 @@ impl<'a> LinOp for OpWPlusPrec<'a> {
         }
         out
     }
+    fn apply_batch(&self, v: &Mat) -> Mat {
+        let mut out = self.s.apply_sigma_dagger_inv_batch(v);
+        for i in 0..out.rows() {
+            let wi = self.w[i];
+            for (o, vi) in out.row_mut(i).iter_mut().zip(v.row(i)) {
+                *o += wi * vi;
+            }
+        }
+        out
+    }
 }
 
 /// `(W⁻¹ + Σ_†) v` operator (system 17).
@@ -63,6 +73,16 @@ impl<'a> LinOp for OpWinvPlusCov<'a> {
         let mut out = self.s.apply_sigma_dagger(v);
         for ((o, wi), vi) in out.iter_mut().zip(self.w).zip(v) {
             *o += vi / wi;
+        }
+        out
+    }
+    fn apply_batch(&self, v: &Mat) -> Mat {
+        let mut out = self.s.apply_sigma_dagger_batch(v);
+        for i in 0..out.rows() {
+            let wi = self.w[i];
+            for (o, vi) in out.row_mut(i).iter_mut().zip(v.row(i)) {
+                *o += vi / wi;
+            }
         }
         out
     }
@@ -178,6 +198,52 @@ impl<'a> WSolver<'a> {
         }
     }
 
+    /// `(W + Σ_†⁻¹)⁻¹ V` for a column block of right-hand sides (batched
+    /// preconditioned CG; dense path maps columns).
+    pub fn solve_batch(&self, v: &Mat) -> Mat {
+        match &self.mode {
+            SolveMode::Cholesky => map_columns(v, |col| self.solve(col)),
+            SolveMode::Iterative(cfg) => match cfg.precond {
+                PrecondType::Vifdu | PrecondType::None => {
+                    let op = OpWPlusPrec { s: self.s, w: &self.w };
+                    let res = match &self.vifdu {
+                        Some(p) => pcg_batch(&op, p, v, cfg.cg_tol, cfg.max_cg, false),
+                        None => pcg_batch(
+                            &op,
+                            &crate::iterative::IdentityPrecond(self.s.n()),
+                            v,
+                            cfg.cg_tol,
+                            cfg.max_cg,
+                            false,
+                        ),
+                    };
+                    res.x
+                }
+                PrecondType::Fitc => {
+                    // (W+Σ⁻¹)⁻¹V = W⁻¹ (W⁻¹+Σ)⁻¹ Σ V
+                    let op = OpWinvPlusCov { s: self.s, w: &self.w };
+                    let rhs = self.s.apply_sigma_dagger_batch(v);
+                    let res = pcg_batch(
+                        &op,
+                        self.fitc.as_ref().unwrap(),
+                        &rhs,
+                        cfg.cg_tol,
+                        cfg.max_cg,
+                        false,
+                    );
+                    let mut x = res.x;
+                    for i in 0..x.rows() {
+                        let wi = self.w[i];
+                        for xi in x.row_mut(i) {
+                            *xi /= wi;
+                        }
+                    }
+                    x
+                }
+            },
+        }
+    }
+
     /// `log det(Σ_† W + I)` plus retained probes for gradient STE.
     /// `probes_system` marks which system the probes solve.
     pub fn logdet_and_probes(&self, rng: &mut Rng) -> (f64, Option<(SlqRun, PrecondType)>) {
@@ -190,15 +256,19 @@ impl<'a> WSolver<'a> {
                 PrecondType::Vifdu | PrecondType::None => {
                     // (18): log det(Σ_†W+I) = log det Σ_† + log det(W+Σ_†⁻¹)
                     let op = OpWPlusPrec { s: self.s, w: &self.w };
+                    let opts = cfg.slq_options();
                     let run = match &self.vifdu {
-                        Some(p) => slq_logdet(&op, p, cfg.ell, rng, cfg.cg_tol, cfg.max_cg),
-                        None => slq_logdet(
+                        Some(p) => {
+                            slq_logdet_opts(&op, p, cfg.ell, rng, cfg.cg_tol, cfg.max_cg, &opts)
+                        }
+                        None => slq_logdet_opts(
                             &op,
                             &crate::iterative::IdentityPrecond(self.s.n()),
                             cfg.ell,
                             rng,
                             cfg.cg_tol,
                             cfg.max_cg,
+                            &opts,
                         ),
                     };
                     (
@@ -209,13 +279,14 @@ impl<'a> WSolver<'a> {
                 PrecondType::Fitc => {
                     // (19): log det(Σ_†W+I) = log det W + log det(W⁻¹+Σ_†)
                     let op = OpWinvPlusCov { s: self.s, w: &self.w };
-                    let run = slq_logdet(
+                    let run = slq_logdet_opts(
                         &op,
                         self.fitc.as_ref().unwrap(),
                         cfg.ell,
                         rng,
                         cfg.cg_tol,
                         cfg.max_cg,
+                        &cfg.slq_options(),
                     );
                     let ld_w: f64 = self.w.iter().map(|w| w.ln()).sum();
                     (ld_w + run.logdet, Some((run, PrecondType::Fitc)))
@@ -903,16 +974,19 @@ pub fn predict(
                     }
                     z
                 },
-                |z6| solver.solve(z6),
+                |z6| solver.solve_batch(z6),
                 |z7| project_q(&s.apply_sigma_dagger_inv(z7)),
             )
         }
         PredVarMethod::Spv => {
             let mut local_rng = rng.split(0xdef);
             spv_diag(ell, np_pts, &mut local_rng, |z1| {
-                let qt = project_q_transpose(s, &kp_rows, &pred_nb, &a_rows, z1);
-                let sol = solver.solve(&qt);
-                project_q(&s.apply_sigma_dagger_inv(&sol))
+                // Qᵀ per probe, one batched CG over all probes, Q back.
+                let qt = map_columns(z1, |z| {
+                    project_q_transpose(s, &kp_rows, &pred_nb, &a_rows, z)
+                });
+                let sol = solver.solve_batch(&qt);
+                map_columns(&sol, |col| project_q(&s.apply_sigma_dagger_inv(col)))
             })
         }
     };
@@ -1060,6 +1134,7 @@ mod tests {
                 cg_tol: 1e-4,
                 max_cg: 400,
                 fitc_k: 20,
+                slq_min_iter: 25,
                 seed: 7,
             };
             let (got, _) = nll(
@@ -1181,6 +1256,7 @@ mod tests {
                 cg_tol: 1e-5,
                 max_cg: 500,
                 fitc_k: 15,
+                slq_min_iter: 25,
                 seed: 7,
             };
             let (_, g_iter, _) = nll_and_grad(
@@ -1263,6 +1339,7 @@ mod tests {
             cg_tol: 1e-6,
             max_cg: 300,
             fitc_k: 10,
+            slq_min_iter: 25,
             seed: 3,
         };
         let exact = predict(
@@ -1397,7 +1474,7 @@ mod ste_convergence {
         let mut rng = Rng::seed_from(6);
         let (_, g_chol, _) = nll_and_grad(&s, &x, &kernel, &lik, &y, &SolveMode::Cholesky, &mut rng);
         for ell in [200usize, 1000, 4000] {
-            let cfg = IterConfig { precond: PrecondType::Vifdu, ell, cg_tol: 1e-6, max_cg: 500, fitc_k: 15, seed: 7 };
+            let cfg = IterConfig { precond: PrecondType::Vifdu, ell, cg_tol: 1e-6, max_cg: 500, fitc_k: 15, slq_min_iter: 25, seed: 7 };
             let (_, g, _) = nll_and_grad(&s, &x, &kernel, &lik, &y, &SolveMode::Iterative(cfg), &mut rng);
             eprintln!("ell={ell}: iter grad {:?}\n        chol grad {:?}", g, g_chol);
         }

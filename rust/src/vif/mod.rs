@@ -236,6 +236,10 @@ pub struct VifStructure {
     pub ssig: Mat,
     /// `SS = Σ_mn S Σ_mnᵀ` (m×m).
     pub ss: Mat,
+    /// The Woodbury core `M = Σ_m + SS` itself (m×m); kept so consumers
+    /// that need `M` minus a correction (e.g. the VIFDU preconditioner's
+    /// `M₃`) do not have to reconstruct it from its factor.
+    pub mcal: Option<Mat>,
     /// Cholesky of `M = Σ_m + SS`.
     pub chol_mcal: Option<CholeskyFactor>,
     /// Error-variance nugget baked into the residual factor (0 = latent scale).
@@ -264,7 +268,7 @@ impl VifStructure {
             extra_params,
         };
         let resid = ResidualFactor::build(&oracle, neighbors, nugget, jitter);
-        let (bsig, h, ssig, ss, chol_mcal) = match &lr {
+        let (bsig, h, ssig, ss, mcal, chol_mcal) = match &lr {
             Some(lr) => {
                 let bsig = resid.mul_b_mat(&lr.sigma_nm);
                 let mut h = bsig.clone();
@@ -279,7 +283,7 @@ impl VifStructure {
                 mcal.add_assign(&sig_m);
                 let chol_mcal = CholeskyFactor::new_with_jitter(&mcal, jitter.max(1e-10))
                     .expect("Woodbury core M not PD");
-                (bsig, h, ssig, ss, Some(chol_mcal))
+                (bsig, h, ssig, ss, Some(mcal), Some(chol_mcal))
             }
             None => (
                 Mat::zeros(0, 0),
@@ -287,9 +291,10 @@ impl VifStructure {
                 Mat::zeros(0, 0),
                 Mat::zeros(0, 0),
                 None,
+                None,
             ),
         };
-        VifStructure { lr, resid, bsig, h, ssig, ss, chol_mcal, nugget }
+        VifStructure { lr, resid, bsig, h, ssig, ss, mcal, chol_mcal, nugget }
     }
 
     pub fn n(&self) -> usize {
@@ -323,6 +328,46 @@ impl VifStructure {
             for (o, r) in out.iter_mut().zip(&corr) {
                 *o += r;
             }
+        }
+        out
+    }
+
+    /// Column-blocked `Σ̃_†⁻¹ V` (n×k, one vector per column): one sparse
+    /// B/Bᵀ sweep over all columns and the Woodbury core applied to the
+    /// block in a single `solve_mat`.
+    pub fn apply_sigma_dagger_inv_batch(&self, v: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(v.rows(), n);
+        // S V = Bᵀ D⁻¹ B V
+        let mut bv = self.resid.mul_b_mat(v);
+        for i in 0..n {
+            let di = self.resid.d[i];
+            for x in bv.row_mut(i) {
+                *x /= di;
+            }
+        }
+        let mut out = self.resid.mul_bt_mat(&bv);
+        if let Some(chol_mcal) = &self.chol_mcal {
+            let svt = self.ssig.matmul_tn(v); // Σ_mn S V (m×k)
+            let c = chol_mcal.solve_mat(&svt); // M⁻¹ · (m×k)
+            let corr = self.ssig.matmul(&c); // (SΣ_mnᵀ) · (n×k)
+            out.sub_assign(&corr);
+        }
+        out
+    }
+
+    /// Column-blocked `Σ̃_† V` (n×k, one vector per column).
+    pub fn apply_sigma_dagger_batch(&self, v: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(v.rows(), n);
+        // S⁻¹ V = B⁻¹ D B⁻ᵀ V
+        let mut bt = self.resid.solve_bt_mat(v);
+        bt.scale_rows(&self.resid.d);
+        let mut out = self.resid.solve_b_mat(&bt);
+        if let Some(lr) = &self.lr {
+            let w = lr.vt.matmul_tn(v); // (L⁻¹Σ_mn) V (m×k)
+            let corr = lr.vt.matmul(&w); // Σ_mnᵀ Σ_m⁻¹ Σ_mn V (n×k)
+            out.add_assign(&corr);
         }
         out
     }
@@ -466,6 +511,32 @@ mod tests {
         let w = s.apply_sigma_dagger_inv(&s.apply_sigma_dagger(&v));
         for (a, b) in w.iter().zip(&v) {
             assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_sigma_ops_match_columnwise() {
+        let (_, _, s) = setup(40, 8, 5);
+        let v = Mat::from_fn(40, 5, |i, j| ((i * 3 + j * 7) as f64 * 0.17).sin());
+        let gi = s.apply_sigma_dagger_inv_batch(&v);
+        let ga = s.apply_sigma_dagger_batch(&v);
+        for j in 0..5 {
+            let wi = s.apply_sigma_dagger_inv(&v.col(j));
+            let wa = s.apply_sigma_dagger(&v.col(j));
+            for i in 0..40 {
+                assert!(
+                    (gi.get(i, j) - wi[i]).abs() < 1e-10,
+                    "inv col {j} row {i}: {} vs {}",
+                    gi.get(i, j),
+                    wi[i]
+                );
+                assert!(
+                    (ga.get(i, j) - wa[i]).abs() < 1e-10,
+                    "fwd col {j} row {i}: {} vs {}",
+                    ga.get(i, j),
+                    wa[i]
+                );
+            }
         }
     }
 

@@ -1,0 +1,147 @@
+//! Regression tests for the batched multi-RHS PCG engine: k stacked
+//! right-hand sides must reproduce k sequential `pcg` solves — solutions,
+//! iteration counts under the shared stopping rule, and per-column
+//! Lanczos tridiagonal quadrature — for identity, Jacobi, and VIFDU
+//! preconditioners; and threaded batch order must not change results.
+
+use vifgp::iterative::{
+    pcg_batch_with_min, pcg_with_min, slq_logdet, IdentityPrecond, Preconditioner, VifduPrecond,
+};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::linalg::{dot, Mat};
+use vifgp::rng::Rng;
+use vifgp::testing::random_points;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::OpWPlusPrec;
+use vifgp::vif::{select_inducing, select_neighbors, VifStructure};
+
+struct JacobiPrecond(Vec<f64>);
+impl Preconditioner for JacobiPrecond {
+    fn n(&self) -> usize {
+        self.0.len()
+    }
+    fn solve(&self, v: &[f64]) -> Vec<f64> {
+        v.iter().zip(&self.0).map(|(x, d)| x / d).collect()
+    }
+    fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        self.0.iter().map(|d| rng.normal() * d.sqrt()).collect()
+    }
+    fn logdet(&self) -> f64 {
+        self.0.iter().map(|d| d.ln()).sum()
+    }
+}
+
+fn setup(n: usize) -> (VifStructure, Vec<f64>) {
+    let mut rng = Rng::seed_from(33);
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.2, vec![0.3, 0.4], Smoothness::ThreeHalves);
+    let z = select_inducing(&x, &kernel, 8, 2, &mut rng, None);
+    let nb = select_neighbors(&x, &kernel, None, 5, NeighborSelection::EuclideanTransformed);
+    let s = VifStructure::assemble(&x, &kernel, z, nb, 0.0, 1e-10, 0);
+    let w: Vec<f64> = (0..n)
+        .map(|i| 0.15 + 0.1 * ((i as f64 * 0.31).sin().abs()))
+        .collect();
+    (s, w)
+}
+
+fn rhs(n: usize, k: usize) -> Mat {
+    Mat::from_fn(n, k, |i, j| ((i * 7 + j * 13) as f64 * 0.17).sin())
+}
+
+#[test]
+fn batch_matches_sequential_for_all_preconditioners() {
+    let n = 60;
+    let k = 6;
+    let (s, w) = setup(n);
+    let op = OpWPlusPrec { s: &s, w: &w };
+    let b = rhs(n, k);
+    let jacobi_diag: Vec<f64> = (0..n).map(|i| 1.5 + 0.3 * (i as f64 * 0.2).sin()).collect();
+    let pres: Vec<Box<dyn Preconditioner + '_>> = vec![
+        Box::new(IdentityPrecond(n)),
+        Box::new(JacobiPrecond(jacobi_diag)),
+        Box::new(VifduPrecond::new(&s, &w)),
+    ];
+    for (pi, pre) in pres.iter().enumerate() {
+        let res = pcg_batch_with_min(&op, pre.as_ref(), &b, 1e-8, 5, 500, true);
+        for j in 0..k {
+            let want = pcg_with_min(&op, pre.as_ref(), &b.col(j), 1e-8, 5, 500, true);
+            assert_eq!(
+                res.columns[j].iters, want.iters,
+                "precond {pi} col {j}: batched iters differ"
+            );
+            assert_eq!(res.columns[j].converged, want.converged, "precond {pi} col {j}");
+            for (g, wv) in res.x.col(j).iter().zip(&want.x) {
+                assert!(
+                    (g - wv).abs() < 1e-8 * (1.0 + wv.abs()),
+                    "precond {pi} col {j}: solution {g} vs {wv}"
+                );
+            }
+            let tg = res.columns[j].tridiag.as_ref().expect("batch tridiag");
+            let tw = want.tridiag.as_ref().expect("seq tridiag");
+            let qg = tg.quadrature(|l| l.max(1e-300).ln());
+            let qw = tw.quadrature(|l| l.max(1e-300).ln());
+            assert!(
+                (qg - qw).abs() < 1e-7 * (1.0 + qw.abs()),
+                "precond {pi} col {j}: quadrature {qg} vs {qw}"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_batch_order_does_not_change_results() {
+    let n = 50;
+    let k = 8;
+    let (s, w) = setup(n);
+    let op = OpWPlusPrec { s: &s, w: &w };
+    let pre = VifduPrecond::new(&s, &w);
+    let b = rhs(n, k);
+    let res1 = pcg_batch_with_min(&op, &pre, &b, 1e-9, 5, 500, true);
+    // Same batch twice: thread scheduling must not leak into results.
+    let res1b = pcg_batch_with_min(&op, &pre, &b, 1e-9, 5, 500, true);
+    for j in 0..k {
+        assert_eq!(res1.x.col(j), res1b.x.col(j), "rerun col {j} diverged");
+        assert_eq!(res1.columns[j].iters, res1b.columns[j].iters);
+    }
+    // Reversed column order: each column's result must be bitwise
+    // identical wherever it sits in the block.
+    let b_rev = Mat::from_fn(n, k, |i, j| b.get(i, k - 1 - j));
+    let res2 = pcg_batch_with_min(&op, &pre, &b_rev, 1e-9, 5, 500, true);
+    for j in 0..k {
+        assert_eq!(
+            res1.x.col(j),
+            res2.x.col(k - 1 - j),
+            "col {j}: batch position changed the solution"
+        );
+        assert_eq!(res1.columns[j].iters, res2.columns[k - 1 - j].iters);
+    }
+}
+
+#[test]
+fn batched_slq_matches_sequential_reference_on_vif_system() {
+    let n = 80;
+    let (s, w) = setup(n);
+    let op = OpWPlusPrec { s: &s, w: &w };
+    let pre = VifduPrecond::new(&s, &w);
+    let ell = 12;
+    let (tol, max_cg) = (1e-8, 500);
+    // Sequential reference: the seed's per-probe loop on the same stream.
+    let mut rng = Rng::seed_from(5);
+    let mut acc = 0.0;
+    for _ in 0..ell {
+        let z = pre.sample(&mut rng);
+        let pinv_z = pre.solve(&z);
+        let norm2 = dot(&z, &pinv_z);
+        let res = pcg_with_min(&op, &pre, &z, tol, 25.min(n), max_cg, true);
+        let t = res.tridiag.expect("tridiag");
+        acc += norm2 * t.quadrature(|lam| lam.max(1e-300).ln());
+    }
+    let want = acc / ell as f64 + pre.logdet();
+    let mut rng = Rng::seed_from(5);
+    let run = slq_logdet(&op, &pre, ell, &mut rng, tol, max_cg);
+    assert!(
+        (run.logdet - want).abs() < 1e-6 * (1.0 + want.abs()),
+        "batched {} vs sequential {want}",
+        run.logdet
+    );
+}
