@@ -80,7 +80,6 @@ fn main() {
     let oracle = VifResidualOracle { kernel: &kernel, x: &x, lr: Some(&lr), grad_aux: None, extra_params: 0 };
     let (resid, t_bd) = common::timed(|| ResidualFactor::build(&oracle, nb.clone(), 0.05, 1e-10));
     println!("residual B/D build:              {t_bd:.3}s");
-    let _ = resid;
 
     // 5. full structure + NLL
     let (s, t_asm) = common::timed(|| {
@@ -149,6 +148,66 @@ fn main() {
             "SLQ logdet FITC  (l={ell}): seq {t_seq:.3}s ({ld_seq:.1})  batched {t_bat:.3}s ({:.1})  speedup {:.2}x",
             run.logdet,
             t_seq / t_bat.max(1e-9)
+        );
+    }
+
+    // 9. Vecchia B sweeps: level-scheduled vs sequential (the innermost
+    // loop of every operator apply and of both preconditioners). One
+    // vector round trip (BᵀB product + B⁻ᵀB⁻¹ solve) and one 16-column
+    // block round trip per rep; results are bit-identical, so only time
+    // should differ.
+    {
+        use vifgp::linalg::Mat;
+        use vifgp::vecchia::SweepExec;
+        let pool = vifgp::coordinator::global_pool();
+        let workers = vifgp::coordinator::num_threads();
+        println!(
+            "B level schedule: {} levels (max width {}) for n={n}, mv={m_v}, {workers} workers",
+            resid.schedule().num_levels(),
+            resid.schedule().max_width()
+        );
+        let vv: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let x16 = Mat::from_fn(n, 16, |i, j| ((i * 3 + j * 11) as f64 * 0.19).sin());
+        let reps = 30;
+        let time_vec = |exec: SweepExec<'_>| {
+            common::timed(|| {
+                let mut acc = 0.0;
+                for _ in 0..reps {
+                    let w = resid.mul_bt_with(&resid.mul_b_with(&vv, exec), exec);
+                    let u = resid.solve_b_with(&resid.solve_bt_with(&w, exec), exec);
+                    acc += u[n - 1];
+                }
+                acc
+            })
+        };
+        let time_mat = |exec: SweepExec<'_>| {
+            common::timed(|| {
+                let mut acc = 0.0;
+                for _ in 0..reps / 5 {
+                    let w = resid.mul_bt_mat_with(&resid.mul_b_mat_with(&x16, exec), exec);
+                    let u = resid.solve_b_mat_with(&resid.solve_bt_mat_with(&w, exec), exec);
+                    acc += u.get(n - 1, 0);
+                }
+                acc
+            })
+        };
+        let (a_seq, t_vec_seq) = time_vec(SweepExec::Seq);
+        let (a_sch, t_vec_sch) = time_vec(SweepExec::Pool(pool, workers));
+        assert_eq!(a_seq.to_bits(), a_sch.to_bits(), "scheduled vec sweep diverged");
+        let (b_seq, t_mat_seq) = time_mat(SweepExec::Seq);
+        let (b_sch, t_mat_sch) = time_mat(SweepExec::Pool(pool, workers));
+        assert_eq!(b_seq.to_bits(), b_sch.to_bits(), "scheduled mat sweep diverged");
+        println!(
+            "B sweeps vec:   seq {:.3} ms/op  scheduled {:.3} ms/op  speedup {:.2}x",
+            1e3 * t_vec_seq / reps as f64,
+            1e3 * t_vec_sch / reps as f64,
+            t_vec_seq / t_vec_sch.max(1e-9)
+        );
+        println!(
+            "B sweeps mat16: seq {:.3} ms/op  scheduled {:.3} ms/op  speedup {:.2}x",
+            1e3 * t_mat_seq / (reps / 5) as f64,
+            1e3 * t_mat_sch / (reps / 5) as f64,
+            t_mat_seq / t_mat_sch.max(1e-9)
         );
     }
 }

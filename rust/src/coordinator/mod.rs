@@ -22,16 +22,22 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// Number of worker threads to use (`VIFGP_THREADS` overrides the
-/// detected parallelism).
+/// detected parallelism). Resolved once and cached: the hot sweep
+/// kernels consult this on every dispatch, and `std::env::var` takes a
+/// process-wide lock. Set the variable before first use (the CLI's
+/// `--threads` does), not mid-run.
 pub fn num_threads() -> usize {
-    if let Ok(s) = std::env::var("VIFGP_THREADS") {
-        if let Ok(v) = s.parse::<usize>() {
-            return v.max(1);
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(s) = std::env::var("VIFGP_THREADS") {
+            if let Ok(v) = s.parse::<usize>() {
+                return v.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
 }
 
 /// The process-wide worker pool used by the batched iterative solvers

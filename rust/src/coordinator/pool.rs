@@ -56,6 +56,11 @@ impl ThreadPool {
         ThreadPool { sender: Some(Mutex::new(sender)), workers }
     }
 
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit a job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.sender

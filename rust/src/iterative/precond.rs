@@ -41,6 +41,11 @@ impl PrecondType {
 /// for the system `(W + Σ_†⁻¹) u = v` (Appendix E.1). With `m = 0` this
 /// is exactly the VADU preconditioner of Kündig & Sigrist (2025), used by
 /// the standalone-Vecchia baseline.
+///
+/// Every `B`/`Bᵀ` sweep in [`solve`](Preconditioner::solve) and
+/// [`solve_batch`](Preconditioner::solve_batch) goes through the
+/// residual factor's level-scheduled kernels (see `vecchia`), so large
+/// solves parallelize over schedule levels with deterministic results.
 pub struct VifduPrecond<'a> {
     s: &'a VifStructure,
     w: Vec<f64>,

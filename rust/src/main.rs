@@ -33,6 +33,10 @@ fn main() {
         std::process::exit(2);
     };
     let flags = parse_flags(&args[1..]);
+    if let Err(msg) = apply_runtime_flags(&flags) {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    }
     let code = match cmd.as_str() {
         "info" => cmd_info(),
         "simulate" => cmd_simulate(&flags),
@@ -59,8 +63,37 @@ USAGE:
   vifgp simulate --n N --d D [--smoothness S] [--likelihood L] [--seed K] --out FILE
   vifgp train --data FILE [--m M] [--mv MV] [--smoothness S] [--likelihood L]
               [--precond fitc|vifdu|none] [--iters I] [--test-frac F] [--seed K]
-  vifgp experiment NAME   (see rust/benches/ for the table/figure harnesses)"
+  vifgp experiment NAME   (see rust/benches/ for the table/figure harnesses)
+GLOBAL FLAGS (any command):
+  --threads N           worker-pool size (default: detected parallelism;
+                        same as VIFGP_THREADS)
+  --sched-threshold N   min rows before Vecchia B sweeps use the level-
+                        scheduled parallel path (0 = always; default 2048;
+                        same as VIFGP_SCHED_THRESHOLD)"
     );
+}
+
+/// Apply the global `--threads` / `--sched-threshold` flags by setting
+/// the corresponding environment variables before the worker pool or any
+/// residual factor is created.
+fn apply_runtime_flags(flags: &HashMap<String, String>) -> Result<(), String> {
+    if let Some(t) = flags.get("threads") {
+        match t.parse::<usize>() {
+            Ok(v) if v >= 1 => std::env::set_var("VIFGP_THREADS", v.to_string()),
+            _ => return Err(format!("--threads expects a positive integer, got `{t}`")),
+        }
+    }
+    if let Some(t) = flags.get("sched-threshold") {
+        match t.parse::<usize>() {
+            Ok(v) => std::env::set_var("VIFGP_SCHED_THRESHOLD", v.to_string()),
+            _ => {
+                return Err(format!(
+                    "--sched-threshold expects a non-negative integer, got `{t}`"
+                ))
+            }
+        }
+    }
+    Ok(())
 }
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {

@@ -5,7 +5,10 @@
 //! a failing case is reported with its seed, and numeric helpers check
 //! gradients against central finite differences.
 
+use crate::coordinator::ThreadPool;
+use crate::linalg::Mat;
 use crate::rng::Rng;
+use crate::vecchia::{ResidualFactor, SweepExec};
 
 /// Run `prop` over `cases` randomly generated inputs. On failure, panics
 /// with the case index and seed so the case can be replayed
@@ -68,6 +71,215 @@ pub fn check_gradient(
 /// Random points in the unit hypercube as a `Mat` (n × d).
 pub fn random_points(rng: &mut Rng, n: usize, d: usize) -> crate::linalg::Mat {
     crate::linalg::Mat::from_fn(n, d, |_, _| rng.uniform())
+}
+
+/// Random strictly-lower neighbor graph with per-row degree `≤ kmax`
+/// (an irregular Vecchia-style conditioning structure).
+pub fn random_neighbor_graph(rng: &mut Rng, n: usize, kmax: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|i| {
+            let k = rng.below(i.min(kmax) + 1);
+            let mut picked = vec![false; i];
+            let mut count = 0;
+            while count < k {
+                let j = rng.below(i);
+                if !picked[j] {
+                    picked[j] = true;
+                    count += 1;
+                }
+            }
+            (0..i).filter(|&j| picked[j]).map(|j| j as u32).collect()
+        })
+        .collect()
+}
+
+/// Build a [`ResidualFactor`] with random coefficients on a given
+/// neighbor graph — no covariance oracle involved, so the dense-oracle
+/// harness can exercise the sweep kernels on arbitrary strictly-lower
+/// sparsity (empty, chain, saturated, irregular). Coefficients shrink
+/// with the row degree so round-trips stay well-conditioned.
+pub fn random_residual_factor(rng: &mut Rng, neighbors: Vec<Vec<u32>>) -> ResidualFactor {
+    let a: Vec<Vec<f64>> = neighbors
+        .iter()
+        .map(|nb| {
+            let scale = 0.8 / (nb.len() as f64).sqrt().max(1.0);
+            nb.iter()
+                .map(|_| rng.uniform_in(-1.0, 1.0) * scale)
+                .collect()
+        })
+        .collect();
+    let d: Vec<f64> = (0..neighbors.len())
+        .map(|_| rng.uniform_in(0.5, 2.0))
+        .collect();
+    ResidualFactor::from_parts(neighbors, a, d)
+}
+
+/// Dense forward substitution `L x = v` for unit-lower-triangular `L`.
+pub fn dense_solve_unit_lower(l: &Mat, v: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut x = v.to_vec();
+    for i in 0..n {
+        let mut s = x[i];
+        for j in 0..i {
+            s -= l.get(i, j) * x[j];
+        }
+        x[i] = s;
+    }
+    x
+}
+
+/// Dense backward substitution `U x = v` for unit-upper-triangular `U`.
+pub fn dense_solve_unit_upper(u: &Mat, v: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    let mut x = v.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in i + 1..n {
+            s -= u.get(i, j) * x[j];
+        }
+        x[i] = s;
+    }
+    x
+}
+
+fn assert_vec_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{what}: element {i}: {g} vs dense {w}"
+        );
+    }
+}
+
+/// Dense-oracle harness for the eight `B` kernels: checks
+/// `mul_b`/`mul_bt`/`solve_b`/`solve_bt` and their `_mat` variants (one
+/// width per entry of `col_counts`) against dense matrix products and
+/// unit-triangular solves built from [`ResidualFactor::dense_b`]. Each
+/// kernel is exercised under both the sequential and the pool-scheduled
+/// execution mode.
+pub fn assert_b_kernels_match_dense(
+    f: &ResidualFactor,
+    rng: &mut Rng,
+    col_counts: &[usize],
+    tol: f64,
+) {
+    let n = f.n();
+    let b = f.dense_b();
+    let bt = b.t();
+    let v = rng.normal_vec(n);
+    let mats: Vec<Mat> = col_counts
+        .iter()
+        .map(|&k| Mat::from_fn(n, k, |_, _| rng.normal()))
+        .collect();
+    let execs: [(SweepExec<'_>, &str); 2] = [
+        (SweepExec::Seq, "seq"),
+        (
+            SweepExec::Pool(crate::coordinator::global_pool(), crate::coordinator::num_threads()),
+            "pool",
+        ),
+    ];
+    for (exec, mode) in execs {
+        assert_vec_close(
+            &f.mul_b_with(&v, exec),
+            &b.matvec(&v),
+            tol,
+            &format!("mul_b[{mode}]"),
+        );
+        assert_vec_close(
+            &f.mul_bt_with(&v, exec),
+            &bt.matvec(&v),
+            tol,
+            &format!("mul_bt[{mode}]"),
+        );
+        assert_vec_close(
+            &f.solve_b_with(&v, exec),
+            &dense_solve_unit_lower(&b, &v),
+            tol,
+            &format!("solve_b[{mode}]"),
+        );
+        assert_vec_close(
+            &f.solve_bt_with(&v, exec),
+            &dense_solve_unit_upper(&bt, &v),
+            tol,
+            &format!("solve_bt[{mode}]"),
+        );
+        for x in &mats {
+            let k = x.cols();
+            let cases: [(Mat, &str); 4] = [
+                (f.mul_b_mat_with(x, exec), "mul_b_mat"),
+                (f.mul_bt_mat_with(x, exec), "mul_bt_mat"),
+                (f.solve_b_mat_with(x, exec), "solve_b_mat"),
+                (f.solve_bt_mat_with(x, exec), "solve_bt_mat"),
+            ];
+            for (got, name) in &cases {
+                for j in 0..k {
+                    let col = x.col(j);
+                    let want = match *name {
+                        "mul_b_mat" => b.matvec(&col),
+                        "mul_bt_mat" => bt.matvec(&col),
+                        "solve_b_mat" => dense_solve_unit_lower(&b, &col),
+                        _ => dense_solve_unit_upper(&bt, &col),
+                    };
+                    assert_vec_close(
+                        &got.col(j),
+                        &want,
+                        tol,
+                        &format!("{name}[{mode}] k={k} col {j}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} not bit-identical: {g} vs {w}"
+        );
+    }
+}
+
+/// Assert the scheduled sweeps are *bit-identical* across worker pools of
+/// every given size, and identical to the sequential reference — the
+/// determinism contract of the level schedule (gathers with a fixed
+/// accumulation order; no racy scatters).
+pub fn assert_b_kernels_pool_size_invariant(
+    f: &ResidualFactor,
+    rng: &mut Rng,
+    pool_sizes: &[usize],
+    cols: usize,
+) {
+    let n = f.n();
+    let v = rng.normal_vec(n);
+    let x = Mat::from_fn(n, cols, |_, _| rng.normal());
+    let seq = (
+        f.mul_b_with(&v, SweepExec::Seq),
+        f.mul_bt_with(&v, SweepExec::Seq),
+        f.solve_b_with(&v, SweepExec::Seq),
+        f.solve_bt_with(&v, SweepExec::Seq),
+        f.mul_b_mat_with(&x, SweepExec::Seq),
+        f.mul_bt_mat_with(&x, SweepExec::Seq),
+        f.solve_b_mat_with(&x, SweepExec::Seq),
+        f.solve_bt_mat_with(&x, SweepExec::Seq),
+    );
+    for &size in pool_sizes {
+        let pool = ThreadPool::new(size);
+        let exec = SweepExec::Pool(&pool, size);
+        let tag = |k: &str| format!("{k} (pool size {size})");
+        assert_bits_eq(&f.mul_b_with(&v, exec), &seq.0, &tag("mul_b"));
+        assert_bits_eq(&f.mul_bt_with(&v, exec), &seq.1, &tag("mul_bt"));
+        assert_bits_eq(&f.solve_b_with(&v, exec), &seq.2, &tag("solve_b"));
+        assert_bits_eq(&f.solve_bt_with(&v, exec), &seq.3, &tag("solve_bt"));
+        assert_bits_eq(f.mul_b_mat_with(&x, exec).data(), seq.4.data(), &tag("mul_b_mat"));
+        assert_bits_eq(f.mul_bt_mat_with(&x, exec).data(), seq.5.data(), &tag("mul_bt_mat"));
+        assert_bits_eq(f.solve_b_mat_with(&x, exec).data(), seq.6.data(), &tag("solve_b_mat"));
+        assert_bits_eq(f.solve_bt_mat_with(&x, exec).data(), seq.7.data(), &tag("solve_bt_mat"));
+    }
 }
 
 #[cfg(test)]

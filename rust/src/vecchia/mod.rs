@@ -13,11 +13,49 @@
 //! and provides the triangular/sparse operations the VIF pipeline needs:
 //! products and solves with `B`, `Bᵀ`, and `S = Bᵀ D⁻¹ B`, plus the
 //! Appendix-A gradients `∂B/∂θ_p`, `∂D/∂θ_p`.
+//!
+//! # Level-scheduled parallel sweeps
+//!
+//! The eight `B` kernels (`mul_b`/`mul_bt`/`solve_b`/`solve_bt` and their
+//! `_mat` block variants) are the innermost loop of every VIF operator
+//! apply and of both preconditioners, so they are parallelized with a
+//! *level schedule* computed once at [`ResidualFactor::build`] time:
+//!
+//! * [`LevelSchedule`] is a topological partition of the row-dependency
+//!   DAG induced by the neighbor lists — level 0 holds rows with no
+//!   neighbors, and every row's neighbors lie strictly in earlier levels.
+//!   Forward substitution (`solve_b*`) walks levels in order, backward
+//!   substitution (`solve_bt*`) walks the *same* levels in reverse (if
+//!   `j ∈ N(i)` then `level(j) < level(i)`, so the reversed order
+//!   satisfies the transposed dependencies). Rows inside one level are
+//!   independent and fan out over the shared
+//!   [`coordinator::global_pool`] via scoped borrowed jobs.
+//! * [`TransposedIndex`] is a CSC-style index of the strictly-lower part
+//!   of `B`: for each column `j`, the owning rows `i` with `j ∈ N(i)`
+//!   (ascending) and their coefficients `A_i[k]`. It turns every `Bᵀ`
+//!   operation into a per-row *gather* instead of a racy scatter, which
+//!   makes the parallel sweeps deterministic: each output element is
+//!   accumulated by exactly one task in a fixed order, so results are
+//!   bit-identical for any pool size (1, 2, 8, ...) and identical to the
+//!   sequential path.
+//! * Small problems keep a sequential code path: sweeps only fan out
+//!   when the factor has at least [`ResidualFactor::sched_min_rows`] rows
+//!   (default [`DEFAULT_SCHED_MIN_ROWS`], overridable with the
+//!   `VIFGP_SCHED_THRESHOLD` environment variable or the CLI's
+//!   `--sched-threshold`), and levels narrower than a small fan-out
+//!   width run inline to avoid paying queue overhead on degenerate
+//!   (chain-like) schedules. The `_mat` variants additionally tile each
+//!   level over column blocks so wide operands spread across workers.
+//!
+//! The `*_with` kernel variants take an explicit [`SweepExec`] so tests
+//! and benches can pin the execution mode (sequential reference vs. a
+//! specific pool) regardless of the threshold.
 
 pub mod neighbors;
 
-use crate::coordinator::parallel_map;
+use crate::coordinator::{self, parallel_map, SyncSlice, ThreadPool};
 use crate::linalg::{dot, CholeskyFactor, Mat};
+use std::sync::OnceLock;
 
 /// Oracle for residual covariances and (optionally) their gradients with
 /// respect to the packed log-parameters.
@@ -32,8 +70,224 @@ pub trait ResidualCov: Sync {
     fn rho_and_grad(&self, i: usize, j: usize, grad: &mut [f64]) -> f64;
 }
 
-/// The sparse Vecchia factor `(B, D)` of the residual process.
+/// Default minimum row count before the `B` sweeps fan out on the global
+/// pool (see the module docs). `VIFGP_SCHED_THRESHOLD` overrides it.
+pub const DEFAULT_SCHED_MIN_ROWS: usize = 2048;
+
+/// Minimum number of output elements (level width × column count) a
+/// sweep dispatch must cover before it fans out to the pool. Per-element
+/// work is only a handful of multiply–adds, so narrow levels run inline
+/// — a chain-like schedule degrades to the sequential sweep plus only
+/// per-level bookkeeping, while wide levels (and the level-free `mul`
+/// kernels, whose width is all of `n`) amortize the dispatch cost.
+const FANOUT_MIN_WORK: usize = 4096;
+
+/// Minimum rows per fanned job (vector sweeps).
+const MIN_JOB_ROWS: usize = 256;
+
+/// Column-block width for the `_mat` sweep tiles (level × column-block).
+const MAT_COL_BLOCK: usize = 32;
+
+/// The process-wide scheduling threshold: `VIFGP_SCHED_THRESHOLD` if set
+/// and parseable, else [`DEFAULT_SCHED_MIN_ROWS`]. Read once.
+pub fn sched_min_rows_default() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("VIFGP_SCHED_THRESHOLD")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_SCHED_MIN_ROWS)
+    })
+}
+
+/// How a triangular sweep executes: sequentially, or with each level
+/// fanned out over a worker pool. Results are bit-identical either way —
+/// every output element is a gather accumulated in a fixed order.
+#[derive(Clone, Copy)]
+pub enum SweepExec<'p> {
+    /// Single-threaded reference path.
+    Seq,
+    /// Fan levels out over (at most) `usize` chunks on the pool.
+    Pool(&'p ThreadPool, usize),
+}
+
+/// Topological level partition of the row-dependency DAG induced by the
+/// conditioning sets: `level(i) = 1 + max_{j ∈ N(i)} level(j)` (0 for
+/// rows with no neighbors). Levels list rows in ascending order; together
+/// they cover every row exactly once.
 #[derive(Clone, Debug, Default)]
+pub struct LevelSchedule {
+    /// `levels[l]` = rows (ascending) whose neighbors all lie in levels `< l`.
+    pub levels: Vec<Vec<u32>>,
+}
+
+impl LevelSchedule {
+    /// Compute the schedule for ordered conditioning sets (`N(i) ⊆ {0..i-1}`).
+    pub fn from_neighbors(neighbors: &[Vec<u32>]) -> Self {
+        let n = neighbors.len();
+        let mut level = vec![0u32; n];
+        let mut num_levels = 0usize;
+        for i in 0..n {
+            let mut l = 0u32;
+            for &j in &neighbors[i] {
+                assert!(
+                    (j as usize) < i,
+                    "neighbor {j} of row {i} is not an earlier row"
+                );
+                l = l.max(level[j as usize] + 1);
+            }
+            level[i] = l;
+            num_levels = num_levels.max(l as usize + 1);
+        }
+        let mut levels = vec![Vec::new(); num_levels];
+        for (i, &l) in level.iter().enumerate() {
+            levels[l as usize].push(i as u32);
+        }
+        LevelSchedule { levels }
+    }
+
+    /// Number of levels (sweep depth; 0 only for an empty factor).
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Widest level (peak available parallelism).
+    pub fn max_width(&self) -> usize {
+        self.levels.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+/// CSC-style transposed index of the strictly-lower part of `B`: for each
+/// column `j`, the rows `i` with `j ∈ N(i)` (ascending) and the matching
+/// coefficients `A_i[k]` (so `B[i, j] = −coef`). `Bᵀ` products and solves
+/// gather through this index instead of scattering row by row.
+#[derive(Clone, Debug, Default)]
+pub struct TransposedIndex {
+    /// Column extents: entries of column `j` are `ptr[j]..ptr[j+1]`.
+    pub ptr: Vec<usize>,
+    /// Owning row `i` per entry, ascending within each column.
+    pub row: Vec<u32>,
+    /// Coefficient `A_i[k]` per entry.
+    pub coef: Vec<f64>,
+}
+
+impl TransposedIndex {
+    /// Build from neighbor lists and their coefficient rows.
+    pub fn build(neighbors: &[Vec<u32>], a: &[Vec<f64>]) -> Self {
+        let n = neighbors.len();
+        let mut ptr = vec![0usize; n + 1];
+        for nb in neighbors {
+            for &j in nb {
+                ptr[j as usize + 1] += 1;
+            }
+        }
+        for j in 0..n {
+            ptr[j + 1] += ptr[j];
+        }
+        let nnz = ptr[n];
+        let mut row = vec![0u32; nnz];
+        let mut coef = vec![0.0f64; nnz];
+        let mut cursor = ptr.clone();
+        // Visiting owners in ascending i keeps each column's entries
+        // ascending in i, which fixes the gather accumulation order.
+        for (i, nb) in neighbors.iter().enumerate() {
+            for (k, &j) in nb.iter().enumerate() {
+                let c = cursor[j as usize];
+                row[c] = i as u32;
+                coef[c] = a[i][k];
+                cursor[j as usize] += 1;
+            }
+        }
+        TransposedIndex { ptr, row, coef }
+    }
+}
+
+/// Run `f(start, end)` over chunk ranges of `0..width`. Inline for the
+/// sequential exec, narrow widths, or single-worker pools; otherwise the
+/// chunks are scoped jobs on the pool. Chunk boundaries never affect
+/// results — callers only write disjoint output elements, each computed
+/// entirely within one chunk.
+fn fan(exec: SweepExec<'_>, width: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    let (pool, workers) = match exec {
+        SweepExec::Seq => {
+            f(0, width);
+            return;
+        }
+        SweepExec::Pool(pool, workers) => (pool, workers),
+    };
+    if workers <= 1 || width < FANOUT_MIN_WORK {
+        f(0, width);
+        return;
+    }
+    let max_jobs = width / MIN_JOB_ROWS;
+    let njobs = (workers * 2).min(max_jobs).max(1);
+    let chunk = width.div_ceil(njobs);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..njobs)
+        .map(|t| {
+            let start = t * chunk;
+            let end = (start + chunk).min(width);
+            Box::new(move || {
+                if start < end {
+                    f(start, end);
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run_scoped(jobs);
+}
+
+/// 2-D variant of [`fan`] for the `_mat` sweeps: tiles `0..items` ×
+/// `0..cols` into (item-chunk, column-block) jobs `f(i0, i1, c0, c1)`.
+fn fan2(
+    exec: SweepExec<'_>,
+    items: usize,
+    cols: usize,
+    f: &(dyn Fn(usize, usize, usize, usize) + Sync),
+) {
+    let (pool, workers) = match exec {
+        SweepExec::Seq => {
+            f(0, items, 0, cols);
+            return;
+        }
+        SweepExec::Pool(pool, workers) => (pool, workers),
+    };
+    if workers <= 1 || items.saturating_mul(cols) < FANOUT_MIN_WORK {
+        f(0, items, 0, cols);
+        return;
+    }
+    let col_blocks = cols.div_ceil(MAT_COL_BLOCK).max(1);
+    let target = workers * 2;
+    // Row chunks of at least 32 items; column blocks supply the rest of
+    // the parallelism for wide operands.
+    let max_item_jobs = (items / 32).max(1);
+    let item_jobs = target.div_ceil(col_blocks).min(max_item_jobs).max(1);
+    let chunk = items.div_ceil(item_jobs);
+    let cblock = cols.div_ceil(col_blocks);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(item_jobs * col_blocks);
+    for t in 0..item_jobs {
+        for b in 0..col_blocks {
+            let (i0, i1) = (t * chunk, ((t + 1) * chunk).min(items));
+            let (c0, c1) = (b * cblock, ((b + 1) * cblock).min(cols));
+            jobs.push(Box::new(move || {
+                if i0 < i1 && c0 < c1 {
+                    f(i0, i1, c0, c1);
+                }
+            }) as Box<dyn FnOnce() + Send + '_>);
+        }
+    }
+    pool.run_scoped(jobs);
+}
+
+/// The sparse Vecchia factor `(B, D)` of the residual process, plus the
+/// level schedule and transposed index that drive the parallel sweeps.
+///
+/// Construct through [`build`](Self::build) or
+/// [`from_parts`](Self::from_parts) only — the private `schedule` and
+/// `bt_index` are derived from `neighbors`/`a` and must stay in sync
+/// with them (there is deliberately no `Default` and no field-wise
+/// construction from outside this module).
+#[derive(Clone, Debug)]
 pub struct ResidualFactor {
     /// Conditioning sets `N(i)` (ascending indices `< i`).
     pub neighbors: Vec<Vec<u32>>,
@@ -41,6 +295,14 @@ pub struct ResidualFactor {
     pub a: Vec<Vec<f64>>,
     /// Conditional variances `D_i > 0`.
     pub d: Vec<f64>,
+    /// Topological level partition of the row-dependency DAG.
+    schedule: LevelSchedule,
+    /// CSC-style index of the strictly-lower part of `B`.
+    bt_index: TransposedIndex,
+    /// Minimum `n` before sweeps fan out on the global pool; set from
+    /// [`sched_min_rows_default`] at build time. Tests force the
+    /// scheduled path by setting this to 0.
+    pub sched_min_rows: usize,
 }
 
 #[derive(Clone)]
@@ -99,70 +361,195 @@ impl ResidualFactor {
             a.push(r.a);
             d.push(r.d);
         }
-        ResidualFactor { neighbors, a, d }
+        ResidualFactor::from_parts(neighbors, a, d)
+    }
+
+    /// Assemble a factor from explicit parts, computing the level
+    /// schedule and transposed index. Panics if any `N(i)` contains a
+    /// non-earlier row or the part lengths disagree.
+    pub fn from_parts(neighbors: Vec<Vec<u32>>, a: Vec<Vec<f64>>, d: Vec<f64>) -> Self {
+        let n = neighbors.len();
+        assert_eq!(a.len(), n, "coefficient rows / neighbor lists mismatch");
+        assert_eq!(d.len(), n, "diagonal / neighbor lists mismatch");
+        for (i, (nb, ai)) in neighbors.iter().zip(&a).enumerate() {
+            assert_eq!(ai.len(), nb.len(), "row {i}: coefficients / neighbors mismatch");
+        }
+        let schedule = LevelSchedule::from_neighbors(&neighbors);
+        let bt_index = TransposedIndex::build(&neighbors, &a);
+        ResidualFactor {
+            neighbors,
+            a,
+            d,
+            schedule,
+            bt_index,
+            sched_min_rows: sched_min_rows_default(),
+        }
     }
 
     pub fn n(&self) -> usize {
         self.d.len()
     }
 
+    /// The level schedule computed at build time (read-only; diagnostics
+    /// and benches report its depth/width).
+    pub fn schedule(&self) -> &LevelSchedule {
+        &self.schedule
+    }
+
+    /// The execution mode the plain kernel entry points use: scheduled
+    /// when the factor is large enough and parallelism is available,
+    /// sequential otherwise.
+    fn default_exec(&self) -> SweepExec<'static> {
+        if self.n() >= self.sched_min_rows && coordinator::num_threads() > 1 {
+            SweepExec::Pool(coordinator::global_pool(), coordinator::num_threads())
+        } else {
+            SweepExec::Seq
+        }
+    }
+
     /// `w = B v` (unit lower triangular, sparse).
     pub fn mul_b(&self, v: &[f64]) -> Vec<f64> {
+        self.mul_b_with(v, self.default_exec())
+    }
+
+    /// [`mul_b`](Self::mul_b) with an explicit execution mode. Rows are
+    /// independent gathers, so no level ordering is needed.
+    pub fn mul_b_with(&self, v: &[f64], exec: SweepExec<'_>) -> Vec<f64> {
         let n = self.n();
         assert_eq!(v.len(), n);
-        (0..n)
-            .map(|i| {
-                let mut s = v[i];
+        let mut out = vec![0.0; n];
+        let optr = SyncSlice(out.as_mut_ptr());
+        let optr = &optr;
+        fan(exec, n, &|start, end| {
+            for i in start..end {
+                let mut acc = v[i];
                 for (k, &j) in self.neighbors[i].iter().enumerate() {
-                    s -= self.a[i][k] * v[j as usize];
+                    acc -= self.a[i][k] * v[j as usize];
                 }
-                s
-            })
-            .collect()
+                // SAFETY: each row index is written by exactly one chunk.
+                unsafe {
+                    *optr.get().add(i) = acc;
+                }
+            }
+        });
+        out
     }
 
     /// `w = Bᵀ v`.
     pub fn mul_bt(&self, v: &[f64]) -> Vec<f64> {
+        self.mul_bt_with(v, self.default_exec())
+    }
+
+    /// [`mul_bt`](Self::mul_bt) with an explicit execution mode: a gather
+    /// per output row through the transposed index (owners ascending, the
+    /// same accumulation order as a dense `Bᵀ` product row).
+    pub fn mul_bt_with(&self, v: &[f64], exec: SweepExec<'_>) -> Vec<f64> {
         let n = self.n();
         assert_eq!(v.len(), n);
-        let mut out = v.to_vec();
-        for i in 0..n {
-            let vi = v[i];
-            if vi == 0.0 {
-                continue;
+        let bt = &self.bt_index;
+        let mut out = vec![0.0; n];
+        let optr = SyncSlice(out.as_mut_ptr());
+        let optr = &optr;
+        fan(exec, n, &|start, end| {
+            for j in start..end {
+                let mut acc = v[j];
+                for t in bt.ptr[j]..bt.ptr[j + 1] {
+                    acc -= bt.coef[t] * v[bt.row[t] as usize];
+                }
+                // SAFETY: each row index is written by exactly one chunk.
+                unsafe {
+                    *optr.get().add(j) = acc;
+                }
             }
-            for (k, &j) in self.neighbors[i].iter().enumerate() {
-                out[j as usize] -= self.a[i][k] * vi;
-            }
-        }
+        });
         out
     }
 
-    /// Solve `B x = v` (forward substitution).
+    /// Solve `B x = v` (forward substitution, level-ordered).
     pub fn solve_b(&self, v: &[f64]) -> Vec<f64> {
+        self.solve_b_with(v, self.default_exec())
+    }
+
+    /// [`solve_b`](Self::solve_b) with an explicit execution mode.
+    pub fn solve_b_with(&self, v: &[f64], exec: SweepExec<'_>) -> Vec<f64> {
         let n = self.n();
         assert_eq!(v.len(), n);
         let mut x = vec![0.0; n];
-        for i in 0..n {
-            let mut s = v[i];
-            for (k, &j) in self.neighbors[i].iter().enumerate() {
-                s += self.a[i][k] * x[j as usize];
+        if let SweepExec::Seq = exec {
+            for i in 0..n {
+                let mut acc = v[i];
+                for (k, &j) in self.neighbors[i].iter().enumerate() {
+                    acc += self.a[i][k] * x[j as usize];
+                }
+                x[i] = acc;
             }
-            x[i] = s;
+            return x;
+        }
+        let xptr = SyncSlice(x.as_mut_ptr());
+        let xptr = &xptr;
+        for level in &self.schedule.levels {
+            let rows = &level[..];
+            fan(exec, rows.len(), &|start, end| {
+                for &iu in &rows[start..end] {
+                    let i = iu as usize;
+                    let mut acc = v[i];
+                    for (k, &j) in self.neighbors[i].iter().enumerate() {
+                        // SAFETY: j lies in an earlier level, fully written
+                        // before this level's barrier released.
+                        acc += self.a[i][k] * unsafe { *xptr.get().add(j as usize) };
+                    }
+                    // SAFETY: each row is written by exactly one chunk.
+                    unsafe {
+                        *xptr.get().add(i) = acc;
+                    }
+                }
+            });
         }
         x
     }
 
-    /// Solve `Bᵀ x = v` (backward substitution).
+    /// Solve `Bᵀ x = v` (backward substitution, reverse level order).
     pub fn solve_bt(&self, v: &[f64]) -> Vec<f64> {
+        self.solve_bt_with(v, self.default_exec())
+    }
+
+    /// [`solve_bt`](Self::solve_bt) with an explicit execution mode: a
+    /// gather per output row through the transposed index (`x_j = v_j +
+    /// Σ coef·x_i` over owners `i > j`), walking levels in reverse.
+    pub fn solve_bt_with(&self, v: &[f64], exec: SweepExec<'_>) -> Vec<f64> {
         let n = self.n();
         assert_eq!(v.len(), n);
-        let mut x = v.to_vec();
-        for i in (0..n).rev() {
-            let xi = x[i];
-            for (k, &j) in self.neighbors[i].iter().enumerate() {
-                x[j as usize] += self.a[i][k] * xi;
+        let bt = &self.bt_index;
+        let mut x = vec![0.0; n];
+        if let SweepExec::Seq = exec {
+            for j in (0..n).rev() {
+                let mut acc = v[j];
+                for t in bt.ptr[j]..bt.ptr[j + 1] {
+                    acc += bt.coef[t] * x[bt.row[t] as usize];
+                }
+                x[j] = acc;
             }
+            return x;
+        }
+        let xptr = SyncSlice(x.as_mut_ptr());
+        let xptr = &xptr;
+        for level in self.schedule.levels.iter().rev() {
+            let rows = &level[..];
+            fan(exec, rows.len(), &|start, end| {
+                for &ju in &rows[start..end] {
+                    let j = ju as usize;
+                    let mut acc = v[j];
+                    for t in bt.ptr[j]..bt.ptr[j + 1] {
+                        // SAFETY: owner rows lie in strictly later levels,
+                        // fully written before this level's barrier released.
+                        acc += bt.coef[t] * unsafe { *xptr.get().add(bt.row[t] as usize) };
+                    }
+                    // SAFETY: each row is written by exactly one chunk.
+                    unsafe {
+                        *xptr.get().add(j) = acc;
+                    }
+                }
+            });
         }
         x
     }
@@ -187,74 +574,181 @@ impl ResidualFactor {
 
     /// Row-wise `B X` for an n×k matrix (columns treated independently).
     pub fn mul_b_mat(&self, x: &Mat) -> Mat {
+        self.mul_b_mat_with(x, self.default_exec())
+    }
+
+    /// [`mul_b_mat`](Self::mul_b_mat) with an explicit execution mode.
+    pub fn mul_b_mat_with(&self, x: &Mat, exec: SweepExec<'_>) -> Mat {
         let n = self.n();
         assert_eq!(x.rows(), n);
         let k = x.cols();
         let mut out = x.clone();
-        for i in 0..n {
-            for (t, &j) in self.neighbors[i].iter().enumerate() {
-                let a = self.a[i][t];
-                let (ri, rj) = (i * k, j as usize * k);
-                for c in 0..k {
-                    out.data_mut()[ri + c] -= a * x.data()[rj + c];
+        if k == 0 {
+            return out;
+        }
+        let optr = SyncSlice(out.data_mut().as_mut_ptr());
+        let optr = &optr;
+        fan2(exec, n, k, &|i0, i1, c0, c1| {
+            for i in i0..i1 {
+                let ri = i * k;
+                for (t, &j) in self.neighbors[i].iter().enumerate() {
+                    let a = self.a[i][t];
+                    let rj = j as usize * k;
+                    for c in c0..c1 {
+                        // SAFETY: each (row, column) cell belongs to
+                        // exactly one tile; reads go to the input matrix.
+                        unsafe {
+                            *optr.get().add(ri + c) -= a * x.data()[rj + c];
+                        }
+                    }
                 }
             }
-        }
+        });
         out
     }
 
     /// Row-wise `Bᵀ X` for an n×k matrix.
     pub fn mul_bt_mat(&self, x: &Mat) -> Mat {
+        self.mul_bt_mat_with(x, self.default_exec())
+    }
+
+    /// [`mul_bt_mat`](Self::mul_bt_mat) with an explicit execution mode
+    /// (gather per output row through the transposed index).
+    pub fn mul_bt_mat_with(&self, x: &Mat, exec: SweepExec<'_>) -> Mat {
         let n = self.n();
         assert_eq!(x.rows(), n);
         let k = x.cols();
+        let bt = &self.bt_index;
         let mut out = x.clone();
-        for i in 0..n {
-            for (t, &j) in self.neighbors[i].iter().enumerate() {
-                let a = self.a[i][t];
-                let (ri, rj) = (i * k, j as usize * k);
-                for c in 0..k {
-                    out.data_mut()[rj + c] -= a * x.data()[ri + c];
+        if k == 0 {
+            return out;
+        }
+        let optr = SyncSlice(out.data_mut().as_mut_ptr());
+        let optr = &optr;
+        fan2(exec, n, k, &|j0, j1, c0, c1| {
+            for j in j0..j1 {
+                let rj = j * k;
+                for t in bt.ptr[j]..bt.ptr[j + 1] {
+                    let a = bt.coef[t];
+                    let ri = bt.row[t] as usize * k;
+                    for c in c0..c1 {
+                        // SAFETY: each (row, column) cell belongs to
+                        // exactly one tile; reads go to the input matrix.
+                        unsafe {
+                            *optr.get().add(rj + c) -= a * x.data()[ri + c];
+                        }
+                    }
                 }
             }
-        }
+        });
         out
     }
 
-    /// Row-wise solve `B X = V`.
+    /// Row-wise solve `B X = V` (level-ordered).
     pub fn solve_b_mat(&self, v: &Mat) -> Mat {
+        self.solve_b_mat_with(v, self.default_exec())
+    }
+
+    /// [`solve_b_mat`](Self::solve_b_mat) with an explicit execution mode.
+    pub fn solve_b_mat_with(&self, v: &Mat, exec: SweepExec<'_>) -> Mat {
         let n = self.n();
         assert_eq!(v.rows(), n);
         let k = v.cols();
         let mut x = v.clone();
-        for i in 0..n {
-            for (t, &j) in self.neighbors[i].iter().enumerate() {
-                let a = self.a[i][t];
-                let (ri, rj) = (i * k, j as usize * k);
-                for c in 0..k {
-                    let add = a * x.data()[rj + c];
-                    x.data_mut()[ri + c] += add;
+        if k == 0 {
+            return x;
+        }
+        if let SweepExec::Seq = exec {
+            for i in 0..n {
+                for (t, &j) in self.neighbors[i].iter().enumerate() {
+                    let a = self.a[i][t];
+                    let (ri, rj) = (i * k, j as usize * k);
+                    for c in 0..k {
+                        let add = a * x.data()[rj + c];
+                        x.data_mut()[ri + c] += add;
+                    }
                 }
             }
+            return x;
+        }
+        let xptr = SyncSlice(x.data_mut().as_mut_ptr());
+        let xptr = &xptr;
+        for level in &self.schedule.levels {
+            let rows = &level[..];
+            fan2(exec, rows.len(), k, &|i0, i1, c0, c1| {
+                for &iu in &rows[i0..i1] {
+                    let i = iu as usize;
+                    let ri = i * k;
+                    for (t, &j) in self.neighbors[i].iter().enumerate() {
+                        let a = self.a[i][t];
+                        let rj = j as usize * k;
+                        for c in c0..c1 {
+                            // SAFETY: neighbor rows lie in earlier levels
+                            // (fully written); each (row, column) cell of
+                            // this level belongs to exactly one tile.
+                            unsafe {
+                                *xptr.get().add(ri + c) += a * *xptr.get().add(rj + c);
+                            }
+                        }
+                    }
+                }
+            });
         }
         x
     }
 
-    /// Row-wise solve `Bᵀ X = V`.
+    /// Row-wise solve `Bᵀ X = V` (reverse level order).
     pub fn solve_bt_mat(&self, v: &Mat) -> Mat {
+        self.solve_bt_mat_with(v, self.default_exec())
+    }
+
+    /// [`solve_bt_mat`](Self::solve_bt_mat) with an explicit execution
+    /// mode (gather per output row through the transposed index).
+    pub fn solve_bt_mat_with(&self, v: &Mat, exec: SweepExec<'_>) -> Mat {
         let n = self.n();
         assert_eq!(v.rows(), n);
         let k = v.cols();
+        let bt = &self.bt_index;
         let mut x = v.clone();
-        for i in (0..n).rev() {
-            for (t, &j) in self.neighbors[i].iter().enumerate() {
-                let a = self.a[i][t];
-                let (ri, rj) = (i * k, j as usize * k);
-                for c in 0..k {
-                    let add = a * x.data()[ri + c];
-                    x.data_mut()[rj + c] += add;
+        if k == 0 {
+            return x;
+        }
+        if let SweepExec::Seq = exec {
+            for j in (0..n).rev() {
+                let rj = j * k;
+                for t in bt.ptr[j]..bt.ptr[j + 1] {
+                    let a = bt.coef[t];
+                    let ri = bt.row[t] as usize * k;
+                    for c in 0..k {
+                        let add = a * x.data()[ri + c];
+                        x.data_mut()[rj + c] += add;
+                    }
                 }
             }
+            return x;
+        }
+        let xptr = SyncSlice(x.data_mut().as_mut_ptr());
+        let xptr = &xptr;
+        for level in self.schedule.levels.iter().rev() {
+            let rows = &level[..];
+            fan2(exec, rows.len(), k, &|j0, j1, c0, c1| {
+                for &ju in &rows[j0..j1] {
+                    let j = ju as usize;
+                    let rj = j * k;
+                    for t in bt.ptr[j]..bt.ptr[j + 1] {
+                        let a = bt.coef[t];
+                        let ri = bt.row[t] as usize * k;
+                        for c in c0..c1 {
+                            // SAFETY: owner rows lie in later levels (fully
+                            // written); each (row, column) cell of this
+                            // level belongs to exactly one tile.
+                            unsafe {
+                                *xptr.get().add(rj + c) += a * *xptr.get().add(ri + c);
+                            }
+                        }
+                    }
+                }
+            });
         }
         x
     }
@@ -282,6 +776,18 @@ impl ResidualFactor {
             .map(|(zi, di)| zi / di.sqrt())
             .collect();
         self.mul_bt(&w)
+    }
+
+    /// Densify `B = I − A` (tests / small n only).
+    pub fn dense_b(&self) -> Mat {
+        let n = self.n();
+        let mut b = Mat::eye(n);
+        for i in 0..n {
+            for (k, &j) in self.neighbors[i].iter().enumerate() {
+                b.set(i, j as usize, -self.a[i][k]);
+            }
+        }
+        b
     }
 
     /// Densify `S = Bᵀ D⁻¹ B` (tests / small n only).
@@ -525,5 +1031,60 @@ mod tests {
         }
         acc.scale(1.0 / reps as f64);
         assert!(acc.max_abs_diff(&s) < 0.1, "diff {}", acc.max_abs_diff(&s));
+    }
+
+    #[test]
+    fn level_schedule_of_chain_and_empty_graphs() {
+        // Empty graph: one level holding every row.
+        let empty: Vec<Vec<u32>> = vec![vec![]; 5];
+        let sched = LevelSchedule::from_neighbors(&empty);
+        assert_eq!(sched.num_levels(), 1);
+        assert_eq!(sched.levels[0], vec![0, 1, 2, 3, 4]);
+        assert_eq!(sched.max_width(), 5);
+        // Chain N(i) = {i-1}: n levels of one row each.
+        let chain: Vec<Vec<u32>> = (0..5)
+            .map(|i: u32| if i == 0 { vec![] } else { vec![i - 1] })
+            .collect();
+        let sched = LevelSchedule::from_neighbors(&chain);
+        assert_eq!(sched.num_levels(), 5);
+        for (l, rows) in sched.levels.iter().enumerate() {
+            assert_eq!(rows.as_slice(), &[l as u32]);
+        }
+        // Empty factor: zero levels.
+        assert_eq!(LevelSchedule::from_neighbors(&[]).num_levels(), 0);
+    }
+
+    #[test]
+    fn transposed_index_matches_neighbors() {
+        let neighbors: Vec<Vec<u32>> = vec![vec![], vec![0], vec![0, 1], vec![1]];
+        let a: Vec<Vec<f64>> = vec![vec![], vec![2.0], vec![3.0, 4.0], vec![5.0]];
+        let bt = TransposedIndex::build(&neighbors, &a);
+        assert_eq!(bt.ptr, vec![0, 2, 4, 4, 4]);
+        // Column 0 owned by rows 1 (coef 2) and 2 (coef 3), ascending.
+        assert_eq!(&bt.row[0..2], &[1, 2]);
+        assert_eq!(&bt.coef[0..2], &[2.0, 3.0]);
+        // Column 1 owned by rows 2 (coef 4) and 3 (coef 5).
+        assert_eq!(&bt.row[2..4], &[2, 3]);
+        assert_eq!(&bt.coef[2..4], &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn dense_b_matches_kernels() {
+        let n = 9;
+        let oracle = DenseOracle { cov: toy_cov(n) };
+        let nb: Vec<Vec<u32>> = (0..n)
+            .map(|i| (i.saturating_sub(3)..i).map(|j| j as u32).collect())
+            .collect();
+        let f = ResidualFactor::build(&oracle, nb, 0.05, 0.0);
+        let b = f.dense_b();
+        let v: Vec<f64> = (0..n).map(|i| (i as f64 * 0.9).sin()).collect();
+        let want = b.matvec(&v);
+        for (a, w) in f.mul_b(&v).iter().zip(&want) {
+            assert!((a - w).abs() < 1e-12);
+        }
+        let want = b.matvec_t(&v);
+        for (a, w) in f.mul_bt(&v).iter().zip(&want) {
+            assert!((a - w).abs() < 1e-12);
+        }
     }
 }

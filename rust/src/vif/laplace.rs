@@ -89,6 +89,11 @@ impl<'a> LinOp for OpWinvPlusCov<'a> {
 }
 
 /// Per-`W` solver state: rebuilt whenever `W` changes (each Newton step).
+///
+/// In iterative mode all `B`/`Bᵀ` sweeps — the VIF operator applies, the
+/// VIFDU preconditioner, and the batched `solve_batch` path — run on the
+/// residual factor's level-scheduled kernels (see the `vecchia` module
+/// docs), so Newton steps on large `n` parallelize deterministically.
 pub struct WSolver<'a> {
     s: &'a VifStructure,
     w: Vec<f64>,

@@ -334,7 +334,9 @@ impl VifStructure {
 
     /// Column-blocked `Σ̃_†⁻¹ V` (n×k, one vector per column): one sparse
     /// B/Bᵀ sweep over all columns and the Woodbury core applied to the
-    /// block in a single `solve_mat`.
+    /// block in a single `solve_mat`. The `B` sweeps are level-scheduled
+    /// (`vecchia` module docs) — for large `n` each dependency level fans
+    /// out over the worker pool, tiled over column blocks.
     pub fn apply_sigma_dagger_inv_batch(&self, v: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(v.rows(), n);

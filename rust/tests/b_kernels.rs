@@ -1,0 +1,215 @@
+//! Dense-oracle harness for the eight Vecchia `B` kernels and the
+//! determinism contract of the level-scheduled sweeps: every kernel must
+//! match a dense matrix product / unit-triangular solve on randomized
+//! neighbor graphs (empty, chain, saturated, irregular), `_mat` variants
+//! included, and the scheduled path must be bit-identical for worker
+//! pools of size 1, 2, and 8.
+
+use vifgp::rng::Rng;
+use vifgp::testing::{
+    assert_b_kernels_match_dense, assert_b_kernels_pool_size_invariant, random_neighbor_graph,
+    random_residual_factor,
+};
+use vifgp::vecchia::{LevelSchedule, ResidualFactor};
+
+/// `k = 0`: no conditioning at all (B = I).
+fn graph_empty(n: usize) -> Vec<Vec<u32>> {
+    vec![vec![]; n]
+}
+
+/// `k = 1` chain: `N(i) = {i−1}` — the worst case for the schedule
+/// (n levels of one row each).
+fn graph_chain(n: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|i| if i == 0 { vec![] } else { vec![i as u32 - 1] })
+        .collect()
+}
+
+/// Saturated `k = i`: `N(i) = {0..i−1}` (dense lower triangle).
+fn graph_saturated(n: usize) -> Vec<Vec<u32>> {
+    (0..n).map(|i| (0..i as u32).collect()).collect()
+}
+
+/// Irregular: a random-size random subset of earlier rows per row
+/// (the shared `testing` generator with degree ≤ 7).
+fn graph_irregular(n: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    random_neighbor_graph(rng, n, 7)
+}
+
+/// Blocked graph: rows come in blocks of `width`, each row conditioning
+/// on up to 6 random rows of the previous block — the schedule is
+/// exactly `n / width` levels of `width` rows each, wide enough for the
+/// pool path to fan genuinely concurrent jobs per level.
+fn graph_blocked(n: usize, width: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|i| {
+            let block = i / width;
+            if block == 0 {
+                return vec![];
+            }
+            let lo = (block - 1) * width;
+            let mut picked = std::collections::BTreeSet::new();
+            for _ in 0..6 {
+                picked.insert((lo + rng.below(width)) as u32);
+            }
+            picked.into_iter().collect()
+        })
+        .collect()
+}
+
+/// Ragged blocked graph: like [`graph_blocked`] but with one level per
+/// entry of `widths`, so the schedule mixes levels just above, just
+/// below, and far from the fan-out work gate — chunk boundaries land at
+/// irregular offsets.
+fn graph_ragged(widths: &[usize], rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = Vec::new();
+    let mut prev_lo = 0usize;
+    let mut prev_w = 0usize;
+    for &w in widths {
+        let lo = out.len();
+        for _ in 0..w {
+            if prev_w == 0 {
+                out.push(vec![]);
+                continue;
+            }
+            let mut picked = std::collections::BTreeSet::new();
+            for _ in 0..6 {
+                picked.insert((prev_lo + rng.below(prev_w)) as u32);
+            }
+            out.push(picked.into_iter().collect());
+        }
+        prev_lo = lo;
+        prev_w = w;
+    }
+    out
+}
+
+const MAT_COLS: [usize; 3] = [1, 3, 17];
+
+#[test]
+fn dense_oracle_empty_graph() {
+    let mut rng = Rng::seed_from(11);
+    for n in [1usize, 13, 47] {
+        let f = random_residual_factor(&mut rng, graph_empty(n));
+        assert_b_kernels_match_dense(&f, &mut rng, &MAT_COLS, 1e-11);
+    }
+}
+
+#[test]
+fn dense_oracle_chain_graph() {
+    let mut rng = Rng::seed_from(12);
+    for n in [1usize, 13, 47] {
+        let f = random_residual_factor(&mut rng, graph_chain(n));
+        assert_b_kernels_match_dense(&f, &mut rng, &MAT_COLS, 1e-11);
+    }
+}
+
+#[test]
+fn dense_oracle_saturated_graph() {
+    let mut rng = Rng::seed_from(13);
+    for n in [1usize, 13, 47] {
+        let f = random_residual_factor(&mut rng, graph_saturated(n));
+        assert_b_kernels_match_dense(&f, &mut rng, &MAT_COLS, 1e-10);
+    }
+}
+
+#[test]
+fn dense_oracle_irregular_graphs() {
+    let mut rng = Rng::seed_from(14);
+    for n in [1usize, 13, 30, 61] {
+        let nb = graph_irregular(n, &mut rng);
+        let f = random_residual_factor(&mut rng, nb);
+        assert_b_kernels_match_dense(&f, &mut rng, &MAT_COLS, 1e-10);
+    }
+}
+
+#[test]
+fn dense_oracle_with_forced_scheduling_threshold() {
+    // sched_min_rows = 0 routes the *plain* kernel entry points through
+    // the scheduled path even for tiny factors; they must still match.
+    let mut rng = Rng::seed_from(15);
+    let nb = graph_irregular(40, &mut rng);
+    let mut f = random_residual_factor(&mut rng, nb);
+    f.sched_min_rows = 0;
+    let b = f.dense_b();
+    let v = rng.normal_vec(40);
+    let got = f.mul_b(&v);
+    let want = b.matvec(&v);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-11 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+    let got = f.solve_b(&f.mul_b(&v));
+    for (g, w) in got.iter().zip(&v) {
+        assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn scheduled_kernels_bit_identical_across_pool_sizes() {
+    let mut rng = Rng::seed_from(16);
+    for n in [33usize, 80] {
+        for nb in [
+            graph_chain(n),
+            graph_saturated(n),
+            graph_irregular(n, &mut rng),
+        ] {
+            let f = random_residual_factor(&mut rng, nb);
+            assert_b_kernels_pool_size_invariant(&f, &mut rng, &[1, 2, 8], 5);
+        }
+    }
+}
+
+#[test]
+fn scheduled_kernels_bit_identical_on_wide_levels() {
+    // 3 levels of 4096 rows each: wide enough that every sweep clears
+    // the fan-out work gate and each level splits into multiple jobs.
+    let mut rng = Rng::seed_from(17);
+    let nb = graph_blocked(3 * 4096, 4096, &mut rng);
+    let f = random_residual_factor(&mut rng, nb);
+    assert_b_kernels_pool_size_invariant(&f, &mut rng, &[1, 2, 8], 3);
+}
+
+#[test]
+fn scheduled_kernels_bit_identical_on_ragged_levels() {
+    // Level widths straddle the fan-out work gate (4096) and leave
+    // remainder chunks at irregular offsets: 4500 fans with a ragged
+    // tail chunk, 300/700 run inline, 4099 is barely past the gate.
+    let mut rng = Rng::seed_from(18);
+    let nb = graph_ragged(&[4500, 300, 4099, 700], &mut rng);
+    let f = random_residual_factor(&mut rng, nb);
+    assert_b_kernels_pool_size_invariant(&f, &mut rng, &[1, 2, 8], 5);
+}
+
+#[test]
+fn mul_bt_keeps_signed_zero_semantics_of_dense_product() {
+    // The seed's `vi == 0.0` early-continue skipped −0.0 inputs, leaving
+    // out[0] at −0.0 where the dense Bᵀ product yields +0.0. The gather
+    // through the transposed index must match the dense result bitwise.
+    let f = ResidualFactor::from_parts(
+        vec![vec![], vec![0u32]],
+        vec![vec![], vec![1.0]],
+        vec![1.0, 1.0],
+    );
+    let v = [-0.0f64, -0.0];
+    let got = f.mul_bt(&v);
+    let want = f.dense_b().t().matvec(&v);
+    assert_eq!(
+        got[0].to_bits(),
+        want[0].to_bits(),
+        "mul_bt signed zero: {} vs dense {}",
+        got[0],
+        want[0]
+    );
+    assert!(got[0] == 0.0 && got[0].is_sign_positive());
+}
+
+#[test]
+fn schedule_depth_matches_graph_family() {
+    let n = 24;
+    assert_eq!(LevelSchedule::from_neighbors(&graph_empty(n)).num_levels(), 1);
+    assert_eq!(LevelSchedule::from_neighbors(&graph_chain(n)).num_levels(), n);
+    assert_eq!(
+        LevelSchedule::from_neighbors(&graph_saturated(n)).num_levels(),
+        n
+    );
+}

@@ -118,6 +118,32 @@ fn threaded_batch_order_does_not_change_results() {
 }
 
 #[test]
+fn batch_matches_sequential_with_level_scheduling_forced() {
+    // Forcing sched_min_rows = 0 routes every B sweep inside the VIF
+    // operator and the VIFDU preconditioner through the level-scheduled
+    // pool path; batch/sequential equivalence must be unaffected.
+    let n = 60;
+    let k = 6;
+    let (mut s, w) = setup(n);
+    s.resid.sched_min_rows = 0;
+    let op = OpWPlusPrec { s: &s, w: &w };
+    let pre = VifduPrecond::new(&s, &w);
+    let b = rhs(n, k);
+    let res = pcg_batch_with_min(&op, &pre, &b, 1e-8, 5, 500, true);
+    for j in 0..k {
+        let want = pcg_with_min(&op, &pre, &b.col(j), 1e-8, 5, 500, true);
+        assert_eq!(res.columns[j].iters, want.iters, "col {j}: iters differ");
+        assert_eq!(res.columns[j].converged, want.converged, "col {j}");
+        for (g, wv) in res.x.col(j).iter().zip(&want.x) {
+            assert!(
+                (g - wv).abs() < 1e-8 * (1.0 + wv.abs()),
+                "col {j}: scheduled solution {g} vs {wv}"
+            );
+        }
+    }
+}
+
+#[test]
 fn batched_slq_matches_sequential_reference_on_vif_system() {
     let n = 80;
     let (s, w) = setup(n);

@@ -4,8 +4,9 @@
 use vifgp::kernels::{ArdMatern, Smoothness};
 use vifgp::linalg::{CholeskyFactor, Mat};
 use vifgp::rng::Rng;
-use vifgp::testing::{check, random_points};
+use vifgp::testing::{check, random_neighbor_graph, random_points, random_residual_factor};
 use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vecchia::LevelSchedule;
 use vifgp::vif::{select_inducing, select_neighbors, VifStructure};
 
 fn random_kernel(rng: &mut Rng, d: usize) -> ArdMatern {
@@ -170,6 +171,84 @@ fn prop_covertree_neighbors_match_brute_force() {
                 for (a, b) in db.iter().zip(&dc) {
                     if (a - b).abs() > 1e-10 {
                         return Err(format!("i={i}: corr {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_level_schedule_is_topological_partition() {
+    check(
+        "level schedule covers rows exactly once; neighbors strictly earlier",
+        40,
+        101,
+        |rng| {
+            let n = 1 + rng.below(70);
+            random_neighbor_graph(rng, n, 8)
+        },
+        |nb| {
+            let n = nb.len();
+            let sched = LevelSchedule::from_neighbors(nb);
+            let mut level_of = vec![usize::MAX; n];
+            for (l, rows) in sched.levels.iter().enumerate() {
+                if rows.is_empty() {
+                    return Err(format!("level {l} is empty"));
+                }
+                for &iu in rows {
+                    let i = iu as usize;
+                    if i >= n {
+                        return Err(format!("row {i} out of range"));
+                    }
+                    if level_of[i] != usize::MAX {
+                        return Err(format!("row {i} appears in two levels"));
+                    }
+                    level_of[i] = l;
+                }
+            }
+            for (i, &l) in level_of.iter().enumerate() {
+                if l == usize::MAX {
+                    return Err(format!("row {i} missing from the schedule"));
+                }
+                for &j in &nb[i] {
+                    if level_of[j as usize] >= l {
+                        return Err(format!(
+                            "row {i} (level {l}) has neighbor {j} in level {} (not earlier)",
+                            level_of[j as usize]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_solve_is_left_inverse_of_mul() {
+    // solve_b(mul_b(v)) == v and solve_bt(mul_bt(v)) == v to machine
+    // precision, with the scheduled path forced on (sched_min_rows = 0).
+    check(
+        "B solves invert B products to machine precision",
+        30,
+        67,
+        |rng| {
+            let n = 1 + rng.below(70);
+            let nb = random_neighbor_graph(rng, n, 8);
+            let mut f = random_residual_factor(rng, nb);
+            f.sched_min_rows = 0;
+            let v = rng.normal_vec(n);
+            (f, v)
+        },
+        |(f, v)| {
+            let fwd = f.solve_b(&f.mul_b(v));
+            let bwd = f.solve_bt(&f.mul_bt(v));
+            for (which, got) in [("B", &fwd), ("Bᵀ", &bwd)] {
+                for (g, w) in got.iter().zip(v) {
+                    if (g - w).abs() > 1e-11 * (1.0 + w.abs()) {
+                        return Err(format!("{which} roundtrip: {g} vs {w}"));
                     }
                 }
             }
