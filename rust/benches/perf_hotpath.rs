@@ -210,4 +210,128 @@ fn main() {
             t_mat_seq / t_mat_sch.max(1e-9)
         );
     }
+
+    // 10. Panelized vs scalar residual-covariance assembly: B/D build,
+    // Appendix-A gradient pass, and cover-tree neighbor search, each
+    // against the scalar per-pair baseline (the `ResidualCov`/`Metric`
+    // trait default impls, forced through the Scalarized wrappers).
+    // Results must agree to ≤1e-12; writes machine-readable
+    // BENCH_assembly.json (override the path with VIFGP_BENCH_JSON).
+    {
+        use std::sync::Mutex;
+        use vifgp::testing::{ScalarizedMetric, ScalarizedOracle};
+        use vifgp::vecchia::neighbors::covertree_ordered_knn;
+        use vifgp::vecchia::ResidualCov;
+        use vifgp::vif::{CorrelationMetric, GradAux};
+
+        // Residual B/D build.
+        let scalar_oracle = ScalarizedOracle(&oracle);
+        let (f_sc, t_build_sc) =
+            common::timed(|| ResidualFactor::build(&scalar_oracle, nb.clone(), 0.05, 1e-10));
+        let (f_pn, t_build_pn) =
+            common::timed(|| ResidualFactor::build(&oracle, nb.clone(), 0.05, 1e-10));
+        let mut build_diff = 0.0f64;
+        for i in 0..n {
+            build_diff = build_diff.max((f_pn.d[i] - f_sc.d[i]).abs());
+            for (a, b) in f_pn.a[i].iter().zip(&f_sc.a[i]) {
+                build_diff = build_diff.max((a - b).abs());
+            }
+        }
+        assert!(build_diff <= 1e-12, "panelized build diverged: {build_diff:.3e}");
+
+        // Appendix-A gradient pass.
+        let aux = GradAux::build(&x, &kernel, &lr);
+        let goracle = VifResidualOracle {
+            kernel: &kernel,
+            x: &x,
+            lr: Some(&lr),
+            grad_aux: Some(&aux),
+            extra_params: 1,
+        };
+        let gscalar = ScalarizedOracle(&goracle);
+        let np = goracle.num_params();
+        let mvx = nb.iter().map(Vec::len).max().unwrap_or(0);
+        let run_grads = |orc: &dyn ResidualCov| -> (Vec<f64>, Vec<f64>) {
+            let dd = Mutex::new(vec![0.0; n * np]);
+            let da = Mutex::new(vec![0.0; n * np * mvx]);
+            f_pn.grads(orc, 0.05, Some(np - 1), 1e-10, &|i, ddi, dai| {
+                dd.lock().unwrap()[i * np..(i + 1) * np].copy_from_slice(ddi);
+                let mut a = da.lock().unwrap();
+                for (p, row) in dai.iter().enumerate() {
+                    let base = (i * np + p) * mvx;
+                    a[base..base + row.len()].copy_from_slice(row);
+                }
+            });
+            (dd.into_inner().unwrap(), da.into_inner().unwrap())
+        };
+        let ((dd_sc, da_sc), t_grad_sc) = common::timed(|| run_grads(&gscalar));
+        let ((dd_pn, da_pn), t_grad_pn) = common::timed(|| run_grads(&goracle));
+        let mut grad_diff = 0.0f64;
+        for (a, b) in dd_pn.iter().zip(&dd_sc).chain(da_pn.iter().zip(&da_sc)) {
+            grad_diff = grad_diff.max((a - b).abs());
+        }
+        assert!(grad_diff <= 1e-12, "panelized gradients diverged: {grad_diff:.3e}");
+
+        // Cover-tree neighbor search (build + all queries).
+        let metric = CorrelationMetric::new(&kernel, &x, Some(&lr));
+        let smetric = ScalarizedMetric(&metric);
+        let (nb_sc, t_nb_sc) = common::timed(|| covertree_ordered_knn(n, m_v, &smetric));
+        let (nb_pn, t_nb_pn) = common::timed(|| covertree_ordered_knn(n, m_v, &metric));
+        assert_eq!(nb_pn, nb_sc, "batched metric changed the neighbor sets");
+
+        let sp_build = t_build_sc / t_build_pn.max(1e-9);
+        let sp_grad = t_grad_sc / t_grad_pn.max(1e-9);
+        let sp_nb = t_nb_sc / t_nb_pn.max(1e-9);
+        let sp_asm = (t_build_sc + t_grad_sc) / (t_build_pn + t_grad_pn).max(1e-9);
+        println!(
+            "panel B/D build:   scalar {t_build_sc:.3}s  panel {t_build_pn:.3}s  speedup {sp_build:.2}x  (max diff {build_diff:.2e})"
+        );
+        println!(
+            "panel grad pass:   scalar {t_grad_sc:.3}s  panel {t_grad_pn:.3}s  speedup {sp_grad:.2}x  (max diff {grad_diff:.2e})"
+        );
+        println!(
+            "panel kNN search:  scalar {t_nb_sc:.3}s  panel {t_nb_pn:.3}s  speedup {sp_nb:.2}x"
+        );
+        println!("assembly+gradient speedup: {sp_asm:.2}x");
+
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath stage 10: panelized residual-covariance assembly\",\n",
+                "  \"config\": {{\"n\": {n}, \"d\": {d}, \"m\": {m}, \"m_v\": {m_v}}},\n",
+                "  \"stages\": {{\n",
+                "    \"residual_build\": {{\"scalar_s\": {bs:.6}, \"panel_s\": {bp:.6}, ",
+                "\"speedup\": {sb:.3}, \"max_abs_diff\": {bd:.3e}}},\n",
+                "    \"gradient_pass\": {{\"scalar_s\": {gs:.6}, \"panel_s\": {gp:.6}, ",
+                "\"speedup\": {sg:.3}, \"max_abs_diff\": {gd:.3e}}},\n",
+                "    \"neighbor_search\": {{\"scalar_s\": {ns:.6}, \"panel_s\": {npn:.6}, ",
+                "\"speedup\": {sn:.3}}}\n",
+                "  }},\n",
+                "  \"assembly_plus_gradient_speedup\": {sa:.3}\n",
+                "}}\n"
+            ),
+            n = n,
+            d = d,
+            m = m,
+            m_v = m_v,
+            bs = t_build_sc,
+            bp = t_build_pn,
+            sb = sp_build,
+            bd = build_diff,
+            gs = t_grad_sc,
+            gp = t_grad_pn,
+            sg = sp_grad,
+            gd = grad_diff,
+            ns = t_nb_sc,
+            npn = t_nb_pn,
+            sn = sp_nb,
+            sa = sp_asm,
+        );
+        let path =
+            std::env::var("VIFGP_BENCH_JSON").unwrap_or_else(|_| "BENCH_assembly.json".into());
+        match std::fs::write(&path, json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
 }

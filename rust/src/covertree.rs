@@ -11,10 +11,48 @@
 //! * **Bounded metric** — the correlation distance `d_c ∈ [0, 1]`, so the
 //!   root radius is `R_max = 1` and level `l` uses `R_l = 2^{−l}`.
 //!
-//! The metric is supplied as a closure over point indices, which lets the
-//! same tree code serve the residual-process correlation metric of the
-//! VIF approximation and the plain kernel-correlation metric of a
-//! standalone Vecchia approximation.
+//! The metric is supplied through the [`Metric`] trait over point
+//! indices, which lets the same tree code serve the residual-process
+//! correlation metric of the VIF approximation and the plain
+//! kernel-correlation metric of a standalone Vecchia approximation.
+//! Plain closures `Fn(usize, usize) -> f64 + Sync` implement [`Metric`]
+//! automatically (scalar path only).
+//!
+//! # Batched metric evaluation
+//!
+//! Both tree construction (partitioning a cover set against a new knot)
+//! and the kNN query (scoring a level's candidate set) evaluate one
+//! fixed point against many candidates. [`Metric::dist_batch`] exposes
+//! that shape so structured metrics can amortize per-query work: the
+//! VIF correlation metric (`vif::CorrelationMetric`) fetches `x_i`/`v_i`
+//! once per query, gathers the candidate inputs into a panel, and
+//! evaluates the whole batch through the `kernels` panel evaluators plus
+//! length-`m` dot-product corrections — no scalar per-pair `rho` calls
+//! remain in the search hot loop. The default `dist_batch` is the scalar
+//! loop, so closure metrics keep working unchanged.
+
+/// Metric over point indices `0..n`, bounded by 1, with an optional
+/// batched evaluation path (see the module docs).
+pub trait Metric: Sync {
+    /// Distance between points `i` and `j` (symmetric, in `[0, 1]`).
+    fn dist(&self, i: usize, j: usize) -> f64;
+
+    /// Fill `out[t] = dist(i, cand[t])`. Override to amortize per-query
+    /// work over the candidate batch; the default is the scalar loop.
+    fn dist_batch(&self, i: usize, cand: &[u32], out: &mut [f64]) {
+        debug_assert_eq!(cand.len(), out.len());
+        for (o, &j) in out.iter_mut().zip(cand) {
+            *o = self.dist(i, j as usize);
+        }
+    }
+}
+
+/// Every `Fn(usize, usize) -> f64 + Sync` is a scalar-only [`Metric`].
+impl<F: Fn(usize, usize) -> f64 + Sync + ?Sized> Metric for F {
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self(i, j)
+    }
+}
 
 /// Cover tree over points `0..n` under a metric bounded by 1.
 pub struct CoverTree {
@@ -33,6 +71,10 @@ pub struct QueryScratch {
     stamp: Vec<u32>,
     /// membership marker for candidate dedup, same stamping scheme
     member: Vec<u32>,
+    /// not-yet-cached candidates awaiting one `dist_batch` call
+    pend: Vec<u32>,
+    /// batched-distance output buffer matching `pend`
+    dbuf: Vec<f64>,
     cur: u32,
 }
 
@@ -42,15 +84,19 @@ impl QueryScratch {
             dist: vec![0.0; n],
             stamp: vec![0; n],
             member: vec![0; n],
+            pend: Vec::new(),
+            dbuf: Vec::new(),
             cur: 0,
         }
     }
 }
 
 impl CoverTree {
-    /// Build the tree (Algorithm 3). `dist(i, j)` must be symmetric,
-    /// nonnegative and `≤ 1`.
-    pub fn build(n: usize, dist: &(dyn Fn(usize, usize) -> f64 + Sync)) -> Self {
+    /// Build the tree (Algorithm 3). The metric must be symmetric,
+    /// nonnegative and `≤ 1`. Cover-set partitioning scores every
+    /// remaining point against the freshly extracted knot in one
+    /// [`Metric::dist_batch`] call.
+    pub fn build(n: usize, metric: &dyn Metric) -> Self {
         let mut children: Vec<Vec<u32>> = vec![vec![]; n];
         if n == 0 {
             return CoverTree { children, depth: 0 };
@@ -60,6 +106,7 @@ impl CoverTree {
         let mut level_sets: Vec<(u32, Vec<u32>)> = vec![(0, (1..n as u32).collect())];
         let mut depth = 1usize;
         let mut level = 1usize;
+        let mut dbuf: Vec<f64> = Vec::new();
         while !level_sets.is_empty() {
             let r_l = 0.5f64.powi(level as i32);
             let mut next_level: Vec<(u32, Vec<u32>)> = Vec::new();
@@ -70,10 +117,12 @@ impl CoverTree {
                     children[knot as usize].push(new_knot);
                     let rest = &cover[1..];
                     // Partition remaining points by distance to the new knot.
+                    dbuf.resize(rest.len(), 0.0);
+                    metric.dist_batch(new_knot as usize, rest, &mut dbuf);
                     let mut mine: Vec<u32> = Vec::new();
                     let mut keep: Vec<u32> = Vec::with_capacity(rest.len());
-                    for &s in rest {
-                        if dist(s as usize, new_knot as usize) <= r_l {
+                    for (t, &s) in rest.iter().enumerate() {
+                        if dbuf[t] <= r_l {
                             mine.push(s);
                         } else {
                             keep.push(s);
@@ -101,23 +150,20 @@ impl CoverTree {
     /// Ordered m_v-nearest-neighbor query (Algorithm 4): the `m_v`
     /// closest points with index `< i` under the tree's metric.
     /// The returned indices are unsorted.
-    pub fn knn_ordered(
-        &self,
-        i: usize,
-        m_v: usize,
-        dist: &dyn Fn(usize, usize) -> f64,
-    ) -> Vec<u32> {
+    pub fn knn_ordered(&self, i: usize, m_v: usize, metric: &dyn Metric) -> Vec<u32> {
         let mut scratch = QueryScratch::new(self.children.len());
-        self.knn_ordered_with(i, m_v, dist, &mut scratch)
+        self.knn_ordered_with(i, m_v, metric, &mut scratch)
     }
 
     /// [`Self::knn_ordered`] with caller-provided scratch buffers (the
     /// batch path reuses one `QueryScratch` per worker — see §Perf).
+    /// Each level's not-yet-cached candidates are scored through a
+    /// single [`Metric::dist_batch`] call.
     pub fn knn_ordered_with(
         &self,
         i: usize,
         m_v: usize,
-        dist: &dyn Fn(usize, usize) -> f64,
+        metric: &dyn Metric,
         scratch: &mut QueryScratch,
     ) -> Vec<u32> {
         if i == 0 || m_v == 0 {
@@ -136,17 +182,6 @@ impl CoverTree {
         }
         let cur = scratch.cur;
         let iu = i as u32;
-        let dist_to = |s: u32, scratch: &mut QueryScratch| -> f64 {
-            let si = s as usize;
-            if scratch.stamp[si] == cur {
-                scratch.dist[si]
-            } else {
-                let d = dist(si, i);
-                scratch.stamp[si] = cur;
-                scratch.dist[si] = d;
-                d
-            }
-        };
         let mut q: Vec<u32> = vec![0]; // root = point 0 (< i always here)
         let mut dists: Vec<f64> = Vec::new();
         let mut sorted: Vec<f64> = Vec::new();
@@ -174,9 +209,25 @@ impl CoverTree {
             for &s in &c {
                 scratch.member[s as usize] = cur.wrapping_sub(1);
             }
-            // m_v-th smallest distance in C (1 if |C| < m_v).
+            // Score the candidates: one batched metric call for every
+            // candidate not already in the stamp-versioned cache.
+            scratch.pend.clear();
+            for &s in &c {
+                if scratch.stamp[s as usize] != cur {
+                    scratch.pend.push(s);
+                }
+            }
+            if !scratch.pend.is_empty() {
+                scratch.dbuf.resize(scratch.pend.len(), 0.0);
+                metric.dist_batch(i, &scratch.pend, &mut scratch.dbuf);
+                for (t, &s) in scratch.pend.iter().enumerate() {
+                    scratch.stamp[s as usize] = cur;
+                    scratch.dist[s as usize] = scratch.dbuf[t];
+                }
+            }
             dists.clear();
-            dists.extend(c.iter().map(|&s| dist_to(s, scratch)));
+            dists.extend(c.iter().map(|&s| scratch.dist[s as usize]));
+            // m_v-th smallest distance in C (1 if |C| < m_v).
             let d_mv = if dists.len() < m_v {
                 1.0
             } else {
@@ -196,10 +247,11 @@ impl CoverTree {
                 break;
             }
         }
-        // Brute force the m_v nearest within the candidate set.
+        // Brute force the m_v nearest within the candidate set (every
+        // survivor's distance is cached — it was scored this level).
         let mut cand: Vec<(f64, u32)> = q
             .into_iter()
-            .map(|s| (dist_to(s, scratch), s))
+            .map(|s| (scratch.dist[s as usize], s))
             .collect();
         if cand.len() > m_v {
             cand.select_nth_unstable_by(m_v - 1, |a, b| a.0.total_cmp(&b.0));

@@ -11,8 +11,8 @@ use crate::kernels::{ArdMatern, Smoothness};
 use crate::likelihoods::{sigmoid, Likelihood};
 use crate::linalg::{CholeskyFactor, Mat};
 use crate::rng::Rng;
-use crate::vecchia::{neighbors, ResidualCov, ResidualFactor};
-use crate::vif::VifResidualOracle;
+use crate::vecchia::{neighbors, ResidualFactor};
+use crate::vif::{CorrelationMetric, VifResidualOracle};
 
 /// Uniform inputs on the unit hypercube (paper §7).
 pub fn uniform_inputs(rng: &mut Rng, n: usize, d: usize) -> Mat {
@@ -50,11 +50,11 @@ pub fn simulate_latent_gp(rng: &mut Rng, x: &Mat, kernel: &ArdMatern) -> Vec<f64
             grad_aux: None,
             extra_params: 0,
         };
-        let dist = |i: usize, j: usize| -> f64 {
-            let r: f64 = oracle.rho(i, j) / kernel.variance;
-            (1.0 - r.abs()).max(0.0_f64).sqrt()
-        };
-        let nb = neighbors::covertree_ordered_knn(n, 40, &dist);
+        // With no low-rank part the correlation metric reduces to
+        // d(i,j) = √(1 − |k_ij/σ₁²|); the batched panel path serves the
+        // cover-tree search.
+        let metric = CorrelationMetric::new(kernel, x, None);
+        let nb = neighbors::covertree_ordered_knn(n, 40, &metric);
         let f = ResidualFactor::build(&oracle, nb, 0.0, 1e-10);
         f.sample(&rng.normal_vec(n))
     }

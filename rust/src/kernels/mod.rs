@@ -14,6 +14,23 @@
 //!
 //! Gradients are taken with respect to *log*-parameters (log σ₁²,
 //! log λ₁…λ_d, log ν), matching how the optimizer parameterizes the model.
+//!
+//! # Panel evaluation
+//!
+//! Besides the per-pair entry points (`cov`, `cov_and_grad_into`), the
+//! kernel exposes *panel* kernels that evaluate one query point against a
+//! gathered, row-major `len×d` panel of points in a single fused pass:
+//! [`ArdMatern::corr_panel`] / [`ArdMatern::cov_panel`] accumulate the
+//! scaled distances for the whole panel and then apply `corr_of_dist`
+//! over the contiguous slice, and [`ArdMatern::cov_and_grad_panel`]
+//! additionally produces every log-parameter gradient from **one**
+//! shared `dcorr_dr` pass (the per-dimension length-scale gradients all
+//! reuse the same `σ₁² k'(r)/r` factor). These back the panelized
+//! residual-covariance assembly in `vecchia`/`vif` (`rho_block`,
+//! `rho_and_grad_block`) and the cover-tree batched metric
+//! (`covertree::Metric::dist_batch`), replacing the scalar per-pair hot
+//! loops of `ResidualFactor::build`, the Appendix-A gradient pass, and
+//! the correlation kNN search.
 
 pub mod bessel;
 
@@ -169,6 +186,86 @@ impl ArdMatern {
     #[inline]
     pub fn cov(&self, a: &[f64], b: &[f64]) -> f64 {
         self.variance * self.corr_of_dist(self.scaled_dist(a, b))
+    }
+
+    /// Scaled distances `r_t = ‖q_λ(q) − q_λ(panel_t)‖` of one query
+    /// point against a gathered row-major `len×d` panel (`len =
+    /// out.len()`). Fused accumulation over the contiguous panel rows —
+    /// the building block of the panel kernels below.
+    pub fn scaled_dist_panel(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
+        let d = self.dim();
+        let len = out.len();
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(panel.len(), len * d);
+        for (t, r) in out.iter_mut().enumerate() {
+            let row = &panel[t * d..(t + 1) * d];
+            let mut s = 0.0;
+            for j in 0..d {
+                let u = (q[j] - row[j]) / self.length_scales[j];
+                s += u * u;
+            }
+            *r = s.sqrt();
+        }
+    }
+
+    /// Correlations `k_ν(r_t)` (σ₁² **not** applied) of one query point
+    /// against a gathered `len×d` panel: one scaled-distance pass, then
+    /// the radial profile over the contiguous slice.
+    pub fn corr_panel(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
+        self.scaled_dist_panel(q, panel, out);
+        for r in out.iter_mut() {
+            *r = self.corr_of_dist(*r);
+        }
+    }
+
+    /// Covariances `σ₁² k_ν(r_t)` of one query point against a gathered
+    /// `len×d` panel.
+    pub fn cov_panel(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
+        self.corr_panel(q, panel, out);
+        for c in out.iter_mut() {
+            *c *= self.variance;
+        }
+    }
+
+    /// Covariances **and** all `1 + d` log-parameter gradients of one
+    /// query point against a gathered `len×d` panel. `grad` holds the
+    /// per-parameter blocks contiguously: `grad[p·len + t] =
+    /// ∂c(q, panel_t)/∂θ_p` with `p = 0` the log-σ₁² slot and `p = 1+j`
+    /// the log-λ_j slots. One `dcorr_dr` evaluation per panel entry is
+    /// shared across all `d` length-scale gradients (the scalar path
+    /// pays the same evaluation per pair but through a virtual call and
+    /// strided writes).
+    pub fn cov_and_grad_panel(&self, q: &[f64], panel: &[f64], cov: &mut [f64], grad: &mut [f64]) {
+        let d = self.dim();
+        let len = cov.len();
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(panel.len(), len * d);
+        debug_assert_eq!(grad.len(), (1 + d) * len);
+        self.scaled_dist_panel(q, panel, cov); // cov holds r_t for now
+        let (gsig, glen) = grad.split_at_mut(len);
+        // Stash the shared factor s_t = σ₁² k'(r_t)/r_t in the log-σ₁²
+        // block while the length-scale blocks are filled, then overwrite
+        // it with the final ∂c/∂log σ₁² = c.
+        for t in 0..len {
+            let r = cov[t];
+            gsig[t] = if r > 0.0 {
+                self.variance * self.dcorr_dr(r) / r
+            } else {
+                0.0
+            };
+            cov[t] = self.variance * self.corr_of_dist(r);
+        }
+        for j in 0..d {
+            let gj = &mut glen[j * len..(j + 1) * len];
+            let lj = self.length_scales[j];
+            let qj = q[j];
+            for (t, g) in gj.iter_mut().enumerate() {
+                // ∂c/∂log λ_j = −(σ₁² k'(r)/r) u_j²
+                let u = (qj - panel[t * d + j]) / lj;
+                *g = -gsig[t] * u * u;
+            }
+        }
+        gsig.copy_from_slice(cov);
     }
 
     /// Cross-covariance matrix `[c_θ(a_i, b_j)]` (rows over `a`).
@@ -443,6 +540,74 @@ mod tests {
         assert!((k.variance - k2.variance).abs() < 1e-12);
         for (a, b) in k.length_scales.iter().zip(&k2.length_scales) {
             assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn panel_matches_per_pair() {
+        for s in [
+            Smoothness::Half,
+            Smoothness::ThreeHalves,
+            Smoothness::FiveHalves,
+            Smoothness::Gaussian,
+            Smoothness::General(1.3),
+        ] {
+            let k = kern(s);
+            let q = [0.25, -0.4, 0.6];
+            // 6-point panel, including an exact duplicate of the query
+            // (r = 0) to cover the zero-distance gradient branch.
+            let mut panel = Vec::new();
+            for t in 0..6 {
+                if t == 3 {
+                    panel.extend_from_slice(&q);
+                } else {
+                    panel.extend_from_slice(&[
+                        0.1 * t as f64,
+                        -0.05 * t as f64 + 0.2,
+                        0.3 - 0.07 * t as f64,
+                    ]);
+                }
+            }
+            let mut covs = vec![0.0; 6];
+            k.cov_panel(&q, &panel, &mut covs);
+            let mut corrs = vec![0.0; 6];
+            k.corr_panel(&q, &panel, &mut corrs);
+            let mut covs2 = vec![0.0; 6];
+            let mut grads = vec![0.0; 4 * 6];
+            k.cov_and_grad_panel(&q, &panel, &mut covs2, &mut grads);
+            let mut g = vec![0.0; 4];
+            for t in 0..6 {
+                let b = &panel[t * 3..(t + 1) * 3];
+                let c = k.cov_and_grad_into(&q, b, &mut g);
+                assert!((covs[t] - c).abs() < 1e-14, "{s:?} cov t={t}");
+                assert!((corrs[t] - c / k.variance).abs() < 1e-14, "{s:?} corr t={t}");
+                assert!((covs2[t] - c).abs() < 1e-14, "{s:?} cov+grad t={t}");
+                for p in 0..4 {
+                    assert!(
+                        (grads[p * 6 + t] - g[p]).abs() < 1e-14,
+                        "{s:?} grad p={p} t={t}: {} vs {}",
+                        grads[p * 6 + t],
+                        g[p]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_empty_and_single() {
+        let k = kern(Smoothness::ThreeHalves);
+        let q = [0.1, 0.2, 0.3];
+        let mut out: Vec<f64> = vec![];
+        k.cov_panel(&q, &[], &mut out); // no-op, must not panic
+        let panel = [0.4, 0.5, 0.6];
+        let mut c = vec![0.0; 1];
+        let mut g = vec![0.0; 4];
+        k.cov_and_grad_panel(&q, &panel, &mut c, &mut g);
+        let (want, wg) = k.cov_and_grad(&q, &panel);
+        assert!((c[0] - want).abs() < 1e-14);
+        for p in 0..4 {
+            assert!((g[p] - wg[p]).abs() < 1e-14);
         }
     }
 

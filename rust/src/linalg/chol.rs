@@ -57,6 +57,19 @@ impl CholeskyFactor {
     pub fn new_with_jitter(a: &Mat, base_jitter: f64) -> Result<Self, CholeskyError> {
         match Self::new(a) {
             Ok(f) => Ok(f),
+            Err(_) => Self::new_with_jitter_mat(a, base_jitter).map(|(f, _)| f),
+        }
+    }
+
+    /// [`Self::new_with_jitter`], additionally returning the matrix that
+    /// was actually factored (the input plus any escalated diagonal
+    /// jitter). Callers that keep the matrix alongside its factor (e.g.
+    /// `vif::LowRank`, whose `Σ_m` is later added into the Woodbury
+    /// core) stay exactly consistent with `L Lᵀ` on the retry path.
+    /// This is the single home of the escalation policy.
+    pub fn new_with_jitter_mat(a: &Mat, base_jitter: f64) -> Result<(Self, Mat), CholeskyError> {
+        match Self::new(a) {
+            Ok(f) => Ok((f, a.clone())),
             Err(_) => {
                 let mut jitter = base_jitter.max(1e-12);
                 let mut last = None;
@@ -64,7 +77,7 @@ impl CholeskyFactor {
                     let mut aj = a.clone();
                     aj.add_diag(jitter);
                     match Self::new(&aj) {
-                        Ok(f) => return Ok(f),
+                        Ok(f) => return Ok((f, aj)),
                         Err(e) => last = Some(e),
                     }
                     jitter *= 10.0;

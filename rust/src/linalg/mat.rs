@@ -253,6 +253,66 @@ impl Mat {
         out
     }
 
+    /// `self -= V Vᵀ` for a row-major `n×k` panel `v` (SYRK): the lower
+    /// triangle is computed and mirrored, so `self` must be square and
+    /// is assumed symmetric on entry. This is the low-rank correction
+    /// `ρ_NN −= V_nb V_nbᵀ` of the panelized residual assembly.
+    pub fn syrk_sub_panel(&mut self, v: &[f64], k: usize) {
+        let n = self.rows;
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(v.len(), n * k);
+        for i in 0..n {
+            let vi = &v[i * k..(i + 1) * k];
+            for j in 0..=i {
+                let s = dot(vi, &v[j * k..(j + 1) * k]);
+                self.data[i * n + j] -= s;
+                if j != i {
+                    self.data[j * n + i] -= s;
+                }
+            }
+        }
+    }
+
+    /// `self -= A Bᵀ + B Aᵀ` for row-major `n×k` panels (symmetric
+    /// rank-2k update): lower triangle computed and mirrored, `self`
+    /// square and symmetric on entry. This is the gradient correction
+    /// `∂ρ_NN −= T^p_nb E_nbᵀ + E_nb (T^p_nb)ᵀ`.
+    pub fn syr2k_sub_panel(&mut self, a: &[f64], b: &[f64], k: usize) {
+        let n = self.rows;
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(a.len(), n * k);
+        debug_assert_eq!(b.len(), n * k);
+        for i in 0..n {
+            let ai = &a[i * k..(i + 1) * k];
+            let bi = &b[i * k..(i + 1) * k];
+            for j in 0..=i {
+                let s = dot(ai, &b[j * k..(j + 1) * k]) + dot(bi, &a[j * k..(j + 1) * k]);
+                self.data[i * n + j] -= s;
+                if j != i {
+                    self.data[j * n + i] -= s;
+                }
+            }
+        }
+    }
+
+    /// `self -= A Aᵀ` ([`syrk_sub_panel`](Self::syrk_sub_panel) over a
+    /// `Mat` operand; `self` symmetric on entry).
+    pub fn sub_aat(&mut self, a: &Mat) {
+        assert_eq!(a.rows, self.rows, "sub_aat shape mismatch");
+        assert_eq!(self.rows, self.cols, "sub_aat needs a square target");
+        self.syrk_sub_panel(&a.data, a.cols);
+    }
+
+    /// `self -= A Bᵀ + B Aᵀ` ([`syr2k_sub_panel`](Self::syr2k_sub_panel)
+    /// over `Mat` operands; `self` symmetric on entry).
+    pub fn sub_abt_sym(&mut self, a: &Mat, b: &Mat) {
+        assert_eq!(a.rows, self.rows, "sub_abt_sym shape mismatch");
+        assert_eq!(b.rows, self.rows, "sub_abt_sym shape mismatch");
+        assert_eq!(a.cols, b.cols, "sub_abt_sym inner-dim mismatch");
+        assert_eq!(self.rows, self.cols, "sub_abt_sym needs a square target");
+        self.syr2k_sub_panel(&a.data, &b.data, a.cols);
+    }
+
     /// Elementwise in-place add.
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -366,6 +426,27 @@ mod tests {
     fn transpose_round_trip() {
         let m = Mat::from_vec(5, 7, (0..35).map(|i| i as f64).collect());
         assert!(m.t().t().max_abs_diff(&m) < 1e-15);
+    }
+
+    #[test]
+    fn syrk_and_syr2k_match_dense() {
+        for (n, k) in [(1usize, 3usize), (4, 6), (5, 0), (6, 1), (7, 9)] {
+            let a = Mat::from_fn(n, k, |i, j| ((i * 3 + j) as f64 * 0.23).sin());
+            let b = Mat::from_fn(n, k, |i, j| ((i + j * 2) as f64 * 0.41).cos());
+            // symmetric starting target
+            let base = Mat::from_fn(n, n, |i, j| ((i + j) as f64 * 0.1).cos());
+            let mut got = base.clone();
+            got.sub_aat(&a);
+            let mut want = base.clone();
+            want.sub_assign(&a.matmul_nt(&a));
+            assert!(got.max_abs_diff(&want) < 1e-13, "syrk n={n} k={k}");
+            let mut got2 = base.clone();
+            got2.sub_abt_sym(&a, &b);
+            let mut want2 = base.clone();
+            want2.sub_assign(&a.matmul_nt(&b));
+            want2.sub_assign(&b.matmul_nt(&a));
+            assert!(got2.max_abs_diff(&want2) < 1e-13, "syr2k n={n} k={k}");
+        }
     }
 
     #[test]

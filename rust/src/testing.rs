@@ -6,9 +6,10 @@
 //! gradients against central finite differences.
 
 use crate::coordinator::ThreadPool;
+use crate::covertree::Metric;
 use crate::linalg::Mat;
 use crate::rng::Rng;
-use crate::vecchia::{ResidualFactor, SweepExec};
+use crate::vecchia::{ResidualCov, ResidualFactor, SweepExec};
 
 /// Run `prop` over `cases` randomly generated inputs. On failure, panics
 /// with the case index and seed so the case can be replayed
@@ -229,6 +230,154 @@ pub fn assert_b_kernels_match_dense(
                     );
                 }
             }
+        }
+    }
+}
+
+/// Wrapper that strips an oracle's panel overrides, forcing the scalar
+/// per-pair `ResidualCov` default impls. This is the baseline for the
+/// panel-vs-scalar equivalence tests and for perf_hotpath stage 10.
+pub struct ScalarizedOracle<'a>(pub &'a dyn ResidualCov);
+
+impl ResidualCov for ScalarizedOracle<'_> {
+    fn rho(&self, i: usize, j: usize) -> f64 {
+        self.0.rho(i, j)
+    }
+    fn num_params(&self) -> usize {
+        self.0.num_params()
+    }
+    fn rho_and_grad(&self, i: usize, j: usize, grad: &mut [f64]) -> f64 {
+        self.0.rho_and_grad(i, j, grad)
+    }
+}
+
+/// Wrapper that strips a metric's `dist_batch` override, forcing the
+/// scalar per-pair default (the cover-tree perf baseline).
+pub struct ScalarizedMetric<'a>(pub &'a dyn Metric);
+
+impl Metric for ScalarizedMetric<'_> {
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.0.dist(i, j)
+    }
+}
+
+/// Panel-vs-scalar equivalence: `rho_block` and `rho_and_grad_block` of
+/// `oracle` (i.e. its panelized overrides, if any) must match the
+/// per-pair scalar `rho`/`rho_and_grad` calls to absolute tolerance
+/// `tol` on every row of `neighbors`.
+pub fn assert_rho_blocks_match_scalar(
+    oracle: &dyn ResidualCov,
+    neighbors: &[Vec<u32>],
+    tol: f64,
+) {
+    let np = oracle.num_params();
+    let mut g = vec![0.0; np];
+    for (i, nb) in neighbors.iter().enumerate() {
+        let q = nb.len();
+        // rho_block
+        let mut rho_nn = Mat::zeros(q, q);
+        let mut rho_in = vec![0.0; q];
+        let rho_ii = oracle.rho_block(i, nb, &mut rho_nn, &mut rho_in);
+        assert!(
+            (rho_ii - oracle.rho(i, i)).abs() <= tol,
+            "row {i}: rho_ii {} vs scalar {}",
+            rho_ii,
+            oracle.rho(i, i)
+        );
+        for (ai, &ja) in nb.iter().enumerate() {
+            let want = oracle.rho(i, ja as usize);
+            assert!(
+                (rho_in[ai] - want).abs() <= tol,
+                "row {i}: rho_in[{ai}] {} vs scalar {want}",
+                rho_in[ai]
+            );
+            for (bi, &jb) in nb.iter().enumerate() {
+                let want = oracle.rho(ja as usize, jb as usize);
+                assert!(
+                    (rho_nn.get(ai, bi) - want).abs() <= tol,
+                    "row {i}: rho_nn[{ai},{bi}] {} vs scalar {want}",
+                    rho_nn.get(ai, bi)
+                );
+            }
+        }
+        // rho_and_grad_block
+        let mut rho_nn2 = Mat::zeros(q, q);
+        let mut rho_in2 = vec![0.0; q];
+        let mut d_nn: Vec<Mat> = (0..np).map(|_| Mat::zeros(q, q)).collect();
+        let mut d_in = Mat::zeros(np, q);
+        let mut d_ii = vec![0.0; np];
+        let rho_ii2 = oracle.rho_and_grad_block(
+            i,
+            nb,
+            &mut rho_nn2,
+            &mut rho_in2,
+            &mut d_nn,
+            &mut d_in,
+            &mut d_ii,
+        );
+        let want_ii = oracle.rho_and_grad(i, i, &mut g);
+        assert!((rho_ii2 - want_ii).abs() <= tol, "row {i}: grad-block rho_ii");
+        for p in 0..np {
+            assert!(
+                (d_ii[p] - g[p]).abs() <= tol,
+                "row {i}: d_rho_ii[{p}] {} vs scalar {}",
+                d_ii[p],
+                g[p]
+            );
+        }
+        assert!(rho_nn2.max_abs_diff(&rho_nn) <= tol, "row {i}: grad-block rho_nn");
+        for (ai, &ja) in nb.iter().enumerate() {
+            let want = oracle.rho_and_grad(i, ja as usize, &mut g);
+            assert!(
+                (rho_in2[ai] - want).abs() <= tol,
+                "row {i}: grad-block rho_in[{ai}]"
+            );
+            for p in 0..np {
+                assert!(
+                    (d_in.get(p, ai) - g[p]).abs() <= tol,
+                    "row {i}: d_rho_in[{p},{ai}] {} vs scalar {}",
+                    d_in.get(p, ai),
+                    g[p]
+                );
+            }
+            for (bi, &jb) in nb.iter().enumerate() {
+                let _ = oracle.rho_and_grad(ja as usize, jb as usize, &mut g);
+                for p in 0..np {
+                    assert!(
+                        (d_nn[p].get(ai, bi) - g[p]).abs() <= tol,
+                        "row {i}: d_rho_nn[{p}][{ai},{bi}] {} vs scalar {}",
+                        d_nn[p].get(ai, bi),
+                        g[p]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Batched-vs-scalar metric equivalence: `dist_batch` must match the
+/// scalar `dist` to absolute tolerance `tol` on random query points and
+/// random candidate subsets.
+pub fn assert_metric_batch_matches_scalar(
+    metric: &dyn Metric,
+    n: usize,
+    rng: &mut Rng,
+    queries: usize,
+    tol: f64,
+) {
+    for _ in 0..queries {
+        let i = 1 + rng.below(n - 1);
+        let csize = 1 + rng.below(i.min(64));
+        let cand: Vec<u32> = (0..csize).map(|_| rng.below(i) as u32).collect();
+        let mut out = vec![0.0; csize];
+        metric.dist_batch(i, &cand, &mut out);
+        for (t, &j) in cand.iter().enumerate() {
+            let want = metric.dist(i, j as usize);
+            assert!(
+                (out[t] - want).abs() <= tol,
+                "dist_batch({i}, {j}) = {} vs scalar {want}",
+                out[t]
+            );
         }
     }
 }

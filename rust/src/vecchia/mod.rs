@@ -14,6 +14,22 @@
 //! products and solves with `B`, `Bᵀ`, and `S = Bᵀ D⁻¹ B`, plus the
 //! Appendix-A gradients `∂B/∂θ_p`, `∂D/∂θ_p`.
 //!
+//! # Panelized residual-covariance assembly
+//!
+//! [`ResidualFactor::build`] and [`ResidualFactor::grads`] request each
+//! row's conditioning-set blocks (`ρ_NN`, `ρ_iN`, and all parameter
+//! gradients) through **one** [`ResidualCov::rho_block`] /
+//! [`ResidualCov::rho_and_grad_block`] call instead of `~q²/2` scalar
+//! `rho`/`rho_and_grad` calls. Oracles with structure override the block
+//! methods — `vif::VifResidualOracle` gathers each row's neighbor panel
+//! (inputs, `V`/`E`/`T^p` rows) once into per-worker scratch, evaluates
+//! the kernel part through the `kernels` panel evaluators, and applies
+//! the low-rank corrections as blocked `m_v×m` SYRK/GEMM rank updates
+//! (`linalg::Mat::{syrk_sub_panel, syr2k_sub_panel}`). The trait
+//! defaults delegate to the scalar calls, which keeps dense test oracles
+//! working and doubles as the equivalence baseline (see
+//! `testing::ScalarizedOracle` and perf_hotpath stage 10).
+//!
 //! # Level-scheduled parallel sweeps
 //!
 //! The eight `B` kernels (`mul_b`/`mul_bt`/`solve_b`/`solve_bt` and their
@@ -59,6 +75,17 @@ use std::sync::OnceLock;
 
 /// Oracle for residual covariances and (optionally) their gradients with
 /// respect to the packed log-parameters.
+///
+/// Besides the scalar per-pair entry points, the trait exposes *block*
+/// methods ([`rho_block`](Self::rho_block),
+/// [`rho_and_grad_block`](Self::rho_and_grad_block)) that fill a whole
+/// conditioning-set panel at once. The default implementations delegate
+/// to the scalar calls — they are the reference the panelized overrides
+/// (e.g. `vif::VifResidualOracle`, which routes through the `kernels`
+/// panel evaluators and `linalg` SYRK/GEMM rank updates) are tested
+/// against, and they keep simple oracles (dense test matrices) working
+/// unchanged. [`ResidualFactor::build`] and [`ResidualFactor::grads`]
+/// call only the block methods.
 pub trait ResidualCov: Sync {
     /// Residual covariance `ρ(i, j)` **without** any nugget.
     fn rho(&self, i: usize, j: usize) -> f64;
@@ -68,6 +95,69 @@ pub trait ResidualCov: Sync {
 
     /// Residual covariance and its gradient `∂ρ(i,j)/∂θ_p` for all p.
     fn rho_and_grad(&self, i: usize, j: usize, grad: &mut [f64]) -> f64;
+
+    /// Fill the symmetric `q×q` block `ρ_NN` over the conditioning set
+    /// `nb` and the row `ρ_iN` (both **without** nugget — the caller
+    /// owns nugget plumbing), returning `ρ(i, i)`. Every output entry is
+    /// overwritten. The default delegates to per-pair [`rho`](Self::rho)
+    /// calls.
+    fn rho_block(&self, i: usize, nb: &[u32], rho_nn: &mut Mat, rho_in: &mut [f64]) -> f64 {
+        debug_assert_eq!(rho_nn.rows(), nb.len());
+        debug_assert_eq!(rho_nn.cols(), nb.len());
+        debug_assert_eq!(rho_in.len(), nb.len());
+        for (ai, &ja) in nb.iter().enumerate() {
+            rho_nn.set(ai, ai, self.rho(ja as usize, ja as usize));
+            for (bi, &jb) in nb.iter().enumerate().take(ai) {
+                let v = self.rho(ja as usize, jb as usize);
+                rho_nn.set(ai, bi, v);
+                rho_nn.set(bi, ai, v);
+            }
+            rho_in[ai] = self.rho(i, ja as usize);
+        }
+        self.rho(i, i)
+    }
+
+    /// [`rho_block`](Self::rho_block) plus all parameter gradients:
+    /// `d_rho_nn[p]` is the `q×q` gradient block for parameter `p`,
+    /// `d_rho_in` is `np×q` with row `p` holding `∂ρ_iN/∂θ_p`
+    /// contiguously, and `d_rho_ii` (length `np`) is `∂ρ(i,i)/∂θ_p`.
+    /// No nugget anywhere; every output entry is overwritten. Returns
+    /// `ρ(i, i)`. The default delegates to per-pair
+    /// [`rho_and_grad`](Self::rho_and_grad) calls.
+    #[allow(clippy::too_many_arguments)]
+    fn rho_and_grad_block(
+        &self,
+        i: usize,
+        nb: &[u32],
+        rho_nn: &mut Mat,
+        rho_in: &mut [f64],
+        d_rho_nn: &mut [Mat],
+        d_rho_in: &mut Mat,
+        d_rho_ii: &mut [f64],
+    ) -> f64 {
+        let np = self.num_params();
+        debug_assert_eq!(d_rho_nn.len(), np);
+        debug_assert_eq!(d_rho_in.rows(), np);
+        debug_assert_eq!(d_rho_in.cols(), nb.len());
+        debug_assert_eq!(d_rho_ii.len(), np);
+        let mut g = vec![0.0; np];
+        for (ai, &ja) in nb.iter().enumerate() {
+            for (bi, &jb) in nb.iter().enumerate().take(ai + 1) {
+                let v = self.rho_and_grad(ja as usize, jb as usize, &mut g);
+                rho_nn.set(ai, bi, v);
+                rho_nn.set(bi, ai, v);
+                for (p, &gp) in g.iter().enumerate() {
+                    d_rho_nn[p].set(ai, bi, gp);
+                    d_rho_nn[p].set(bi, ai, gp);
+                }
+            }
+            rho_in[ai] = self.rho_and_grad(i, ja as usize, &mut g);
+            for (p, &gp) in g.iter().enumerate() {
+                d_rho_in.set(p, ai, gp);
+            }
+        }
+        self.rho_and_grad(i, i, d_rho_ii)
+    }
 }
 
 /// Default minimum row count before the `B` sweeps fan out on the global
@@ -293,8 +383,15 @@ pub struct ResidualFactor {
     pub neighbors: Vec<Vec<u32>>,
     /// Rows `A_i` so that `B[i, N(i)] = −A_i`.
     pub a: Vec<Vec<f64>>,
-    /// Conditional variances `D_i > 0`.
+    /// Conditional variances `D_i > 0`. Read-only by convention: the
+    /// private `inv_d` cache is derived from it at construction, so
+    /// mutating `d` in place would silently desync every `D⁻¹` scaling —
+    /// rebuild through [`from_parts`](Self::from_parts) instead.
     pub d: Vec<f64>,
+    /// Cached reciprocals `1/D_i`, computed once at construction so the
+    /// `D⁻¹` scalings in every operator apply (and in
+    /// `VifStructure::assemble`) stop allocating a fresh vector.
+    inv_d: Vec<f64>,
     /// Topological level partition of the row-dependency DAG.
     schedule: LevelSchedule,
     /// CSC-style index of the strictly-lower part of `B`.
@@ -333,22 +430,17 @@ impl ResidualFactor {
         let rows = parallel_map(n, |i| {
             let nb = &neighbors[i];
             let q = nb.len();
-            let rho_ii = oracle.rho(i, i) + nugget;
+            // One panelized oracle call fills ρ_NN and ρ_iN (gathered
+            // neighbor panel + SYRK low-rank correction in the
+            // `VifResidualOracle` override; per-pair scalar calls in the
+            // default impl).
+            let mut c = Mat::zeros(q, q);
+            let mut rho_in = vec![0.0; q];
+            let rho_ii = oracle.rho_block(i, nb, &mut c, &mut rho_in) + nugget;
             if q == 0 {
                 return Row { a: vec![], d: rho_ii.max(1e-12) };
             }
-            // ρ_NN + nugget I
-            let mut c = Mat::zeros(q, q);
-            for (a_idx, &ja) in nb.iter().enumerate() {
-                c.set(a_idx, a_idx, oracle.rho(ja as usize, ja as usize) + nugget);
-                for (b_idx, &jb) in nb.iter().enumerate().take(a_idx) {
-                    let v = oracle.rho(ja as usize, jb as usize);
-                    c.set(a_idx, b_idx, v);
-                    c.set(b_idx, a_idx, v);
-                }
-            }
-            // ρ_iN
-            let rho_in: Vec<f64> = nb.iter().map(|&j| oracle.rho(i, j as usize)).collect();
+            c.add_diag(nugget);
             let chol = CholeskyFactor::new_with_jitter(&c, jitter.max(1e-10))
                 .expect("residual block not PD even with jitter");
             let a_i = chol.solve(&rho_in);
@@ -376,14 +468,21 @@ impl ResidualFactor {
         }
         let schedule = LevelSchedule::from_neighbors(&neighbors);
         let bt_index = TransposedIndex::build(&neighbors, &a);
+        let inv_d: Vec<f64> = d.iter().map(|di| 1.0 / di).collect();
         ResidualFactor {
             neighbors,
             a,
             d,
+            inv_d,
             schedule,
             bt_index,
             sched_min_rows: sched_min_rows_default(),
         }
+    }
+
+    /// Cached `1/D_i` (valid for the `d` the factor was built with).
+    pub fn inv_d(&self) -> &[f64] {
+        &self.inv_d
     }
 
     pub fn n(&self) -> usize {
@@ -557,8 +656,8 @@ impl ResidualFactor {
     /// `w = S v = Bᵀ D⁻¹ B v` — the residual precision applied to a vector.
     pub fn apply_s(&self, v: &[f64]) -> Vec<f64> {
         let mut w = self.mul_b(v);
-        for (wi, di) in w.iter_mut().zip(&self.d) {
-            *wi /= di;
+        for (wi, di) in w.iter_mut().zip(&self.inv_d) {
+            *wi *= di;
         }
         self.mul_bt(&w)
     }
@@ -806,7 +905,10 @@ impl ResidualFactor {
     }
 
     /// Appendix-A gradients: `∂D_i/∂θ_p` and `∂A_i/∂θ_p` for every
-    /// parameter, recomputing the per-point blocks from the oracle.
+    /// parameter, recomputing the per-point blocks from the oracle via
+    /// one [`ResidualCov::rho_and_grad_block`] call per point (panelized
+    /// kernel evaluation + small-GEMM low-rank corrections for the VIF
+    /// oracle; scalar per-pair fallback for simple oracles).
     ///
     /// Calls `sink(i, dd_i, da_i)` per point, where `dd_i[p]` is the
     /// D-gradient and `da_i[p]` the A-row gradient for parameter `p`.
@@ -824,14 +926,26 @@ impl ResidualFactor {
         let n = self.n();
         let np = oracle.num_params();
         crate::coordinator::parallel_for_chunks(n, |start, end| {
-            let mut gbuf = vec![0.0; np];
             for i in start..end {
                 let nb = &self.neighbors[i];
                 let q = nb.len();
                 let a_i = &self.a[i];
-                // dρ_ii
+                // Blocks ρ_NN, ρ_iN, ρ_ii and all parameter gradients in
+                // one oracle call (no nugget yet — added below).
+                let mut c = Mat::zeros(q, q);
+                let mut dc: Vec<Mat> = (0..np).map(|_| Mat::zeros(q, q)).collect();
+                let mut rho_in = vec![0.0; q];
+                let mut d_rho_in = Mat::zeros(np, q);
                 let mut d_rho_ii = vec![0.0; np];
-                let _ = oracle.rho_and_grad(i, i, &mut d_rho_ii);
+                let _rho_ii = oracle.rho_and_grad_block(
+                    i,
+                    nb,
+                    &mut c,
+                    &mut rho_in,
+                    &mut dc,
+                    &mut d_rho_in,
+                    &mut d_rho_ii,
+                );
                 if let Some(pn) = d_nugget_param {
                     d_rho_ii[pn] += nugget;
                 }
@@ -840,34 +954,9 @@ impl ResidualFactor {
                     sink(i, &d_rho_ii, &da);
                     continue;
                 }
-                // Blocks ρ_NN (+nugget I), ρ_iN and gradients.
-                let mut c = Mat::zeros(q, q);
-                let mut dc: Vec<Mat> = (0..np).map(|_| Mat::zeros(q, q)).collect();
-                for (ai, &ja) in nb.iter().enumerate() {
-                    for (bi, &jb) in nb.iter().enumerate().take(ai + 1) {
-                        let v = oracle.rho_and_grad(ja as usize, jb as usize, &mut gbuf);
-                        let vd = if ai == bi { v + nugget } else { v };
-                        c.set(ai, bi, vd);
-                        c.set(bi, ai, vd);
-                        for p in 0..np {
-                            let mut g = gbuf[p];
-                            if ai == bi {
-                                if Some(p) == d_nugget_param {
-                                    g += nugget;
-                                }
-                            }
-                            dc[p].set(ai, bi, g);
-                            dc[p].set(bi, ai, g);
-                        }
-                    }
-                }
-                let mut rho_in = vec![0.0; q];
-                let mut d_rho_in: Vec<Vec<f64>> = (0..np).map(|_| vec![0.0; q]).collect();
-                for (k, &j) in nb.iter().enumerate() {
-                    rho_in[k] = oracle.rho_and_grad(i, j as usize, &mut gbuf);
-                    for p in 0..np {
-                        d_rho_in[p][k] = gbuf[p];
-                    }
+                c.add_diag(nugget);
+                if let Some(pn) = d_nugget_param {
+                    dc[pn].add_diag(nugget);
                 }
                 let chol = CholeskyFactor::new_with_jitter(&c, jitter.max(1e-10))
                     .expect("residual block not PD in gradient pass");
@@ -877,13 +966,10 @@ impl ResidualFactor {
                 let mut da: Vec<Vec<f64>> = Vec::with_capacity(np);
                 for p in 0..np {
                     let w = dc[p].matvec(a_i);
-                    let rhs: Vec<f64> = d_rho_in[p]
-                        .iter()
-                        .zip(&w)
-                        .map(|(x, y)| x - y)
-                        .collect();
+                    let drow = d_rho_in.row(p);
+                    let rhs: Vec<f64> = drow.iter().zip(&w).map(|(x, y)| x - y).collect();
                     let dap = chol.solve(&rhs);
-                    dd[p] = d_rho_ii[p] - 2.0 * dot(&d_rho_in[p], a_i) + dot(a_i, &w);
+                    dd[p] = d_rho_ii[p] - 2.0 * dot(drow, a_i) + dot(a_i, &w);
                     da.push(dap);
                 }
                 sink(i, &dd, &da);

@@ -4,8 +4,14 @@
 //! length-scale-transformed) input space, and the correlation distance
 //! `d_c` on the residual process, searched either brute-force (small n,
 //! tests) or through the modified cover tree in [`crate::covertree`].
+//!
+//! All searches take the metric as a [`Metric`] trait object so that
+//! candidate batches flow through [`Metric::dist_batch`] (one panelized
+//! evaluation per query/level instead of per-pair scalar calls — see
+//! `vif::CorrelationMetric`); plain closures still work through the
+//! scalar blanket impl.
 
-use crate::covertree::CoverTree;
+use crate::covertree::{CoverTree, Metric};
 use crate::linalg::Mat;
 
 /// How Vecchia neighbors are selected (paper §6).
@@ -23,14 +29,17 @@ pub enum NeighborSelection {
 
 /// Brute-force ordered kNN under a generic metric: `N(i)` = the `m_v`
 /// smallest `dist(i, j)` over `j < i` (ascending index order in the
-/// output).
-pub fn brute_force_ordered_knn(
-    n: usize,
-    m_v: usize,
-    dist: &(dyn Fn(usize, usize) -> f64 + Sync),
-) -> Vec<Vec<u32>> {
+/// output). The whole earlier-point prefix is scored with one
+/// [`Metric::dist_batch`] call per query.
+pub fn brute_force_ordered_knn(n: usize, m_v: usize, metric: &dyn Metric) -> Vec<Vec<u32>> {
+    let ids: Vec<u32> = (0..n as u32).collect();
     crate::coordinator::parallel_map(n, |i| {
-        let mut cand: Vec<(f64, u32)> = (0..i).map(|j| (dist(i, j), j as u32)).collect();
+        let mut dists = vec![0.0; i];
+        metric.dist_batch(i, &ids[..i], &mut dists);
+        let mut cand: Vec<(f64, u32)> = dists
+            .into_iter()
+            .zip(ids[..i].iter().copied())
+            .collect();
         if cand.len() > m_v {
             cand.select_nth_unstable_by(m_v - 1, |a, b| a.0.total_cmp(&b.0));
             cand.truncate(m_v);
@@ -66,12 +75,8 @@ pub fn euclidean_ordered_knn(x: &Mat, inv_scales: &[f64], m_v: usize) -> Vec<Vec
 /// beyond the block start, except that every block's points still may
 /// condition on *earlier partitions* through a shared prefix tree when
 /// `partitions == 1`.
-pub fn covertree_ordered_knn(
-    n: usize,
-    m_v: usize,
-    dist: &(dyn Fn(usize, usize) -> f64 + Sync),
-) -> Vec<Vec<u32>> {
-    let tree = CoverTree::build(n, dist);
+pub fn covertree_ordered_knn(n: usize, m_v: usize, metric: &dyn Metric) -> Vec<Vec<u32>> {
+    let tree = CoverTree::build(n, metric);
     // Chunked queries with reused scratch buffers (see §Perf).
     let mut out: Vec<Vec<u32>> = vec![vec![]; n];
     {
@@ -79,7 +84,7 @@ pub fn covertree_ordered_knn(
         crate::coordinator::parallel_for_chunks(n, |start, end| {
             let mut scratch = crate::covertree::QueryScratch::new(n);
             for i in start..end {
-                let mut idx = tree.knn_ordered_with(i, m_v, dist, &mut scratch);
+                let mut idx = tree.knn_ordered_with(i, m_v, metric, &mut scratch);
                 idx.sort_unstable();
                 // SAFETY: disjoint indices per chunk.
                 unsafe {
@@ -173,6 +178,33 @@ mod tests {
     }
 }
 
+/// Index-shifted view of a [`Metric`]: block-local indices `0..len`
+/// mapped onto global indices `lo..lo+len`. Keeps the batched path by
+/// shifting candidate lists through a per-thread scratch buffer.
+struct OffsetMetric<'a> {
+    base: &'a dyn Metric,
+    lo: usize,
+}
+
+impl Metric for OffsetMetric<'_> {
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.base.dist(i + self.lo, j + self.lo)
+    }
+
+    fn dist_batch(&self, i: usize, cand: &[u32], out: &mut [f64]) {
+        thread_local! {
+            static SHIFTED: std::cell::RefCell<Vec<u32>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SHIFTED.with(|cell| {
+            let shifted = &mut *cell.borrow_mut();
+            shifted.clear();
+            shifted.extend(cand.iter().map(|&j| j + self.lo as u32));
+            self.base.dist_batch(i + self.lo, shifted, out);
+        });
+    }
+}
+
 /// Partitioned cover-tree search (paper §6: "partitioning the data set
 /// into equally sized, sequentially ordered subsets, allowing for the
 /// parallel application of the cover tree algorithm"). Each block builds
@@ -183,12 +215,12 @@ mod tests {
 pub fn covertree_ordered_knn_partitioned(
     n: usize,
     m_v: usize,
-    dist: &(dyn Fn(usize, usize) -> f64 + Sync),
+    metric: &dyn Metric,
     partitions: usize,
 ) -> Vec<Vec<u32>> {
     let partitions = partitions.max(1);
     if partitions == 1 {
-        return covertree_ordered_knn(n, m_v, dist);
+        return covertree_ordered_knn(n, m_v, metric);
     }
     let mut out: Vec<Vec<u32>> = vec![vec![]; n];
     let block = n.div_ceil(partitions);
@@ -200,8 +232,8 @@ pub fn covertree_ordered_knn_partitioned(
     let results: Vec<Vec<Vec<u32>>> = crate::coordinator::parallel_map(blocks.len(), |bi| {
         let (lo, hi) = blocks[bi];
         let len = hi - lo;
-        let local_dist = |a: usize, b: usize| dist(a + lo, b + lo);
-        let tree = CoverTree::build(len, &local_dist);
+        let local = OffsetMetric { base: metric, lo };
+        let tree = CoverTree::build(len, &local);
         let mut scratch = crate::covertree::QueryScratch::new(len);
         (0..len)
             .map(|li| {
@@ -214,7 +246,7 @@ pub fn covertree_ordered_knn_partitioned(
                     // global points (crossing the boundary backwards)
                     return ((gi - m_v) as u32..gi as u32).collect();
                 }
-                let mut idx = tree.knn_ordered_with(li, m_v, &local_dist, &mut scratch);
+                let mut idx = tree.knn_ordered_with(li, m_v, &local, &mut scratch);
                 for j in idx.iter_mut() {
                     *j += lo as u32;
                 }
@@ -223,11 +255,11 @@ pub fn covertree_ordered_knn_partitioned(
             })
             .collect()
     });
-    for (bi, (lo, hi)) in blocks.iter().enumerate() {
-        for (li, set) in results[bi].iter().enumerate() {
-            out[lo + li] = set.clone();
+    // Move each block's rows into place (no per-set clone).
+    for (&(lo, _hi), sets) in blocks.iter().zip(results) {
+        for (li, set) in sets.into_iter().enumerate() {
+            out[lo + li] = set;
         }
-        let _ = hi;
     }
     out
 }

@@ -395,28 +395,33 @@ fn pred_neighbor_sets(
                 })
                 .collect(),
             _ => {
-                // correlation distance on the residual process
+                // Correlation distance on the residual process. The
+                // training inputs are already one contiguous row-major
+                // panel, so the kernel part of ρ(p, ·) against all n
+                // candidates is a single `cov_panel` sweep (plus the
+                // inducing-point panel for v_p and the per-candidate
+                // low-rank dot corrections).
                 let (vt_p, rho_pp): (Vec<f64>, f64) = match &s.lr {
                     Some(lr) => {
-                        let kp: Vec<f64> =
-                            (0..lr.m()).map(|l| kernel.cov(sp, lr.z.row(l))).collect();
-                        let mut v = kp;
+                        let mut v = vec![0.0; lr.m()];
+                        kernel.cov_panel(sp, lr.z.data(), &mut v);
                         lr.chol_m.solve_lower_in_place(&mut v);
                         let rpp = kernel.variance - dot(&v, &v);
                         (v, rpp.max(1e-300))
                     }
                     None => (vec![], kernel.variance),
                 };
-                (0..n)
-                    .map(|j| {
-                        let k = kernel.cov(sp, x.row(j));
-                        let rho_pj = match &s.lr {
-                            Some(lr) => k - dot(&vt_p, lr.vt.row(j)),
-                            None => k,
-                        };
-                        let oracle_jj = match &s.lr {
-                            Some(lr) => kernel.variance - dot(lr.vt.row(j), lr.vt.row(j)),
-                            None => kernel.variance,
+                let mut rho = vec![0.0; n];
+                kernel.cov_panel(sp, x.data(), &mut rho);
+                rho.into_iter()
+                    .enumerate()
+                    .map(|(j, k)| {
+                        let (rho_pj, oracle_jj) = match &s.lr {
+                            Some(lr) => {
+                                let vj = lr.vt.row(j);
+                                (k - dot(&vt_p, vj), kernel.variance - dot(vj, vj))
+                            }
+                            None => (k, kernel.variance),
                         };
                         let r = rho_pj / (rho_pp * oracle_jj.max(1e-300)).sqrt();
                         ((1.0 - r.abs()).max(0.0), j as u32)

@@ -15,12 +15,14 @@
 pub mod gaussian;
 pub mod laplace;
 
+use crate::covertree::Metric;
 use crate::inducing;
 use crate::kernels::{ArdMatern, Smoothness};
-use crate::linalg::{dot, CholeskyFactor, Mat};
+use crate::linalg::{dot, norm2_sq, CholeskyFactor, Mat};
 use crate::rng::Rng;
 use crate::vecchia::neighbors::{self, NeighborSelection};
 use crate::vecchia::{ResidualCov, ResidualFactor};
+use std::cell::RefCell;
 
 /// Configuration of a VIF approximation.
 #[derive(Clone, Debug)]
@@ -61,6 +63,10 @@ impl Default for VifConfig {
 pub struct LowRank {
     /// Inducing inputs Z (m×d).
     pub z: Mat,
+    /// `Σ_m` itself (with the build-time diagonal jitter), kept so the
+    /// Woodbury core `M = Σ_m + SS` is assembled by a rank-free add
+    /// instead of an O(m³) `L Lᵀ` reconstruction.
+    pub sig_m: Mat,
     /// Cholesky of `Σ_m` (+ jitter).
     pub chol_m: CholeskyFactor,
     /// `K(X, Z)` stored n×m (row i = Σ_mi ᵀ).
@@ -78,7 +84,11 @@ impl LowRank {
         let n = x.rows();
         let mut sig_m = kernel.sym_cov(&z, 0.0);
         sig_m.add_diag(jitter.max(1e-10) * kernel.variance);
-        let chol_m = CholeskyFactor::new_with_jitter(&sig_m, jitter.max(1e-10))
+        // `new_with_jitter_mat` hands back the matrix actually factored
+        // (including any escalated jitter), so the stored Σ_m that
+        // `assemble` adds into the Woodbury core is exactly `L Lᵀ` even
+        // on the ill-conditioned retry path.
+        let (chol_m, sig_m) = CholeskyFactor::new_with_jitter_mat(&sig_m, jitter.max(1e-10))
             .expect("inducing-point covariance not PD");
         // Σ_mn panel: served by the AOT/PJRT engine when available (the
         // Layer-1 Pallas kernel), native fallback otherwise.
@@ -100,7 +110,7 @@ impl LowRank {
                 }
             }
         });
-        LowRank { z, chol_m, sigma_nm, vt, et }
+        LowRank { z, sig_m, chol_m, sigma_nm, vt, et }
     }
 
     pub fn m(&self) -> usize {
@@ -173,12 +183,53 @@ impl GradAux {
 /// optional gradients. `extra_params` appends zero-gradient slots after
 /// the kernel parameters (e.g. the Gaussian noise, whose contribution is
 /// added by the nugget plumbing in [`ResidualFactor`]).
+///
+/// The scalar `rho`/`rho_and_grad` methods are the reference
+/// implementations (kept as the test oracle and the perf baseline); the
+/// hot paths go through the panelized `rho_block`/`rho_and_grad_block`
+/// overrides, which gather each row's neighbor panel once into
+/// per-worker scratch, evaluate the kernel part through the `kernels`
+/// panel evaluators, and apply the low-rank corrections as blocked
+/// `m_v×m` SYRK/GEMM rank updates.
 pub struct VifResidualOracle<'a> {
     pub kernel: &'a ArdMatern,
     pub x: &'a Mat,
     pub lr: Option<&'a LowRank>,
     pub grad_aux: Option<&'a GradAux>,
     pub extra_params: usize,
+}
+
+/// Per-worker gather scratch for the panelized oracle and the batched
+/// correlation metric. Thread-local because the worker threads are
+/// long-lived: buffers grow to the working-set size once and are reused
+/// across every row/query handled by that worker.
+#[derive(Default)]
+struct PanelScratch {
+    /// Gathered neighbor inputs (q×d, row-major).
+    xp: Vec<f64>,
+    /// Gathered `V` rows (q×m).
+    vp: Vec<f64>,
+    /// Gathered `E` rows (q×m).
+    ep: Vec<f64>,
+    /// Gathered `T^p` rows for one parameter at a time (q×m).
+    tp: Vec<f64>,
+    /// Panel covariance buffer.
+    buf: Vec<f64>,
+    /// Panel gradient buffer ((1+d)·q per-parameter blocks).
+    gbuf: Vec<f64>,
+}
+
+thread_local! {
+    static PANEL_SCRATCH: RefCell<PanelScratch> = RefCell::new(PanelScratch::default());
+}
+
+/// Gather rows `idx` of `src` into the contiguous row-major panel `out`.
+fn gather_rows(src: &Mat, idx: &[u32], out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(idx.len() * src.cols());
+    for &j in idx {
+        out.extend_from_slice(src.row(j as usize));
+    }
 }
 
 impl<'a> ResidualCov for VifResidualOracle<'a> {
@@ -219,6 +270,240 @@ impl<'a> ResidualCov for VifResidualOracle<'a> {
             }
             None => k,
         }
+    }
+
+    /// Panelized `ρ_NN`/`ρ_iN`: the strictly-lower kernel triangle is
+    /// filled row-by-row against the gathered prefix panel, the diagonal
+    /// is `σ₁²`, and the low-rank part is **one** `ρ_NN −= V_nb V_nbᵀ`
+    /// SYRK plus a `V_nb v_i` product for the row.
+    fn rho_block(&self, i: usize, nb: &[u32], rho_nn: &mut Mat, rho_in: &mut [f64]) -> f64 {
+        let q = nb.len();
+        let d = self.kernel.dim();
+        PANEL_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            gather_rows(self.x, nb, &mut s.xp);
+            for a in 0..q {
+                let ja = nb[a] as usize;
+                let row = rho_nn.row_mut(a);
+                self.kernel
+                    .cov_panel(self.x.row(ja), &s.xp[..a * d], &mut row[..a]);
+                row[a] = self.kernel.variance;
+            }
+            // mirror the computed lower triangle
+            for a in 0..q {
+                for b in 0..a {
+                    let v = rho_nn.get(a, b);
+                    rho_nn.set(b, a, v);
+                }
+            }
+            self.kernel.cov_panel(self.x.row(i), &s.xp, rho_in);
+            match self.lr {
+                Some(lr) => {
+                    let m = lr.m();
+                    gather_rows(&lr.vt, nb, &mut s.vp);
+                    rho_nn.syrk_sub_panel(&s.vp, m);
+                    let vi = lr.vt.row(i);
+                    for (t, r) in rho_in.iter_mut().enumerate() {
+                        *r -= dot(&s.vp[t * m..(t + 1) * m], vi);
+                    }
+                    self.kernel.variance - dot(vi, vi)
+                }
+                None => self.kernel.variance,
+            }
+        })
+    }
+
+    /// Panelized blocks **and** gradients: kernel values + all `1+d`
+    /// kernel-parameter gradients come from one `cov_and_grad_panel`
+    /// sweep per row (shared `dcorr_dr`), and the low-rank corrections
+    /// are blocked rank updates — `ρ_NN −= V_nb V_nbᵀ` (SYRK) and
+    /// `∂ρ_NN −= T^p_nb E_nbᵀ + E_nb (T^p_nb)ᵀ` (SYR2K) per parameter.
+    #[allow(clippy::too_many_arguments)]
+    fn rho_and_grad_block(
+        &self,
+        i: usize,
+        nb: &[u32],
+        rho_nn: &mut Mat,
+        rho_in: &mut [f64],
+        d_rho_nn: &mut [Mat],
+        d_rho_in: &mut Mat,
+        d_rho_ii: &mut [f64],
+    ) -> f64 {
+        let q = nb.len();
+        let d = self.kernel.dim();
+        let nk = self.kernel.num_params();
+        let np = self.num_params();
+        PANEL_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            gather_rows(self.x, nb, &mut s.xp);
+            // Kernel part: strictly-lower triangle row-by-row against the
+            // gathered prefix panel; diagonal is σ₁² (gradients: the
+            // log-σ₁² slot is σ₁², every other slot 0 at r = 0).
+            for a in 0..q {
+                let ja = nb[a] as usize;
+                if a > 0 {
+                    s.buf.resize(a, 0.0);
+                    s.gbuf.resize(nk * a, 0.0);
+                    self.kernel.cov_and_grad_panel(
+                        self.x.row(ja),
+                        &s.xp[..a * d],
+                        &mut s.buf[..a],
+                        &mut s.gbuf[..nk * a],
+                    );
+                    rho_nn.row_mut(a)[..a].copy_from_slice(&s.buf[..a]);
+                    for (p, block) in s.gbuf[..nk * a].chunks_exact(a).enumerate() {
+                        d_rho_nn[p].row_mut(a)[..a].copy_from_slice(block);
+                    }
+                }
+                rho_nn.row_mut(a)[a] = self.kernel.variance;
+                d_rho_nn[0].row_mut(a)[a] = self.kernel.variance;
+                for mat in d_rho_nn.iter_mut().take(nk).skip(1) {
+                    mat.row_mut(a)[a] = 0.0;
+                }
+            }
+            // Mirror lower → upper for the kernel blocks.
+            for a in 0..q {
+                for b in 0..a {
+                    let v = rho_nn.get(a, b);
+                    rho_nn.set(b, a, v);
+                    for mat in d_rho_nn.iter_mut().take(nk) {
+                        let g = mat.get(a, b);
+                        mat.set(b, a, g);
+                    }
+                }
+            }
+            // Extra (zero-gradient) parameter slots are fully overwritten.
+            for mat in d_rho_nn.iter_mut().skip(nk) {
+                for v in mat.data_mut() {
+                    *v = 0.0;
+                }
+            }
+            // ρ_iN row + gradients.
+            if q > 0 {
+                s.buf.resize(q, 0.0);
+                s.gbuf.resize(nk * q, 0.0);
+                self.kernel.cov_and_grad_panel(
+                    self.x.row(i),
+                    &s.xp[..q * d],
+                    &mut s.buf[..q],
+                    &mut s.gbuf[..nk * q],
+                );
+                rho_in.copy_from_slice(&s.buf[..q]);
+                for p in 0..nk {
+                    d_rho_in
+                        .row_mut(p)
+                        .copy_from_slice(&s.gbuf[p * q..(p + 1) * q]);
+                }
+            }
+            for p in nk..np {
+                for v in d_rho_in.row_mut(p) {
+                    *v = 0.0;
+                }
+            }
+            // ρ_ii and its gradients (r = 0 for the kernel part).
+            d_rho_ii[0] = self.kernel.variance;
+            for g in d_rho_ii.iter_mut().skip(1) {
+                *g = 0.0;
+            }
+            match self.lr {
+                Some(lr) => {
+                    let aux = self
+                        .grad_aux
+                        .expect("rho_and_grad_block with inducing points needs GradAux");
+                    let m = lr.m();
+                    gather_rows(&lr.vt, nb, &mut s.vp);
+                    gather_rows(&lr.et, nb, &mut s.ep);
+                    rho_nn.syrk_sub_panel(&s.vp, m);
+                    let vi = lr.vt.row(i);
+                    for (t, r) in rho_in.iter_mut().enumerate() {
+                        *r -= dot(&s.vp[t * m..(t + 1) * m], vi);
+                    }
+                    let ei = lr.et.row(i);
+                    for p in 0..nk {
+                        gather_rows(&aux.t[p], nb, &mut s.tp);
+                        d_rho_nn[p].syr2k_sub_panel(&s.tp, &s.ep, m);
+                        let ti = aux.t[p].row(i);
+                        let drow = d_rho_in.row_mut(p);
+                        for (t, g) in drow.iter_mut().enumerate() {
+                            *g -= dot(ti, &s.ep[t * m..(t + 1) * m])
+                                + dot(ei, &s.tp[t * m..(t + 1) * m]);
+                        }
+                        d_rho_ii[p] -= 2.0 * dot(ti, ei);
+                    }
+                    self.kernel.variance - dot(vi, vi)
+                }
+                None => self.kernel.variance,
+            }
+        })
+    }
+}
+
+/// Correlation distance `d_c(i,j) = √(1 − |ρ_ij/√(ρ_ii ρ_jj)|)` on the
+/// residual process (paper §6), used by the cover-tree and brute-force
+/// neighbor searches.
+///
+/// The batched path ([`Metric::dist_batch`]) fetches the query row
+/// `x_i`/`v_i` once, gathers the candidate inputs into a per-worker
+/// panel, evaluates the kernel part through
+/// [`ArdMatern::cov_panel`], applies the low-rank correction as
+/// length-`m` dot products against the cached `v_i`, and finishes with
+/// the correlation→distance transform over the contiguous batch — no
+/// scalar per-pair `rho` calls remain in the search hot loop. The
+/// residual diagonal `ρ(j,j)` is precomputed for every point at
+/// construction (directly as `σ₁² − ‖v_j‖²`, not through the oracle).
+pub struct CorrelationMetric<'a> {
+    kernel: &'a ArdMatern,
+    x: &'a Mat,
+    lr: Option<&'a LowRank>,
+    /// `ρ(j,j)` clamped away from zero.
+    diag: Vec<f64>,
+}
+
+impl<'a> CorrelationMetric<'a> {
+    pub fn new(kernel: &'a ArdMatern, x: &'a Mat, lr: Option<&'a LowRank>) -> Self {
+        let n = x.rows();
+        let diag: Vec<f64> = match lr {
+            Some(lr) => (0..n)
+                .map(|j| (kernel.variance - norm2_sq(lr.vt.row(j))).max(1e-300))
+                .collect(),
+            None => vec![kernel.variance.max(1e-300); n],
+        };
+        CorrelationMetric { kernel, x, lr, diag }
+    }
+}
+
+impl Metric for CorrelationMetric<'_> {
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        let k = if i == j {
+            self.kernel.variance
+        } else {
+            self.kernel.cov(self.x.row(i), self.x.row(j))
+        };
+        let rho = match self.lr {
+            Some(lr) => k - dot(lr.vt.row(i), lr.vt.row(j)),
+            None => k,
+        };
+        let r = rho / (self.diag[i] * self.diag[j]).sqrt();
+        (1.0 - r.abs()).max(0.0).sqrt()
+    }
+
+    fn dist_batch(&self, i: usize, cand: &[u32], out: &mut [f64]) {
+        PANEL_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            gather_rows(self.x, cand, &mut s.xp);
+            self.kernel.cov_panel(self.x.row(i), &s.xp, out);
+            if let Some(lr) = self.lr {
+                let vi = lr.vt.row(i);
+                for (o, &j) in out.iter_mut().zip(cand) {
+                    *o -= dot(vi, lr.vt.row(j as usize));
+                }
+            }
+            let di = self.diag[i];
+            for (o, &j) in out.iter_mut().zip(cand) {
+                let r = *o / (di * self.diag[j as usize]).sqrt();
+                *o = (1.0 - r.abs()).max(0.0).sqrt();
+            }
+        })
     }
 }
 
@@ -272,15 +557,15 @@ impl VifStructure {
             Some(lr) => {
                 let bsig = resid.mul_b_mat(&lr.sigma_nm);
                 let mut h = bsig.clone();
-                h.scale_rows(&resid.d.iter().map(|d| 1.0 / d).collect::<Vec<_>>());
+                h.scale_rows(resid.inv_d());
                 let ssig = resid.mul_bt_mat(&h);
                 // M = Σ_m + (BΣ_mnᵀ)ᵀ H;   SS = Σ_mnᵀ-weighted: sigma_nmᵀ ssig
                 let ss = lr.sigma_nm.matmul_tn(&ssig);
                 let mut mcal = bsig.matmul_tn(&h);
                 // mcal = (BΣ)ᵀ H = Σ_mn Bᵀ D⁻¹ B Σ_mnᵀ = SS (same thing,
-                // numerically symmetric by construction); add Σ_m.
-                let sig_m = lr.chol_m.l().matmul_nt(lr.chol_m.l());
-                mcal.add_assign(&sig_m);
+                // numerically symmetric by construction); add the Σ_m
+                // already formed in LowRank::build (no L Lᵀ rebuild).
+                mcal.add_assign(&lr.sig_m);
                 let chol_mcal = CholeskyFactor::new_with_jitter(&mcal, jitter.max(1e-10))
                     .expect("Woodbury core M not PD");
                 (bsig, h, ssig, ss, Some(mcal), Some(chol_mcal))
@@ -340,14 +625,9 @@ impl VifStructure {
     pub fn apply_sigma_dagger_inv_batch(&self, v: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(v.rows(), n);
-        // S V = Bᵀ D⁻¹ B V
+        // S V = Bᵀ D⁻¹ B V (cached reciprocals, no per-apply allocation)
         let mut bv = self.resid.mul_b_mat(v);
-        for i in 0..n {
-            let di = self.resid.d[i];
-            for x in bv.row_mut(i) {
-                *x /= di;
-            }
-        }
+        bv.scale_rows(self.resid.inv_d());
         let mut out = self.resid.mul_bt_mat(&bv);
         if let Some(chol_mcal) = &self.chol_mcal {
             let svt = self.ssig.matmul_tn(v); // Σ_mn S V (m×k)
@@ -460,23 +740,13 @@ pub fn select_neighbors(
             neighbors::euclidean_ordered_knn(x, &inv, m_v)
         }
         NeighborSelection::CorrelationCoverTree | NeighborSelection::CorrelationBruteForce => {
-            let oracle = VifResidualOracle {
-                kernel,
-                x,
-                lr,
-                grad_aux: None,
-                extra_params: 0,
-            };
-            // d_c(i,j) = sqrt(1 − |ρ_ij / sqrt(ρ_ii ρ_jj)|)  (§6)
-            let diag: Vec<f64> = (0..n).map(|i| oracle.rho(i, i).max(1e-300)).collect();
-            let dist = |i: usize, j: usize| -> f64 {
-                let r = oracle.rho(i, j) / (diag[i] * diag[j]).sqrt();
-                (1.0 - r.abs()).max(0.0).sqrt()
-            };
+            // d_c(i,j) = sqrt(1 − |ρ_ij / sqrt(ρ_ii ρ_jj)|)  (§6),
+            // evaluated in candidate batches through the panel kernels.
+            let metric = CorrelationMetric::new(kernel, x, lr);
             if selection == NeighborSelection::CorrelationCoverTree {
-                neighbors::covertree_ordered_knn(n, m_v, &dist)
+                neighbors::covertree_ordered_knn(n, m_v, &metric)
             } else {
-                neighbors::brute_force_ordered_knn(n, m_v, &dist)
+                neighbors::brute_force_ordered_knn(n, m_v, &metric)
             }
         }
     }

@@ -1,0 +1,243 @@
+//! Panel-layer equivalence tests: the panelized residual-covariance
+//! blocks (`rho_block` / `rho_and_grad_block` on `VifResidualOracle`),
+//! the batched correlation metric, and the panelized
+//! `ResidualFactor::build` / `grads` paths must all agree with the
+//! scalar per-pair reference (the `ResidualCov`/`Metric` default impls)
+//! to tight absolute tolerance on every conditioning-graph shape.
+
+use std::sync::Mutex;
+
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::rng::Rng;
+use vifgp::testing::{
+    assert_metric_batch_matches_scalar, assert_rho_blocks_match_scalar, random_neighbor_graph,
+    random_points, ScalarizedMetric, ScalarizedOracle,
+};
+use vifgp::vecchia::neighbors::covertree_ordered_knn;
+use vifgp::vecchia::ResidualFactor;
+use vifgp::vif::{select_inducing, CorrelationMetric, GradAux, LowRank, VifResidualOracle};
+use vifgp::Mat;
+
+const TOL: f64 = 1e-12;
+
+fn graphs(rng: &mut Rng, n: usize) -> Vec<(&'static str, Vec<Vec<u32>>)> {
+    let empty: Vec<Vec<u32>> = vec![vec![]; n];
+    let chain: Vec<Vec<u32>> = (0..n as u32)
+        .map(|i| if i == 0 { vec![] } else { vec![i - 1] })
+        .collect();
+    let saturated: Vec<Vec<u32>> = (0..n).map(|i| (0..i as u32).collect()).collect();
+    let irregular = random_neighbor_graph(rng, n, 8);
+    vec![
+        ("empty", empty),
+        ("chain", chain),
+        ("saturated", saturated),
+        ("irregular", irregular),
+    ]
+}
+
+struct Setup {
+    x: Mat,
+    kernel: ArdMatern,
+    lr: Option<LowRank>,
+}
+
+fn setup(n: usize, m: usize, smoothness: Smoothness, seed: u64) -> Setup {
+    let mut rng = Rng::seed_from(seed);
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.4, vec![0.3, 0.5], smoothness);
+    let lr = select_inducing(&x, &kernel, m, 2, &mut rng, None)
+        .map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+    Setup { x, kernel, lr }
+}
+
+#[test]
+fn rho_blocks_match_scalar_on_all_graphs() {
+    for (m, smoothness) in [
+        (0usize, Smoothness::ThreeHalves),
+        (7, Smoothness::ThreeHalves),
+        (7, Smoothness::Gaussian),
+    ] {
+        let s = setup(50, m, smoothness, 11);
+        let aux = s.lr.as_ref().map(|lr| GradAux::build(&s.x, &s.kernel, lr));
+        let oracle = VifResidualOracle {
+            kernel: &s.kernel,
+            x: &s.x,
+            lr: s.lr.as_ref(),
+            grad_aux: aux.as_ref(),
+            extra_params: 1,
+        };
+        let mut rng = Rng::seed_from(5);
+        for (name, nb) in graphs(&mut rng, 50) {
+            let _ = name;
+            assert_rho_blocks_match_scalar(&oracle, &nb, TOL);
+        }
+    }
+}
+
+#[test]
+fn panel_build_and_grads_match_scalarized_oracle() {
+    let s = setup(60, 6, Smoothness::ThreeHalves, 23);
+    let aux = s.lr.as_ref().map(|lr| GradAux::build(&s.x, &s.kernel, lr));
+    let oracle = VifResidualOracle {
+        kernel: &s.kernel,
+        x: &s.x,
+        lr: s.lr.as_ref(),
+        grad_aux: aux.as_ref(),
+        extra_params: 1,
+    };
+    let scalar = ScalarizedOracle(&oracle);
+    let np = 1 + 2 + 1; // log σ₁², two log λ, log σ²
+    let mut rng = Rng::seed_from(3);
+    for (name, nb) in graphs(&mut rng, 60) {
+        let f_panel = ResidualFactor::build(&oracle, nb.clone(), 0.05, 1e-10);
+        let f_scalar = ResidualFactor::build(&scalar, nb.clone(), 0.05, 1e-10);
+        for i in 0..60 {
+            assert!(
+                (f_panel.d[i] - f_scalar.d[i]).abs() <= TOL,
+                "{name}: d[{i}] {} vs {}",
+                f_panel.d[i],
+                f_scalar.d[i]
+            );
+            for (k, (a, b)) in f_panel.a[i].iter().zip(&f_scalar.a[i]).enumerate() {
+                assert!((a - b).abs() <= TOL, "{name}: a[{i}][{k}] {a} vs {b}");
+            }
+        }
+        // Gradient pass: same dd/da from both oracles.
+        let collect = |orc: &dyn vifgp::vecchia::ResidualCov| {
+            let dd = Mutex::new(vec![vec![0.0; np]; 60]);
+            let da = Mutex::new(vec![Vec::<Vec<f64>>::new(); 60]);
+            f_panel.grads(orc, 0.05, Some(np - 1), 1e-10, &|i, ddi, dai| {
+                dd.lock().unwrap()[i].copy_from_slice(ddi);
+                da.lock().unwrap()[i] = dai.to_vec();
+            });
+            (dd.into_inner().unwrap(), da.into_inner().unwrap())
+        };
+        let (dd_p, da_p) = collect(&oracle);
+        let (dd_s, da_s) = collect(&scalar);
+        for i in 0..60 {
+            for p in 0..np {
+                assert!(
+                    (dd_p[i][p] - dd_s[i][p]).abs() <= 1e-10,
+                    "{name}: dd[{i}][{p}] {} vs {}",
+                    dd_p[i][p],
+                    dd_s[i][p]
+                );
+                for (k, (a, b)) in da_p[i][p].iter().zip(&da_s[i][p]).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-10,
+                        "{name}: da[{i}][{p}][{k}] {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn panel_gradients_match_finite_differences() {
+    // FD over the packed kernel log-parameters, with z (and hence the
+    // low-rank blocks) rebuilt at every perturbed θ — the same
+    // dependency structure rho_and_grad differentiates.
+    let n = 40;
+    let mut rng = Rng::seed_from(7);
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.2, vec![0.35, 0.45], Smoothness::ThreeHalves);
+    let z = select_inducing(&x, &kernel, 5, 2, &mut rng, None).unwrap();
+    let lr = LowRank::build(&x, &kernel, z.clone(), 1e-10);
+    let aux = GradAux::build(&x, &kernel, &lr);
+    let oracle = VifResidualOracle {
+        kernel: &kernel,
+        x: &x,
+        lr: Some(&lr),
+        grad_aux: Some(&aux),
+        extra_params: 0,
+    };
+    let nb: Vec<u32> = vec![2, 9, 17, 30];
+    let i = 35usize;
+    let q = nb.len();
+    let np = kernel.num_params();
+    let mut rho_nn = Mat::zeros(q, q);
+    let mut rho_in = vec![0.0; q];
+    let mut d_nn: Vec<Mat> = (0..np).map(|_| Mat::zeros(q, q)).collect();
+    let mut d_in = Mat::zeros(np, q);
+    let mut d_ii = vec![0.0; np];
+    use vifgp::vecchia::ResidualCov;
+    let rho_ii = oracle.rho_and_grad_block(
+        i,
+        &nb,
+        &mut rho_nn,
+        &mut rho_in,
+        &mut d_nn,
+        &mut d_in,
+        &mut d_ii,
+    );
+    let _ = rho_ii;
+    let p0 = kernel.log_params();
+    let h = 1e-5;
+    let eval = |packed: &[f64]| -> (Mat, Vec<f64>, f64) {
+        let kp = ArdMatern::from_log_params(packed, Smoothness::ThreeHalves);
+        let lrp = LowRank::build(&x, &kp, z.clone(), 1e-10);
+        let orc = VifResidualOracle {
+            kernel: &kp,
+            x: &x,
+            lr: Some(&lrp),
+            grad_aux: None,
+            extra_params: 0,
+        };
+        let mut cnn = Mat::zeros(q, q);
+        let mut cin = vec![0.0; q];
+        let cii = orc.rho_block(i, &nb, &mut cnn, &mut cin);
+        (cnn, cin, cii)
+    };
+    for p in 0..np {
+        let mut pp = p0.clone();
+        pp[p] += h;
+        let mut pm = p0.clone();
+        pm[p] -= h;
+        let (nn_p, in_p, ii_p) = eval(&pp);
+        let (nn_m, in_m, ii_m) = eval(&pm);
+        let fd_ii = (ii_p - ii_m) / (2.0 * h);
+        assert!(
+            (fd_ii - d_ii[p]).abs() < 1e-5 * (1.0 + d_ii[p].abs()),
+            "p={p}: d_rho_ii fd {fd_ii} vs analytic {}",
+            d_ii[p]
+        );
+        for t in 0..q {
+            let fd = (in_p[t] - in_m[t]) / (2.0 * h);
+            assert!(
+                (fd - d_in.get(p, t)).abs() < 1e-5 * (1.0 + d_in.get(p, t).abs()),
+                "p={p}: d_rho_in[{t}] fd {fd} vs analytic {}",
+                d_in.get(p, t)
+            );
+        }
+        for a in 0..q {
+            for b in 0..q {
+                let fd = (nn_p.get(a, b) - nn_m.get(a, b)) / (2.0 * h);
+                assert!(
+                    (fd - d_nn[p].get(a, b)).abs() < 1e-5 * (1.0 + d_nn[p].get(a, b).abs()),
+                    "p={p}: d_rho_nn[{a},{b}] fd {fd} vs analytic {}",
+                    d_nn[p].get(a, b)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn correlation_metric_batch_matches_scalar() {
+    for m in [0usize, 6] {
+        let s = setup(80, m, Smoothness::ThreeHalves, 31);
+        let metric = CorrelationMetric::new(&s.kernel, &s.x, s.lr.as_ref());
+        let mut rng = Rng::seed_from(19);
+        assert_metric_batch_matches_scalar(&metric, 80, &mut rng, 40, TOL);
+    }
+}
+
+#[test]
+fn covertree_search_identical_with_batched_and_scalar_metric() {
+    let s = setup(300, 6, Smoothness::ThreeHalves, 41);
+    let metric = CorrelationMetric::new(&s.kernel, &s.x, s.lr.as_ref());
+    let batched = covertree_ordered_knn(300, 5, &metric);
+    let scalar = covertree_ordered_knn(300, 5, &ScalarizedMetric(&metric));
+    assert_eq!(batched, scalar, "batched metric changed the search result");
+}
