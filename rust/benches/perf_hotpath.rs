@@ -77,7 +77,14 @@ fn main() {
     println!("cover-tree neighbors (mv={m_v}):   {t_nb:.3}s");
 
     // 4. residual B/D construction
-    let oracle = VifResidualOracle { kernel: &kernel, x: &x, lr: Some(&lr), grad_aux: None, extra_params: 0 };
+    let oracle = VifResidualOracle {
+        kernel: &kernel,
+        x: &x,
+        lr: Some(&lr),
+        grad_aux: None,
+        extra_params: 0,
+        x_panels: None,
+    };
     let (resid, t_bd) = common::timed(|| ResidualFactor::build(&oracle, nb.clone(), 0.05, 1e-10));
     println!("residual B/D build:              {t_bd:.3}s");
 
@@ -247,6 +254,7 @@ fn main() {
             lr: Some(&lr),
             grad_aux: Some(&aux),
             extra_params: 1,
+            x_panels: None,
         };
         let gscalar = ScalarizedOracle(&goracle);
         let np = goracle.num_params();
@@ -329,6 +337,126 @@ fn main() {
         );
         let path =
             std::env::var("VIFGP_BENCH_JSON").unwrap_or_else(|_| "BENCH_assembly.json".into());
+        match std::fs::write(&path, json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
+
+    // 11. Plan/refresh split vs assemble-from-scratch over a simulated
+    // L-BFGS trajectory: 20 objective evaluations at perturbed θ with
+    // frozen structure choices (the exact regime of a fit round). The
+    // baseline is the pre-refactor fit-closure path — clone z and the
+    // neighbor graph, assemble a structure, evaluate — while the plan
+    // path builds one `VifPlan` + one structure and refreshes in place.
+    // Per-evaluation NLLs and the final-θ structures must agree to
+    // ≤1e-12; writes machine-readable BENCH_refresh.json (override the
+    // path with VIFGP_BENCH_REFRESH_JSON).
+    {
+        use vifgp::testing::structures_max_abs_diff;
+        use vifgp::vif::VifPlan;
+
+        let evals = 20usize;
+        let nugget = 0.05;
+        let thetas: Vec<ArdMatern> = (0..evals)
+            .map(|t| {
+                let mut p = kernel.log_params();
+                for (j, pj) in p.iter_mut().enumerate() {
+                    *pj += 0.05 * ((t * (j + 2)) as f64 * 0.61).sin();
+                }
+                ArdMatern::from_log_params(&p, kernel.smoothness)
+            })
+            .collect();
+
+        let (plan, t_plan) = common::timed(|| VifPlan::build(&x, Some(z.clone()), nb.clone()));
+
+        // Baseline: assemble from scratch per evaluation (clones included,
+        // exactly what the old objective closures did per line-search step).
+        let (nll_scratch, t_scratch) = common::timed(|| {
+            thetas
+                .iter()
+                .map(|kt| {
+                    let s = VifStructure::assemble(
+                        &x,
+                        kt,
+                        Some(z.clone()),
+                        nb.clone(),
+                        nugget,
+                        1e-10,
+                        1,
+                    );
+                    gaussian::nll(&s, &y)
+                })
+                .collect::<Vec<f64>>()
+        });
+
+        // Plan path: one symbolic build, then in-place numeric refreshes.
+        let (nll_refresh, t_refresh) = common::timed(|| {
+            let mut s = VifStructure::from_plan(&x, &thetas[0], &plan, nugget, 1e-10, 1);
+            let mut out = Vec::with_capacity(evals);
+            out.push(gaussian::nll(&s, &y));
+            for kt in &thetas[1..] {
+                s.refresh(&plan, &x, kt, nugget, 1e-10);
+                out.push(gaussian::nll(&s, &y));
+            }
+            out
+        });
+
+        let mut nll_diff = 0.0f64;
+        for (t, (a, b)) in nll_refresh.iter().zip(&nll_scratch).enumerate() {
+            let rel = (a - b).abs() / (1.0 + b.abs());
+            assert!(
+                rel <= 1e-12,
+                "eval {t}: refresh NLL {a} vs scratch {b} (rel {rel:.3e})"
+            );
+            nll_diff = nll_diff.max(rel);
+        }
+        // Final-θ structures agree entry-wise too.
+        let kt = &thetas[evals - 1];
+        let s_fresh =
+            VifStructure::assemble(&x, kt, Some(z.clone()), nb.clone(), nugget, 1e-10, 1);
+        let mut s_ref = VifStructure::from_plan(&x, &thetas[0], &plan, nugget, 1e-10, 1);
+        s_ref.refresh(&plan, &x, kt, nugget, 1e-10);
+        let struct_diff = structures_max_abs_diff(&s_ref, &s_fresh);
+        assert!(struct_diff <= 1e-12, "refresh structure diverged: {struct_diff:.3e}");
+
+        let per_scratch = t_scratch / evals as f64;
+        let per_refresh = t_refresh / evals as f64;
+        let speedup = t_scratch / t_refresh.max(1e-9);
+        println!(
+            "plan/refresh trajectory ({evals} evals): scratch {:.3} ms/eval  refresh {:.3} ms/eval  speedup {speedup:.2}x  (plan build {:.3} ms, max rel NLL diff {nll_diff:.2e}, struct diff {struct_diff:.2e})",
+            1e3 * per_scratch,
+            1e3 * per_refresh,
+            1e3 * t_plan,
+        );
+
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath stage 11: plan/refresh vs assemble-from-scratch\",\n",
+                "  \"config\": {{\"n\": {n}, \"d\": {d}, \"m\": {m}, \"m_v\": {m_v}, \"evals\": {ev}}},\n",
+                "  \"plan_build_s\": {tp:.6},\n",
+                "  \"assemble_scratch_s_per_eval\": {psc:.6},\n",
+                "  \"refresh_s_per_eval\": {prf:.6},\n",
+                "  \"trajectory_speedup\": {sp:.3},\n",
+                "  \"max_rel_nll_diff\": {nd:.3e},\n",
+                "  \"final_structure_max_abs_diff\": {sd:.3e}\n",
+                "}}\n"
+            ),
+            n = n,
+            d = d,
+            m = m,
+            m_v = m_v,
+            ev = evals,
+            tp = t_plan,
+            psc = per_scratch,
+            prf = per_refresh,
+            sp = speedup,
+            nd = nll_diff,
+            sd = struct_diff,
+        );
+        let path = std::env::var("VIFGP_BENCH_REFRESH_JSON")
+            .unwrap_or_else(|_| "BENCH_refresh.json".into());
         match std::fs::write(&path, json) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => println!("could not write {path}: {e}"),

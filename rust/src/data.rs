@@ -49,6 +49,7 @@ pub fn simulate_latent_gp(rng: &mut Rng, x: &Mat, kernel: &ArdMatern) -> Vec<f64
             lr: None,
             grad_aux: None,
             extra_params: 0,
+            x_panels: None,
         };
         // With no low-rank part the correlation metric reduces to
         // d(i,j) = √(1 − |k_ij/σ₁²|); the batched panel path serves the

@@ -56,9 +56,14 @@ pub fn lloyd(x_scaled: &Mat, mut centers: Mat, iters: usize) -> Mat {
     let n = x_scaled.rows();
     let d = x_scaled.cols();
     let m = centers.rows();
+    // Accumulators are reused across iterations: warm-started
+    // re-selection runs Lloyd on every plan rebuild, so the refinement
+    // loop itself stays allocation-free.
+    let mut sums = Mat::zeros(m, d);
+    let mut counts = vec![0usize; m];
     for _ in 0..iters {
-        let mut sums = Mat::zeros(m, d);
-        let mut counts = vec![0usize; m];
+        sums.data_mut().fill(0.0);
+        counts.fill(0);
         for i in 0..n {
             let xi = x_scaled.row(i);
             let k = nearest_center(xi, &centers);

@@ -271,6 +271,15 @@ impl ArdMatern {
     /// Cross-covariance matrix `[c_θ(a_i, b_j)]` (rows over `a`).
     pub fn cross_cov(&self, a: &Mat, b: &Mat) -> Mat {
         let mut out = Mat::zeros(a.rows(), b.rows());
+        self.cross_cov_into(a, b, &mut out);
+        out
+    }
+
+    /// [`cross_cov`](Self::cross_cov) writing into a preallocated
+    /// `a.rows() × b.rows()` output (the θ-refresh path reuses panels).
+    pub fn cross_cov_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(out.rows(), a.rows(), "cross_cov_into row mismatch");
+        assert_eq!(out.cols(), b.rows(), "cross_cov_into col mismatch");
         for i in 0..a.rows() {
             let ra = a.row(i);
             let orow = out.row_mut(i);
@@ -278,13 +287,22 @@ impl ArdMatern {
                 orow[j] = self.variance * self.corr_of_dist(self.scaled_dist(ra, b.row(j)));
             }
         }
-        out
     }
 
     /// Symmetric covariance matrix over one point set, with optional nugget.
     pub fn sym_cov(&self, a: &Mat, nugget: f64) -> Mat {
         let n = a.rows();
         let mut out = Mat::zeros(n, n);
+        self.sym_cov_into(a, nugget, &mut out);
+        out
+    }
+
+    /// [`sym_cov`](Self::sym_cov) writing into a preallocated `n × n`
+    /// output. Every entry is overwritten.
+    pub fn sym_cov_into(&self, a: &Mat, nugget: f64, out: &mut Mat) {
+        let n = a.rows();
+        assert_eq!(out.rows(), n, "sym_cov_into row mismatch");
+        assert_eq!(out.cols(), n, "sym_cov_into col mismatch");
         for i in 0..n {
             out.set(i, i, self.variance + nugget);
             for j in 0..i {
@@ -293,7 +311,6 @@ impl ArdMatern {
                 out.set(j, i, v);
             }
         }
-        out
     }
 
     /// Covariance and its gradient wrt `[log σ₁², log λ₁…λ_d]`

@@ -196,9 +196,20 @@ impl Mat {
 
     /// `selfᵀ * other` without forming the transpose.
     pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.cols, other.cols);
+        self.matmul_tn_into(other, &mut out);
+        out
+    }
+
+    /// [`matmul_tn`](Self::matmul_tn) writing into a preallocated
+    /// `self.cols × other.cols` output (overwritten, same accumulation
+    /// order as the allocating variant).
+    pub fn matmul_tn_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
+        assert_eq!(out.rows, m, "matmul_tn_into row mismatch");
+        assert_eq!(out.cols, n, "matmul_tn_into col mismatch");
+        out.data.fill(0.0);
         for kk in 0..k {
             let arow = self.row(kk);
             let brow = other.row(kk);
@@ -212,7 +223,6 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
     /// `self * otherᵀ`.

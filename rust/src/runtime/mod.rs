@@ -282,10 +282,25 @@ pub fn default_artifact_dir() -> PathBuf {
 /// else the native Rust path. This is the single entry point the VIF
 /// structure uses for its low-rank panels.
 pub fn cross_cov_panel(x: &Mat, z: &Mat, kernel: &ArdMatern) -> Mat {
+    let mut out = Mat::zeros(x.rows(), z.rows());
+    cross_cov_panel_into(x, z, kernel, &mut out);
+    out
+}
+
+/// [`cross_cov_panel`] writing into a preallocated `n × m` output — the
+/// θ-refresh path reuses the `Σ_mn` panel buffer across optimizer steps.
+/// Engine-served panels are copied into `out`; the native path fills it
+/// directly.
+pub fn cross_cov_panel_into(x: &Mat, z: &Mat, kernel: &ArdMatern, out: &mut Mat) {
+    assert_eq!(out.rows(), x.rows(), "cross_cov_panel_into row mismatch");
+    assert_eq!(out.cols(), z.rows(), "cross_cov_panel_into col mismatch");
     if let Some(engine) = engine() {
         if engine.supports(kernel) {
             match engine.cross_cov(x, z, kernel) {
-                Ok(out) => return out,
+                Ok(panel) => {
+                    out.data_mut().copy_from_slice(panel.data());
+                    return;
+                }
                 Err(err) => {
                     eprintln!("[runtime] PJRT panel failed ({err:#}); native fallback");
                 }
@@ -293,7 +308,7 @@ pub fn cross_cov_panel(x: &Mat, z: &Mat, kernel: &ArdMatern) -> Mat {
         }
         engine.stats.lock().unwrap().native_panels += 1;
     }
-    kernel.cross_cov(x, z)
+    kernel.cross_cov_into(x, z, out)
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@ use crate::covertree::Metric;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::vecchia::{ResidualCov, ResidualFactor, SweepExec};
+use crate::vif::VifStructure;
 
 /// Run `prop` over `cases` randomly generated inputs. On failure, panics
 /// with the case index and seed so the case can be replayed
@@ -232,6 +233,54 @@ pub fn assert_b_kernels_match_dense(
             }
         }
     }
+}
+
+/// Max absolute difference between two assembled [`VifStructure`]s over
+/// everything the θ-refresh path recomputes: the residual factor's
+/// `A`/`D` rows, the low-rank panels (`Σ_m`, `Σ_mn`, `V`, `E`), the
+/// Woodbury blocks (`BΣ_mnᵀ`, `H`, `SΣ_mnᵀ`, `SS`, `M`), and the log
+/// determinant. Panics on any shape/presence mismatch — that indicates
+/// the structures were built for different plans, not a numeric drift.
+/// This is the oracle check behind `tests/refresh.rs` and perf_hotpath
+/// stage 11 (refresh ≡ fresh-assemble ≤ 1e-12).
+pub fn structures_max_abs_diff(s1: &VifStructure, s2: &VifStructure) -> f64 {
+    assert_eq!(s1.n(), s2.n(), "structure sizes differ");
+    assert_eq!(s1.m(), s2.m(), "inducing counts differ");
+    let mut diff = 0.0f64;
+    for (i, (a1, a2)) in s1.resid.a.iter().zip(&s2.resid.a).enumerate() {
+        assert_eq!(a1.len(), a2.len(), "row {i}: coefficient lengths differ");
+        for (x, y) in a1.iter().zip(a2) {
+            diff = diff.max((x - y).abs());
+        }
+    }
+    for (x, y) in s1.resid.d.iter().zip(&s2.resid.d) {
+        diff = diff.max((x - y).abs());
+    }
+    for (m1, m2) in [
+        (&s1.bsig, &s2.bsig),
+        (&s1.h, &s2.h),
+        (&s1.ssig, &s2.ssig),
+        (&s1.ss, &s2.ss),
+    ] {
+        diff = diff.max(m1.max_abs_diff(m2));
+    }
+    match (&s1.mcal, &s2.mcal) {
+        (Some(m1), Some(m2)) => diff = diff.max(m1.max_abs_diff(m2)),
+        (None, None) => {}
+        _ => panic!("Woodbury core presence differs"),
+    }
+    match (&s1.lr, &s2.lr) {
+        (Some(l1), Some(l2)) => {
+            diff = diff.max(l1.sig_m.max_abs_diff(&l2.sig_m));
+            diff = diff.max(l1.sigma_nm.max_abs_diff(&l2.sigma_nm));
+            diff = diff.max(l1.vt.max_abs_diff(&l2.vt));
+            diff = diff.max(l1.et.max_abs_diff(&l2.et));
+        }
+        (None, None) => {}
+        _ => panic!("low-rank presence differs"),
+    }
+    diff = diff.max((s1.logdet() - s2.logdet()).abs());
+    diff
 }
 
 /// Wrapper that strips an oracle's panel overrides, forcing the scalar

@@ -251,12 +251,22 @@ impl LevelSchedule {
 /// column `j`, the rows `i` with `j ∈ N(i)` (ascending) and the matching
 /// coefficients `A_i[k]` (so `B[i, j] = −coef`). `Bᵀ` products and solves
 /// gather through this index instead of scattering row by row.
+///
+/// The sparsity *pattern* (`ptr`/`row`/`pos`) depends only on the
+/// neighbor graph; only `coef` carries θ-dependent values. The plan/
+/// refresh split (see the `vif` module docs) exploits this: a frozen
+/// pattern is reused across every optimizer step and
+/// [`refresh_coef`](Self::refresh_coef) rewrites the coefficients in
+/// place from updated `A` rows.
 #[derive(Clone, Debug, Default)]
 pub struct TransposedIndex {
     /// Column extents: entries of column `j` are `ptr[j]..ptr[j+1]`.
     pub ptr: Vec<usize>,
     /// Owning row `i` per entry, ascending within each column.
     pub row: Vec<u32>,
+    /// Position `k` of this column inside `N(row)` — so each entry's
+    /// coefficient is `a[row][pos]`. Pattern data, θ-independent.
+    pub pos: Vec<u32>,
     /// Coefficient `A_i[k]` per entry.
     pub coef: Vec<f64>,
 }
@@ -264,6 +274,15 @@ pub struct TransposedIndex {
 impl TransposedIndex {
     /// Build from neighbor lists and their coefficient rows.
     pub fn build(neighbors: &[Vec<u32>], a: &[Vec<f64>]) -> Self {
+        let mut idx = Self::pattern(neighbors);
+        idx.refresh_coef(a);
+        idx
+    }
+
+    /// Build only the sparsity pattern (`ptr`/`row`/`pos`) with zeroed
+    /// coefficients — for θ-independent plans whose consumers refresh
+    /// the coefficients from real rows later.
+    pub fn pattern(neighbors: &[Vec<u32>]) -> Self {
         let n = neighbors.len();
         let mut ptr = vec![0usize; n + 1];
         for nb in neighbors {
@@ -276,7 +295,8 @@ impl TransposedIndex {
         }
         let nnz = ptr[n];
         let mut row = vec![0u32; nnz];
-        let mut coef = vec![0.0f64; nnz];
+        let mut pos = vec![0u32; nnz];
+        let coef = vec![0.0f64; nnz];
         let mut cursor = ptr.clone();
         // Visiting owners in ascending i keeps each column's entries
         // ascending in i, which fixes the gather accumulation order.
@@ -284,11 +304,20 @@ impl TransposedIndex {
             for (k, &j) in nb.iter().enumerate() {
                 let c = cursor[j as usize];
                 row[c] = i as u32;
-                coef[c] = a[i][k];
+                pos[c] = k as u32;
                 cursor[j as usize] += 1;
             }
         }
-        TransposedIndex { ptr, row, coef }
+        TransposedIndex { ptr, row, pos, coef }
+    }
+
+    /// Rewrite only the coefficients from updated rows `a`, leaving the
+    /// pattern untouched — the θ-refresh path. `a` must come from the
+    /// same neighbor graph the pattern was built from.
+    pub fn refresh_coef(&mut self, a: &[Vec<f64>]) {
+        for ((c, &i), &k) in self.coef.iter_mut().zip(&self.row).zip(&self.pos) {
+            *c = a[i as usize][k as usize];
+        }
     }
 }
 
@@ -413,6 +442,35 @@ impl Default for Row {
     }
 }
 
+/// One row of the factor from the oracle: a single panelized
+/// [`ResidualCov::rho_block`] call fills `ρ_NN` and `ρ_iN` (gathered
+/// neighbor panel + SYRK low-rank correction in the `VifResidualOracle`
+/// override; per-pair scalar calls in the default impl), then
+/// `A_i = ρ_NN⁻¹ ρ_iN` and `D_i = ρ_ii − A_i·ρ_iN`. Shared by
+/// [`ResidualFactor::build`] and [`ResidualFactor::refresh_values`] so
+/// a refreshed factor is numerically identical to a freshly built one.
+fn compute_row(
+    oracle: &dyn ResidualCov,
+    i: usize,
+    nb: &[u32],
+    nugget: f64,
+    jitter: f64,
+) -> Row {
+    let q = nb.len();
+    let mut c = Mat::zeros(q, q);
+    let mut rho_in = vec![0.0; q];
+    let rho_ii = oracle.rho_block(i, nb, &mut c, &mut rho_in) + nugget;
+    if q == 0 {
+        return Row { a: vec![], d: rho_ii.max(1e-12) };
+    }
+    c.add_diag(nugget);
+    let chol = CholeskyFactor::new_with_jitter(&c, jitter.max(1e-10))
+        .expect("residual block not PD even with jitter");
+    let a_i = chol.solve(&rho_in);
+    let d_i = rho_ii - dot(&a_i, &rho_in);
+    Row { a: a_i, d: d_i.max(1e-12) }
+}
+
 impl ResidualFactor {
     /// Build `(B, D)` from a residual-covariance oracle.
     ///
@@ -426,34 +484,30 @@ impl ResidualFactor {
         nugget: f64,
         jitter: f64,
     ) -> Self {
+        let (a, d) = ResidualFactor::compute_rows(oracle, &neighbors, nugget, jitter);
+        ResidualFactor::from_parts(neighbors, a, d)
+    }
+
+    /// The numeric half of [`build`](Self::build): every row's
+    /// coefficients `A_i` and conditional variance `D_i` from the
+    /// oracle, without any of the symbolic (schedule / transposed-index)
+    /// work. Used by [`build`](Self::build) and by the `vif::VifPlan`
+    /// assembly path that reuses a precomputed symbolic structure.
+    pub fn compute_rows(
+        oracle: &dyn ResidualCov,
+        neighbors: &[Vec<u32>],
+        nugget: f64,
+        jitter: f64,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
         let n = neighbors.len();
-        let rows = parallel_map(n, |i| {
-            let nb = &neighbors[i];
-            let q = nb.len();
-            // One panelized oracle call fills ρ_NN and ρ_iN (gathered
-            // neighbor panel + SYRK low-rank correction in the
-            // `VifResidualOracle` override; per-pair scalar calls in the
-            // default impl).
-            let mut c = Mat::zeros(q, q);
-            let mut rho_in = vec![0.0; q];
-            let rho_ii = oracle.rho_block(i, nb, &mut c, &mut rho_in) + nugget;
-            if q == 0 {
-                return Row { a: vec![], d: rho_ii.max(1e-12) };
-            }
-            c.add_diag(nugget);
-            let chol = CholeskyFactor::new_with_jitter(&c, jitter.max(1e-10))
-                .expect("residual block not PD even with jitter");
-            let a_i = chol.solve(&rho_in);
-            let d_i = rho_ii - dot(&a_i, &rho_in);
-            Row { a: a_i, d: d_i.max(1e-12) }
-        });
+        let rows = parallel_map(n, |i| compute_row(oracle, i, &neighbors[i], nugget, jitter));
         let mut a = Vec::with_capacity(n);
         let mut d = Vec::with_capacity(n);
         for r in rows {
             a.push(r.a);
             d.push(r.d);
         }
-        ResidualFactor::from_parts(neighbors, a, d)
+        (a, d)
     }
 
     /// Assemble a factor from explicit parts, computing the level
@@ -478,6 +532,79 @@ impl ResidualFactor {
             bt_index,
             sched_min_rows: sched_min_rows_default(),
         }
+    }
+
+    /// [`from_parts`](Self::from_parts), but reusing a previously
+    /// computed level schedule and transposed-index *pattern* (e.g. the
+    /// ones a `vif::VifPlan` owns) instead of recomputing them from the
+    /// graph. The pattern's coefficients are refreshed from `a`; the
+    /// caller guarantees `schedule` and `bt_index` were built from this
+    /// exact `neighbors` graph (debug-asserted on sizes).
+    pub fn from_parts_precomputed(
+        neighbors: Vec<Vec<u32>>,
+        a: Vec<Vec<f64>>,
+        d: Vec<f64>,
+        schedule: LevelSchedule,
+        mut bt_index: TransposedIndex,
+    ) -> Self {
+        let n = neighbors.len();
+        assert_eq!(a.len(), n, "coefficient rows / neighbor lists mismatch");
+        assert_eq!(d.len(), n, "diagonal / neighbor lists mismatch");
+        for (i, (nb, ai)) in neighbors.iter().zip(&a).enumerate() {
+            assert_eq!(ai.len(), nb.len(), "row {i}: coefficients / neighbors mismatch");
+        }
+        assert_eq!(bt_index.ptr.len(), n + 1, "pattern built for a different n");
+        let nnz: usize = neighbors.iter().map(Vec::len).sum();
+        assert_eq!(bt_index.coef.len(), nnz, "pattern built for a different graph");
+        debug_assert_eq!(
+            schedule.levels.iter().map(Vec::len).sum::<usize>(),
+            n,
+            "schedule built for a different graph"
+        );
+        bt_index.refresh_coef(&a);
+        let inv_d: Vec<f64> = d.iter().map(|di| 1.0 / di).collect();
+        ResidualFactor {
+            neighbors,
+            a,
+            d,
+            inv_d,
+            schedule,
+            bt_index,
+            sched_min_rows: sched_min_rows_default(),
+        }
+    }
+
+    /// θ-refresh: recompute every row's coefficients `A_i` and
+    /// conditional variance `D_i` from `oracle` **in place** — the same
+    /// per-row math as [`build`](Self::build), written into the existing
+    /// row buffers — then refresh the cached reciprocals and the
+    /// transposed-index coefficients. The neighbor graph, the level
+    /// schedule, and the `Bᵀ` sparsity pattern are untouched (they are
+    /// θ-independent).
+    pub fn refresh_values(&mut self, oracle: &dyn ResidualCov, nugget: f64, jitter: f64) {
+        let n = self.n();
+        {
+            let neighbors = &self.neighbors;
+            let a_ptr = SyncSlice(self.a.as_mut_ptr());
+            let d_ptr = SyncSlice(self.d.as_mut_ptr());
+            let a_ptr = &a_ptr;
+            let d_ptr = &d_ptr;
+            coordinator::parallel_for_chunks(n, |start, end| {
+                for i in start..end {
+                    let row = compute_row(oracle, i, &neighbors[i], nugget, jitter);
+                    // SAFETY: each row index is written by exactly one
+                    // chunk; `neighbors` is only read.
+                    unsafe {
+                        (*a_ptr.get().add(i)).copy_from_slice(&row.a);
+                        *d_ptr.get().add(i) = row.d;
+                    }
+                }
+            });
+        }
+        for (inv, di) in self.inv_d.iter_mut().zip(&self.d) {
+            *inv = 1.0 / di;
+        }
+        self.bt_index.refresh_coef(&self.a);
     }
 
     /// Cached `1/D_i` (valid for the `d` the factor was built with).
@@ -678,12 +805,28 @@ impl ResidualFactor {
 
     /// [`mul_b_mat`](Self::mul_b_mat) with an explicit execution mode.
     pub fn mul_b_mat_with(&self, x: &Mat, exec: SweepExec<'_>) -> Mat {
+        let mut out = Mat::zeros(x.rows(), x.cols());
+        self.mul_b_mat_into_with(x, &mut out, exec);
+        out
+    }
+
+    /// [`mul_b_mat`](Self::mul_b_mat) writing into a preallocated output
+    /// of the same shape (the θ-refresh path: no allocation per apply).
+    pub fn mul_b_mat_into(&self, x: &Mat, out: &mut Mat) {
+        self.mul_b_mat_into_with(x, out, self.default_exec())
+    }
+
+    /// [`mul_b_mat_into`](Self::mul_b_mat_into) with an explicit
+    /// execution mode.
+    pub fn mul_b_mat_into_with(&self, x: &Mat, out: &mut Mat, exec: SweepExec<'_>) {
         let n = self.n();
         assert_eq!(x.rows(), n);
+        assert_eq!(out.rows(), n);
+        assert_eq!(out.cols(), x.cols());
         let k = x.cols();
-        let mut out = x.clone();
+        out.data_mut().copy_from_slice(x.data());
         if k == 0 {
-            return out;
+            return;
         }
         let optr = SyncSlice(out.data_mut().as_mut_ptr());
         let optr = &optr;
@@ -703,7 +846,6 @@ impl ResidualFactor {
                 }
             }
         });
-        out
     }
 
     /// Row-wise `Bᵀ X` for an n×k matrix.
@@ -714,13 +856,29 @@ impl ResidualFactor {
     /// [`mul_bt_mat`](Self::mul_bt_mat) with an explicit execution mode
     /// (gather per output row through the transposed index).
     pub fn mul_bt_mat_with(&self, x: &Mat, exec: SweepExec<'_>) -> Mat {
+        let mut out = Mat::zeros(x.rows(), x.cols());
+        self.mul_bt_mat_into_with(x, &mut out, exec);
+        out
+    }
+
+    /// [`mul_bt_mat`](Self::mul_bt_mat) writing into a preallocated
+    /// output of the same shape (the θ-refresh path).
+    pub fn mul_bt_mat_into(&self, x: &Mat, out: &mut Mat) {
+        self.mul_bt_mat_into_with(x, out, self.default_exec())
+    }
+
+    /// [`mul_bt_mat_into`](Self::mul_bt_mat_into) with an explicit
+    /// execution mode.
+    pub fn mul_bt_mat_into_with(&self, x: &Mat, out: &mut Mat, exec: SweepExec<'_>) {
         let n = self.n();
         assert_eq!(x.rows(), n);
+        assert_eq!(out.rows(), n);
+        assert_eq!(out.cols(), x.cols());
         let k = x.cols();
         let bt = &self.bt_index;
-        let mut out = x.clone();
+        out.data_mut().copy_from_slice(x.data());
         if k == 0 {
-            return out;
+            return;
         }
         let optr = SyncSlice(out.data_mut().as_mut_ptr());
         let optr = &optr;
@@ -740,7 +898,6 @@ impl ResidualFactor {
                 }
             }
         });
-        out
     }
 
     /// Row-wise solve `B X = V` (level-ordered).
@@ -1152,6 +1309,52 @@ mod tests {
         // Column 1 owned by rows 2 (coef 4) and 3 (coef 5).
         assert_eq!(&bt.row[2..4], &[2, 3]);
         assert_eq!(&bt.coef[2..4], &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn transposed_index_pos_and_refresh_coef() {
+        let neighbors: Vec<Vec<u32>> = vec![vec![], vec![0], vec![0, 1], vec![1]];
+        let a: Vec<Vec<f64>> = vec![vec![], vec![2.0], vec![3.0, 4.0], vec![5.0]];
+        let mut bt = TransposedIndex::build(&neighbors, &a);
+        // Column 0 owned by (row 1, k 0) and (row 2, k 0); column 1 by
+        // (row 2, k 1) and (row 3, k 0).
+        assert_eq!(bt.pos, vec![0, 0, 1, 0]);
+        let a2: Vec<Vec<f64>> = vec![vec![], vec![-1.0], vec![-2.0, -3.0], vec![-4.0]];
+        bt.refresh_coef(&a2);
+        assert_eq!(bt.coef, vec![-1.0, -2.0, -3.0, -4.0]);
+    }
+
+    #[test]
+    fn refresh_values_matches_rebuild() {
+        // Build against one oracle, refresh against another: the factor
+        // must equal a from-scratch build for the second oracle, and the
+        // transposed-index coefficients must follow (checked through a
+        // Bᵀ product).
+        let n = 12;
+        let o1 = DenseOracle { cov: toy_cov(n) };
+        let mut cov2 = toy_cov(n);
+        cov2.scale(1.7);
+        cov2.add_diag(0.3);
+        let o2 = DenseOracle { cov: cov2 };
+        let nb: Vec<Vec<u32>> = (0..n)
+            .map(|i| (i.saturating_sub(3)..i).map(|j| j as u32).collect())
+            .collect();
+        let mut f = ResidualFactor::build(&o1, nb.clone(), 0.05, 0.0);
+        f.refresh_values(&o2, 0.1, 0.0);
+        let fresh = ResidualFactor::build(&o2, nb, 0.1, 0.0);
+        for i in 0..n {
+            assert!((f.d[i] - fresh.d[i]).abs() < 1e-14, "D[{i}]");
+            for (a, b) in f.a[i].iter().zip(&fresh.a[i]) {
+                assert!((a - b).abs() < 1e-14, "A[{i}]");
+            }
+        }
+        let v: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).cos()).collect();
+        for (a, b) in f.mul_bt(&v).iter().zip(&fresh.mul_bt(&v)) {
+            assert!((a - b).abs() < 1e-14, "Bᵀ product diverged");
+        }
+        for (a, b) in f.inv_d().iter().zip(fresh.inv_d()) {
+            assert!((a - b).abs() < 1e-14, "1/D cache diverged");
+        }
     }
 
     #[test]

@@ -9,10 +9,11 @@
 
 use crate::kernels::{ArdMatern, Smoothness};
 use crate::linalg::{dot, Mat};
-use crate::rng::Rng;
 use crate::vecchia::neighbors::NeighborSelection;
 
-use super::{select_inducing, select_neighbors, GradAux, VifConfig, VifResidualOracle, VifStructure};
+use super::{
+    FitModel, GradAux, NeighborPanels, VifConfig, VifPlan, VifResidualOracle, VifStructure,
+};
 
 const LN_2PI: f64 = 1.8378770664093453;
 
@@ -66,6 +67,19 @@ pub fn nll_and_grad(
     kernel: &ArdMatern,
     y: &[f64],
 ) -> (f64, Vec<f64>) {
+    nll_and_grad_panels(s, x, kernel, y, None)
+}
+
+/// [`nll_and_grad`] with pre-gathered neighbor coordinate panels from a
+/// frozen [`VifPlan`] — the fit driver's per-evaluation path, which
+/// spares the Appendix-A gradient pass the per-row coordinate gathers.
+pub fn nll_and_grad_panels(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &ArdMatern,
+    y: &[f64],
+    x_panels: Option<&NeighborPanels>,
+) -> (f64, Vec<f64>) {
     let n = y.len();
     let nk = kernel.num_params();
     let np = nk + 1; // + noise
@@ -115,6 +129,7 @@ pub fn nll_and_grad(
         lr: s.lr.as_ref(),
         grad_aux: grad_aux.as_ref(),
         extra_params: 1,
+        x_panels,
     };
 
     // Residual-part contributions, accumulated per point i.
@@ -448,6 +463,9 @@ pub struct VifRegression {
     pub params: GaussianParams,
     pub inducing: Option<Mat>,
     pub structure: Option<VifStructure>,
+    /// The θ-independent plan matching `structure` (set by `assemble`;
+    /// the fit driver moves it out for each optimization round).
+    pub plan: Option<VifPlan>,
     pub fit_trace: Vec<f64>,
 }
 
@@ -461,42 +479,33 @@ impl VifRegression {
             params: init,
             inducing: None,
             structure: None,
+            plan: None,
             fit_trace: vec![],
         }
     }
 
-    /// (Re-)select inducing points and neighbors for the current kernel
-    /// and assemble the structure.
+    /// (Re-)select inducing points and neighbors for the current kernel,
+    /// build the θ-independent [`VifPlan`], and assemble the structure
+    /// from it — the one symbolic/allocation pass per re-selection
+    /// round (see the module docs on the plan/refresh split).
     pub fn assemble(&mut self) {
-        let mut rng = Rng::seed_from(self.config.seed);
-        let z = select_inducing(
+        let (z, nb) = super::select_structure(
             &self.x,
             &self.params.kernel,
-            self.config.num_inducing.min(self.x.rows()),
-            self.config.lloyd_iters,
-            &mut rng,
+            &self.config,
             self.inducing.as_ref(),
         );
-        let lr_tmp = z
-            .clone()
-            .map(|z| super::LowRank::build(&self.x, &self.params.kernel, z, self.config.jitter));
-        let nb = select_neighbors(
+        let plan = VifPlan::build(&self.x, z, nb);
+        self.structure = Some(VifStructure::from_plan(
             &self.x,
             &self.params.kernel,
-            lr_tmp.as_ref(),
-            self.config.num_neighbors,
-            self.config.selection,
-        );
-        self.inducing = z.clone();
-        self.structure = Some(VifStructure::assemble(
-            &self.x,
-            &self.params.kernel,
-            z,
-            nb,
+            &plan,
             self.params.noise,
             self.config.jitter,
             1,
         ));
+        self.inducing = plan.z.clone();
+        self.plan = Some(plan);
     }
 
     /// Negative log-likelihood at the current parameters (assembles with
@@ -515,54 +524,13 @@ impl VifRegression {
         nll(&s, &self.y)
     }
 
-    /// Fit by L-BFGS, re-selecting inducing points and neighbors at
-    /// power-of-two iterations (§6). Returns the final NLL.
+    /// Fit by L-BFGS, re-selecting inducing points and neighbors between
+    /// rounds (§6). Runs the shared [`super::fit_with_reselection`]
+    /// driver: one plan build + one structure assembly per round, every
+    /// L-BFGS evaluation refreshes the frozen structure in place.
+    /// Returns the final NLL.
     pub fn fit(&mut self, max_iters: usize) -> f64 {
-        self.assemble();
-        let mut packed = self.params.pack();
-        let mut last = f64::INFINITY;
-        let smoothness = self.config.smoothness;
-        for round in 0..3 {
-            // Freeze structure choices (z, neighbors) during a round.
-            let z = self.inducing.clone();
-            let nb = self
-                .structure
-                .as_ref()
-                .unwrap()
-                .resid
-                .neighbors
-                .clone();
-            let x = &self.x;
-            let y = &self.y;
-            let jitter = self.config.jitter;
-            let f = |p: &[f64]| -> (f64, Vec<f64>) {
-                let pars = GaussianParams::unpack(p, smoothness);
-                let s = VifStructure::assemble(
-                    x,
-                    &pars.kernel,
-                    z.clone(),
-                    nb.clone(),
-                    pars.noise,
-                    jitter,
-                    1,
-                );
-                nll_and_grad(&s, x, &pars.kernel, y)
-            };
-            let res = crate::optim::lbfgs(&f, &packed, max_iters, 1e-5);
-            packed = res.x;
-            self.fit_trace.extend(res.trace);
-            self.params = GaussianParams::unpack(&packed, smoothness);
-            // Re-select structure for the new θ; stop when NLL stops moving.
-            self.assemble();
-            let now = nll(self.structure.as_ref().unwrap(), &self.y);
-            if (last - now).abs() < 1e-4 * (1.0 + now.abs()) {
-                last = now;
-                break;
-            }
-            last = now;
-            let _ = round;
-        }
-        last
+        super::fit_with_reselection(self, max_iters, 3)
     }
 
     /// Predict mean and response-variance at new inputs.
@@ -580,10 +548,52 @@ impl VifRegression {
     }
 }
 
+impl FitModel for VifRegression {
+    fn reselect(&mut self) {
+        self.assemble();
+    }
+
+    fn take_plan(&mut self) -> VifPlan {
+        self.plan.take().expect("reselect before take_plan")
+    }
+
+    fn take_structure(&mut self) -> VifStructure {
+        self.structure.take().expect("assemble before fitting")
+    }
+
+    fn pack_params(&self) -> Vec<f64> {
+        self.params.pack()
+    }
+
+    fn adopt_params(&mut self, packed: &[f64]) {
+        self.params = GaussianParams::unpack(packed, self.config.smoothness);
+    }
+
+    fn eval(&self, plan: &VifPlan, s: &mut VifStructure, packed: &[f64]) -> (f64, Vec<f64>) {
+        let pars = GaussianParams::unpack(packed, self.config.smoothness);
+        s.refresh(plan, &self.x, &pars.kernel, pars.noise, self.config.jitter);
+        nll_and_grad_panels(s, &self.x, &pars.kernel, &self.y, Some(&plan.x_panels))
+    }
+
+    fn round_nll(&mut self) -> f64 {
+        nll(self.structure.as_ref().unwrap(), &self.y)
+    }
+
+    fn lbfgs_tol(&self) -> f64 {
+        1e-5
+    }
+
+    fn record_trace(&mut self, trace: &[f64]) {
+        self.fit_trace.extend_from_slice(trace);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
     use crate::testing::random_points;
+    use crate::vif::{select_inducing, select_neighbors};
 
     /// Exact dense GP NLL for verification.
     fn dense_nll(x: &Mat, kernel: &ArdMatern, noise: f64, y: &[f64]) -> f64 {
@@ -810,6 +820,7 @@ pub fn nll_and_grad_with_effects(
 #[cfg(test)]
 mod fixed_effects_tests {
     use super::*;
+    use crate::rng::Rng;
     use crate::testing::random_points;
 
     #[test]

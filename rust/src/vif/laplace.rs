@@ -21,7 +21,7 @@ use crate::linalg::{dot, CholeskyFactor, Mat};
 use crate::rng::Rng;
 use crate::vecchia::neighbors::NeighborSelection;
 
-use super::{GradAux, VifResidualOracle, VifStructure};
+use super::{FitModel, GradAux, NeighborPanels, VifPlan, VifResidualOracle, VifStructure};
 
 /// Solver backend for all `(W + Σ_†⁻¹)`-type operations.
 #[derive(Clone, Debug)]
@@ -455,6 +455,18 @@ pub struct VifDerivPack {
 
 impl VifDerivPack {
     pub fn build(s: &VifStructure, x: &Mat, kernel: &ArdMatern) -> Self {
+        Self::build_panels(s, x, kernel, None)
+    }
+
+    /// [`build`](Self::build) with pre-gathered neighbor coordinate
+    /// panels from a frozen [`VifPlan`] (the fit driver's
+    /// per-evaluation path).
+    pub fn build_panels(
+        s: &VifStructure,
+        x: &Mat,
+        kernel: &ArdMatern,
+        x_panels: Option<&NeighborPanels>,
+    ) -> Self {
         let n = s.n();
         let np = kernel.num_params();
         let aux = s.lr.as_ref().map(|lr| GradAux::build(x, kernel, lr));
@@ -464,6 +476,7 @@ impl VifDerivPack {
             lr: s.lr.as_ref(),
             grad_aux: aux.as_ref(),
             extra_params: 0,
+            x_panels,
         };
         use std::sync::Mutex;
         let dd_store = Mutex::new(vec![vec![0.0; n]; np]);
@@ -695,6 +708,23 @@ pub fn nll_and_grad(
     mode: &SolveMode,
     rng: &mut Rng,
 ) -> (f64, Vec<f64>, LaplaceState) {
+    nll_and_grad_panels(s, x, kernel, lik, y, mode, rng, None)
+}
+
+/// [`nll_and_grad`] with pre-gathered neighbor coordinate panels from a
+/// frozen [`VifPlan`] — the fit driver's per-evaluation path, which
+/// spares the Appendix-A derivative pack the per-row coordinate gathers.
+#[allow(clippy::too_many_arguments)]
+pub fn nll_and_grad_panels(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &ArdMatern,
+    lik: &Likelihood,
+    y: &[f64],
+    mode: &SolveMode,
+    rng: &mut Rng,
+    x_panels: Option<&NeighborPanels>,
+) -> (f64, Vec<f64>, LaplaceState) {
     let sigma_cache = match mode {
         SolveMode::Cholesky => Some(s.dense_sigma_dagger()),
         _ => None,
@@ -704,7 +734,7 @@ pub fn nll_and_grad(
     let (logdet, probes) = solver.logdet_and_probes(rng);
     let value = state.psi + 0.5 * logdet;
 
-    let pack = VifDerivPack::build(s, x, kernel);
+    let pack = VifDerivPack::build_panels(s, x, kernel, x_panels);
     let nk = pack.np;
     let naux = lik.num_aux();
     let mut grad = vec![0.0; nk + naux];
@@ -1499,6 +1529,9 @@ pub struct VifLaplaceModel {
     pub lik: Likelihood,
     pub inducing: Option<Mat>,
     pub structure: Option<VifStructure>,
+    /// The θ-independent plan matching `structure` (set by `assemble`;
+    /// the fit driver moves it out for each optimization round).
+    pub plan: Option<VifPlan>,
     pub state: Option<LaplaceState>,
     pub fit_trace: Vec<f64>,
 }
@@ -1522,6 +1555,7 @@ impl VifLaplaceModel {
             lik,
             inducing: None,
             structure: None,
+            plan: None,
             state: None,
             fit_trace: vec![],
         }
@@ -1541,90 +1575,33 @@ impl VifLaplaceModel {
         )
     }
 
-    /// (Re-)select inducing points + neighbors for the current kernel.
+    /// (Re-)select inducing points + neighbors for the current kernel,
+    /// build the θ-independent [`VifPlan`], and assemble the latent-scale
+    /// structure from it — the one symbolic/allocation pass per
+    /// re-selection round (see the `vif` module docs).
     pub fn assemble(&mut self) {
-        let mut rng = Rng::seed_from(self.config.seed);
-        let z = crate::vif::select_inducing(
+        let (z, nb) =
+            crate::vif::select_structure(&self.x, &self.kernel, &self.config, self.inducing.as_ref());
+        let plan = VifPlan::build(&self.x, z, nb);
+        self.structure = Some(VifStructure::from_plan(
             &self.x,
             &self.kernel,
-            self.config.num_inducing.min(self.x.rows()),
-            self.config.lloyd_iters,
-            &mut rng,
-            self.inducing.as_ref(),
-        );
-        let lr_tmp = z
-            .clone()
-            .map(|z| crate::vif::LowRank::build(&self.x, &self.kernel, z, self.config.jitter));
-        let nb = crate::vif::select_neighbors(
-            &self.x,
-            &self.kernel,
-            lr_tmp.as_ref(),
-            self.config.num_neighbors,
-            self.config.selection,
-        );
-        self.inducing = z.clone();
-        self.structure = Some(VifStructure::assemble(
-            &self.x,
-            &self.kernel,
-            z,
-            nb,
+            &plan,
             0.0, // latent scale
             self.config.jitter,
             0,
         ));
+        self.inducing = plan.z.clone();
+        self.plan = Some(plan);
     }
 
-    /// Fit by L-BFGS; returns the final `L^{VIFLA}`.
+    /// Fit by L-BFGS via the shared [`crate::vif::fit_with_reselection`]
+    /// driver (one plan build + one assembly per round; objective
+    /// evaluations refresh the frozen structure in place, with common
+    /// random numbers — the same probe seed at every θ). Returns the
+    /// final `L^{VIFLA}`.
     pub fn fit(&mut self, max_iters: usize) -> f64 {
-        self.assemble();
-        let mut packed = self.pack();
-        let mut last = f64::INFINITY;
-        for _round in 0..3 {
-            let z = self.inducing.clone();
-            let nb = self.structure.as_ref().unwrap().resid.neighbors.clone();
-            let x = &self.x;
-            let y = &self.y;
-            let jitter = self.config.jitter;
-            let mode = self.mode.clone();
-            let smoothness = self.config.smoothness;
-            let base_kernel = self.kernel.clone();
-            let base_lik = self.lik.clone();
-            let seed = self.config.seed;
-            let f = |p: &[f64]| -> (f64, Vec<f64>) {
-                let nk = base_kernel.num_params();
-                let kernel = ArdMatern::from_log_params(&p[..nk], smoothness);
-                let lik = base_lik.with_aux(&p[nk..]);
-                let s = VifStructure::assemble(x, &kernel, z.clone(), nb.clone(), 0.0, jitter, 0);
-                // Common random numbers: same probe seed at every θ.
-                let mut rng = Rng::seed_from(seed ^ 0xC0FFEE);
-                let (v, g, _) = nll_and_grad(&s, x, &kernel, &lik, y, &mode, &mut rng);
-                (v, g)
-            };
-            let res = crate::optim::lbfgs(&f, &packed, max_iters, 1e-4);
-            packed = res.x;
-            self.fit_trace.extend(res.trace);
-            let (kernel, lik) = self.unpack(&packed);
-            self.kernel = kernel;
-            self.lik = lik;
-            self.assemble();
-            let mut rng = Rng::seed_from(seed ^ 0xC0FFEE);
-            let (now, state) = nll(
-                self.structure.as_ref().unwrap(),
-                &self.x,
-                &self.kernel,
-                &self.lik,
-                &self.y,
-                &self.mode,
-                &mut rng,
-            );
-            self.state = Some(state);
-            if (last - now).abs() < 1e-4 * (1.0 + now.abs()) {
-                last = now;
-                break;
-            }
-            last = now;
-        }
-        last
+        crate::vif::fit_with_reselection(self, max_iters, 3)
     }
 
     /// Predict latent + response distributions at new inputs.
@@ -1654,5 +1631,71 @@ impl VifLaplaceModel {
         let mut rng = Rng::seed_from(self.config.seed ^ 0xC0FFEE);
         let (_, state) = nll(s, &self.x, &self.kernel, &self.lik, &self.y, &self.mode, &mut rng);
         self.state = Some(state);
+    }
+}
+
+impl FitModel for VifLaplaceModel {
+    fn reselect(&mut self) {
+        self.assemble();
+    }
+
+    fn take_plan(&mut self) -> VifPlan {
+        self.plan.take().expect("reselect before take_plan")
+    }
+
+    fn take_structure(&mut self) -> VifStructure {
+        self.structure.take().expect("assemble before fitting")
+    }
+
+    fn pack_params(&self) -> Vec<f64> {
+        self.pack()
+    }
+
+    fn adopt_params(&mut self, packed: &[f64]) {
+        let (kernel, lik) = self.unpack(packed);
+        self.kernel = kernel;
+        self.lik = lik;
+    }
+
+    fn eval(&self, plan: &VifPlan, s: &mut VifStructure, packed: &[f64]) -> (f64, Vec<f64>) {
+        let (kernel, lik) = self.unpack(packed);
+        // Latent scale: nugget = 0 in every refresh.
+        s.refresh(plan, &self.x, &kernel, 0.0, self.config.jitter);
+        // Common random numbers: same probe seed at every θ.
+        let mut rng = Rng::seed_from(self.config.seed ^ 0xC0FFEE);
+        let (v, g, _) = nll_and_grad_panels(
+            s,
+            &self.x,
+            &kernel,
+            &lik,
+            &self.y,
+            &self.mode,
+            &mut rng,
+            Some(&plan.x_panels),
+        );
+        (v, g)
+    }
+
+    fn round_nll(&mut self) -> f64 {
+        let mut rng = Rng::seed_from(self.config.seed ^ 0xC0FFEE);
+        let (now, state) = nll(
+            self.structure.as_ref().unwrap(),
+            &self.x,
+            &self.kernel,
+            &self.lik,
+            &self.y,
+            &self.mode,
+            &mut rng,
+        );
+        self.state = Some(state);
+        now
+    }
+
+    fn lbfgs_tol(&self) -> f64 {
+        1e-4
+    }
+
+    fn record_trace(&mut self, trace: &[f64]) {
+        self.fit_trace.extend_from_slice(trace);
     }
 }

@@ -11,6 +11,40 @@
 //! Special cases: `m = 0` reduces to a classical Vecchia approximation;
 //! `m_v = 0` reduces to FITC. Both reductions are exercised in tests and
 //! used for the paper's baselines.
+//!
+//! # Plan/refresh split (symbolic vs. numeric assembly)
+//!
+//! Hyperparameter optimization (§6) freezes the structure choices —
+//! inducing points `Z` and Vecchia conditioning sets `N(i)` — within an
+//! optimization round and only re-selects them between rounds. Assembly
+//! is therefore split like a sparse direct solver's analyze/factorize
+//! decomposition:
+//!
+//! * [`VifPlan`] is the **θ-independent (symbolic) half**: the owned
+//!   neighbor graph, the frozen inducing inputs, the
+//!   [`LevelSchedule`] and the `Bᵀ` [`TransposedIndex`] pattern
+//!   (both functions of the graph alone), and the pre-gathered per-row
+//!   neighbor coordinate panels ([`NeighborPanels`]) the panelized
+//!   oracle reads instead of re-copying coordinates per evaluation.
+//!   Built once per re-selection by [`VifPlan::build`].
+//! * [`VifStructure::from_plan`] performs the one allocation/symbolic
+//!   pass per round (cloning the plan's schedule and pattern instead of
+//!   recomputing them), and [`VifStructure::refresh`] is the
+//!   **θ-dependent (numeric) half**: it re-evaluates the kernel through
+//!   the PR-3 panel evaluators and rewrites `A`/`D`, the low-rank
+//!   panels (`Σ_m`, `Σ_mn`, `V`, `E`), and the Woodbury blocks
+//!   (`BΣ_mnᵀ`, `H`, `SΣ_mnᵀ`, `SS`, `M`) **in place**, touching
+//!   neither the graph, nor the schedule, nor the big-buffer allocator.
+//!   A refreshed structure is numerically identical to a from-scratch
+//!   [`VifStructure::assemble`] at the same θ (pinned to ≤1e-12 by
+//!   `tests/refresh.rs` and perf_hotpath stage 11).
+//!
+//! A plan is **invalidated** by anything that changes the structure
+//! choices: re-selecting neighbors or inducing points (the power-of-two
+//! cadence between rounds), or changing the data set. The shared
+//! [`fit_with_reselection`] driver encodes the cadence for both the
+//! Gaussian and the Laplace models: one plan + one structure per round,
+//! every L-BFGS evaluation borrows them and refreshes in place.
 
 pub mod gaussian;
 pub mod laplace;
@@ -21,7 +55,7 @@ use crate::kernels::{ArdMatern, Smoothness};
 use crate::linalg::{dot, norm2_sq, CholeskyFactor, Mat};
 use crate::rng::Rng;
 use crate::vecchia::neighbors::{self, NeighborSelection};
-use crate::vecchia::{ResidualCov, ResidualFactor};
+use crate::vecchia::{LevelSchedule, ResidualCov, ResidualFactor, TransposedIndex};
 use std::cell::RefCell;
 
 /// Configuration of a VIF approximation.
@@ -93,8 +127,40 @@ impl LowRank {
         // Σ_mn panel: served by the AOT/PJRT engine when available (the
         // Layer-1 Pallas kernel), native fallback otherwise.
         let sigma_nm = crate::runtime::cross_cov_panel(x, &z, kernel);
-        let vt = Mat::zeros(n, m);
-        let et = Mat::zeros(n, m);
+        let mut vt = Mat::zeros(n, m);
+        let mut et = Mat::zeros(n, m);
+        Self::fill_vt_et(&chol_m, &sigma_nm, &mut vt, &mut et);
+        LowRank { z, sig_m, chol_m, sigma_nm, vt, et }
+    }
+
+    /// In-place θ-refresh for the fixed inducing inputs `z`: recompute
+    /// `Σ_m` (+ Cholesky), the `Σ_mn` panel, and the solved `V`/`E`
+    /// panels in the existing buffers. The math (including the jitter
+    /// escalation policy of `new_with_jitter_mat`) is identical to
+    /// [`build`](Self::build), so a refreshed block matches a freshly
+    /// built one exactly.
+    pub fn refresh(&mut self, x: &Mat, kernel: &ArdMatern, jitter: f64) {
+        debug_assert_eq!(self.sigma_nm.rows(), x.rows());
+        kernel.sym_cov_into(&self.z, 0.0, &mut self.sig_m);
+        self.sig_m.add_diag(jitter.max(1e-10) * kernel.variance);
+        let (chol_m, sig_m) = CholeskyFactor::new_with_jitter_mat(&self.sig_m, jitter.max(1e-10))
+            .expect("inducing-point covariance not PD");
+        self.chol_m = chol_m;
+        self.sig_m = sig_m;
+        crate::runtime::cross_cov_panel_into(x, &self.z, kernel, &mut self.sigma_nm);
+        Self::fill_vt_et(&self.chol_m, &self.sigma_nm, &mut self.vt, &mut self.et);
+    }
+
+    /// Fill the `V = (L_m⁻¹Σ_mn)ᵀ` and `E = (Σ_m⁻¹Σ_mn)ᵀ` rows from the
+    /// `Σ_mn` panel (disjoint rows per worker, written through the
+    /// shared `SyncSlice` pointer idiom of the other parallel fills).
+    fn fill_vt_et(chol_m: &CholeskyFactor, sigma_nm: &Mat, vt: &mut Mat, et: &mut Mat) {
+        let n = sigma_nm.rows();
+        let m = sigma_nm.cols();
+        let vtp = crate::coordinator::SyncSlice(vt.data_mut().as_mut_ptr());
+        let etp = crate::coordinator::SyncSlice(et.data_mut().as_mut_ptr());
+        let vtp = &vtp;
+        let etp = &etp;
         crate::coordinator::parallel_for_chunks(n, |start, end| {
             for i in start..end {
                 let mut v = sigma_nm.row(i).to_vec();
@@ -103,14 +169,11 @@ impl LowRank {
                 chol_m.solve_upper_in_place(&mut e);
                 // SAFETY: disjoint rows per index (parallel_for_chunks).
                 unsafe {
-                    let vtp = vt.data().as_ptr() as *mut f64;
-                    let etp = et.data().as_ptr() as *mut f64;
-                    std::ptr::copy_nonoverlapping(v.as_ptr(), vtp.add(i * m), m);
-                    std::ptr::copy_nonoverlapping(e.as_ptr(), etp.add(i * m), m);
+                    std::ptr::copy_nonoverlapping(v.as_ptr(), vtp.get().add(i * m), m);
+                    std::ptr::copy_nonoverlapping(e.as_ptr(), etp.get().add(i * m), m);
                 }
             }
         });
-        LowRank { z, sig_m, chol_m, sigma_nm, vt, et }
     }
 
     pub fn m(&self) -> usize {
@@ -179,6 +242,92 @@ impl GradAux {
     }
 }
 
+/// Pre-gathered, θ-independent per-row neighbor coordinate panels: for
+/// each row `i`, the inputs `x[N(i)]` as one contiguous row-major block
+/// (`|N(i)| × d`). Gathered once at [`VifPlan`] build time so the
+/// panelized oracle stops re-copying coordinates on every numeric
+/// refresh (the `V`/`E`/`T^p` gathers stay per-evaluation — those panels
+/// are θ-dependent).
+pub struct NeighborPanels {
+    /// Row extents in points: row `i` spans `off[i]..off[i+1]`.
+    off: Vec<usize>,
+    /// Concatenated row-major coordinate blocks.
+    data: Vec<f64>,
+    /// Input dimension d.
+    dim: usize,
+}
+
+impl NeighborPanels {
+    /// Gather the panels for a fixed neighbor graph.
+    pub fn gather(x: &Mat, neighbors: &[Vec<u32>]) -> Self {
+        let d = x.cols();
+        let total: usize = neighbors.iter().map(Vec::len).sum();
+        let mut off = Vec::with_capacity(neighbors.len() + 1);
+        off.push(0usize);
+        let mut data = Vec::with_capacity(total * d);
+        let mut count = 0usize;
+        for nb in neighbors {
+            for &j in nb {
+                data.extend_from_slice(x.row(j as usize));
+            }
+            count += nb.len();
+            off.push(count);
+        }
+        NeighborPanels { off, data, dim: d }
+    }
+
+    /// The gathered panel for row `i` (`|N(i)| × dim`, row-major).
+    pub fn row_panel(&self, i: usize) -> &[f64] {
+        &self.data[self.off[i] * self.dim..self.off[i + 1] * self.dim]
+    }
+}
+
+/// θ-independent assembly plan: everything about a VIF structure that
+/// depends only on the *structure choices* (conditioning sets `N(i)`
+/// and inducing inputs `Z`), not on the kernel parameters — the
+/// "analyze" half of the analyze/factorize split (module docs above).
+///
+/// A plan is built once per re-selection round, and the round's one
+/// [`VifStructure::from_plan`] assembly clones the plan's graph,
+/// schedule, and pattern into the structure; after that, every
+/// optimizer evaluation borrows the plan and runs the numeric
+/// [`VifStructure::refresh`] pass, which copies no structure data at
+/// all. Re-selecting neighbors or inducing points invalidates the plan
+/// — build a new one.
+pub struct VifPlan {
+    /// Frozen conditioning sets `N(i)` (ascending indices `< i`).
+    pub neighbors: Vec<Vec<u32>>,
+    /// Frozen inducing inputs (None → pure Vecchia).
+    pub z: Option<Mat>,
+    /// Level schedule of the neighbor DAG (computed once per plan).
+    pub schedule: LevelSchedule,
+    /// `Bᵀ` sparsity pattern; its coefficients are placeholders that
+    /// every structure build/refresh rewrites numerically.
+    pub bt_index: TransposedIndex,
+    /// Pre-gathered per-row neighbor coordinate panels.
+    pub x_panels: NeighborPanels,
+}
+
+impl VifPlan {
+    /// Build a plan for fixed structure choices over the inputs `x`.
+    pub fn build(x: &Mat, z: Option<Mat>, neighbors: Vec<Vec<u32>>) -> Self {
+        let schedule = LevelSchedule::from_neighbors(&neighbors);
+        let bt_index = TransposedIndex::pattern(&neighbors);
+        let x_panels = NeighborPanels::gather(x, &neighbors);
+        VifPlan { neighbors, z, schedule, bt_index, x_panels }
+    }
+
+    /// Number of data points the plan covers.
+    pub fn n(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Number of inducing points (0 → pure Vecchia).
+    pub fn m(&self) -> usize {
+        self.z.as_ref().map(|z| z.rows()).unwrap_or(0)
+    }
+}
+
 /// Residual-covariance oracle `ρ(i,j) = k(x_i,x_j) − v_i·v_j` with
 /// optional gradients. `extra_params` appends zero-gradient slots after
 /// the kernel parameters (e.g. the Gaussian noise, whose contribution is
@@ -197,6 +346,12 @@ pub struct VifResidualOracle<'a> {
     pub lr: Option<&'a LowRank>,
     pub grad_aux: Option<&'a GradAux>,
     pub extra_params: usize,
+    /// Pre-gathered coordinate panels from a frozen [`VifPlan`]. When
+    /// set, the block methods read each row's neighbor inputs from the
+    /// plan instead of gathering them into scratch per call. Must have
+    /// been gathered for the same `x` and the same neighbor lists the
+    /// block methods are called with.
+    pub x_panels: Option<&'a NeighborPanels>,
 }
 
 /// Per-worker gather scratch for the panelized oracle and the batched
@@ -281,12 +436,20 @@ impl<'a> ResidualCov for VifResidualOracle<'a> {
         let d = self.kernel.dim();
         PANEL_SCRATCH.with(|cell| {
             let s = &mut *cell.borrow_mut();
-            gather_rows(self.x, nb, &mut s.xp);
+            // Coordinate panel: from the frozen plan when available,
+            // else gathered into per-worker scratch.
+            let xp: &[f64] = match self.x_panels {
+                Some(p) => p.row_panel(i),
+                None => {
+                    gather_rows(self.x, nb, &mut s.xp);
+                    &s.xp
+                }
+            };
             for a in 0..q {
                 let ja = nb[a] as usize;
                 let row = rho_nn.row_mut(a);
                 self.kernel
-                    .cov_panel(self.x.row(ja), &s.xp[..a * d], &mut row[..a]);
+                    .cov_panel(self.x.row(ja), &xp[..a * d], &mut row[..a]);
                 row[a] = self.kernel.variance;
             }
             // mirror the computed lower triangle
@@ -296,7 +459,7 @@ impl<'a> ResidualCov for VifResidualOracle<'a> {
                     rho_nn.set(b, a, v);
                 }
             }
-            self.kernel.cov_panel(self.x.row(i), &s.xp, rho_in);
+            self.kernel.cov_panel(self.x.row(i), xp, rho_in);
             match self.lr {
                 Some(lr) => {
                     let m = lr.m();
@@ -335,7 +498,14 @@ impl<'a> ResidualCov for VifResidualOracle<'a> {
         let np = self.num_params();
         PANEL_SCRATCH.with(|cell| {
             let s = &mut *cell.borrow_mut();
-            gather_rows(self.x, nb, &mut s.xp);
+            // Coordinate panel: frozen plan or per-worker scratch gather.
+            let xp: &[f64] = match self.x_panels {
+                Some(p) => p.row_panel(i),
+                None => {
+                    gather_rows(self.x, nb, &mut s.xp);
+                    &s.xp
+                }
+            };
             // Kernel part: strictly-lower triangle row-by-row against the
             // gathered prefix panel; diagonal is σ₁² (gradients: the
             // log-σ₁² slot is σ₁², every other slot 0 at r = 0).
@@ -346,7 +516,7 @@ impl<'a> ResidualCov for VifResidualOracle<'a> {
                     s.gbuf.resize(nk * a, 0.0);
                     self.kernel.cov_and_grad_panel(
                         self.x.row(ja),
-                        &s.xp[..a * d],
+                        &xp[..a * d],
                         &mut s.buf[..a],
                         &mut s.gbuf[..nk * a],
                     );
@@ -384,7 +554,7 @@ impl<'a> ResidualCov for VifResidualOracle<'a> {
                 s.gbuf.resize(nk * q, 0.0);
                 self.kernel.cov_and_grad_panel(
                     self.x.row(i),
-                    &s.xp[..q * d],
+                    &xp[..q * d],
                     &mut s.buf[..q],
                     &mut s.gbuf[..nk * q],
                 );
@@ -551,8 +721,55 @@ impl VifStructure {
             lr: lr.as_ref(),
             grad_aux: None,
             extra_params,
+            x_panels: None,
         };
         let resid = ResidualFactor::build(&oracle, neighbors, nugget, jitter);
+        Self::finish(lr, resid, nugget, jitter)
+    }
+
+    /// Assemble from a frozen θ-independent [`VifPlan`] — the single
+    /// allocation/symbolic pass per re-selection round. The level
+    /// schedule and `Bᵀ` pattern are cloned from the plan instead of
+    /// recomputed, and the oracle reads the plan's pre-gathered
+    /// coordinate panels. Numerically identical to
+    /// [`assemble`](Self::assemble) with the same choices; every later
+    /// θ step should go through [`refresh`](Self::refresh).
+    pub fn from_plan(
+        x: &Mat,
+        kernel: &ArdMatern,
+        plan: &VifPlan,
+        nugget: f64,
+        jitter: f64,
+        extra_params: usize,
+    ) -> Self {
+        let lr = plan
+            .z
+            .clone()
+            .map(|z| LowRank::build(x, kernel, z, jitter));
+        let (a, d) = {
+            let oracle = VifResidualOracle {
+                kernel,
+                x,
+                lr: lr.as_ref(),
+                grad_aux: None,
+                extra_params,
+                x_panels: Some(&plan.x_panels),
+            };
+            ResidualFactor::compute_rows(&oracle, &plan.neighbors, nugget, jitter)
+        };
+        let resid = ResidualFactor::from_parts_precomputed(
+            plan.neighbors.clone(),
+            a,
+            d,
+            plan.schedule.clone(),
+            plan.bt_index.clone(),
+        );
+        Self::finish(lr, resid, nugget, jitter)
+    }
+
+    /// Shared tail of [`assemble`](Self::assemble) /
+    /// [`from_plan`](Self::from_plan): the Woodbury blocks and core.
+    fn finish(lr: Option<LowRank>, resid: ResidualFactor, nugget: f64, jitter: f64) -> Self {
         let (bsig, h, ssig, ss, mcal, chol_mcal) = match &lr {
             Some(lr) => {
                 let bsig = resid.mul_b_mat(&lr.sigma_nm);
@@ -580,6 +797,60 @@ impl VifStructure {
             ),
         };
         VifStructure { lr, resid, bsig, h, ssig, ss, mcal, chol_mcal, nugget }
+    }
+
+    /// θ-refresh — the numeric (factorize) half of the plan/refresh
+    /// split: re-evaluate every θ-dependent quantity **in place** for
+    /// the structure choices frozen in `plan`, without touching the
+    /// neighbor graph, the level schedule, the `Bᵀ` pattern, or any of
+    /// the big panel allocations. The math is identical to a fresh
+    /// [`assemble`](Self::assemble) at the same θ (pinned ≤1e-12 in
+    /// `tests/refresh.rs`), so L-BFGS objective closures can refresh one
+    /// structure per evaluation instead of re-assembling.
+    ///
+    /// The structure must have been built for the same plan (same graph
+    /// and inducing set); `x` is the same training input matrix.
+    pub fn refresh(
+        &mut self,
+        plan: &VifPlan,
+        x: &Mat,
+        kernel: &ArdMatern,
+        nugget: f64,
+        jitter: f64,
+    ) {
+        debug_assert_eq!(self.n(), plan.n(), "structure/plan size mismatch");
+        debug_assert_eq!(self.m(), plan.m(), "structure/plan inducing mismatch");
+        // Low-rank panels (Σ_m, Σ_mn, V, E) in place.
+        if let Some(lr) = self.lr.as_mut() {
+            lr.refresh(x, kernel, jitter);
+        }
+        // Residual factor values (A, D, 1/D, Bᵀ coefficients) in place.
+        {
+            let oracle = VifResidualOracle {
+                kernel,
+                x,
+                lr: self.lr.as_ref(),
+                grad_aux: None,
+                extra_params: 0,
+                x_panels: Some(&plan.x_panels),
+            };
+            self.resid.refresh_values(&oracle, nugget, jitter);
+        }
+        // Woodbury blocks in place (same kernels as `finish`).
+        if let Some(lr) = self.lr.as_ref() {
+            self.resid.mul_b_mat_into(&lr.sigma_nm, &mut self.bsig);
+            self.h.data_mut().copy_from_slice(self.bsig.data());
+            self.h.scale_rows(self.resid.inv_d());
+            self.resid.mul_bt_mat_into(&self.h, &mut self.ssig);
+            lr.sigma_nm.matmul_tn_into(&self.ssig, &mut self.ss);
+            let mcal = self.mcal.as_mut().expect("structure built with m > 0");
+            self.bsig.matmul_tn_into(&self.h, mcal);
+            mcal.add_assign(&lr.sig_m);
+            let chol = CholeskyFactor::new_with_jitter(mcal, jitter.max(1e-10))
+                .expect("Woodbury core M not PD");
+            self.chol_mcal = Some(chol);
+        }
+        self.nugget = nugget;
     }
 
     pub fn n(&self) -> usize {
@@ -750,6 +1021,112 @@ pub fn select_neighbors(
             }
         }
     }
+}
+
+/// Re-select the structure choices (§6) for the current kernel: inducing
+/// points by kMeans++ in the λ-scaled space (warm-started from `warm`
+/// when given), then Vecchia conditioning sets for the induced residual
+/// process. Shared by the Gaussian and Laplace models' `assemble` paths
+/// — this is the symbolic step that invalidates any existing [`VifPlan`].
+pub fn select_structure(
+    x: &Mat,
+    kernel: &ArdMatern,
+    config: &VifConfig,
+    warm: Option<&Mat>,
+) -> (Option<Mat>, Vec<Vec<u32>>) {
+    let mut rng = Rng::seed_from(config.seed);
+    let z = select_inducing(
+        x,
+        kernel,
+        config.num_inducing.min(x.rows()),
+        config.lloyd_iters,
+        &mut rng,
+        warm,
+    );
+    let lr_tmp = z
+        .clone()
+        .map(|z| LowRank::build(x, kernel, z, config.jitter));
+    let nb = select_neighbors(x, kernel, lr_tmp.as_ref(), config.num_neighbors, config.selection);
+    (z, nb)
+}
+
+/// Model hooks for the shared re-selection fit loop
+/// [`fit_with_reselection`]. Implemented by `gaussian::VifRegression`
+/// and `laplace::VifLaplaceModel`, which differ only in the objective —
+/// the cadence (freeze → optimize → re-select → converge-check) and the
+/// plan/refresh plumbing are identical.
+pub trait FitModel {
+    /// Re-select structure choices at the current parameters, build the
+    /// round's [`VifPlan`], and assemble a fresh structure from it —
+    /// the one symbolic/allocation pass per round.
+    fn reselect(&mut self);
+    /// Move the plan built by `reselect` out of the model; the round's
+    /// L-BFGS evaluations borrow it.
+    fn take_plan(&mut self) -> VifPlan;
+    /// Move the assembled structure out of the model: it becomes the
+    /// round's refresh target. `reselect` restores one afterwards.
+    fn take_structure(&mut self) -> VifStructure;
+    /// Packed optimizer parameters at the current model state.
+    fn pack_params(&self) -> Vec<f64>;
+    /// Adopt optimized packed parameters into the model state.
+    fn adopt_params(&mut self, packed: &[f64]);
+    /// Objective value + gradient at `packed`: numerically refresh `s`
+    /// (shaped by `plan`) in place and evaluate — no symbolic work and
+    /// no structure-choice clones on this path.
+    fn eval(&self, plan: &VifPlan, s: &mut VifStructure, packed: &[f64]) -> (f64, Vec<f64>);
+    /// Objective at the current parameters on the freshly re-selected
+    /// structure (drives the between-round convergence check).
+    fn round_nll(&mut self) -> f64;
+    /// Gradient inf-norm tolerance handed to L-BFGS.
+    fn lbfgs_tol(&self) -> f64;
+    /// Append one round's accepted-step objective trace.
+    fn record_trace(&mut self, trace: &[f64]);
+}
+
+/// Shared fit driver (§6 cadence) for Gaussian and Laplace models: up to
+/// `rounds` rounds of {freeze structure choices into a [`VifPlan`] →
+/// L-BFGS with in-place [`VifStructure::refresh`] per evaluation →
+/// adopt parameters → re-select}, stopping early when the re-selected
+/// objective stops moving. Exactly one plan build and one structure
+/// assembly happen per round; every intermediate L-BFGS evaluation
+/// borrows them. Returns the final objective value.
+pub fn fit_with_reselection<M: FitModel>(model: &mut M, max_iters: usize, rounds: usize) -> f64 {
+    model.reselect();
+    let mut packed = model.pack_params();
+    let mut last = f64::INFINITY;
+    for _round in 0..rounds {
+        // Freeze the structure choices for this round: the plan and
+        // structure built by `reselect` move out of the model and every
+        // objective evaluation below refreshes them in place.
+        let plan = model.take_plan();
+        let scratch = model.take_structure();
+        let tol = model.lbfgs_tol();
+        let res = {
+            let m = &*model;
+            let cell = RefCell::new(scratch);
+            let f = |p: &[f64]| -> (f64, Vec<f64>) {
+                let mut s = cell.borrow_mut();
+                m.eval(&plan, &mut s, p)
+            };
+            crate::optim::lbfgs(&f, &packed, max_iters, tol)
+        };
+        packed = res.x;
+        model.record_trace(&res.trace);
+        model.adopt_params(&packed);
+        // Re-select structure for the new θ; stop when the objective
+        // stops moving between rounds.
+        model.reselect();
+        let now = model.round_nll();
+        if (last - now).abs() < 1e-4 * (1.0 + now.abs()) {
+            last = now;
+            break;
+        }
+        last = now;
+    }
+    // The final reselect left a plan behind; fitting is done, so free it
+    // (panels + graph copy) instead of keeping it alive with the model.
+    drop(model.take_plan());
+    last
 }
 
 #[cfg(test)]

@@ -65,6 +65,7 @@ fn rho_blocks_match_scalar_on_all_graphs() {
             lr: s.lr.as_ref(),
             grad_aux: aux.as_ref(),
             extra_params: 1,
+            x_panels: None,
         };
         let mut rng = Rng::seed_from(5);
         for (name, nb) in graphs(&mut rng, 50) {
@@ -84,6 +85,7 @@ fn panel_build_and_grads_match_scalarized_oracle() {
         lr: s.lr.as_ref(),
         grad_aux: aux.as_ref(),
         extra_params: 1,
+        x_panels: None,
     };
     let scalar = ScalarizedOracle(&oracle);
     let np = 1 + 2 + 1; // log σ₁², two log λ, log σ²
@@ -151,6 +153,7 @@ fn panel_gradients_match_finite_differences() {
         lr: Some(&lr),
         grad_aux: Some(&aux),
         extra_params: 0,
+        x_panels: None,
     };
     let nb: Vec<u32> = vec![2, 9, 17, 30];
     let i = 35usize;
@@ -183,6 +186,7 @@ fn panel_gradients_match_finite_differences() {
             lr: Some(&lrp),
             grad_aux: None,
             extra_params: 0,
+            x_panels: None,
         };
         let mut cnn = Mat::zeros(q, q);
         let mut cin = vec![0.0; q];

@@ -4,10 +4,12 @@
 use vifgp::kernels::{ArdMatern, Smoothness};
 use vifgp::linalg::{CholeskyFactor, Mat};
 use vifgp::rng::Rng;
-use vifgp::testing::{check, random_neighbor_graph, random_points, random_residual_factor};
+use vifgp::testing::{
+    check, random_neighbor_graph, random_points, random_residual_factor, structures_max_abs_diff,
+};
 use vifgp::vecchia::neighbors::NeighborSelection;
 use vifgp::vecchia::LevelSchedule;
-use vifgp::vif::{select_inducing, select_neighbors, VifStructure};
+use vifgp::vif::{select_inducing, select_neighbors, VifPlan, VifStructure};
 
 fn random_kernel(rng: &mut Rng, d: usize) -> ArdMatern {
     let smoothness = match rng.below(4) {
@@ -250,6 +252,65 @@ fn prop_solve_is_left_inverse_of_mul() {
                     if (g - w).abs() > 1e-11 * (1.0 + w.abs()) {
                         return Err(format!("{which} roundtrip: {g} vs {w}"));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_reuse_across_rounds_matches_fresh_assembly() {
+    // The plan/refresh split: one θ-independent plan, several θ steps of
+    // in-place refresh — every refreshed state must equal a from-scratch
+    // assembly with the same structure choices (m=0, m_v=0, and the
+    // general case are all drawn by the generator).
+    check(
+        "plan-reuse refresh equals fresh assembly over a θ trajectory",
+        10,
+        77,
+        |rng| {
+            let n = 20 + rng.below(25);
+            let d = 1 + rng.below(3);
+            let x = random_points(rng, n, d);
+            let kernel = random_kernel(rng, d);
+            let m = rng.below(8); // 0 → pure Vecchia
+            let m_v = rng.below(6); // 0 → FITC
+            let nugget = rng.uniform_in(0.01, 0.3);
+            let z = select_inducing(&x, &kernel, m, 2, rng, None);
+            let lr = z
+                .clone()
+                .map(|z| vifgp::vif::LowRank::build(&x, &kernel, z, 1e-10));
+            let nb = select_neighbors(
+                &x,
+                &kernel,
+                lr.as_ref(),
+                m_v,
+                NeighborSelection::CorrelationBruteForce,
+            );
+            (x, kernel, z, nb, nugget)
+        },
+        |(x, kernel, z, nb, nugget)| {
+            let plan = VifPlan::build(x, z.clone(), nb.clone());
+            let mut s = VifStructure::from_plan(x, kernel, &plan, *nugget, 1e-10, 0);
+            let fresh0 =
+                VifStructure::assemble(x, kernel, z.clone(), nb.clone(), *nugget, 1e-10, 0);
+            let d0 = structures_max_abs_diff(&s, &fresh0);
+            if d0 > 1e-12 {
+                return Err(format!("from_plan vs assemble diff {d0:.3e}"));
+            }
+            for t in 1..=3usize {
+                let mut p = kernel.log_params();
+                for (j, pj) in p.iter_mut().enumerate() {
+                    *pj += 0.1 * ((t * (j + 1)) as f64).sin();
+                }
+                let kt = ArdMatern::from_log_params(&p, kernel.smoothness);
+                s.refresh(&plan, x, &kt, *nugget, 1e-10);
+                let fresh =
+                    VifStructure::assemble(x, &kt, z.clone(), nb.clone(), *nugget, 1e-10, 0);
+                let diff = structures_max_abs_diff(&s, &fresh);
+                if diff > 1e-12 {
+                    return Err(format!("round {t}: refresh vs assemble diff {diff:.3e}"));
                 }
             }
             Ok(())

@@ -1,0 +1,209 @@
+//! Plan/refresh split: `VifStructure::refresh` (the θ-dependent numeric
+//! pass over a frozen `VifPlan`) must be numerically identical — to
+//! ≤1e-12 — to a from-scratch `VifStructure::assemble` with the same
+//! structure choices, across a multi-step θ trajectory. Covered paths:
+//! m=0 (pure Vecchia), m>0 (full VIF), m_v=0 (FITC), and the Laplace
+//! latent scale (nugget = 0), including NLL values and gradients.
+
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::linalg::Mat;
+use vifgp::rng::Rng;
+use vifgp::testing::{random_points, structures_max_abs_diff};
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{self, SolveMode};
+use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifPlan, VifStructure};
+
+const TOL: f64 = 1e-12;
+
+/// Fixed structure choices (z, neighbors) for a random problem.
+fn setup(
+    n: usize,
+    m: usize,
+    m_v: usize,
+    seed: u64,
+) -> (Mat, ArdMatern, Option<Mat>, Vec<Vec<u32>>) {
+    let mut rng = Rng::seed_from(seed);
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.2, vec![0.3, 0.45], Smoothness::ThreeHalves);
+    let z = select_inducing(&x, &kernel, m, 2, &mut rng, None);
+    let lr_tmp = z.clone().map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+    let nb = if m_v == 0 {
+        vec![vec![]; n]
+    } else {
+        select_neighbors(
+            &x,
+            &kernel,
+            lr_tmp.as_ref(),
+            m_v,
+            NeighborSelection::CorrelationBruteForce,
+        )
+    };
+    (x, kernel, z, nb)
+}
+
+/// Deterministic θ trajectory: multiplicative log-parameter steps around
+/// the starting kernel (the shape an L-BFGS line search walks).
+fn theta_step(kernel: &ArdMatern, t: usize) -> ArdMatern {
+    let mut p = kernel.log_params();
+    for (j, pj) in p.iter_mut().enumerate() {
+        *pj += 0.08 * ((t * (j + 2)) as f64 * 0.7).sin() + 0.02 * t as f64;
+    }
+    ArdMatern::from_log_params(&p, kernel.smoothness)
+}
+
+fn synthetic_targets(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Walk a θ trajectory refreshing one structure in place and assert it
+/// matches a fresh assemble at every step (structure internals, NLL,
+/// gradients).
+fn assert_refresh_trajectory(
+    x: &Mat,
+    kernel: &ArdMatern,
+    z: Option<Mat>,
+    nb: Vec<Vec<u32>>,
+    base_nugget: f64,
+    steps: usize,
+) {
+    let y = synthetic_targets(x.rows(), 99);
+    let plan = VifPlan::build(x, z.clone(), nb.clone());
+    let mut s = VifStructure::from_plan(x, kernel, &plan, base_nugget, 1e-10, 1);
+    // from_plan itself must match a from-scratch assemble.
+    let fresh0 = VifStructure::assemble(x, kernel, z.clone(), nb.clone(), base_nugget, 1e-10, 1);
+    let d0 = structures_max_abs_diff(&s, &fresh0);
+    assert!(d0 <= TOL, "from_plan vs assemble diff {d0:.3e}");
+    for t in 1..=steps {
+        let kt = theta_step(kernel, t);
+        let nug = base_nugget * (1.0 + 0.15 * t as f64);
+        s.refresh(&plan, x, &kt, nug, 1e-10);
+        let fresh = VifStructure::assemble(x, &kt, z.clone(), nb.clone(), nug, 1e-10, 1);
+        let diff = structures_max_abs_diff(&s, &fresh);
+        assert!(diff <= TOL, "step {t}: refresh vs assemble diff {diff:.3e}");
+        // NLL and gradients through both structures.
+        let (v1, g1) = gaussian::nll_and_grad(&s, x, &kt, &y);
+        let (v2, g2) = gaussian::nll_and_grad(&fresh, x, &kt, &y);
+        assert!(
+            (v1 - v2).abs() <= TOL * (1.0 + v2.abs()),
+            "step {t}: NLL {v1} vs {v2}"
+        );
+        for (p, (a, b)) in g1.iter().zip(&g2).enumerate() {
+            assert!(
+                (a - b).abs() <= TOL * (1.0 + b.abs()),
+                "step {t}: grad[{p}] {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn refresh_matches_assemble_full_vif() {
+    let (x, kernel, z, nb) = setup(60, 8, 5, 3);
+    assert_refresh_trajectory(&x, &kernel, z, nb, 0.05, 6);
+}
+
+#[test]
+fn refresh_matches_assemble_pure_vecchia() {
+    let (x, kernel, z, nb) = setup(55, 0, 5, 7);
+    assert!(z.is_none());
+    assert_refresh_trajectory(&x, &kernel, z, nb, 0.08, 6);
+}
+
+#[test]
+fn refresh_matches_assemble_fitc() {
+    let (x, kernel, z, nb) = setup(50, 7, 0, 11);
+    assert!(nb.iter().all(Vec::is_empty));
+    assert_refresh_trajectory(&x, &kernel, z, nb, 0.05, 4);
+}
+
+#[test]
+fn refresh_matches_assemble_laplace_latent_scale() {
+    // Latent scale: nugget = 0 throughout; compare structures and the
+    // (deterministic) Cholesky-mode L^{VIFLA} at every step.
+    let (x, kernel, z, nb) = setup(32, 5, 4, 13);
+    let plan = VifPlan::build(&x, z.clone(), nb.clone());
+    let mut s = VifStructure::from_plan(&x, &kernel, &plan, 0.0, 1e-10, 0);
+    let lik = Likelihood::BernoulliLogit;
+    // Simulate binary targets from the initial structure.
+    let mut rng = Rng::seed_from(17);
+    let b = s.sample(&mut rng);
+    let y: Vec<f64> = b
+        .iter()
+        .map(|bi| {
+            if rng.bernoulli(vifgp::likelihoods::sigmoid(*bi)) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for t in 1..=4 {
+        let kt = theta_step(&kernel, t);
+        s.refresh(&plan, &x, &kt, 0.0, 1e-10);
+        let fresh = VifStructure::assemble(&x, &kt, z.clone(), nb.clone(), 0.0, 1e-10, 0);
+        let diff = structures_max_abs_diff(&s, &fresh);
+        assert!(diff <= TOL, "step {t}: refresh vs assemble diff {diff:.3e}");
+        let mut r1 = Rng::seed_from(5);
+        let (v1, _) = laplace::nll(&s, &x, &kt, &lik, &y, &SolveMode::Cholesky, &mut r1);
+        let mut r2 = Rng::seed_from(5);
+        let (v2, _) = laplace::nll(&fresh, &x, &kt, &lik, &y, &SolveMode::Cholesky, &mut r2);
+        assert!(
+            (v1 - v2).abs() <= TOL * (1.0 + v2.abs()),
+            "step {t}: L^VIFLA {v1} vs {v2}"
+        );
+    }
+}
+
+#[test]
+fn refresh_is_idempotent_at_fixed_theta() {
+    // Refreshing twice at the same θ must not drift: the numeric pass
+    // overwrites every θ-dependent buffer.
+    let (x, kernel, z, nb) = setup(45, 6, 4, 19);
+    let plan = VifPlan::build(&x, z, nb);
+    let mut s = VifStructure::from_plan(&x, &kernel, &plan, 0.05, 1e-10, 1);
+    let kt = theta_step(&kernel, 3);
+    s.refresh(&plan, &x, &kt, 0.07, 1e-10);
+    let snapshot_d = s.resid.d.clone();
+    let snapshot_ss = s.ss.clone();
+    let ld = s.logdet();
+    s.refresh(&plan, &x, &kt, 0.07, 1e-10);
+    for (a, b) in s.resid.d.iter().zip(&snapshot_d) {
+        assert!((a - b).abs() <= TOL, "D drifted: {a} vs {b}");
+    }
+    assert!(s.ss.max_abs_diff(&snapshot_ss) <= TOL, "SS drifted");
+    assert!((s.logdet() - ld).abs() <= TOL, "logdet drifted");
+}
+
+#[test]
+fn fit_round_reuses_plan_and_improves_nll() {
+    // End-to-end through the shared driver: the Gaussian model's fit
+    // must still beat its starting NLL with the plan/refresh hot loop.
+    let mut rng = Rng::seed_from(29);
+    let x = random_points(&mut rng, 70, 2);
+    let kernel = ArdMatern::new(1.1, vec![0.35, 0.4], Smoothness::ThreeHalves);
+    let latent = vifgp::data::simulate_latent_gp(&mut rng, &x, &kernel);
+    let y: Vec<f64> = latent.iter().map(|l| l + 0.2 * rng.normal()).collect();
+    let config = vifgp::vif::VifConfig {
+        num_inducing: 9,
+        num_neighbors: 4,
+        selection: NeighborSelection::EuclideanTransformed,
+        lloyd_iters: 2,
+        ..Default::default()
+    };
+    let start = gaussian::GaussianParams {
+        kernel: ArdMatern::new(0.6, vec![0.7, 0.2], Smoothness::ThreeHalves),
+        noise: 0.3,
+    };
+    let mut model = gaussian::VifRegression::new(x, y, config, start.clone());
+    let final_nll = model.fit(30);
+    let nb = model.structure.as_ref().unwrap().resid.neighbors.clone();
+    let z = model.inducing.clone();
+    let start_nll = model.nll_at(&start.pack(), &nb, z.as_ref());
+    assert!(
+        final_nll < start_nll,
+        "fit {final_nll} did not beat start {start_nll}"
+    );
+    assert!(!model.fit_trace.is_empty(), "driver recorded no trace");
+}
