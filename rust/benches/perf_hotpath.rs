@@ -462,4 +462,86 @@ fn main() {
             Err(e) => println!("could not write {path}: {e}"),
         }
     }
+
+    // 12. Prediction serving throughput: the scalar per-point path (the
+    // pre-refactor per-point loops, `testing::scalar_predict_reference`)
+    // vs the shared panelized/batched pipeline (`vif::predict`:
+    // plan-frozen neighbor panels, blocked Σ_m solves, per-block Woodbury
+    // GEMMs + one M⁻¹ block solve). Mean/variance must agree to ≤1e-12;
+    // writes machine-readable BENCH_predict.json (override the path with
+    // VIFGP_BENCH_PREDICT_JSON).
+    {
+        use vifgp::testing::scalar_predict_reference;
+        use vifgp::vif::predict::{posterior_mean, PredictBlocks, PredictPlan};
+
+        let n_pred = common::scaled(2_000);
+        let xp = data::uniform_inputs(&mut rng, n_pred, d);
+        let (plan, t_plan) = common::timed(|| {
+            PredictPlan::build(
+                &s,
+                &x,
+                &kernel,
+                &xp,
+                m_v,
+                NeighborSelection::CorrelationCoverTree,
+            )
+        });
+        // Batched pipeline per serving call at fixed θ (plan reused).
+        let ((mean_b, var_b), t_batched) = common::timed(|| {
+            let blocks = PredictBlocks::compute(&s, &kernel, &xp, &plan, 1e-10);
+            let mean = posterior_mean(&s, &plan, &blocks, &y);
+            (mean, blocks.var_det)
+        });
+        let (want, t_scalar) = common::timed(|| {
+            scalar_predict_reference(&s, &x, &kernel, &y, &xp, &plan.neighbors, 1e-10)
+        });
+        let mut pred_diff = 0.0f64;
+        for (a, b) in mean_b.iter().zip(&want.mean).chain(var_b.iter().zip(&want.var_det)) {
+            pred_diff = pred_diff.max((a - b).abs() / (1.0 + b.abs()));
+        }
+        assert!(
+            pred_diff <= 1e-12,
+            "batched prediction diverged: {pred_diff:.3e}"
+        );
+        let pts_scalar = n_pred as f64 / t_scalar.max(1e-9);
+        let pts_batched = n_pred as f64 / t_batched.max(1e-9);
+        let sp_pred = t_scalar / t_batched.max(1e-9);
+        println!(
+            "predict ({n_pred} pts): scalar {t_scalar:.3}s ({pts_scalar:.0} pts/s)  batched {t_batched:.3}s ({pts_batched:.0} pts/s)  speedup {sp_pred:.2}x  (plan build {:.3}s, max rel diff {pred_diff:.2e})",
+            t_plan,
+        );
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath stage 12: scalar vs panelized-batched prediction\",\n",
+                "  \"config\": {{\"n\": {n}, \"d\": {d}, \"m\": {m}, \"m_v\": {m_v}, \"n_pred\": {npred}}},\n",
+                "  \"plan_build_s\": {tp:.6},\n",
+                "  \"scalar_s\": {ts:.6},\n",
+                "  \"batched_s\": {tb:.6},\n",
+                "  \"scalar_points_per_sec\": {ps:.1},\n",
+                "  \"batched_points_per_sec\": {pb:.1},\n",
+                "  \"speedup\": {sp:.3},\n",
+                "  \"max_rel_diff\": {pd:.3e}\n",
+                "}}\n"
+            ),
+            n = n,
+            d = d,
+            m = m,
+            m_v = m_v,
+            npred = n_pred,
+            tp = t_plan,
+            ts = t_scalar,
+            tb = t_batched,
+            ps = pts_scalar,
+            pb = pts_batched,
+            sp = sp_pred,
+            pd = pred_diff,
+        );
+        let path = std::env::var("VIFGP_BENCH_PREDICT_JSON")
+            .unwrap_or_else(|_| "BENCH_predict.json".into());
+        match std::fs::write(&path, json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
 }

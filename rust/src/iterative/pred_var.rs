@@ -4,10 +4,14 @@
 //! is computed in closed form by the prediction code.
 //!
 //! The ℓ probe systems share one operator, so both estimators consume
-//! *batched* solve/apply closures over column-blocked `Mat` operands and
-//! route them through the batched PCG engine (`iterative::batch`); probe
-//! draws stay sequential on the caller's RNG so probe streams match the
-//! scalar implementations.
+//! *batched* solve **and projection** closures over column-blocked `Mat`
+//! operands: the solves route through the batched PCG engine
+//! (`iterative::batch`) as one multi-RHS system per probe block, and the
+//! `Q`/`Qᵀ` projections route through the batched prediction pipeline
+//! (`vif::predict::{project_q_batch, project_qt_batch}`) so no
+//! per-column matvecs or triangular sweeps remain on the probe path.
+//! Probe draws stay sequential on the caller's RNG so probe streams
+//! match the scalar implementations.
 
 use crate::linalg::Mat;
 use crate::rng::Rng;
@@ -23,15 +27,19 @@ const PROBE_BLOCK: usize = 64;
 /// * `sample_z6` draws one `z₆ ~ N(0, Σ_†⁻¹ + W)` (lines 3–6),
 /// * `solve_batch` computes `A⁻¹ Z₆` for a column block (line 7,
 ///   batched preconditioned CG),
-/// * `project` applies `Q = (Σ_mn_pᵀΣ_m⁻¹Σ_mn − B_p⁻¹B_po S⁻¹) Σ_†⁻¹`
-///   (line 8) to one solved column, returning an `n_p` vector.
+/// * `project_batch` applies `Q = (Σ_mn_pᵀΣ_m⁻¹Σ_mn − B_p⁻¹B_po S⁻¹) Σ_†⁻¹`
+///   (line 8) to the whole solved column block at once, returning an
+///   `n_p × width` block — the VIF models route this through the
+///   batched projections of `vif::predict` (one GEMM + one
+///   level-scheduled sparse sweep per block instead of per-column
+///   matvecs and triangular solves).
 pub fn sbpv_diag(
     ell: usize,
     n_p: usize,
     rng: &mut Rng,
     mut sample_z6: impl FnMut(&mut Rng) -> Vec<f64>,
     solve_batch: impl Fn(&Mat) -> Mat,
-    project: impl Fn(&[f64]) -> Vec<f64> + Sync,
+    project_batch: impl Fn(&Mat) -> Mat,
 ) -> Vec<f64> {
     let mut acc = vec![0.0; n_p];
     let mut done = 0;
@@ -41,11 +49,12 @@ pub fn sbpv_diag(
         let n = z6[0].len();
         let zmat = Mat::from_fn(n, width, |i, j| z6[j][i]);
         let z7 = solve_batch(&zmat);
-        let z8s: Vec<Vec<f64>> =
-            crate::coordinator::parallel_map_heavy(width, |j| project(&z7.col(j)));
-        for z8 in &z8s {
-            debug_assert_eq!(z8.len(), n_p);
-            for (a, z) in acc.iter_mut().zip(z8) {
+        let z8 = project_batch(&z7);
+        debug_assert_eq!(z8.rows(), n_p);
+        debug_assert_eq!(z8.cols(), width);
+        for j in 0..width {
+            for (i, a) in acc.iter_mut().enumerate() {
+                let z = z8.get(i, j);
                 *a += z * z;
             }
         }
@@ -136,7 +145,7 @@ mod tests {
             &mut rng,
             |rng| chol.mul_lower(&rng.normal_vec(n)), // z ~ N(0, A)
             |z| map_columns(z, |col| chol.solve(col)),
-            |z| q.matvec(z),
+            |z| q.matmul(z),
         );
         for p in 0..n_p {
             assert!(

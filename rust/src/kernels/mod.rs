@@ -227,6 +227,32 @@ impl ArdMatern {
         }
     }
 
+    /// Symmetric covariance block of the `q` points of a gathered
+    /// row-major `q×d` panel (`q = out.rows()`): the strictly-lower
+    /// triangle is evaluated row-by-row via [`cov_panel`](Self::cov_panel)
+    /// against the panel prefix, the diagonal is `σ₁²`, and the lower
+    /// triangle is mirrored. This is the kernel part of the prediction
+    /// pipeline's `ρ_NN` conditioning blocks (`vif::predict`), which
+    /// reads each point's pre-gathered neighbor panel straight from the
+    /// frozen `PredictPlan`.
+    pub fn sym_cov_panel(&self, panel: &[f64], out: &mut Mat) {
+        let d = self.dim();
+        let q = out.rows();
+        debug_assert_eq!(out.cols(), q, "sym_cov_panel output not square");
+        debug_assert_eq!(panel.len(), q * d, "sym_cov_panel panel shape");
+        for a in 0..q {
+            let row = out.row_mut(a);
+            self.cov_panel(&panel[a * d..(a + 1) * d], &panel[..a * d], &mut row[..a]);
+            row[a] = self.variance;
+        }
+        for a in 0..q {
+            for b in 0..a {
+                let v = out.get(a, b);
+                out.set(b, a, v);
+            }
+        }
+    }
+
     /// Covariances **and** all `1 + d` log-parameter gradients of one
     /// query point against a gathered `len×d` panel. `grad` holds the
     /// per-parameter blocks contiguously: `grad[p·len + t] =

@@ -162,6 +162,22 @@ impl CholeskyFactor {
         xt.t()
     }
 
+    /// Solve `Lᵀ X = B` for a matrix RHS (backward only) — the second
+    /// half of [`solve_mat`](Self::solve_mat) for callers that already
+    /// hold the forward-solved block.
+    pub fn solve_upper_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let bt = b.t();
+        let mut xt = Mat::zeros(b.cols(), n);
+        for j in 0..b.cols() {
+            let mut col = bt.row(j).to_vec();
+            self.solve_upper_in_place(&mut col);
+            xt.row_mut(j).copy_from_slice(&col);
+        }
+        xt.t()
+    }
+
     /// Explicit inverse `A⁻¹` (small matrices only: Woodbury cores).
     pub fn inverse(&self) -> Mat {
         self.solve_mat(&Mat::eye(self.n()))

@@ -283,6 +283,163 @@ pub fn structures_max_abs_diff(s1: &VifStructure, s2: &VifStructure) -> f64 {
     diff
 }
 
+/// Output of [`scalar_predict_reference`]: the per-point conditional
+/// blocks and deterministic posterior terms, mirroring
+/// `vif::predict::PredictBlocks` plus the mean.
+pub struct ScalarPrediction {
+    pub mean: Vec<f64>,
+    /// Deterministic predictive variance (full Prop 2.1 response
+    /// variance on the Gaussian scale; Eq. 20 on the latent scale).
+    pub var_det: Vec<f64>,
+    pub a_rows: Vec<Vec<f64>>,
+    pub d: Vec<f64>,
+    /// `K(X_p, Z)` rows (n_p×m).
+    pub kp: Mat,
+    /// `Σ_m⁻¹ k_p` rows (n_p×m).
+    pub alpha: Mat,
+}
+
+/// Scalar per-point reference of the shared prediction pipeline
+/// (`vif::predict`): the pre-refactor per-point bodies — one scalar
+/// `kernel.cov` call per pair, one dense Cholesky, `matvec`/`solve`
+/// Woodbury terms per point — evaluated for fixed conditioning sets,
+/// with the target vector on the Gaussian response scale (`y`) or the
+/// Laplace latent scale (the mode `b̃`). The points are fanned out over
+/// the worker pool exactly like the pre-refactor Gaussian `predict`
+/// loop was, so the perf_hotpath stage-12 baseline isolates the
+/// panelization/batching win rather than thread-count parallelism.
+/// This is the oracle for the panelized/batched pipeline tests
+/// (`tests/predict.rs`) and the baseline for perf_hotpath stage 12.
+pub fn scalar_predict_reference(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &crate::kernels::ArdMatern,
+    target: &[f64],
+    xp: &Mat,
+    neighbors: &[Vec<u32>],
+    block_jitter: f64,
+) -> ScalarPrediction {
+    use crate::linalg::{dot, CholeskyFactor};
+    let np_pts = xp.rows();
+    let m = s.m();
+    let nugget = s.nugget;
+    let u = s.apply_sigma_dagger_inv(target);
+    let resid_target: Vec<f64> = match (&s.lr, &s.chol_mcal) {
+        (Some(lr), Some(cm)) => {
+            let c = cm.solve(&s.ssig.matvec_t(target));
+            let corr = lr.sigma_nm.matvec(&c);
+            target.iter().zip(&corr).map(|(t, co)| t - co).collect()
+        }
+        _ => target.to_vec(),
+    };
+    let smu = match &s.lr {
+        Some(lr) => lr.sigma_nm.matvec_t(&u),
+        None => vec![],
+    };
+    let mut mean = vec![0.0; np_pts];
+    let mut var = vec![0.0; np_pts];
+    let mut a_rows: Vec<Vec<f64>> = vec![vec![]; np_pts];
+    let mut d_out = vec![0.0; np_pts];
+    let mut kp_rows = Mat::zeros(np_pts, m);
+    let mut alpha_rows = Mat::zeros(np_pts, m);
+    type PointOut = (f64, f64, Vec<f64>, f64, Vec<f64>, Vec<f64>);
+    let per_point: Vec<PointOut> = crate::coordinator::parallel_map(np_pts, |p| {
+        let sp = xp.row(p);
+        let nb = &neighbors[p];
+        let q = nb.len();
+        let (kp, alpha, vt_p): (Vec<f64>, Vec<f64>, Vec<f64>) = match &s.lr {
+            Some(lr) => {
+                let kp: Vec<f64> = (0..m).map(|l| kernel.cov(sp, lr.z.row(l))).collect();
+                let mut vt_p = kp.clone();
+                lr.chol_m.solve_lower_in_place(&mut vt_p);
+                let mut alpha = vt_p.clone();
+                lr.chol_m.solve_upper_in_place(&mut alpha);
+                (kp, alpha, vt_p)
+            }
+            None => (vec![], vec![], vec![]),
+        };
+        let rho_pp = kernel.variance - dot(&vt_p, &vt_p);
+        let (a_p, d_p) = if q == 0 {
+            (vec![], (rho_pp + nugget).max(1e-12))
+        } else {
+            let rho = |a: usize, b: usize| -> f64 {
+                let k = kernel.cov(x.row(a), x.row(b));
+                match &s.lr {
+                    Some(lr) => k - dot(lr.vt.row(a), lr.vt.row(b)),
+                    None => k,
+                }
+            };
+            let mut cnn = Mat::zeros(q, q);
+            for (ai, &ja) in nb.iter().enumerate() {
+                cnn.set(ai, ai, rho(ja as usize, ja as usize) + nugget);
+                for (bi, &jb) in nb.iter().enumerate().take(ai) {
+                    let vv = rho(ja as usize, jb as usize);
+                    cnn.set(ai, bi, vv);
+                    cnn.set(bi, ai, vv);
+                }
+            }
+            let rho_pn: Vec<f64> = nb
+                .iter()
+                .map(|&j| {
+                    let k = kernel.cov(sp, x.row(j as usize));
+                    match &s.lr {
+                        Some(lr) => k - dot(&vt_p, lr.vt.row(j as usize)),
+                        None => k,
+                    }
+                })
+                .collect();
+            let chol = CholeskyFactor::new_with_jitter(&cnn, block_jitter)
+                .expect("prediction block not PD");
+            let a_p = chol.solve(&rho_pn);
+            let d_p = rho_pp + nugget - dot(&a_p, &rho_pn);
+            (a_p, d_p.max(1e-12))
+        };
+        let mut mu = 0.0;
+        for (k_i, &j) in nb.iter().enumerate() {
+            mu += a_p[k_i] * resid_target[j as usize];
+        }
+        if m > 0 {
+            mu += dot(&alpha, &smu);
+        }
+        let mut var_p = d_p;
+        if m > 0 {
+            let lr = s.lr.as_ref().unwrap();
+            let cm = s.chol_mcal.as_ref().unwrap();
+            let mut beta = vec![0.0; m];
+            for (k_i, &j) in nb.iter().enumerate() {
+                let srow = lr.sigma_nm.row(j as usize);
+                for (l, &sv) in srow.iter().enumerate() {
+                    beta[l] -= a_p[k_i] * sv;
+                }
+            }
+            let ss_alpha = s.ss.matvec(&alpha);
+            var_p += dot(&kp, &alpha) - dot(&alpha, &ss_alpha) + 2.0 * dot(&alpha, &beta);
+            let diff: Vec<f64> = beta.iter().zip(&ss_alpha).map(|(b, s)| b - s).collect();
+            let mdiff = cm.solve(&diff);
+            var_p += dot(&diff, &mdiff);
+        }
+        (mu, var_p.max(1e-12), a_p, d_p, kp, alpha)
+    });
+    for (p, (mu, var_p, a_p, d_p, kp, alpha)) in per_point.into_iter().enumerate() {
+        mean[p] = mu;
+        var[p] = var_p;
+        if m > 0 {
+            kp_rows.row_mut(p).copy_from_slice(&kp);
+            alpha_rows.row_mut(p).copy_from_slice(&alpha);
+        }
+        d_out[p] = d_p;
+        a_rows[p] = a_p;
+    }
+    ScalarPrediction {
+        mean,
+        var_det: var,
+        a_rows,
+        d: d_out,
+        kp: kp_rows,
+        alpha: alpha_rows,
+    }
+}
+
 /// Wrapper that strips an oracle's panel overrides, forcing the scalar
 /// per-pair `ResidualCov` default impls. This is the baseline for the
 /// panel-vs-scalar equivalence tests and for perf_hotpath stage 10.

@@ -798,6 +798,17 @@ impl ResidualFactor {
         self.solve_b(&w)
     }
 
+    /// Column-blocked `S⁻¹ V = B⁻¹ D B⁻ᵀ V` — the approximated residual
+    /// covariance applied to a block of vectors through the
+    /// level-scheduled `_mat` sweeps (one `B`/`Bᵀ` pass over all columns
+    /// instead of per-column applies; used by the batched prediction
+    /// projections in `vif::predict`).
+    pub fn apply_s_inv_mat(&self, v: &Mat) -> Mat {
+        let mut w = self.solve_bt_mat(v);
+        w.scale_rows(&self.d);
+        self.solve_b_mat(&w)
+    }
+
     /// Row-wise `B X` for an n×k matrix (columns treated independently).
     pub fn mul_b_mat(&self, x: &Mat) -> Mat {
         self.mul_b_mat_with(x, self.default_exec())

@@ -12,7 +12,8 @@ use crate::linalg::{dot, Mat};
 use crate::vecchia::neighbors::NeighborSelection;
 
 use super::{
-    FitModel, GradAux, NeighborPanels, VifConfig, VifPlan, VifResidualOracle, VifStructure,
+    predict, FitModel, GradAux, NeighborPanels, VifConfig, VifPlan, VifResidualOracle,
+    VifStructure,
 };
 
 const LN_2PI: f64 = 1.8378770664093453;
@@ -217,7 +218,10 @@ pub fn nll_and_grad_panels(
 
 /// Predictive distribution (Proposition 2.1 / Appendix C.1) at new inputs
 /// `xp`, conditioning each prediction point on its `m_v` nearest training
-/// points (so `B_p = I`, `D_p` diagonal).
+/// points (so `B_p = I`, `D_p` diagonal). Builds a one-shot
+/// [`predict::PredictPlan`] and runs the shared panelized pipeline; for
+/// repeated predictions at fixed θ build the plan once and call
+/// [`predict_with_plan`].
 ///
 /// Returns `(mean, var)` for the **response** `y^p` (includes σ²);
 /// subtract `noise` from `var` for the latent process.
@@ -230,228 +234,24 @@ pub fn predict(
     m_v: usize,
     selection: NeighborSelection,
 ) -> (Vec<f64>, Vec<f64>) {
-    let np_pts = xp.rows();
-    let m = s.m();
-    // u = Σ_†⁻¹ y and c = M⁻¹ Σ_mn S y.
-    let u = s.apply_sigma_dagger_inv(y);
-    let (c_vec, resid_target) = match (&s.lr, &s.chol_mcal) {
-        (Some(_), Some(cm)) => {
-            let sy = s.resid.apply_s(y);
-            let c = cm.solve(&s.ssig.matvec_t(y));
-            // y − Σ_mnᵀ c : the residual-scale target  (see §2.3 derivation)
-            let lr = s.lr.as_ref().unwrap();
-            let mut tgt = y.to_vec();
-            let corr = lr.sigma_nm.matvec(&c);
-            for (t, co) in tgt.iter_mut().zip(&corr) {
-                *t -= co;
-            }
-            let _ = sy;
-            (c, tgt)
-        }
-        _ => (vec![], y.to_vec()),
-    };
-
-    // Per-prediction-point neighbor sets among *training* points.
-    let pred_neighbors = pred_neighbor_sets(s, x, kernel, xp, m_v, selection);
-
-    let mean = vec![0.0; np_pts];
-    let var = vec![0.0; np_pts];
-    let nugget = s.nugget;
-
-    crate::coordinator::parallel_for_chunks(np_pts, |start, end| {
-        for p in start..end {
-            let sp = xp.row(p);
-            let nb = &pred_neighbors[p];
-            let q = nb.len();
-            // Low-rank vectors for this point.
-            let (kp, alpha, vt_p): (Vec<f64>, Vec<f64>, Vec<f64>) = match &s.lr {
-                Some(lr) => {
-                    let kp: Vec<f64> =
-                        (0..m).map(|l| kernel.cov(sp, lr.z.row(l))).collect();
-                    let mut vt_p = kp.clone();
-                    lr.chol_m.solve_lower_in_place(&mut vt_p);
-                    let mut alpha = vt_p.clone();
-                    lr.chol_m.solve_upper_in_place(&mut alpha);
-                    (kp, alpha, vt_p)
-                }
-                None => (vec![], vec![], vec![]),
-            };
-            let rho_pp = kernel.variance - dot(&vt_p, &vt_p);
-            // Residual blocks against the conditioning set.
-            let (a_p, d_p) = if q == 0 {
-                (vec![], rho_pp + nugget)
-            } else {
-                let rho = |a: usize, b: usize| -> f64 {
-                    let k = kernel.cov(x.row(a), x.row(b));
-                    match &s.lr {
-                        Some(lr) => k - dot(lr.vt.row(a), lr.vt.row(b)),
-                        None => k,
-                    }
-                };
-                let mut cnn = Mat::zeros(q, q);
-                for (ai, &ja) in nb.iter().enumerate() {
-                    cnn.set(ai, ai, rho(ja as usize, ja as usize) + nugget);
-                    for (bi, &jb) in nb.iter().enumerate().take(ai) {
-                        let vv = rho(ja as usize, jb as usize);
-                        cnn.set(ai, bi, vv);
-                        cnn.set(bi, ai, vv);
-                    }
-                }
-                let rho_pn: Vec<f64> = nb
-                    .iter()
-                    .map(|&j| {
-                        let k = kernel.cov(sp, x.row(j as usize));
-                        match &s.lr {
-                            Some(lr) => k - dot(&vt_p, lr.vt.row(j as usize)),
-                            None => k,
-                        }
-                    })
-                    .collect();
-                let chol = crate::linalg::CholeskyFactor::new_with_jitter(&cnn, 1e-10)
-                    .expect("prediction block not PD");
-                let a_p = chol.solve(&rho_pn);
-                let d_p = rho_pp + nugget - dot(&a_p, &rho_pn);
-                (a_p, d_p.max(1e-12))
-            };
-
-            // Mean: A_p (resid target on N(p)) + k_pᵀ Σ_m⁻¹ Σ_mn u
-            let mut mu = 0.0;
-            for (k_i, &j) in nb.iter().enumerate() {
-                mu += a_p[k_i] * resid_target[j as usize];
-            }
-            if m > 0 {
-                let lr = s.lr.as_ref().unwrap();
-                // Σ_mn u then α·
-                // (cached via matvec_t would be global; per-point cheap enough)
-                let _ = lr;
-                let smu = s.lr.as_ref().unwrap().sigma_nm.matvec_t(&u);
-                mu += dot(&alpha, &smu);
-            }
-
-            // Variance (App C.1, B_p = I):
-            // D_p + k_pᵀα − αᵀSSα + 2αᵀβ + (β−SSα)ᵀ M⁻¹ (β−SSα)
-            let mut var_p = d_p;
-            if m > 0 {
-                let lr = s.lr.as_ref().unwrap();
-                let cm = s.chol_mcal.as_ref().unwrap();
-                // β = Σ_mn B_poᵀ[:,p] = −Σ_k A_pk Σ_m,N(p)k
-                let mut beta = vec![0.0; m];
-                for (k_i, &j) in nb.iter().enumerate() {
-                    let srow = lr.sigma_nm.row(j as usize);
-                    for l in 0..m {
-                        beta[l] -= a_p[k_i] * srow[l];
-                    }
-                }
-                let ss_alpha = s.ss.matvec(&alpha);
-                var_p += dot(&kp, &alpha) - dot(&alpha, &ss_alpha) + 2.0 * dot(&alpha, &beta);
-                let diff: Vec<f64> =
-                    beta.iter().zip(&ss_alpha).map(|(b, s)| b - s).collect();
-                let mdiff = cm.solve(&diff);
-                var_p += dot(&diff, &mdiff);
-            }
-
-            // SAFETY: disjoint indices per chunk.
-            unsafe {
-                let mp = mean.as_ptr() as *mut f64;
-                let vp = var.as_ptr() as *mut f64;
-                *mp.add(p) = mu;
-                *vp.add(p) = var_p.max(1e-12);
-            }
-        }
-    });
-    let _ = c_vec;
-    (mean, var)
+    let plan = predict::PredictPlan::build(s, x, kernel, xp, m_v, selection);
+    predict_with_plan(s, kernel, y, xp, &plan)
 }
 
-/// Public alias used by the Laplace prediction code.
-pub fn pred_neighbor_sets_public(
+/// [`predict`] against a frozen [`predict::PredictPlan`] — the serving
+/// path: the plan's conditioning sets, coordinate panels, and scatter
+/// pattern are reused across calls at fixed θ, and only the batched
+/// numeric pass runs per call.
+pub fn predict_with_plan(
     s: &VifStructure,
-    x: &Mat,
     kernel: &ArdMatern,
+    y: &[f64],
     xp: &Mat,
-    m_v: usize,
-    selection: NeighborSelection,
-) -> Vec<Vec<u32>> {
-    pred_neighbor_sets(s, x, kernel, xp, m_v, selection)
-}
-
-/// Neighbor sets for prediction points among training points, using the
-/// same metric family as training-set selection.
-fn pred_neighbor_sets(
-    s: &VifStructure,
-    x: &Mat,
-    kernel: &ArdMatern,
-    xp: &Mat,
-    m_v: usize,
-    selection: NeighborSelection,
-) -> Vec<Vec<u32>> {
-    let n = x.rows();
-    let np_pts = xp.rows();
-    if m_v == 0 || n == 0 {
-        return vec![vec![]; np_pts];
-    }
-    let m_v = m_v.min(n);
-    crate::coordinator::parallel_map(np_pts, |p| {
-        let sp = xp.row(p);
-        // score = distance (smaller = closer)
-        let mut cand: Vec<(f64, u32)> = match selection {
-            NeighborSelection::EuclideanTransformed => (0..n)
-                .map(|j| {
-                    let d2: f64 = sp
-                        .iter()
-                        .zip(x.row(j))
-                        .zip(&kernel.length_scales)
-                        .map(|((a, b), l)| {
-                            let u = (a - b) / l;
-                            u * u
-                        })
-                        .sum();
-                    (d2, j as u32)
-                })
-                .collect(),
-            _ => {
-                // Correlation distance on the residual process. The
-                // training inputs are already one contiguous row-major
-                // panel, so the kernel part of ρ(p, ·) against all n
-                // candidates is a single `cov_panel` sweep (plus the
-                // inducing-point panel for v_p and the per-candidate
-                // low-rank dot corrections).
-                let (vt_p, rho_pp): (Vec<f64>, f64) = match &s.lr {
-                    Some(lr) => {
-                        let mut v = vec![0.0; lr.m()];
-                        kernel.cov_panel(sp, lr.z.data(), &mut v);
-                        lr.chol_m.solve_lower_in_place(&mut v);
-                        let rpp = kernel.variance - dot(&v, &v);
-                        (v, rpp.max(1e-300))
-                    }
-                    None => (vec![], kernel.variance),
-                };
-                let mut rho = vec![0.0; n];
-                kernel.cov_panel(sp, x.data(), &mut rho);
-                rho.into_iter()
-                    .enumerate()
-                    .map(|(j, k)| {
-                        let (rho_pj, oracle_jj) = match &s.lr {
-                            Some(lr) => {
-                                let vj = lr.vt.row(j);
-                                (k - dot(&vt_p, vj), kernel.variance - dot(vj, vj))
-                            }
-                            None => (k, kernel.variance),
-                        };
-                        let r = rho_pj / (rho_pp * oracle_jj.max(1e-300)).sqrt();
-                        ((1.0 - r.abs()).max(0.0), j as u32)
-                    })
-                    .collect()
-            }
-        };
-        if cand.len() > m_v {
-            cand.select_nth_unstable_by(m_v - 1, |a, b| a.0.total_cmp(&b.0));
-            cand.truncate(m_v);
-        }
-        let mut idx: Vec<u32> = cand.into_iter().map(|(_, j)| j).collect();
-        idx.sort_unstable();
-        idx
-    })
+    plan: &predict::PredictPlan,
+) -> (Vec<f64>, Vec<f64>) {
+    let blocks = predict::PredictBlocks::compute(s, kernel, xp, plan, 1e-10);
+    let mean = predict::posterior_mean(s, plan, &blocks, y);
+    (mean, blocks.var_det)
 }
 
 /// High-level Gaussian VIF regression model: owns data + config, fits by
@@ -545,6 +345,32 @@ impl VifRegression {
             self.config.num_neighbors.max(1),
             self.config.selection,
         )
+    }
+
+    /// Build a reusable prediction plan for `xp` at the current θ (the
+    /// serving path: one neighbor search + panel gather, then any number
+    /// of [`Self::predict_with_plan`] calls). Invalidated by `fit`,
+    /// `assemble`, or any parameter change.
+    pub fn build_predict_plan(&self, xp: &Mat) -> predict::PredictPlan {
+        let s = self.structure.as_ref().expect("fit or assemble first");
+        predict::PredictPlan::build(
+            s,
+            &self.x,
+            &self.params.kernel,
+            xp,
+            self.config.num_neighbors.max(1),
+            self.config.selection,
+        )
+    }
+
+    /// [`Self::predict`] against a plan from [`Self::build_predict_plan`].
+    pub fn predict_with_plan(
+        &self,
+        xp: &Mat,
+        plan: &predict::PredictPlan,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let s = self.structure.as_ref().expect("fit or assemble first");
+        predict_with_plan(s, &self.params.kernel, &self.y, xp, plan)
     }
 }
 

@@ -21,7 +21,9 @@ use crate::linalg::{dot, CholeskyFactor, Mat};
 use crate::rng::Rng;
 use crate::vecchia::neighbors::NeighborSelection;
 
-use super::{FitModel, GradAux, NeighborPanels, VifPlan, VifResidualOracle, VifStructure};
+use super::{
+    predict, FitModel, GradAux, NeighborPanels, VifPlan, VifResidualOracle, VifStructure,
+};
 
 /// Solver backend for all `(W + Σ_†⁻¹)`-type operations.
 #[derive(Clone, Debug)]
@@ -827,6 +829,9 @@ pub struct LaplacePrediction {
     pub response_var: Vec<f64>,
 }
 
+/// Builds a one-shot [`predict::PredictPlan`] and runs the shared
+/// panelized pipeline (`vif::predict`); for repeated predictions at
+/// fixed θ build the plan once and call [`predict_with_plan`].
 #[allow(clippy::too_many_arguments)]
 pub fn predict(
     s: &VifStructure,
@@ -842,139 +847,48 @@ pub fn predict(
     ell: usize,
     rng: &mut Rng,
 ) -> LaplacePrediction {
-    let _n = s.n();
+    let plan = predict::PredictPlan::build(s, x, kernel, xp, m_v, selection);
+    predict_with_plan(s, x, kernel, lik, state, xp, &plan, mode, var_method, ell, rng)
+}
+
+/// [`predict`] against a frozen [`predict::PredictPlan`]: the latent
+/// mean and the deterministic variance (20) come from the shared batched
+/// pipeline (latent scale — the structure's nugget is 0), and the
+/// stochastic correction (21) routes whole probe blocks through
+/// [`predict::project_q_batch`] / [`predict::project_qt_batch`] and the
+/// batched PCG engine — SBPV and SPV run one multi-RHS solve per probe
+/// block, with no per-column projections left.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_with_plan(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &ArdMatern,
+    lik: &Likelihood,
+    state: &LaplaceState,
+    xp: &Mat,
+    plan: &predict::PredictPlan,
+    mode: &SolveMode,
+    var_method: PredVarMethod,
+    ell: usize,
+    rng: &mut Rng,
+) -> LaplacePrediction {
     let np_pts = xp.rows();
-    let m = s.m();
+    // Conditional blocks + deterministic terms (latent scale: the
+    // structure was assembled with nugget = 0).
+    let blocks = predict::PredictBlocks::compute(s, kernel, xp, plan, 1e-8);
+    let mean = predict::posterior_mean(s, plan, &blocks, &state.b);
+    let var_det = &blocks.var_det;
 
-    // ũ = Σ_†⁻¹ b̃ and the residual-scale target b̃ − Σ_mnᵀ c̃.
-    let u = s.apply_sigma_dagger_inv(&state.b);
-    let resid_target: Vec<f64> = match (&s.lr, &s.chol_mcal) {
-        (Some(lr), Some(cm)) => {
-            let c = cm.solve(&s.ssig.matvec_t(&state.b));
-            let corr = lr.sigma_nm.matvec(&c);
-            state.b.iter().zip(&corr).map(|(b, co)| b - co).collect()
-        }
-        _ => state.b.clone(),
-    };
-
-    // Per-point blocks (latent scale: nugget = 0 in all residual blocks).
-    let pred_nb = super::gaussian::pred_neighbor_sets_public(s, x, kernel, xp, m_v, selection);
-    let mut mean = vec![0.0; np_pts];
-    let mut var_det = vec![0.0; np_pts];
-    let mut a_rows: Vec<Vec<f64>> = vec![vec![]; np_pts];
-    let mut kp_rows = Mat::zeros(np_pts, m);
-    let smu = match &s.lr {
-        Some(lr) => lr.sigma_nm.matvec_t(&u),
-        None => vec![],
-    };
-    for p in 0..np_pts {
-        let sp = xp.row(p);
-        let nb = &pred_nb[p];
-        let q = nb.len();
-        let (kp, alpha, vt_p): (Vec<f64>, Vec<f64>, Vec<f64>) = match &s.lr {
-            Some(lr) => {
-                let kp: Vec<f64> = (0..m).map(|l| kernel.cov(sp, lr.z.row(l))).collect();
-                let mut vt_p = kp.clone();
-                lr.chol_m.solve_lower_in_place(&mut vt_p);
-                let mut alpha = vt_p.clone();
-                lr.chol_m.solve_upper_in_place(&mut alpha);
-                (kp, alpha, vt_p)
-            }
-            None => (vec![], vec![], vec![]),
-        };
-        let rho_pp = kernel.variance - dot(&vt_p, &vt_p);
-        let (a_p, d_p) = if q == 0 {
-            (vec![], rho_pp.max(1e-12))
-        } else {
-            let rho = |a: usize, b: usize| -> f64 {
-                let k = kernel.cov(x.row(a), x.row(b));
-                match &s.lr {
-                    Some(lr) => k - dot(lr.vt.row(a), lr.vt.row(b)),
-                    None => k,
-                }
-            };
-            let mut cnn = Mat::zeros(q, q);
-            for (ai, &ja) in nb.iter().enumerate() {
-                cnn.set(ai, ai, rho(ja as usize, ja as usize));
-                for (bi, &jb) in nb.iter().enumerate().take(ai) {
-                    let vv = rho(ja as usize, jb as usize);
-                    cnn.set(ai, bi, vv);
-                    cnn.set(bi, ai, vv);
-                }
-            }
-            let rho_pn: Vec<f64> = nb
-                .iter()
-                .map(|&j| {
-                    let k = kernel.cov(sp, x.row(j as usize));
-                    match &s.lr {
-                        Some(lr) => k - dot(&vt_p, lr.vt.row(j as usize)),
-                        None => k,
-                    }
-                })
-                .collect();
-            let chol = CholeskyFactor::new_with_jitter(&cnn, 1e-8)
-                .expect("pred block not PD");
-            let a_p = chol.solve(&rho_pn);
-            let d_p = rho_pp - dot(&a_p, &rho_pn);
-            (a_p, d_p.max(1e-12))
-        };
-        // Mean.
-        let mut mu = 0.0;
-        for (k_i, &j) in nb.iter().enumerate() {
-            mu += a_p[k_i] * resid_target[j as usize];
-        }
-        if m > 0 {
-            mu += dot(&alpha, &smu);
-        }
-        mean[p] = mu;
-        // Deterministic variance part (20).
-        let mut vd = d_p;
-        if m > 0 {
-            let cm = s.chol_mcal.as_ref().unwrap();
-            let lr = s.lr.as_ref().unwrap();
-            let mut beta = vec![0.0; m];
-            for (k_i, &j) in nb.iter().enumerate() {
-                let srow = lr.sigma_nm.row(j as usize);
-                for l in 0..m {
-                    beta[l] -= a_p[k_i] * srow[l];
-                }
-            }
-            let ss_alpha = s.ss.matvec(&alpha);
-            vd += dot(&kp, &alpha) - dot(&alpha, &ss_alpha) + 2.0 * dot(&alpha, &beta);
-            let diff: Vec<f64> = beta.iter().zip(&ss_alpha).map(|(b, s)| b - s).collect();
-            let mdiff = cm.solve(&diff);
-            vd += dot(&diff, &mdiff);
-            kp_rows.row_mut(p).copy_from_slice(&kp);
-        }
-        var_det[p] = vd.max(1e-12);
-        a_rows[p] = a_p;
-    }
-
-    // Stochastic part: diag of (21).
-    let project_q = |w1: &[f64]| -> Vec<f64> {
-        // Q w = Σ_mn_pᵀΣ_m⁻¹Σ_mn w1 − B_po S⁻¹ w1  with w1 = Σ_†⁻¹ z
-        let q_m = match &s.lr {
-            Some(lr) => lr.chol_m.solve(&lr.sigma_nm.matvec_t(w1)),
-            None => vec![],
-        };
-        let w2 = s.resid.apply_s_inv(w1);
-        (0..np_pts)
-            .map(|p| {
-                let mut acc = if m > 0 { dot(kp_rows.row(p), &q_m) } else { 0.0 };
-                for (k_i, &j) in pred_nb[p].iter().enumerate() {
-                    acc += a_rows[p][k_i] * w2[j as usize];
-                }
-                acc
-            })
-            .collect()
-    };
-
+    // Stochastic part: diag of (21), probe blocks through the batched
+    // projections.
     let solver = WSolver::new(s, x, kernel, state.w.clone(), mode, None);
     let var_stoch: Vec<f64> = match var_method {
         PredVarMethod::Exact => {
             // Exact (dense) diagonal of (21): for each prediction point p,
             // the correction is (Qᵀe_p)ᵀ (W+Σ_†⁻¹)⁻¹ (Qᵀe_p), where the
             // adjoint Qᵀe_p already carries the inner Σ_†⁻¹ factors.
+            // Identity columns are fed through the batched adjoint in
+            // blocks, the dense solver maps the columns.
             let sigma_dense = s.dense_sigma_dagger();
             let dsolver = WSolver::new(
                 s,
@@ -985,12 +899,20 @@ pub fn predict(
                 Some(&sigma_dense),
             );
             let mut out = vec![0.0; np_pts];
-            for p in 0..np_pts {
-                let mut z = vec![0.0; np_pts];
-                z[p] = 1.0;
-                let qt = project_q_transpose(s, &kp_rows, &pred_nb, &a_rows, &z);
-                let cqt = dsolver.solve(&qt);
-                out[p] = dot(&qt, &cqt);
+            let mut done = 0;
+            while done < np_pts {
+                let width = (np_pts - done).min(64);
+                let z = Mat::from_fn(
+                    np_pts,
+                    width,
+                    |i, j| if i == done + j { 1.0 } else { 0.0 },
+                );
+                let qt = predict::project_qt_batch(s, plan, &blocks, &z);
+                let cqt = dsolver.solve_batch(&qt);
+                for j in 0..width {
+                    out[done + j] = dot(&qt.col(j), &cqt.col(j));
+                }
+                done += width;
             }
             out
         }
@@ -1010,18 +932,24 @@ pub fn predict(
                     z
                 },
                 |z6| solver.solve_batch(z6),
-                |z7| project_q(&s.apply_sigma_dagger_inv(z7)),
+                |z7| {
+                    predict::project_q_batch(
+                        s,
+                        plan,
+                        &blocks,
+                        &s.apply_sigma_dagger_inv_batch(z7),
+                    )
+                },
             )
         }
         PredVarMethod::Spv => {
             let mut local_rng = rng.split(0xdef);
             spv_diag(ell, np_pts, &mut local_rng, |z1| {
-                // Qᵀ per probe, one batched CG over all probes, Q back.
-                let qt = map_columns(z1, |z| {
-                    project_q_transpose(s, &kp_rows, &pred_nb, &a_rows, z)
-                });
+                // Qᵀ for the whole probe block, one batched CG over all
+                // probes, Q back — three batched passes, no columns.
+                let qt = predict::project_qt_batch(s, plan, &blocks, z1);
                 let sol = solver.solve_batch(&qt);
-                map_columns(&sol, |col| project_q(&s.apply_sigma_dagger_inv(col)))
+                predict::project_q_batch(s, plan, &blocks, &s.apply_sigma_dagger_inv_batch(&sol))
             })
         }
     };
@@ -1047,39 +975,6 @@ pub fn predict(
         response_mean,
         response_var,
     }
-}
-
-/// `Σ_†⁻¹ Qᵀ`-style adjoint used by SPV: given an n_p vector, produce the
-/// n-dim `Σ_†⁻¹ (Σ_mnᵀΣ_m⁻¹Σ_mn_p z − S⁻¹B_poᵀ z)`.
-fn project_q_transpose(
-    s: &VifStructure,
-    kp_rows: &Mat,
-    pred_nb: &[Vec<u32>],
-    a_rows: &[Vec<f64>],
-    z: &[f64],
-) -> Vec<f64> {
-    let n = s.n();
-    let mut t = vec![0.0; n];
-    if let Some(lr) = &s.lr {
-        let tm = lr.chol_m.solve(&kp_rows.matvec_t(z));
-        let q1 = lr.sigma_nm.matvec(&tm);
-        t.copy_from_slice(&q1);
-    }
-    // − S⁻¹ B_poᵀ z : scatter −A_p rows then apply S⁻¹... (B_poᵀz)_j = −Σ A_pk z_p
-    let mut bt = vec![0.0; n];
-    for (p, zp) in z.iter().enumerate() {
-        if *zp == 0.0 {
-            continue;
-        }
-        for (k, &j) in pred_nb[p].iter().enumerate() {
-            bt[j as usize] -= a_rows[p][k] * zp;
-        }
-    }
-    let sb = s.resid.apply_s_inv(&bt);
-    for (ti, sbi) in t.iter_mut().zip(&sb) {
-        *ti -= sbi;
-    }
-    s.apply_sigma_dagger_inv(&t)
 }
 
 #[cfg(test)]
@@ -1618,6 +1513,47 @@ impl VifLaplaceModel {
             xp,
             self.config.num_neighbors.max(1),
             self.config.selection,
+            &self.mode,
+            var_method,
+            ell,
+            &mut rng,
+        )
+    }
+
+    /// Build a reusable prediction plan for `xp` at the current θ (the
+    /// serving path — see [`crate::vif::predict`]). Invalidated by
+    /// `fit`, `assemble`, or any parameter change.
+    pub fn build_predict_plan(&self, xp: &Mat) -> predict::PredictPlan {
+        let s = self.structure.as_ref().expect("fit or assemble first");
+        predict::PredictPlan::build(
+            s,
+            &self.x,
+            &self.kernel,
+            xp,
+            self.config.num_neighbors.max(1),
+            self.config.selection,
+        )
+    }
+
+    /// [`Self::predict`] against a plan from [`Self::build_predict_plan`].
+    pub fn predict_with_plan(
+        &self,
+        xp: &Mat,
+        plan: &predict::PredictPlan,
+        var_method: PredVarMethod,
+        ell: usize,
+    ) -> LaplacePrediction {
+        let s = self.structure.as_ref().expect("fit or assemble first");
+        let state = self.state.as_ref().expect("fit first");
+        let mut rng = Rng::seed_from(self.config.seed ^ 0xFACADE);
+        predict_with_plan(
+            s,
+            &self.x,
+            &self.kernel,
+            &self.lik,
+            state,
+            xp,
+            plan,
             &self.mode,
             var_method,
             ell,

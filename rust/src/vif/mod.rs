@@ -45,9 +45,17 @@
 //! [`fit_with_reselection`] driver encodes the cadence for both the
 //! Gaussian and the Laplace models: one plan + one structure per round,
 //! every L-BFGS evaluation borrows them and refreshes in place.
+//!
+//! Prediction follows the same split: the [`predict`] module holds the
+//! shared panelized serving pipeline (Prop 2.1 / Prop 3.1) — a θ-frozen
+//! [`predict::PredictPlan`] (per-point conditioning sets, pre-gathered
+//! coordinate panels, `B_poᵀ` scatter pattern) plus a batched numeric
+//! pass — which both the Gaussian and the Laplace `predict` entry
+//! points run through.
 
 pub mod gaussian;
 pub mod laplace;
+pub mod predict;
 
 use crate::covertree::Metric;
 use crate::inducing;
@@ -219,25 +227,34 @@ impl GradAux {
             })
             .collect();
         // T^p = dK(X,Z)^p − ½ E dΣ_m^p, keeping the raw panel too.
-        let t: Vec<Mat> = (0..np).map(|_| Mat::zeros(n, m)).collect();
-        let dsig_nm: Vec<Mat> = (0..np).map(|_| Mat::zeros(n, m)).collect();
-        crate::coordinator::parallel_for_chunks(n, |start, end| {
-            let mut g = vec![0.0; np];
-            for i in start..end {
-                for l in 0..m {
-                    kernel.cov_and_grad_into(x.row(i), lr.z.row(l), &mut g);
-                    for p in 0..np {
-                        // SAFETY: disjoint (i, l) cells per chunk.
-                        unsafe {
-                            let tp = t[p].data().as_ptr() as *mut f64;
-                            *tp.add(i * m + l) = g[p] - half_e[p].get(i, l);
-                            let dp = dsig_nm[p].data().as_ptr() as *mut f64;
-                            *dp.add(i * m + l) = g[p];
+        let mut t: Vec<Mat> = (0..np).map(|_| Mat::zeros(n, m)).collect();
+        let mut dsig_nm: Vec<Mat> = (0..np).map(|_| Mat::zeros(n, m)).collect();
+        {
+            let tps: Vec<crate::coordinator::SyncSlice<f64>> = t
+                .iter_mut()
+                .map(|mat| crate::coordinator::SyncSlice(mat.data_mut().as_mut_ptr()))
+                .collect();
+            let dps: Vec<crate::coordinator::SyncSlice<f64>> = dsig_nm
+                .iter_mut()
+                .map(|mat| crate::coordinator::SyncSlice(mat.data_mut().as_mut_ptr()))
+                .collect();
+            let (tps, dps) = (&tps, &dps);
+            crate::coordinator::parallel_for_chunks(n, |start, end| {
+                let mut g = vec![0.0; np];
+                for i in start..end {
+                    for l in 0..m {
+                        kernel.cov_and_grad_into(x.row(i), lr.z.row(l), &mut g);
+                        for p in 0..np {
+                            // SAFETY: disjoint (i, l) cells per chunk.
+                            unsafe {
+                                *tps[p].get().add(i * m + l) = g[p] - half_e[p].get(i, l);
+                                *dps[p].get().add(i * m + l) = g[p];
+                            }
                         }
                     }
                 }
-            }
-        });
+            });
+        }
         GradAux { t, dsig_m, dsig_nm }
     }
 }
@@ -608,6 +625,16 @@ impl<'a> ResidualCov for VifResidualOracle<'a> {
     }
 }
 
+/// Correlation → distance transform `d_c = √(1 − |ρ/√(ρ_ii ρ_jj)|)`
+/// (paper §6), shared by the training-side [`CorrelationMetric`] and the
+/// prediction-side stacked-index metric in [`predict`] so the two
+/// neighbor searches can never drift apart on the metric definition.
+#[inline]
+pub(crate) fn correlation_distance(rho: f64, di: f64, dj: f64) -> f64 {
+    let r = rho / (di * dj).sqrt();
+    (1.0 - r.abs()).max(0.0).sqrt()
+}
+
 /// Correlation distance `d_c(i,j) = √(1 − |ρ_ij/√(ρ_ii ρ_jj)|)` on the
 /// residual process (paper §6), used by the cover-tree and brute-force
 /// neighbor searches.
@@ -653,8 +680,7 @@ impl Metric for CorrelationMetric<'_> {
             Some(lr) => k - dot(lr.vt.row(i), lr.vt.row(j)),
             None => k,
         };
-        let r = rho / (self.diag[i] * self.diag[j]).sqrt();
-        (1.0 - r.abs()).max(0.0).sqrt()
+        correlation_distance(rho, self.diag[i], self.diag[j])
     }
 
     fn dist_batch(&self, i: usize, cand: &[u32], out: &mut [f64]) {
@@ -670,8 +696,7 @@ impl Metric for CorrelationMetric<'_> {
             }
             let di = self.diag[i];
             for (o, &j) in out.iter_mut().zip(cand) {
-                let r = *o / (di * self.diag[j as usize]).sqrt();
-                *o = (1.0 - r.abs()).max(0.0).sqrt();
+                *o = correlation_distance(*o, di, self.diag[j as usize]);
             }
         })
     }

@@ -1,0 +1,746 @@
+//! Shared panelized prediction pipeline for the VIF approximation
+//! (Prop 2.1 for the Gaussian model, Prop 3.1 for the Laplace model,
+//! both with prediction points conditioning on training points only, so
+//! `B_p = I` and `D_p` is diagonal).
+//!
+//! Both models' predictive distributions have the same structure: each
+//! prediction point `p` conditions on a set `N(p)` of training points
+//! through residual-process regression weights `A_p` and a conditional
+//! variance `D_p`, plus low-rank Woodbury corrections through
+//! `k_p = K(s_p, Z)`. Before this module the two `predict` bodies were
+//! copy-pasted scalar hot loops; prediction is the serving hot path, so
+//! it now runs through the same symbolic/numeric split and panel
+//! machinery as training assembly (see the `vif` module docs):
+//!
+//! * [`PredictPlan`] is the **θ-frozen symbolic half**: the per-point
+//!   conditioning sets `N(p)` among training points (searched through
+//!   the batched correlation metric — cover tree or brute force — or
+//!   the λ-scaled Euclidean metric), the pre-gathered training
+//!   coordinate panels ([`NeighborPanels`]) the numeric pass reads
+//!   instead of re-copying coordinates, and the CSC-style scatter
+//!   pattern of `B_poᵀ` that turns the Laplace adjoint projection into
+//!   a deterministic per-training-row gather. A plan is built once and
+//!   reused across repeated `predict` calls at fixed θ — exactly the
+//!   serving scenario. It is **invalidated** by anything that changes
+//!   what it froze: new kernel parameters θ (the conditioning sets and
+//!   panels were selected under the old metric), a re-assembled or
+//!   refreshed [`VifStructure`], or different training/prediction
+//!   inputs.
+//! * [`PredictBlocks`] is the **θ-dependent numeric half**: one
+//!   `K(X_p, Z)` panel for all prediction points, blocked `Σ_m`
+//!   triangular solves for the `α_p`/`v_p` columns, per-point `ρ_NN`
+//!   blocks evaluated through the panel kernels
+//!   ([`ArdMatern::sym_cov_panel`] + SYRK low-rank rank updates —
+//!   no scalar per-pair `kernel.cov` calls remain), and the mean and
+//!   deterministic-variance Woodbury terms batched over column blocks
+//!   of prediction points as small GEMMs plus one `M⁻¹` block solve per
+//!   block. Global solves (`Σ_†⁻¹ y`, `Σ_mn Σ_†⁻¹ y`, the residual
+//!   target `y − Σ_mnᵀ M⁻¹ Σ_mn S y`) are hoisted out of the per-point
+//!   loop entirely.
+//!
+//! The Laplace stochastic variance corrections (Algorithms 1–2) consume
+//! the same blocks through [`project_q_batch`] / [`project_qt_batch`]:
+//! `Q`/`Qᵀ` applied to whole probe blocks as one GEMM + one
+//! level-scheduled `S⁻¹` sweep per block, feeding
+//! `iterative::pred_var::{sbpv_diag, spv_diag}` so every probe system —
+//! CG solves *and* projections — is a multi-RHS batch.
+
+use std::borrow::Cow;
+
+use crate::covertree::{CoverTree, Metric, QueryScratch};
+use crate::kernels::ArdMatern;
+use crate::linalg::{dot, CholeskyFactor, Mat};
+use crate::vecchia::neighbors::NeighborSelection;
+
+use super::{gather_rows, LowRank, NeighborPanels, VifStructure, PANEL_SCRATCH};
+use crate::coordinator::SyncSlice;
+
+/// Column-block width for the batched numeric pass (bounds the size of
+/// the per-block GEMM operands and `M⁻¹` solves).
+const PRED_BLOCK: usize = 64;
+
+/// θ-frozen symbolic half of the prediction pipeline: conditioning sets,
+/// pre-gathered coordinate panels, and the `B_poᵀ` scatter pattern. See
+/// the module docs for reuse and invalidation rules.
+pub struct PredictPlan {
+    /// Per-prediction-point conditioning sets `N(p)` among training
+    /// points (ascending training indices).
+    pub neighbors: Vec<Vec<u32>>,
+    /// Pre-gathered training-coordinate panels, one `|N(p)| × d` block
+    /// per prediction point.
+    x_panels: NeighborPanels,
+    /// CSC-style pattern of `B_poᵀ`: for training row `j`, the entries
+    /// `bt_entries[bt_ptr[j]..bt_ptr[j+1]]` list the `(p, slot)` pairs
+    /// with `j = N(p)[slot]`, ascending in `p`.
+    bt_ptr: Vec<usize>,
+    bt_entries: Vec<(u32, u32)>,
+    /// Low-rank panels carried over from the correlation neighbor
+    /// search so the numeric pass does not recompute the `K(X_p, Z)`
+    /// panel or its forward substitutions. `None` for
+    /// Euclidean-selection or externally supplied plans.
+    lr_panels: Option<LrPanelCache>,
+}
+
+/// θ-dependent low-rank panels cached on a [`PredictPlan`], keyed by
+/// the kernel parameters and inducing inputs they were evaluated at.
+/// [`PredictBlocks::compute`] only trusts the cache when the key still
+/// matches the structure it is given, so a stale plan (reused across a
+/// refit, against the documented invalidation contract) degrades to
+/// recomputation instead of silently wrong numbers.
+struct LrPanelCache {
+    /// Packed kernel log-parameters at evaluation time.
+    theta: Vec<f64>,
+    /// Inducing inputs at evaluation time.
+    z: Mat,
+    /// `K(X_p, Z)` (`n_p × m`).
+    kp: Mat,
+    /// `(L_m⁻¹ K(Z, X_p))ᵀ` (`n_p × m`).
+    vt: Mat,
+}
+
+impl PredictPlan {
+    /// Build a plan for prediction inputs `xp`: search the conditioning
+    /// sets under the structure's residual process at the current θ,
+    /// then freeze panels and the scatter pattern.
+    pub fn build(
+        s: &VifStructure,
+        x: &Mat,
+        kernel: &ArdMatern,
+        xp: &Mat,
+        m_v: usize,
+        selection: NeighborSelection,
+    ) -> Self {
+        let (neighbors, lr_panels) = pred_neighbor_sets(s, x, kernel, xp, m_v, selection);
+        let mut plan = Self::from_neighbor_sets(x, neighbors);
+        plan.lr_panels = lr_panels;
+        plan
+    }
+
+    /// Build a plan from externally chosen conditioning sets (tests and
+    /// oracles; `neighbors[p]` indexes rows of `x`).
+    pub fn from_neighbor_sets(x: &Mat, neighbors: Vec<Vec<u32>>) -> Self {
+        let x_panels = NeighborPanels::gather(x, &neighbors);
+        let n = x.rows();
+        let mut bt_ptr = vec![0usize; n + 1];
+        for nb in &neighbors {
+            for &j in nb {
+                bt_ptr[j as usize + 1] += 1;
+            }
+        }
+        for j in 0..n {
+            bt_ptr[j + 1] += bt_ptr[j];
+        }
+        let mut bt_entries = vec![(0u32, 0u32); bt_ptr[n]];
+        let mut cursor = bt_ptr.clone();
+        for (p, nb) in neighbors.iter().enumerate() {
+            for (k, &j) in nb.iter().enumerate() {
+                let c = &mut cursor[j as usize];
+                bt_entries[*c] = (p as u32, k as u32);
+                *c += 1;
+            }
+        }
+        PredictPlan { neighbors, x_panels, bt_ptr, bt_entries, lr_panels: None }
+    }
+
+    /// Number of prediction points the plan covers.
+    pub fn n_points(&self) -> usize {
+        self.neighbors.len()
+    }
+}
+
+/// θ-dependent numeric half: the per-point conditional blocks and the
+/// batched deterministic mean/variance ingredients (module docs).
+pub struct PredictBlocks<'a> {
+    /// Regression weights `A_p` on `N(p)`.
+    pub a_rows: Vec<Vec<f64>>,
+    /// Conditional variances `D_p` (the structure's nugget included;
+    /// floored at `1e-12`).
+    pub d: Vec<f64>,
+    /// `k_p = K(X_p, Z)` rows (`n_p × m`; `n_p × 0` when `m = 0`) —
+    /// borrowed from the plan's panel cache when that is still valid,
+    /// owned otherwise.
+    pub kp: Cow<'a, Mat>,
+    /// `α_p = Σ_m⁻¹ k_p` rows (`n_p × m`).
+    pub alpha: Mat,
+    /// Deterministic predictive variance — `D_p` plus the Woodbury
+    /// terms of Eq. 20 / App. C.1 with `B_p = I` (floored at `1e-12`).
+    /// For the Gaussian model this is the full response variance; the
+    /// Laplace model adds the stochastic correction (21) on top.
+    pub var_det: Vec<f64>,
+}
+
+impl<'a> PredictBlocks<'a> {
+    /// Run the numeric pass for `xp` against a frozen plan.
+    /// `block_jitter` is the base jitter of the per-point `ρ_NN`
+    /// Cholesky factorizations (the Gaussian path uses `1e-10` — its
+    /// blocks carry the noise nugget on the diagonal — and the
+    /// latent-scale Laplace path `1e-8`).
+    pub fn compute(
+        s: &VifStructure,
+        kernel: &ArdMatern,
+        xp: &Mat,
+        plan: &'a PredictPlan,
+        block_jitter: f64,
+    ) -> Self {
+        let np = plan.n_points();
+        assert_eq!(xp.rows(), np, "plan built for different prediction inputs");
+        let m = s.m();
+        let nugget = s.nugget;
+        // Trust the plan's panel cache only when it was evaluated at
+        // this exact θ and inducing set.
+        let cache = plan.lr_panels.as_ref().filter(|c| match &s.lr {
+            Some(lr) => c.theta == kernel.log_params() && c.z == lr.z,
+            None => false,
+        });
+        let kp: Cow<'a, Mat> = match (&s.lr, cache) {
+            (Some(_), Some(c)) => Cow::Borrowed(&c.kp),
+            (Some(lr), None) => {
+                Cow::Owned(crate::runtime::cross_cov_panel(xp, &lr.z, kernel))
+            }
+            (None, _) => Cow::Owned(Mat::zeros(np, 0)),
+        };
+        let mut a_rows: Vec<Vec<f64>> = vec![vec![]; np];
+        let mut d = vec![0.0; np];
+        let mut alpha = Mat::zeros(np, m);
+        let mut var_det = vec![0.0; np];
+        if np == 0 {
+            return PredictBlocks { a_rows, d, kp, alpha, var_det };
+        }
+        let nblocks = np.div_ceil(PRED_BLOCK);
+        {
+            let ap = SyncSlice(a_rows.as_mut_ptr());
+            let dp = SyncSlice(d.as_mut_ptr());
+            let alp = SyncSlice(alpha.data_mut().as_mut_ptr());
+            let vp = SyncSlice(var_det.as_mut_ptr());
+            let (ap, dp, alp, vp) = (&ap, &dp, &alp, &vp);
+            crate::coordinator::parallel_map_heavy(nblocks, |b| {
+                let lo = b * PRED_BLOCK;
+                let hi = (lo + PRED_BLOCK).min(np);
+                let blk = hi - lo;
+                // Low-rank column blocks: the forward-solved `v_p`
+                // columns come from the plan cache when the neighbor
+                // search already computed them, else from one blocked
+                // forward substitution; `α_p` back-substitutes the same
+                // forward-solved block (no second L-solve).
+                let (vt_cols, alpha_cols) = match &s.lr {
+                    Some(lr) => {
+                        let vt_cols = match cache {
+                            Some(c) => {
+                                let mut vc = Mat::zeros(m, blk);
+                                for (col, p) in (lo..hi).enumerate() {
+                                    for (l, &v) in c.vt.row(p).iter().enumerate() {
+                                        vc.set(l, col, v);
+                                    }
+                                }
+                                vc
+                            }
+                            None => {
+                                let mut kpt = Mat::zeros(m, blk);
+                                for (c, p) in (lo..hi).enumerate() {
+                                    let row = kp.row(p);
+                                    for (l, &v) in row.iter().enumerate() {
+                                        kpt.set(l, c, v);
+                                    }
+                                }
+                                lr.chol_m.solve_lower_mat(&kpt)
+                            }
+                        };
+                        let alpha_cols = lr.chol_m.solve_upper_mat(&vt_cols);
+                        (vt_cols, alpha_cols)
+                    }
+                    None => (Mat::zeros(0, blk), Mat::zeros(0, blk)),
+                };
+                // Per-point conditional blocks (panel kernels + SYRK).
+                let mut beta_cols = Mat::zeros(m, blk);
+                let mut var_loc = vec![0.0; blk];
+                PANEL_SCRATCH.with(|cell| {
+                    let scr = &mut *cell.borrow_mut();
+                    for (c, p) in (lo..hi).enumerate() {
+                        let vt_p: Vec<f64> = (0..m).map(|l| vt_cols.get(l, c)).collect();
+                        let rho_pp = kernel.variance - dot(&vt_p, &vt_p);
+                        let nb = &plan.neighbors[p];
+                        let q = nb.len();
+                        let (a_p, d_p) = if q == 0 {
+                            (vec![], (rho_pp + nugget).max(1e-12))
+                        } else {
+                            let xpan = plan.x_panels.row_panel(p);
+                            let mut cnn = Mat::zeros(q, q);
+                            kernel.sym_cov_panel(xpan, &mut cnn);
+                            let mut rho_pn = vec![0.0; q];
+                            kernel.cov_panel(xp.row(p), xpan, &mut rho_pn);
+                            if let Some(lr) = &s.lr {
+                                gather_rows(&lr.vt, nb, &mut scr.vp);
+                                cnn.syrk_sub_panel(&scr.vp, m);
+                                for (t, r) in rho_pn.iter_mut().enumerate() {
+                                    *r -= dot(&scr.vp[t * m..(t + 1) * m], &vt_p);
+                                }
+                            }
+                            // Nugget after the SYRK so the diagonal matches
+                            // the scalar `(σ₁² − v·v) + nugget` grouping
+                            // bit-for-bit.
+                            for a in 0..q {
+                                cnn.add_to(a, a, nugget);
+                            }
+                            let chol =
+                                CholeskyFactor::new_with_jitter(&cnn, block_jitter)
+                                    .expect("prediction block not PD");
+                            let a_p = chol.solve(&rho_pn);
+                            let d_p = rho_pp + nugget - dot(&a_p, &rho_pn);
+                            (a_p, d_p.max(1e-12))
+                        };
+                        // β_p = −Σ_k A_pk Σ_m,N(p)_k (column c of the block).
+                        if let Some(lr) = &s.lr {
+                            for (k, &j) in nb.iter().enumerate() {
+                                let srow = lr.sigma_nm.row(j as usize);
+                                let apk = a_p[k];
+                                for (l, &sv) in srow.iter().enumerate() {
+                                    beta_cols.add_to(l, c, -(apk * sv));
+                                }
+                            }
+                        }
+                        var_loc[c] = d_p;
+                        // SAFETY: index p belongs to exactly this block.
+                        unsafe {
+                            *dp.get().add(p) = d_p;
+                            for l in 0..m {
+                                *alp.get().add(p * m + l) = alpha_cols.get(l, c);
+                            }
+                            *ap.get().add(p) = a_p;
+                        }
+                    }
+                });
+                // Woodbury variance terms for the whole block: `SS α_p`
+                // per contiguous column (the same `matvec` kernel as the
+                // scalar path, so the variance stays bit-identical to
+                // the per-point reference), then one `M⁻¹` block solve
+                // for all `β − SSα` columns and contiguous dots.
+                if m > 0 {
+                    let cm = s.chol_mcal.as_ref().unwrap();
+                    let mut al = vec![0.0; m];
+                    let mut bet = vec![0.0; m];
+                    let mut ssa_cols = Mat::zeros(m, blk);
+                    let mut diff = beta_cols.clone();
+                    for c in 0..blk {
+                        for l in 0..m {
+                            al[l] = alpha_cols.get(l, c);
+                        }
+                        let ssa = s.ss.matvec(&al);
+                        for (l, &v) in ssa.iter().enumerate() {
+                            ssa_cols.set(l, c, v);
+                            diff.add_to(l, c, -v);
+                        }
+                    }
+                    let mdiff = cm.solve_mat(&diff);
+                    let mut ssa = vec![0.0; m];
+                    let mut df = vec![0.0; m];
+                    let mut md = vec![0.0; m];
+                    for (c, p) in (lo..hi).enumerate() {
+                        for l in 0..m {
+                            al[l] = alpha_cols.get(l, c);
+                            ssa[l] = ssa_cols.get(l, c);
+                            bet[l] = beta_cols.get(l, c);
+                            df[l] = diff.get(l, c);
+                            md[l] = mdiff.get(l, c);
+                        }
+                        let mut v = var_loc[c];
+                        v += dot(kp.row(p), &al) - dot(&al, &ssa) + 2.0 * dot(&al, &bet);
+                        v += dot(&df, &md);
+                        var_loc[c] = v;
+                    }
+                }
+                // SAFETY: indices lo..hi belong to exactly this block.
+                unsafe {
+                    for (c, p) in (lo..hi).enumerate() {
+                        *vp.get().add(p) = var_loc[c].max(1e-12);
+                    }
+                }
+            });
+        }
+        PredictBlocks { a_rows, d, kp, alpha, var_det }
+    }
+}
+
+/// Posterior predictive mean for a target vector (`y` on the Gaussian
+/// response scale, the Laplace mode `b̃` on the latent scale):
+/// `μ_p = A_p (t − Σ_mnᵀ M⁻¹ Σ_mn S t)|_{N(p)} + α_p · (Σ_mn Σ_†⁻¹ t)`.
+/// All global solves — `Σ_†⁻¹ t`, the `M⁻¹` core solve, and the
+/// `Σ_mn Σ_†⁻¹ t` contraction — happen exactly once; the per-point work
+/// is one gather over `N(p)` plus one row of a blocked GEMV.
+pub fn posterior_mean(
+    s: &VifStructure,
+    plan: &PredictPlan,
+    blocks: &PredictBlocks<'_>,
+    target: &[f64],
+) -> Vec<f64> {
+    let np = plan.n_points();
+    let resid_target: Vec<f64> = match (&s.lr, &s.chol_mcal) {
+        (Some(lr), Some(cm)) => {
+            // t − Σ_mnᵀ M⁻¹ Σ_mn S t : the residual-scale target (§2.3).
+            let c = cm.solve(&s.ssig.matvec_t(target));
+            let corr = lr.sigma_nm.matvec(&c);
+            target.iter().zip(&corr).map(|(t, co)| t - co).collect()
+        }
+        _ => target.to_vec(),
+    };
+    let mut mean = match &s.lr {
+        Some(lr) => {
+            let u = s.apply_sigma_dagger_inv(target);
+            let smu = lr.sigma_nm.matvec_t(&u); // hoisted: one O(n·m) pass
+            blocks.alpha.matvec(&smu)
+        }
+        None => vec![0.0; np],
+    };
+    let mp = SyncSlice(mean.as_mut_ptr());
+    let mp = &mp;
+    crate::coordinator::parallel_for_chunks(np, |start, end| {
+        for p in start..end {
+            let mut acc = 0.0;
+            for (k, &j) in plan.neighbors[p].iter().enumerate() {
+                acc += blocks.a_rows[p][k] * resid_target[j as usize];
+            }
+            // SAFETY: disjoint indices per chunk.
+            unsafe {
+                *mp.get().add(p) += acc;
+            }
+        }
+    });
+    mean
+}
+
+/// `Q W` for a column block, where each column of `w1` is already
+/// `Σ_†⁻¹ z` and `Q = Σ_mn_pᵀ Σ_m⁻¹ Σ_mn − B_po S⁻¹` (the Laplace
+/// stochastic-variance projection, Prop 3.1 / Eq. 21): one
+/// `Σ_mn`-GEMM + `Σ_m` block solve + `k_p` GEMM for the low-rank part,
+/// one level-scheduled `S⁻¹` sweep over all columns, and a per-point
+/// gather over `N(p)` for the `B_po` part.
+pub fn project_q_batch(
+    s: &VifStructure,
+    plan: &PredictPlan,
+    blocks: &PredictBlocks<'_>,
+    w1: &Mat,
+) -> Mat {
+    let np = plan.n_points();
+    let k = w1.cols();
+    let w2 = s.resid.apply_s_inv_mat(w1);
+    let mut out = match &s.lr {
+        Some(lr) => {
+            let q_m = lr.chol_m.solve_mat(&lr.sigma_nm.matmul_tn(w1)); // m×k
+            blocks.kp.matmul(&q_m) // np×k
+        }
+        None => Mat::zeros(np, k),
+    };
+    let optr = SyncSlice(out.data_mut().as_mut_ptr());
+    let optr = &optr;
+    crate::coordinator::parallel_for_chunks(np, |start, end| {
+        for p in start..end {
+            let a_p = &blocks.a_rows[p];
+            for (t, &j) in plan.neighbors[p].iter().enumerate() {
+                let a = a_p[t];
+                let src = w2.row(j as usize);
+                // SAFETY: disjoint output rows per chunk.
+                unsafe {
+                    let dst = optr.get().add(p * k);
+                    for (c, &sv) in src.iter().enumerate() {
+                        *dst.add(c) += a * sv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `Σ_†⁻¹ Qᵀ Z` for a column block of `n_p`-vectors — the adjoint used
+/// by SPV and the exact variance path. The `B_poᵀ` part runs as a
+/// deterministic per-training-row gather through the plan's CSC
+/// pattern (fixed accumulation order, so results are independent of
+/// the worker count), followed by one `S⁻¹` sweep and one
+/// `Σ_†⁻¹` application over the whole block.
+pub fn project_qt_batch(
+    s: &VifStructure,
+    plan: &PredictPlan,
+    blocks: &PredictBlocks<'_>,
+    z: &Mat,
+) -> Mat {
+    let n = s.n();
+    let k = z.cols();
+    let mut t = match &s.lr {
+        Some(lr) => {
+            let tm = lr.chol_m.solve_mat(&blocks.kp.matmul_tn(z)); // m×k
+            lr.sigma_nm.matmul(&tm) // n×k
+        }
+        None => Mat::zeros(n, k),
+    };
+    let mut bt = Mat::zeros(n, k);
+    {
+        let btp = SyncSlice(bt.data_mut().as_mut_ptr());
+        let btp = &btp;
+        crate::coordinator::parallel_for_chunks(n, |start, end| {
+            for j in start..end {
+                for e in plan.bt_ptr[j]..plan.bt_ptr[j + 1] {
+                    let (p, slot) = plan.bt_entries[e];
+                    let a = blocks.a_rows[p as usize][slot as usize];
+                    let src = z.row(p as usize);
+                    // SAFETY: disjoint output rows per chunk.
+                    unsafe {
+                        let dst = btp.get().add(j * k);
+                        for (c, &zv) in src.iter().enumerate() {
+                            *dst.add(c) -= a * zv;
+                        }
+                    }
+                }
+            }
+        });
+    }
+    let sb = s.resid.apply_s_inv_mat(&bt);
+    t.sub_assign(&sb);
+    s.apply_sigma_dagger_inv_batch(&t)
+}
+
+/// Below this many prediction points the cover-tree search falls back
+/// to the brute-force metric sweep: building the tree costs on the
+/// order of `n · depth` metric evaluations, which only amortizes once
+/// enough queries share it. Both paths score through the same batched
+/// metric, so the selected sets agree up to distance ties.
+const COVER_TREE_MIN_QUERIES: usize = 32;
+
+/// Conditioning sets for prediction points among training points, under
+/// the same metric family as training-set selection (§6). The
+/// correlation searches run over the stacked index space
+/// `[X; X_p]` through [`PredCorrelationMetric`], so every candidate
+/// batch flows through the panel kernels; the cover-tree variant builds
+/// one tree over the training points and serves every prediction query
+/// from it (a query index `n + p` exceeds every training index, so the
+/// ordered query prunes nothing away), falling back to the brute-force
+/// sweep below [`COVER_TREE_MIN_QUERIES`] so one-shot small-batch
+/// `predict` calls don't pay the tree build. Returns the sets together
+/// with the keyed [`LrPanelCache`] the correlation metric computed, so
+/// the plan can hand the panels to the numeric pass.
+fn pred_neighbor_sets(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &ArdMatern,
+    xp: &Mat,
+    m_v: usize,
+    selection: NeighborSelection,
+) -> (Vec<Vec<u32>>, Option<LrPanelCache>) {
+    let n = x.rows();
+    let np = xp.rows();
+    if m_v == 0 || n == 0 {
+        return (vec![vec![]; np], None);
+    }
+    let m_v = m_v.min(n);
+    match selection {
+        NeighborSelection::EuclideanTransformed => {
+            let sets = crate::coordinator::parallel_map(np, |p| {
+                let sp = xp.row(p);
+                let cand: Vec<(f64, u32)> = (0..n)
+                    .map(|j| {
+                        let d2: f64 = sp
+                            .iter()
+                            .zip(x.row(j))
+                            .zip(&kernel.length_scales)
+                            .map(|((a, b), l)| {
+                                let u = (a - b) / l;
+                                u * u
+                            })
+                            .sum();
+                        (d2, j as u32)
+                    })
+                    .collect();
+                take_m_v(cand, m_v)
+            });
+            (sets, None)
+        }
+        NeighborSelection::CorrelationCoverTree | NeighborSelection::CorrelationBruteForce => {
+            let panels = s.lr.as_ref().map(|lr| {
+                let (kp, vt) = pred_lr_panels(lr, kernel, xp);
+                LrPanelCache { theta: kernel.log_params(), z: lr.z.clone(), kp, vt }
+            });
+            let metric = PredCorrelationMetric::new(
+                s,
+                x,
+                kernel,
+                xp,
+                panels.as_ref().map(|c| &c.vt),
+            );
+            let use_tree = selection == NeighborSelection::CorrelationCoverTree
+                && np >= COVER_TREE_MIN_QUERIES;
+            let sets = if use_tree {
+                let tree = CoverTree::build(n, &metric);
+                let mut out: Vec<Vec<u32>> = vec![vec![]; np];
+                {
+                    let out_ptr = SyncSlice(out.as_mut_ptr());
+                    let out_ptr = &out_ptr;
+                    crate::coordinator::parallel_for_chunks(np, |start, end| {
+                        let mut scratch = QueryScratch::new(n);
+                        for p in start..end {
+                            let mut idx =
+                                tree.knn_ordered_with(n + p, m_v, &metric, &mut scratch);
+                            idx.sort_unstable();
+                            // SAFETY: disjoint indices per chunk.
+                            unsafe {
+                                *out_ptr.get().add(p) = idx;
+                            }
+                        }
+                    });
+                }
+                out
+            } else {
+                let ids: Vec<u32> = (0..n as u32).collect();
+                crate::coordinator::parallel_map(np, |p| {
+                    let mut dists = vec![0.0; n];
+                    metric.dist_batch(n + p, &ids, &mut dists);
+                    let cand: Vec<(f64, u32)> =
+                        dists.into_iter().zip(ids.iter().copied()).collect();
+                    take_m_v(cand, m_v)
+                })
+            };
+            (sets, panels)
+        }
+    }
+}
+
+/// Keep the `m_v` smallest-score candidates, ascending index order.
+fn take_m_v(mut cand: Vec<(f64, u32)>, m_v: usize) -> Vec<u32> {
+    if cand.len() > m_v {
+        cand.select_nth_unstable_by(m_v - 1, |a, b| a.0.total_cmp(&b.0));
+        cand.truncate(m_v);
+    }
+    let mut idx: Vec<u32> = cand.into_iter().map(|(_, j)| j).collect();
+    idx.sort_unstable();
+    idx
+}
+
+/// Correlation distance `d_c` of the residual process over the stacked
+/// index space `[training 0..n, prediction n..n+n_p]`: training rows
+/// read the structure's `V` panel, prediction rows a `L_m⁻¹ K(Z, X_p)`
+/// panel computed once at construction. The batched path mirrors
+/// [`super::CorrelationMetric`] — one `cov_panel` sweep per candidate
+/// batch plus length-`m` dot corrections.
+struct PredCorrelationMetric<'a> {
+    kernel: &'a ArdMatern,
+    x: &'a Mat,
+    xp: &'a Mat,
+    lr: Option<&'a LowRank>,
+    /// `(L_m⁻¹ K(Z, X_p))ᵀ` rows for the prediction points (required
+    /// whenever `lr` is set; the caller computes it once via
+    /// [`pred_lr_panels`] and also hands it to the plan).
+    vt_pred: Option<&'a Mat>,
+    /// `ρ(j,j)` over the stacked space, clamped away from zero.
+    diag: Vec<f64>,
+    n: usize,
+}
+
+impl<'a> PredCorrelationMetric<'a> {
+    fn new(
+        s: &'a VifStructure,
+        x: &'a Mat,
+        kernel: &'a ArdMatern,
+        xp: &'a Mat,
+        vt_pred: Option<&'a Mat>,
+    ) -> Self {
+        let n = x.rows();
+        let np = xp.rows();
+        let lr = s.lr.as_ref();
+        let mut diag = Vec::with_capacity(n + np);
+        match lr {
+            Some(lr) => {
+                let vt = vt_pred.expect("low-rank structure needs the prediction V panel");
+                for j in 0..n {
+                    diag.push(
+                        (kernel.variance - crate::linalg::norm2_sq(lr.vt.row(j)))
+                            .max(1e-300),
+                    );
+                }
+                for p in 0..np {
+                    diag.push(
+                        (kernel.variance - crate::linalg::norm2_sq(vt.row(p))).max(1e-300),
+                    );
+                }
+            }
+            None => diag.resize(n + np, kernel.variance.max(1e-300)),
+        }
+        PredCorrelationMetric { kernel, x, xp, lr, vt_pred, diag, n }
+    }
+
+    fn coords(&self, j: usize) -> &[f64] {
+        if j < self.n {
+            self.x.row(j)
+        } else {
+            self.xp.row(j - self.n)
+        }
+    }
+
+    fn vrow<'b>(&'b self, lr: &'b LowRank, j: usize) -> &'b [f64] {
+        if j < self.n {
+            lr.vt.row(j)
+        } else {
+            self.vt_pred
+                .expect("low-rank structure needs the prediction V panel")
+                .row(j - self.n)
+        }
+    }
+}
+
+impl Metric for PredCorrelationMetric<'_> {
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        let k = if i == j {
+            self.kernel.variance
+        } else {
+            self.kernel.cov(self.coords(i), self.coords(j))
+        };
+        let rho = match self.lr {
+            Some(lr) => k - dot(self.vrow(lr, i), self.vrow(lr, j)),
+            None => k,
+        };
+        super::correlation_distance(rho, self.diag[i], self.diag[j])
+    }
+
+    fn dist_batch(&self, i: usize, cand: &[u32], out: &mut [f64]) {
+        PANEL_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.xp.clear();
+            s.xp.reserve(cand.len() * self.x.cols());
+            for &j in cand {
+                s.xp.extend_from_slice(self.coords(j as usize));
+            }
+            self.kernel.cov_panel(self.coords(i), &s.xp, out);
+            if let Some(lr) = self.lr {
+                let vi = self.vrow(lr, i);
+                for (o, &j) in out.iter_mut().zip(cand) {
+                    *o -= dot(vi, self.vrow(lr, j as usize));
+                }
+            }
+            let di = self.diag[i];
+            for (o, &j) in out.iter_mut().zip(cand) {
+                *o = super::correlation_distance(*o, di, self.diag[j as usize]);
+            }
+        })
+    }
+}
+
+/// `K(X_p, Z)` and its forward solve `(L_m⁻¹ K(Z, X_p))ᵀ` (`n_p × m`
+/// each): one cross-covariance panel (PJRT-served when available) +
+/// row-wise forward substitutions. Computed once per plan build and
+/// shared between the correlation metric and the numeric pass.
+fn pred_lr_panels(lr: &LowRank, kernel: &ArdMatern, xp: &Mat) -> (Mat, Mat) {
+    let kp = crate::runtime::cross_cov_panel(xp, &lr.z, kernel);
+    let m = lr.m();
+    let mut vt = Mat::zeros(xp.rows(), m);
+    {
+        let vtp = SyncSlice(vt.data_mut().as_mut_ptr());
+        let vtp = &vtp;
+        crate::coordinator::parallel_for_chunks(xp.rows(), |start, end| {
+            for i in start..end {
+                let mut v = kp.row(i).to_vec();
+                lr.chol_m.solve_lower_in_place(&mut v);
+                // SAFETY: disjoint rows per chunk.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(v.as_ptr(), vtp.get().add(i * m), m);
+                }
+            }
+        });
+    }
+    (kp, vt)
+}

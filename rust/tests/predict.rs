@@ -1,0 +1,453 @@
+//! Pinning tests for the shared panelized prediction pipeline
+//! (`vif::predict`): the batched path must match the scalar per-point
+//! reference (`testing::scalar_predict_reference`) to ≤1e-12 for the
+//! Gaussian model (m = 0, m > 0, m_v = 0) and the Laplace model (exact
+//! and both stochastic variance estimators), a frozen `PredictPlan`
+//! must be reusable (two calls at fixed θ give identical results), and
+//! the cover-tree prediction neighbor search must agree with brute
+//! force up to ties.
+
+use vifgp::iterative::map_columns;
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::linalg::{dot, Mat};
+use vifgp::rng::Rng;
+use vifgp::testing::{random_points, scalar_predict_reference, ScalarPrediction};
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{self, LaplaceState, PredVarMethod, SolveMode, WSolver};
+use vifgp::vif::predict::{posterior_mean, project_q_batch, PredictBlocks, PredictPlan};
+use vifgp::vif::{gaussian, select_inducing, select_neighbors, LowRank, VifStructure};
+
+const TOL: f64 = 1e-12;
+
+fn rel_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() / (1.0 + y.abs()))
+        .fold(0.0, f64::max)
+}
+
+/// Gaussian-scale setup: structure with noise nugget and the extra
+/// noise-parameter slot.
+fn gaussian_setup(
+    n: usize,
+    m: usize,
+    m_v: usize,
+) -> (Mat, ArdMatern, VifStructure, Vec<f64>, Mat) {
+    let mut rng = Rng::seed_from(91);
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.2, vec![0.3, 0.45], Smoothness::ThreeHalves);
+    let z = select_inducing(&x, &kernel, m, 2, &mut rng, None);
+    let nb = if m_v == 0 {
+        vec![vec![]; n]
+    } else {
+        let lr_tmp = z
+            .clone()
+            .map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+        select_neighbors(
+            &x,
+            &kernel,
+            lr_tmp.as_ref(),
+            m_v,
+            NeighborSelection::CorrelationBruteForce,
+        )
+    };
+    let s = VifStructure::assemble(&x, &kernel, z, nb, 0.05, 1e-10, 1);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let xp = random_points(&mut rng, 23, 2);
+    (x, kernel, s, y, xp)
+}
+
+fn check_gaussian_matches_scalar(m: usize, m_v: usize, selection: NeighborSelection) {
+    let (x, kernel, s, y, xp) = gaussian_setup(90, m, m_v);
+    let plan = PredictPlan::build(&s, &x, &kernel, &xp, m_v, selection);
+    let (mean_b, var_b) = gaussian::predict_with_plan(&s, &kernel, &y, &xp, &plan);
+    let want = scalar_predict_reference(&s, &x, &kernel, &y, &xp, &plan.neighbors, 1e-10);
+    assert!(
+        rel_diff(&mean_b, &want.mean) <= TOL,
+        "mean diverged: {:.3e}",
+        rel_diff(&mean_b, &want.mean)
+    );
+    assert!(
+        rel_diff(&var_b, &want.var_det) <= TOL,
+        "var diverged: {:.3e}",
+        rel_diff(&var_b, &want.var_det)
+    );
+    // The one-shot entry point builds the same plan internally.
+    let (mean_1, var_1) = gaussian::predict(&s, &x, &kernel, &y, &xp, m_v, selection);
+    assert_eq!(mean_1, mean_b, "one-shot path diverged from plan path");
+    assert_eq!(var_1, var_b, "one-shot path diverged from plan path");
+}
+
+#[test]
+fn gaussian_pipeline_matches_scalar_full_model() {
+    check_gaussian_matches_scalar(9, 6, NeighborSelection::CorrelationBruteForce);
+}
+
+#[test]
+fn gaussian_pipeline_matches_scalar_pure_vecchia() {
+    // m = 0: no low-rank part anywhere in the pipeline.
+    check_gaussian_matches_scalar(0, 6, NeighborSelection::CorrelationBruteForce);
+}
+
+#[test]
+fn gaussian_pipeline_matches_scalar_fitc() {
+    // m_v = 0: empty conditioning sets, Woodbury terms only.
+    check_gaussian_matches_scalar(9, 0, NeighborSelection::CorrelationBruteForce);
+}
+
+#[test]
+fn gaussian_pipeline_matches_scalar_euclidean_selection() {
+    check_gaussian_matches_scalar(9, 6, NeighborSelection::EuclideanTransformed);
+}
+
+#[test]
+fn predict_plan_reuse_is_identical() {
+    // Serving scenario: one plan, repeated predict calls at fixed θ —
+    // results must be bitwise identical, and identical to a plan built
+    // from scratch at the same θ.
+    let (x, kernel, s, y, xp) = gaussian_setup(80, 8, 5);
+    let plan = PredictPlan::build(
+        &s,
+        &x,
+        &kernel,
+        &xp,
+        5,
+        NeighborSelection::CorrelationBruteForce,
+    );
+    let (m1, v1) = gaussian::predict_with_plan(&s, &kernel, &y, &xp, &plan);
+    let (m2, v2) = gaussian::predict_with_plan(&s, &kernel, &y, &xp, &plan);
+    assert_eq!(m1, m2);
+    assert_eq!(v1, v2);
+    let plan2 = PredictPlan::build(
+        &s,
+        &x,
+        &kernel,
+        &xp,
+        5,
+        NeighborSelection::CorrelationBruteForce,
+    );
+    assert_eq!(plan.neighbors, plan2.neighbors, "plan rebuild changed the sets");
+    let (m3, v3) = gaussian::predict_with_plan(&s, &kernel, &y, &xp, &plan2);
+    assert_eq!(m1, m3);
+    assert_eq!(v1, v3);
+}
+
+#[test]
+fn cover_tree_pred_neighbors_match_brute_force() {
+    let (x, kernel, s, _y, _xp) = gaussian_setup(200, 10, 5);
+    let mut rng = Rng::seed_from(5);
+    let xp = random_points(&mut rng, 40, 2);
+    let bf = PredictPlan::build(
+        &s,
+        &x,
+        &kernel,
+        &xp,
+        5,
+        NeighborSelection::CorrelationBruteForce,
+    );
+    let ct = PredictPlan::build(
+        &s,
+        &x,
+        &kernel,
+        &xp,
+        5,
+        NeighborSelection::CorrelationCoverTree,
+    );
+    // Stacked-space correlation distance, computed independently.
+    let lr = s.lr.as_ref().unwrap();
+    let m = lr.m();
+    let dist = |p: usize, j: usize| -> f64 {
+        let sp = xp.row(p);
+        let mut vt_p: Vec<f64> = (0..m).map(|l| kernel.cov(sp, lr.z.row(l))).collect();
+        lr.chol_m.solve_lower_in_place(&mut vt_p);
+        let dp = (kernel.variance - dot(&vt_p, &vt_p)).max(1e-300);
+        let vj = lr.vt.row(j);
+        let dj = (kernel.variance - dot(vj, vj)).max(1e-300);
+        let rho = kernel.cov(sp, x.row(j)) - dot(&vt_p, vj);
+        let r = rho / (dp * dj).sqrt();
+        (1.0 - r.abs()).max(0.0).sqrt()
+    };
+    for p in 0..xp.rows() {
+        if bf.neighbors[p] == ct.neighbors[p] {
+            continue;
+        }
+        // Ties may swap indices: the distance multisets must agree.
+        let mut db: Vec<f64> = bf.neighbors[p].iter().map(|&j| dist(p, j as usize)).collect();
+        let mut dc: Vec<f64> = ct.neighbors[p].iter().map(|&j| dist(p, j as usize)).collect();
+        db.sort_by(f64::total_cmp);
+        dc.sort_by(f64::total_cmp);
+        for (a, b) in db.iter().zip(&dc) {
+            assert!(
+                (a - b).abs() < 1e-10,
+                "point {p}: cover tree disagrees with brute force ({a} vs {b})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Laplace: the batched pipeline (mean, deterministic variance, and the
+// batched Q/Qᵀ projections feeding SBPV/SPV and the exact path) must
+// match a scalar per-point replication of the pre-refactor code.
+// ---------------------------------------------------------------------
+
+fn laplace_setup(
+    n: usize,
+    m: usize,
+    m_v: usize,
+) -> (Mat, ArdMatern, VifStructure, Vec<f64>, LaplaceState, Mat) {
+    let mut rng = Rng::seed_from(51);
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.1, vec![0.35, 0.45], Smoothness::ThreeHalves);
+    let z = select_inducing(&x, &kernel, m, 2, &mut rng, None);
+    let lr_tmp = z
+        .clone()
+        .map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+    let nb = select_neighbors(
+        &x,
+        &kernel,
+        lr_tmp.as_ref(),
+        m_v,
+        NeighborSelection::CorrelationBruteForce,
+    );
+    let s = VifStructure::assemble(&x, &kernel, z, nb, 0.0, 1e-10, 0);
+    let mut r2 = Rng::seed_from(17);
+    let b = s.sample(&mut r2);
+    let y: Vec<f64> = b
+        .iter()
+        .map(|bi| {
+            if r2.bernoulli(vifgp::likelihoods::sigmoid(*bi)) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let lik = Likelihood::BernoulliLogit;
+    let mut rng3 = Rng::seed_from(3);
+    let (_, state) = laplace::nll(&s, &x, &kernel, &lik, &y, &SolveMode::Cholesky, &mut rng3);
+    let xp = random_points(&mut rng, 9, 2);
+    (x, kernel, s, y, state, xp)
+}
+
+/// Scalar replication of the pre-refactor `Q w1` projection (w1 already
+/// carries `Σ_†⁻¹`).
+fn scalar_project_q(
+    s: &VifStructure,
+    oracle: &ScalarPrediction,
+    pred_nb: &[Vec<u32>],
+    w1: &[f64],
+) -> Vec<f64> {
+    let q_m = match &s.lr {
+        Some(lr) => lr.chol_m.solve(&lr.sigma_nm.matvec_t(w1)),
+        None => vec![],
+    };
+    let w2 = s.resid.apply_s_inv(w1);
+    (0..pred_nb.len())
+        .map(|p| {
+            let mut acc = if s.m() > 0 {
+                dot(oracle.kp.row(p), &q_m)
+            } else {
+                0.0
+            };
+            for (k_i, &j) in pred_nb[p].iter().enumerate() {
+                acc += oracle.a_rows[p][k_i] * w2[j as usize];
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Scalar replication of the pre-refactor `Σ_†⁻¹ Qᵀ z` adjoint.
+fn scalar_project_qt(
+    s: &VifStructure,
+    oracle: &ScalarPrediction,
+    pred_nb: &[Vec<u32>],
+    z: &[f64],
+) -> Vec<f64> {
+    let n = s.n();
+    let mut t = vec![0.0; n];
+    if let Some(lr) = &s.lr {
+        let tm = lr.chol_m.solve(&oracle.kp.matvec_t(z));
+        let q1 = lr.sigma_nm.matvec(&tm);
+        t.copy_from_slice(&q1);
+    }
+    let mut bt = vec![0.0; n];
+    for (p, zp) in z.iter().enumerate() {
+        if *zp == 0.0 {
+            continue;
+        }
+        for (k, &j) in pred_nb[p].iter().enumerate() {
+            bt[j as usize] -= oracle.a_rows[p][k] * zp;
+        }
+    }
+    let sb = s.resid.apply_s_inv(&bt);
+    for (ti, sbi) in t.iter_mut().zip(&sb) {
+        *ti -= sbi;
+    }
+    s.apply_sigma_dagger_inv(&t)
+}
+
+#[test]
+fn laplace_pipeline_matches_scalar_all_variance_methods() {
+    let (x, kernel, s, _y, state, xp) = laplace_setup(70, 7, 5);
+    let lik = Likelihood::BernoulliLogit;
+    let mode = SolveMode::Cholesky;
+    let np_pts = xp.rows();
+    let plan = PredictPlan::build(
+        &s,
+        &x,
+        &kernel,
+        &xp,
+        5,
+        NeighborSelection::CorrelationBruteForce,
+    );
+    let oracle =
+        scalar_predict_reference(&s, &x, &kernel, &state.b, &xp, &plan.neighbors, 1e-8);
+
+    for method in [PredVarMethod::Exact, PredVarMethod::Sbpv, PredVarMethod::Spv] {
+        let ell = 60;
+        let mut rng = Rng::seed_from(77);
+        let got = laplace::predict_with_plan(
+            &s, &x, &kernel, &lik, &state, &xp, &plan, &mode, method, ell, &mut rng,
+        );
+        // Scalar replication of the pre-refactor stochastic part, on the
+        // same probe streams.
+        let solver = WSolver::new(&s, &x, &kernel, state.w.clone(), &mode, None);
+        let mut rng2 = Rng::seed_from(77);
+        let var_stoch: Vec<f64> = match method {
+            PredVarMethod::Exact => {
+                let sigma_dense = s.dense_sigma_dagger();
+                let dsolver = WSolver::new(
+                    &s,
+                    &x,
+                    &kernel,
+                    state.w.clone(),
+                    &SolveMode::Cholesky,
+                    Some(&sigma_dense),
+                );
+                (0..np_pts)
+                    .map(|p| {
+                        let mut z = vec![0.0; np_pts];
+                        z[p] = 1.0;
+                        let qt = scalar_project_qt(&s, &oracle, &plan.neighbors, &z);
+                        let cqt = dsolver.solve(&qt);
+                        dot(&qt, &cqt)
+                    })
+                    .collect()
+            }
+            PredVarMethod::Sbpv => {
+                let mut local_rng = rng2.split(0xabc);
+                vifgp::iterative::sbpv_diag(
+                    ell,
+                    np_pts,
+                    &mut local_rng,
+                    |r| {
+                        let sig = s.sample(r);
+                        let mut z = s.apply_sigma_dagger_inv(&sig);
+                        for (zi, wi) in z.iter_mut().zip(&state.w) {
+                            *zi += wi.sqrt() * r.normal();
+                        }
+                        z
+                    },
+                    |z6| solver.solve_batch(z6),
+                    |z7| {
+                        map_columns(z7, |col| {
+                            scalar_project_q(
+                                &s,
+                                &oracle,
+                                &plan.neighbors,
+                                &s.apply_sigma_dagger_inv(col),
+                            )
+                        })
+                    },
+                )
+            }
+            PredVarMethod::Spv => {
+                let mut local_rng = rng2.split(0xdef);
+                vifgp::iterative::spv_diag(ell, np_pts, &mut local_rng, |z1| {
+                    let qt = map_columns(z1, |z| {
+                        scalar_project_qt(&s, &oracle, &plan.neighbors, z)
+                    });
+                    let sol = solver.solve_batch(&qt);
+                    map_columns(&sol, |col| {
+                        scalar_project_q(
+                            &s,
+                            &oracle,
+                            &plan.neighbors,
+                            &s.apply_sigma_dagger_inv(col),
+                        )
+                    })
+                })
+            }
+        };
+        let want_var: Vec<f64> = oracle
+            .var_det
+            .iter()
+            .zip(&var_stoch)
+            .map(|(d, st)| (d + st).max(1e-12))
+            .collect();
+        assert!(
+            rel_diff(&got.latent_mean, &oracle.mean) <= TOL,
+            "{method:?} mean diverged: {:.3e}",
+            rel_diff(&got.latent_mean, &oracle.mean)
+        );
+        assert!(
+            rel_diff(&got.latent_var, &want_var) <= TOL,
+            "{method:?} var diverged: {:.3e}",
+            rel_diff(&got.latent_var, &want_var)
+        );
+    }
+}
+
+#[test]
+fn laplace_batched_projections_match_scalar() {
+    // The batched Q/Qᵀ projections against random blocks, directly.
+    let (x, kernel, s, _y, state, xp) = laplace_setup(60, 6, 4);
+    let plan = PredictPlan::build(
+        &s,
+        &x,
+        &kernel,
+        &xp,
+        4,
+        NeighborSelection::CorrelationBruteForce,
+    );
+    let blocks = PredictBlocks::compute(&s, &kernel, &xp, &plan, 1e-8);
+    let oracle =
+        scalar_predict_reference(&s, &x, &kernel, &state.b, &xp, &plan.neighbors, 1e-8);
+    let n = s.n();
+    let np_pts = xp.rows();
+    let zn = Mat::from_fn(n, 5, |i, j| ((i * 7 + j * 3) as f64 * 0.23).sin());
+    let w1 = s.apply_sigma_dagger_inv_batch(&zn);
+    let got_q = project_q_batch(&s, &plan, &blocks, &w1);
+    for j in 0..5 {
+        let want = scalar_project_q(&s, &oracle, &plan.neighbors, &w1.col(j));
+        assert!(
+            rel_diff(&got_q.col(j), &want) <= TOL,
+            "project_q col {j}: {:.3e}",
+            rel_diff(&got_q.col(j), &want)
+        );
+    }
+    let zp = Mat::from_fn(np_pts, 5, |i, j| ((i * 3 + j * 11) as f64 * 0.31).cos());
+    let got_qt = vifgp::vif::predict::project_qt_batch(&s, &plan, &blocks, &zp);
+    for j in 0..5 {
+        let want = scalar_project_qt(&s, &oracle, &plan.neighbors, &zp.col(j));
+        assert!(
+            rel_diff(&got_qt.col(j), &want) <= TOL,
+            "project_qt col {j}: {:.3e}",
+            rel_diff(&got_qt.col(j), &want)
+        );
+    }
+    // Blocks agree with the scalar oracle too.
+    assert!(rel_diff(&blocks.d, &oracle.d) <= TOL);
+    for p in 0..np_pts {
+        assert!(rel_diff(&blocks.a_rows[p], &oracle.a_rows[p]) <= TOL);
+        assert!(rel_diff(blocks.kp.row(p), oracle.kp.row(p)) <= TOL);
+        assert!(rel_diff(blocks.alpha.row(p), oracle.alpha.row(p)) <= TOL);
+    }
+    // Mean through the batched pipeline.
+    let mean = posterior_mean(&s, &plan, &blocks, &state.b);
+    assert!(rel_diff(&mean, &oracle.mean) <= TOL);
+}
