@@ -3,6 +3,9 @@
 //! marginal-likelihood evaluation:
 //!   covariance panels (PJRT vs native), low-rank solves, residual B/D
 //!   construction, CG matvec, and the full Gaussian NLL at scale.
+//! Also covers the serving-side pipelines: plan/refresh trajectories,
+//! panelized batched prediction, and streaming append ingestion vs
+//! assemble-from-scratch (stage 13, BENCH_append.json).
 
 #[path = "common.rs"]
 mod common;
@@ -539,6 +542,109 @@ fn main() {
         );
         let path = std::env::var("VIFGP_BENCH_PREDICT_JSON")
             .unwrap_or_else(|_| "BENCH_predict.json".into());
+        match std::fs::write(&path, json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
+
+    // 13. Streaming append ingestion: incremental `VifStructure::append`
+    // (low-rank column growth + leaf conditioning sets + panelized factor
+    // rows + blocked rank-k Woodbury update) vs the assemble-from-scratch
+    // rebuild a non-incremental server would run on every arriving batch.
+    // The final appended structure must agree with the last rebuild to
+    // ≤1e-12; writes machine-readable BENCH_append.json (override the
+    // path with VIFGP_BENCH_APPEND_JSON).
+    {
+        use vifgp::linalg::Mat;
+        use vifgp::testing::structures_max_abs_diff;
+        use vifgp::vif::VifPlan;
+
+        let nugget = 0.05;
+        let batch = 64usize;
+        let n_app = common::scaled(640).max(batch).min(n / 2);
+        let n_base = n - n_app;
+        let mut x_cur = Mat::from_fn(n_base, d, |i, j| x.get(i, j));
+        // Prefix neighbor sets are self-contained: row i conditions only
+        // on earlier rows, so truncating the full-data selection is a
+        // valid base graph.
+        let nb_base: Vec<Vec<u32>> = nb[..n_base].to_vec();
+        let (mut plan, t_plan) =
+            common::timed(|| VifPlan::build(&x_cur, Some(z.clone()), nb_base));
+        let mut s_inc = VifStructure::from_plan(&x_cur, &kernel, &plan, nugget, 1e-10, 1);
+
+        let mut t_append = 0.0f64;
+        let mut t_rebuild = 0.0f64;
+        let mut batches = 0usize;
+        let mut s_rebuilt = None;
+        let mut done = n_base;
+        while done < n {
+            let k = batch.min(n - done);
+            let xb = Mat::from_fn(k, d, |i, j| x.get(done + i, j));
+            x_cur.append_rows(&xb);
+            let (_, ta) = common::timed(|| {
+                s_inc.append(
+                    &mut plan,
+                    &x_cur,
+                    &kernel,
+                    &xb,
+                    m_v,
+                    NeighborSelection::CorrelationCoverTree,
+                    1e-10,
+                )
+            });
+            t_append += ta;
+            // What a non-incremental server pays per arrival: a full
+            // numeric re-assembly over the grown plan.
+            let (sb, tb) = common::timed(|| {
+                VifStructure::from_plan(&x_cur, &kernel, &plan, nugget, 1e-10, 1)
+            });
+            t_rebuild += tb;
+            s_rebuilt = Some(sb);
+            done += k;
+            batches += 1;
+        }
+        let app_diff = structures_max_abs_diff(&s_inc, s_rebuilt.as_ref().unwrap());
+        assert!(app_diff <= 1e-12, "appended structure diverged: {app_diff:.3e}");
+        let pts_append = n_app as f64 / t_append.max(1e-9);
+        let pts_rebuild = n_app as f64 / t_rebuild.max(1e-9);
+        let sp_app = t_rebuild / t_append.max(1e-9);
+        println!(
+            "append ingest ({n_app} pts, {batches} batches of <={batch}): incremental {t_append:.3}s ({pts_append:.0} pts/s)  rebuild {t_rebuild:.3}s ({pts_rebuild:.0} pts/s)  speedup {sp_app:.2}x  (base plan {:.3}s, struct diff {app_diff:.2e})",
+            t_plan,
+        );
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath stage 13: streaming append vs assemble-from-scratch\",\n",
+                "  \"config\": {{\"n\": {n}, \"d\": {d}, \"m\": {m}, \"m_v\": {m_v}, \"n_base\": {nbase}, \"n_appended\": {na}, \"batch\": {bs}, \"batches\": {nbatch}}},\n",
+                "  \"base_plan_build_s\": {tp:.6},\n",
+                "  \"append_s_total\": {tap:.6},\n",
+                "  \"rebuild_s_total\": {trb:.6},\n",
+                "  \"append_points_per_sec\": {pa:.1},\n",
+                "  \"rebuild_points_per_sec\": {pr:.1},\n",
+                "  \"speedup\": {sp:.3},\n",
+                "  \"final_structure_max_abs_diff\": {ad:.3e}\n",
+                "}}\n"
+            ),
+            n = n,
+            d = d,
+            m = m,
+            m_v = m_v,
+            nbase = n_base,
+            na = n_app,
+            bs = batch,
+            nbatch = batches,
+            tp = t_plan,
+            tap = t_append,
+            trb = t_rebuild,
+            pa = pts_append,
+            pr = pts_rebuild,
+            sp = sp_app,
+            ad = app_diff,
+        );
+        let path = std::env::var("VIFGP_BENCH_APPEND_JSON")
+            .unwrap_or_else(|_| "BENCH_append.json".into());
         match std::fs::write(&path, json) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => println!("could not write {path}: {e}"),

@@ -30,6 +30,18 @@
 //! length-`m` dot-product corrections — no scalar per-pair `rho` calls
 //! remain in the search hot loop. The default `dist_batch` is the scalar
 //! loop, so closure metrics keep working unchanged.
+//!
+//! # External queries
+//!
+//! The ordered-Vecchia pruning rule generalizes to points outside the
+//! tree: a query with index `i ≥ n` (any index at least the member
+//! count) prunes nothing by ordering and returns the k nearest tree
+//! members, provided the metric answers `dist(i, j)` for the external
+//! index. Both prediction (`vif::predict`, conditioning test points on
+//! training points) and streaming appends (`VifStructure::append`,
+//! conditioning each appended point on the pre-existing points only)
+//! query a tree built over the base set this way — appended rows never
+//! need the tree to be rebuilt or mutated.
 
 /// Metric over point indices `0..n`, bounded by 1, with an optional
 /// batched evaluation path (see the module docs).

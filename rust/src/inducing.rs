@@ -5,6 +5,12 @@
 //! optional Lloyd refinement, and support warm starting from the centers
 //! of a previous optimization iteration (the paper re-determines inducing
 //! points at power-of-two optimization iterations).
+//!
+//! The same warm start serves the streaming-append lifecycle: when a
+//! model's appended fraction crosses the compaction threshold
+//! (`FitModel::compact`), the full re-selection restarts Lloyd from the
+//! inducing set of the structure being compacted, so the re-selected
+//! centers track the previous ones instead of re-seeding from scratch.
 
 use crate::linalg::Mat;
 use crate::rng::Rng;

@@ -17,6 +17,22 @@
 //!   artifacts through PJRT (`runtime`) with a native fallback.
 //!
 //! Quick start: see `examples/quickstart.rs`.
+//!
+//! ## Environment variables
+//!
+//! All runtime knobs live under the `VIFGP_` prefix. This table is the
+//! single reference; each entry links to the module that parses it.
+//!
+//! | Variable | Consumed by | Meaning |
+//! |---|---|---|
+//! | `VIFGP_THREADS` | [`coordinator`] | Worker-pool size for level-scheduled sweeps and panel loops. Default: detected parallelism. Set `1` to force sequential execution (CI runs both legs). |
+//! | `VIFGP_SCHED_THRESHOLD` | [`vecchia`] | Row count below which level-scheduled sweeps stay sequential. Must parse as a non-negative integer — a malformed value panics loudly rather than silently falling back to the default. |
+//! | `VIFGP_ARTIFACTS` | [`runtime`] | Directory of AOT-compiled HLO artifacts for the PJRT engine. Unset → native fallback. |
+//! | `VIFGP_BENCH_SCALE` | benches (`benches/common.rs`) | Multiplier on bench workload sizes (default `1.0`; CI smoke uses `0.05`). |
+//! | `VIFGP_BENCH_JSON` | `benches/perf_hotpath.rs` stage 10 | Output path for `BENCH_assembly.json`. |
+//! | `VIFGP_BENCH_REFRESH_JSON` | `benches/perf_hotpath.rs` stage 11 | Output path for `BENCH_refresh.json`. |
+//! | `VIFGP_BENCH_PREDICT_JSON` | `benches/perf_hotpath.rs` stage 12 | Output path for `BENCH_predict.json`. |
+//! | `VIFGP_BENCH_APPEND_JSON` | `benches/perf_hotpath.rs` stage 13 | Output path for `BENCH_append.json` (streaming-append ingestion throughput). |
 
 pub mod baselines;
 pub mod coordinator;

@@ -323,6 +323,46 @@ impl Mat {
         self.syr2k_sub_panel(&a.data, &b.data, a.cols);
     }
 
+    /// Append the rows of `other` below `self` — one contiguous copy in
+    /// row-major storage. Appending to an empty `0×0` matrix adopts
+    /// `other`'s width (the `m = 0` structures keep `0×0` placeholders).
+    /// This is the growth primitive of the streaming-append path: the
+    /// `Σ_mn`/`V`/`E` panels and the Woodbury side blocks all grow by
+    /// whole rows.
+    pub fn append_rows(&mut self, other: &Mat) {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = other.cols;
+        }
+        assert_eq!(self.cols, other.cols, "append_rows column mismatch");
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
+    /// `self += Σ_t w[t] · v_t v_tᵀ` for a row-major panel `v` whose
+    /// rows `v_t` have length `k` (weighted SYRK in the `gram_t`
+    /// orientation: `self` is `k×k`). The lower triangle is computed
+    /// once per pair and written to both halves, so `self` must be
+    /// square and symmetric on entry. This is the blocked Woodbury
+    /// rank-k update `M += ΔΣᵀ D⁻¹ ΔΣ` of the streaming-append path
+    /// (weights `w = 1/D` over the appended rows).
+    pub fn syrk_add_panel_weighted(&mut self, v: &[f64], k: usize, w: &[f64]) {
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(self.rows, k);
+        debug_assert_eq!(v.len(), w.len() * k);
+        for i in 0..k {
+            for j in 0..=i {
+                let mut s = 0.0;
+                for (t, &wt) in w.iter().enumerate() {
+                    s += wt * v[t * k + i] * v[t * k + j];
+                }
+                self.data[i * k + j] += s;
+                if j != i {
+                    self.data[j * k + i] += s;
+                }
+            }
+        }
+    }
+
     /// Elementwise in-place add.
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -456,6 +496,38 @@ mod tests {
             want2.sub_assign(&a.matmul_nt(&b));
             want2.sub_assign(&b.matmul_nt(&a));
             assert!(got2.max_abs_diff(&want2) < 1e-13, "syr2k n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn append_rows_matches_from_fn() {
+        let top = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let bot = Mat::from_fn(2, 4, |i, j| ((i + 3) * 4 + j) as f64);
+        let mut m = top.clone();
+        m.append_rows(&bot);
+        let want = Mat::from_fn(5, 4, |i, j| (i * 4 + j) as f64);
+        assert_eq!(m.data(), want.data());
+        assert_eq!((m.rows(), m.cols()), (5, 4));
+        // appending to an empty placeholder adopts the width
+        let mut e = Mat::zeros(0, 0);
+        e.append_rows(&bot);
+        assert_eq!((e.rows(), e.cols()), (2, 4));
+        assert_eq!(e.data(), bot.data());
+    }
+
+    #[test]
+    fn syrk_add_panel_weighted_matches_dense() {
+        for (t, k) in [(1usize, 3usize), (5, 4), (0, 2), (7, 1)] {
+            let v = Mat::from_fn(t, k, |i, j| ((i * 5 + j) as f64 * 0.31).sin());
+            let w: Vec<f64> = (0..t).map(|i| 0.5 + i as f64 * 0.1).collect();
+            let base = Mat::from_fn(k, k, |i, j| ((i + j) as f64 * 0.2).cos());
+            let mut got = base.clone();
+            got.syrk_add_panel_weighted(v.data(), k, &w);
+            let mut vw = v.clone();
+            vw.scale_rows(&w);
+            let mut want = base.clone();
+            want.add_assign(&vw.matmul_tn(&v));
+            assert!(got.max_abs_diff(&want) < 1e-13, "weighted syrk t={t} k={k}");
         }
     }
 

@@ -178,15 +178,18 @@ const MIN_JOB_ROWS: usize = 256;
 /// Column-block width for the `_mat` sweep tiles (level × column-block).
 const MAT_COL_BLOCK: usize = 32;
 
-/// The process-wide scheduling threshold: `VIFGP_SCHED_THRESHOLD` if set
-/// and parseable, else [`DEFAULT_SCHED_MIN_ROWS`]. Read once.
+/// The process-wide scheduling threshold: `VIFGP_SCHED_THRESHOLD` if
+/// set, else [`DEFAULT_SCHED_MIN_ROWS`]. Read once. A set-but-unparseable
+/// value panics with the same message style as the CLI's
+/// `--sched-threshold` flag instead of silently falling back to the
+/// default (see the environment-variable table in the crate root docs).
 pub fn sched_min_rows_default() -> usize {
     static CACHE: OnceLock<usize> = OnceLock::new();
-    *CACHE.get_or_init(|| {
-        std::env::var("VIFGP_SCHED_THRESHOLD")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or(DEFAULT_SCHED_MIN_ROWS)
+    *CACHE.get_or_init(|| match std::env::var("VIFGP_SCHED_THRESHOLD") {
+        Ok(s) => s.parse::<usize>().unwrap_or_else(|_| {
+            panic!("VIFGP_SCHED_THRESHOLD expects a non-negative integer, got `{s}`")
+        }),
+        Err(_) => DEFAULT_SCHED_MIN_ROWS,
     })
 }
 
@@ -234,6 +237,47 @@ impl LevelSchedule {
             levels[l as usize].push(i as u32);
         }
         LevelSchedule { levels }
+    }
+
+    /// Extend the schedule with appended rows `base..base+k` whose
+    /// conditioning sets lie entirely in `0..base` or in earlier appended
+    /// rows — the streaming-append path. Each new row is placed at
+    /// `level(i) = 1 + max_{j ∈ N(i)} level(j)` (0 for empty sets), which
+    /// is exactly where [`from_neighbors`](Self::from_neighbors) would
+    /// put it on the extended graph; because appended indices exceed all
+    /// existing ones, pushing them at the end keeps every level's
+    /// ascending row order, so the extended schedule is **identical**
+    /// (not just equivalent) to a from-scratch one — and with it the
+    /// parallel sweeps stay bit-identical across pool sizes.
+    pub fn extend_leaves(&mut self, new_neighbors: &[Vec<u32>], base: usize) {
+        let mut level = vec![0u32; base];
+        for (l, rows) in self.levels.iter().enumerate() {
+            for &i in rows {
+                level[i as usize] = l as u32;
+            }
+        }
+        debug_assert_eq!(
+            self.levels.iter().map(Vec::len).sum::<usize>(),
+            base,
+            "schedule does not cover 0..base"
+        );
+        level.reserve(new_neighbors.len());
+        for (t, nb) in new_neighbors.iter().enumerate() {
+            let i = base + t;
+            let mut l = 0u32;
+            for &j in nb {
+                assert!(
+                    (j as usize) < i,
+                    "neighbor {j} of appended row {i} is not an earlier row"
+                );
+                l = l.max(level[j as usize] + 1);
+            }
+            if self.levels.len() <= l as usize {
+                self.levels.resize(l as usize + 1, Vec::new());
+            }
+            self.levels[l as usize].push(i as u32);
+            level.push(l);
+        }
     }
 
     /// Number of levels (sweep depth; 0 only for an empty factor).
@@ -309,6 +353,60 @@ impl TransposedIndex {
             }
         }
         TransposedIndex { ptr, row, pos, coef }
+    }
+
+    /// Grow the CSC pattern in place for appended rows `base..base+k`
+    /// (the streaming-append path). Because every appended owner index
+    /// exceeds every existing one, each existing column's new entries
+    /// belong strictly *after* its current ones, so the result is
+    /// **identical** to [`pattern`](Self::pattern) on the extended graph
+    /// — including the ascending-owner order that fixes the gather
+    /// accumulation order of the `Bᵀ` kernels. Existing coefficients are
+    /// preserved; appended entries get zero coefficients until the next
+    /// [`refresh_coef`](Self::refresh_coef).
+    pub fn append_pattern(&mut self, new_neighbors: &[Vec<u32>], base: usize) {
+        let k_new = new_neighbors.len();
+        let n = base + k_new;
+        assert_eq!(self.ptr.len(), base + 1, "pattern built for a different n");
+        let mut add = vec![0usize; n];
+        for nb in new_neighbors {
+            for &j in nb {
+                add[j as usize] += 1;
+            }
+        }
+        let mut ptr = vec![0usize; n + 1];
+        for j in 0..n {
+            let old = if j < base { self.ptr[j + 1] - self.ptr[j] } else { 0 };
+            ptr[j + 1] = ptr[j] + old + add[j];
+        }
+        let nnz = ptr[n];
+        let mut row = vec![0u32; nnz];
+        let mut pos = vec![0u32; nnz];
+        let mut coef = vec![0.0f64; nnz];
+        let mut cursor = vec![0usize; n];
+        for j in 0..base {
+            let (s, e) = (self.ptr[j], self.ptr[j + 1]);
+            let d = ptr[j];
+            row[d..d + (e - s)].copy_from_slice(&self.row[s..e]);
+            pos[d..d + (e - s)].copy_from_slice(&self.pos[s..e]);
+            coef[d..d + (e - s)].copy_from_slice(&self.coef[s..e]);
+            cursor[j] = d + (e - s);
+        }
+        for (j, c) in cursor.iter_mut().enumerate().take(n).skip(base) {
+            *c = ptr[j];
+        }
+        // Visiting appended owners in ascending i keeps each column's
+        // entries ascending, exactly as `pattern` would on the full graph.
+        for (t, nb) in new_neighbors.iter().enumerate() {
+            let i = (base + t) as u32;
+            for (k, &j) in nb.iter().enumerate() {
+                let c = cursor[j as usize];
+                row[c] = i;
+                pos[c] = k as u32;
+                cursor[j as usize] += 1;
+            }
+        }
+        *self = TransposedIndex { ptr, row, pos, coef };
     }
 
     /// Rewrite only the coefficients from updated rows `a`, leaving the
@@ -508,6 +606,69 @@ impl ResidualFactor {
             d.push(r.d);
         }
         (a, d)
+    }
+
+    /// [`compute_rows`](Self::compute_rows) for appended rows: row `t` of
+    /// `new_neighbors` describes global row `base + t`, so the oracle is
+    /// queried at the appended indices while only the new rows' math runs.
+    /// Per-row arithmetic is `compute_row`, the same function the build
+    /// and refresh paths use — an appended row is bit-identical to the
+    /// row a from-scratch build would produce.
+    pub fn compute_rows_at(
+        oracle: &dyn ResidualCov,
+        new_neighbors: &[Vec<u32>],
+        base: usize,
+        nugget: f64,
+        jitter: f64,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let k = new_neighbors.len();
+        let rows = parallel_map(k, |t| {
+            compute_row(oracle, base + t, &new_neighbors[t], nugget, jitter)
+        });
+        let mut a = Vec::with_capacity(k);
+        let mut d = Vec::with_capacity(k);
+        for r in rows {
+            a.push(r.a);
+            d.push(r.d);
+        }
+        (a, d)
+    }
+
+    /// Append rows to the factor in place — the vecchia layer of the
+    /// streaming-append path. The appended rows' conditioning sets must
+    /// lie strictly below them (`N(base+t) ⊆ {0..base+t-1}`; the vif
+    /// layer restricts them further to pre-existing points). The level
+    /// schedule grows through [`LevelSchedule::extend_leaves`], the CSC
+    /// pattern through [`TransposedIndex::append_pattern`], and the
+    /// coefficients are rewritten through the same
+    /// [`TransposedIndex::refresh_coef`] the θ-refresh path uses — the
+    /// resulting factor is field-for-field identical to
+    /// [`from_parts`](Self::from_parts) on the extended graph.
+    pub fn append_rows(
+        &mut self,
+        new_neighbors: Vec<Vec<u32>>,
+        a_new: Vec<Vec<f64>>,
+        d_new: Vec<f64>,
+    ) {
+        let base = self.n();
+        let k = new_neighbors.len();
+        assert_eq!(a_new.len(), k, "appended coefficient rows / neighbor lists mismatch");
+        assert_eq!(d_new.len(), k, "appended diagonal / neighbor lists mismatch");
+        for (t, (nb, ai)) in new_neighbors.iter().zip(&a_new).enumerate() {
+            assert_eq!(
+                ai.len(),
+                nb.len(),
+                "appended row {}: coefficients / neighbors mismatch",
+                base + t
+            );
+        }
+        self.schedule.extend_leaves(&new_neighbors, base);
+        self.bt_index.append_pattern(&new_neighbors, base);
+        self.neighbors.extend(new_neighbors);
+        self.a.extend(a_new);
+        self.inv_d.extend(d_new.iter().map(|di| 1.0 / di));
+        self.d.extend(d_new);
+        self.bt_index.refresh_coef(&self.a);
     }
 
     /// Assemble a factor from explicit parts, computing the level
@@ -1366,6 +1527,73 @@ mod tests {
         for (a, b) in f.inv_d().iter().zip(fresh.inv_d()) {
             assert!((a - b).abs() < 1e-14, "1/D cache diverged");
         }
+    }
+
+    #[test]
+    fn extend_leaves_matches_from_neighbors() {
+        // Mixed graph: some chains, some empty sets, then appended leaf
+        // rows conditioning on arbitrary earlier rows (including other
+        // appended rows). The extended schedule must be *identical* to a
+        // from-scratch one on the full graph.
+        let mut nb: Vec<Vec<u32>> = vec![vec![], vec![0], vec![], vec![1, 2], vec![0, 3]];
+        let base = nb.len();
+        let appended: Vec<Vec<u32>> = vec![vec![3], vec![], vec![0, 4], vec![5, 6]];
+        let mut sched = LevelSchedule::from_neighbors(&nb);
+        sched.extend_leaves(&appended, base);
+        nb.extend(appended);
+        let fresh = LevelSchedule::from_neighbors(&nb);
+        assert_eq!(sched.levels, fresh.levels);
+    }
+
+    #[test]
+    fn append_pattern_matches_pattern() {
+        let mut nb: Vec<Vec<u32>> = vec![vec![], vec![0], vec![0, 1], vec![1]];
+        let base = nb.len();
+        let appended: Vec<Vec<u32>> = vec![vec![0, 3], vec![], vec![1, 4]];
+        let mut bt = TransposedIndex::pattern(&nb);
+        bt.append_pattern(&appended, base);
+        nb.extend(appended);
+        let fresh = TransposedIndex::pattern(&nb);
+        assert_eq!(bt.ptr, fresh.ptr);
+        assert_eq!(bt.row, fresh.row);
+        assert_eq!(bt.pos, fresh.pos);
+        assert_eq!(bt.coef, fresh.coef); // both all-zero here
+    }
+
+    #[test]
+    fn append_rows_matches_from_parts() {
+        // Split a factor's rows into a prefix build plus two appended
+        // batches and require field-for-field identity with a
+        // from-scratch build on the full graph — including the schedule,
+        // the transposed index, and the sweep outputs.
+        let n = 14;
+        let oracle = DenseOracle { cov: toy_cov(n) };
+        let nb: Vec<Vec<u32>> = (0..n)
+            .map(|i| (i.saturating_sub(3)..i).map(|j| j as u32).collect())
+            .collect();
+        let full = ResidualFactor::build(&oracle, nb.clone(), 0.05, 0.0);
+        let base = 9;
+        let mut f = ResidualFactor::build(&oracle, nb[..base].to_vec(), 0.05, 0.0);
+        for (s, e) in [(base, 12), (12, n)] {
+            let batch = nb[s..e].to_vec();
+            let (a_new, d_new) =
+                ResidualFactor::compute_rows_at(&oracle, &batch, s, 0.05, 0.0);
+            f.append_rows(batch, a_new, d_new);
+        }
+        assert_eq!(f.n(), n);
+        assert_eq!(f.neighbors, full.neighbors);
+        assert_eq!(f.a, full.a, "appended A rows must be bit-identical");
+        assert_eq!(f.d, full.d, "appended D must be bit-identical");
+        assert_eq!(f.inv_d, full.inv_d);
+        assert_eq!(f.schedule.levels, full.schedule.levels);
+        assert_eq!(f.bt_index.ptr, full.bt_index.ptr);
+        assert_eq!(f.bt_index.row, full.bt_index.row);
+        assert_eq!(f.bt_index.pos, full.bt_index.pos);
+        assert_eq!(f.bt_index.coef, full.bt_index.coef);
+        let v: Vec<f64> = (0..n).map(|i| (i as f64 * 0.4).sin()).collect();
+        assert_eq!(f.mul_bt(&v), full.mul_bt(&v));
+        assert_eq!(f.apply_s(&v), full.apply_s(&v));
+        assert_eq!(f.apply_s_inv(&v), full.apply_s_inv(&v));
     }
 
     #[test]

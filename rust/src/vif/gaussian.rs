@@ -267,6 +267,10 @@ pub struct VifRegression {
     /// the fit driver moves it out for each optimization round).
     pub plan: Option<VifPlan>,
     pub fit_trace: Vec<f64>,
+    /// Rows ingested through [`Self::append_points`] since the last full
+    /// re-selection; drives the [`super::APPEND_COMPACT_FRACTION`]
+    /// compaction trigger.
+    appended_since_select: usize,
 }
 
 impl VifRegression {
@@ -281,6 +285,7 @@ impl VifRegression {
             structure: None,
             plan: None,
             fit_trace: vec![],
+            appended_since_select: 0,
         }
     }
 
@@ -306,6 +311,74 @@ impl VifRegression {
         ));
         self.inducing = plan.z.clone();
         self.plan = Some(plan);
+        self.appended_since_select = 0;
+    }
+
+    /// Incrementally ingest new observations at the current θ (the
+    /// streaming-append path). Validates the batch, extends `x`/`y`, and
+    /// runs the layered [`VifStructure::append`] update against the
+    /// frozen plan — equivalent to a from-scratch `assemble` over the
+    /// extended data to ≤1e-12 (new rows condition on their `m_v`
+    /// nearest *pre-existing* points only). Bumps the structure
+    /// generation, so cached [`predict::PredictPlan`]s are refused;
+    /// past an appended fraction of [`super::APPEND_COMPACT_FRACTION`]
+    /// the model [`compact`](Self::compact)s itself. An empty batch is a
+    /// bitwise no-op; errors leave the model untouched.
+    pub fn append_points(&mut self, x_new: &Mat, y_new: &[f64]) -> Result<(), String> {
+        if x_new.rows() == 0 && y_new.is_empty() {
+            return Ok(());
+        }
+        if x_new.rows() != y_new.len() {
+            return Err(format!(
+                "append_points: {} input rows but {} responses",
+                x_new.rows(),
+                y_new.len()
+            ));
+        }
+        if x_new.cols() != self.x.cols() {
+            return Err(format!(
+                "append_points: input dimension {} does not match training dimension {}",
+                x_new.cols(),
+                self.x.cols()
+            ));
+        }
+        if x_new.data().iter().any(|v| !v.is_finite()) {
+            return Err("append_points: non-finite coordinate in X_new".to_string());
+        }
+        if y_new.iter().any(|v| !v.is_finite()) {
+            return Err("append_points: non-finite response in y_new".to_string());
+        }
+        if self.structure.is_none() || self.plan.is_none() {
+            self.assemble();
+        }
+        self.x.append_rows(x_new);
+        self.y.extend_from_slice(y_new);
+        let plan = self.plan.as_mut().unwrap();
+        let s = self.structure.as_mut().unwrap();
+        s.append(
+            plan,
+            &self.x,
+            &self.params.kernel,
+            x_new,
+            self.config.num_neighbors,
+            self.config.selection,
+            self.config.jitter,
+        );
+        self.appended_since_select += x_new.rows();
+        if self.appended_since_select as f64
+            > super::APPEND_COMPACT_FRACTION * self.x.rows() as f64
+        {
+            self.compact();
+        }
+        Ok(())
+    }
+
+    /// Full re-selection over all current data at the current θ — the
+    /// compaction step bounding the leaf-conditioning drift of
+    /// [`Self::append_points`]. Inducing points warm-start from the
+    /// current set through Lloyd, and the append drift counter resets.
+    pub fn compact(&mut self) {
+        self.assemble();
     }
 
     /// Negative log-likelihood at the current parameters (assembles with
@@ -411,6 +484,14 @@ impl FitModel for VifRegression {
 
     fn record_trace(&mut self, trace: &[f64]) {
         self.fit_trace.extend_from_slice(trace);
+    }
+
+    fn append_points(&mut self, x_new: &Mat, y_new: &[f64]) -> Result<(), String> {
+        VifRegression::append_points(self, x_new, y_new)
+    }
+
+    fn compact(&mut self) {
+        VifRegression::compact(self);
     }
 }
 

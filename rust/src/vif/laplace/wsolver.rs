@@ -1,0 +1,328 @@
+//! Solver backends for all `(W + Σ_†⁻¹)`-type operations of the
+//! VIF-Laplace path: the dense Cholesky reference and the
+//! preconditioned-CG / SLQ machinery of §4, split out of the parent
+//! module so the model's append/refresh surface lives apart from the
+//! mode-finding internals.
+
+use crate::iterative::{
+    map_columns, pcg, pcg_batch, slq_logdet_opts, FitcPrecond, IterConfig, LinOp, PrecondType,
+    SlqRun, VifduPrecond,
+};
+use crate::kernels::ArdMatern;
+use crate::linalg::{dot, CholeskyFactor, Mat};
+use crate::rng::Rng;
+use crate::vif::VifStructure;
+
+/// Solver backend for all `(W + Σ_†⁻¹)`-type operations.
+#[derive(Clone, Debug)]
+pub enum SolveMode {
+    /// Dense reference (O(n³); validation and small-n comparators).
+    Cholesky,
+    /// Preconditioned-CG / SLQ / STE path (the paper's §4).
+    Iterative(IterConfig),
+}
+
+/// `(W + Σ_†⁻¹) v` operator (system 16).
+pub struct OpWPlusPrec<'a> {
+    pub s: &'a VifStructure,
+    pub w: &'a [f64],
+}
+impl<'a> LinOp for OpWPlusPrec<'a> {
+    fn n(&self) -> usize {
+        self.s.n()
+    }
+    fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = self.s.apply_sigma_dagger_inv(v);
+        for ((o, wi), vi) in out.iter_mut().zip(self.w).zip(v) {
+            *o += wi * vi;
+        }
+        out
+    }
+    fn apply_batch(&self, v: &Mat) -> Mat {
+        let mut out = self.s.apply_sigma_dagger_inv_batch(v);
+        for i in 0..out.rows() {
+            let wi = self.w[i];
+            for (o, vi) in out.row_mut(i).iter_mut().zip(v.row(i)) {
+                *o += wi * vi;
+            }
+        }
+        out
+    }
+}
+
+/// `(W⁻¹ + Σ_†) v` operator (system 17).
+pub struct OpWinvPlusCov<'a> {
+    pub s: &'a VifStructure,
+    pub w: &'a [f64],
+}
+impl<'a> LinOp for OpWinvPlusCov<'a> {
+    fn n(&self) -> usize {
+        self.s.n()
+    }
+    fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = self.s.apply_sigma_dagger(v);
+        for ((o, wi), vi) in out.iter_mut().zip(self.w).zip(v) {
+            *o += vi / wi;
+        }
+        out
+    }
+    fn apply_batch(&self, v: &Mat) -> Mat {
+        let mut out = self.s.apply_sigma_dagger_batch(v);
+        for i in 0..out.rows() {
+            let wi = self.w[i];
+            for (o, vi) in out.row_mut(i).iter_mut().zip(v.row(i)) {
+                *o += vi / wi;
+            }
+        }
+        out
+    }
+}
+
+/// Per-`W` solver state: rebuilt whenever `W` changes (each Newton step).
+///
+/// In iterative mode all `B`/`Bᵀ` sweeps — the VIF operator applies, the
+/// VIFDU preconditioner, and the batched `solve_batch` path — run on the
+/// residual factor's level-scheduled kernels (see the `vecchia` module
+/// docs), so Newton steps on large `n` parallelize deterministically.
+pub struct WSolver<'a> {
+    s: &'a VifStructure,
+    w: Vec<f64>,
+    mode: SolveMode,
+    /// Dense backend: `Σ_†` and Cholesky of `B_K = I + W½ Σ_† W½`.
+    /// `pub(super)`: the parent module's exact-trace gradient path reads
+    /// both pieces directly.
+    pub(super) dense: Option<(Mat, CholeskyFactor)>,
+    vifdu: Option<VifduPrecond<'a>>,
+    fitc: Option<FitcPrecond>,
+}
+
+impl<'a> WSolver<'a> {
+    pub fn new(
+        s: &'a VifStructure,
+        x: &Mat,
+        kernel: &ArdMatern,
+        w: Vec<f64>,
+        mode: &SolveMode,
+        sigma_dense_cache: Option<&Mat>,
+    ) -> Self {
+        match mode {
+            SolveMode::Cholesky => {
+                let sigma = match sigma_dense_cache {
+                    Some(m) => m.clone(),
+                    None => s.dense_sigma_dagger(),
+                };
+                let n = s.n();
+                let mut bk = Mat::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        bk.set(i, j, w[i].sqrt() * sigma.get(i, j) * w[j].sqrt());
+                    }
+                }
+                bk.add_diag(1.0);
+                let chol = CholeskyFactor::new_with_jitter(&bk, 1e-10)
+                    .expect("I + W½ΣW½ not PD");
+                WSolver {
+                    s,
+                    w,
+                    mode: mode.clone(),
+                    dense: Some((sigma, chol)),
+                    vifdu: None,
+                    fitc: None,
+                }
+            }
+            SolveMode::Iterative(cfg) => {
+                let (vifdu, fitc) = match cfg.precond {
+                    PrecondType::Vifdu => (Some(VifduPrecond::new(s, &w)), None),
+                    PrecondType::Fitc => (
+                        None,
+                        Some(FitcPrecond::new(x, kernel, cfg.fitc_k, &w, cfg.seed ^ 0x5eed)),
+                    ),
+                    PrecondType::None => (None, None),
+                };
+                WSolver { s, w, mode: mode.clone(), dense: None, vifdu, fitc }
+            }
+        }
+    }
+
+    pub fn w(&self) -> &[f64] {
+        &self.w
+    }
+
+    /// `(W + Σ_†⁻¹)⁻¹ v`.
+    pub fn solve(&self, v: &[f64]) -> Vec<f64> {
+        match &self.mode {
+            SolveMode::Cholesky => {
+                // (W+Σ⁻¹)⁻¹ = Σ − ΣW½ B_K⁻¹ W½Σ
+                let (sigma, chol) = self.dense.as_ref().unwrap();
+                let sv = sigma.matvec(v);
+                let ws: Vec<f64> = sv.iter().zip(&self.w).map(|(a, w)| a * w.sqrt()).collect();
+                let t = chol.solve(&ws);
+                let wt: Vec<f64> = t.iter().zip(&self.w).map(|(a, w)| a * w.sqrt()).collect();
+                let c = sigma.matvec(&wt);
+                sv.iter().zip(&c).map(|(a, b)| a - b).collect()
+            }
+            SolveMode::Iterative(cfg) => match cfg.precond {
+                PrecondType::Vifdu | PrecondType::None => {
+                    let op = OpWPlusPrec { s: self.s, w: &self.w };
+                    let res = match &self.vifdu {
+                        Some(p) => pcg(&op, p, v, cfg.cg_tol, cfg.max_cg, false),
+                        None => pcg(
+                            &op,
+                            &crate::iterative::IdentityPrecond(self.s.n()),
+                            v,
+                            cfg.cg_tol,
+                            cfg.max_cg,
+                            false,
+                        ),
+                    };
+                    res.x
+                }
+                PrecondType::Fitc => {
+                    // (W+Σ⁻¹)⁻¹v = W⁻¹ (W⁻¹+Σ)⁻¹ Σ v
+                    let op = OpWinvPlusCov { s: self.s, w: &self.w };
+                    let rhs = self.s.apply_sigma_dagger(v);
+                    let res = pcg(
+                        &op,
+                        self.fitc.as_ref().unwrap(),
+                        &rhs,
+                        cfg.cg_tol,
+                        cfg.max_cg,
+                        false,
+                    );
+                    res.x.iter().zip(&self.w).map(|(a, w)| a / w).collect()
+                }
+            },
+        }
+    }
+
+    /// `(W + Σ_†⁻¹)⁻¹ V` for a column block of right-hand sides (batched
+    /// preconditioned CG; dense path maps columns).
+    pub fn solve_batch(&self, v: &Mat) -> Mat {
+        match &self.mode {
+            SolveMode::Cholesky => map_columns(v, |col| self.solve(col)),
+            SolveMode::Iterative(cfg) => match cfg.precond {
+                PrecondType::Vifdu | PrecondType::None => {
+                    let op = OpWPlusPrec { s: self.s, w: &self.w };
+                    let res = match &self.vifdu {
+                        Some(p) => pcg_batch(&op, p, v, cfg.cg_tol, cfg.max_cg, false),
+                        None => pcg_batch(
+                            &op,
+                            &crate::iterative::IdentityPrecond(self.s.n()),
+                            v,
+                            cfg.cg_tol,
+                            cfg.max_cg,
+                            false,
+                        ),
+                    };
+                    res.x
+                }
+                PrecondType::Fitc => {
+                    // (W+Σ⁻¹)⁻¹V = W⁻¹ (W⁻¹+Σ)⁻¹ Σ V
+                    let op = OpWinvPlusCov { s: self.s, w: &self.w };
+                    let rhs = self.s.apply_sigma_dagger_batch(v);
+                    let res = pcg_batch(
+                        &op,
+                        self.fitc.as_ref().unwrap(),
+                        &rhs,
+                        cfg.cg_tol,
+                        cfg.max_cg,
+                        false,
+                    );
+                    let mut x = res.x;
+                    for i in 0..x.rows() {
+                        let wi = self.w[i];
+                        for xi in x.row_mut(i) {
+                            *xi /= wi;
+                        }
+                    }
+                    x
+                }
+            },
+        }
+    }
+
+    /// `log det(Σ_† W + I)` plus retained probes for gradient STE.
+    /// `probes_system` marks which system the probes solve.
+    pub fn logdet_and_probes(&self, rng: &mut Rng) -> (f64, Option<(SlqRun, PrecondType)>) {
+        match &self.mode {
+            SolveMode::Cholesky => {
+                let (_, chol) = self.dense.as_ref().unwrap();
+                (chol.logdet(), None)
+            }
+            SolveMode::Iterative(cfg) => match cfg.precond {
+                PrecondType::Vifdu | PrecondType::None => {
+                    // (18): log det(Σ_†W+I) = log det Σ_† + log det(W+Σ_†⁻¹)
+                    let op = OpWPlusPrec { s: self.s, w: &self.w };
+                    let opts = cfg.slq_options();
+                    let run = match &self.vifdu {
+                        Some(p) => {
+                            slq_logdet_opts(&op, p, cfg.ell, rng, cfg.cg_tol, cfg.max_cg, &opts)
+                        }
+                        None => slq_logdet_opts(
+                            &op,
+                            &crate::iterative::IdentityPrecond(self.s.n()),
+                            cfg.ell,
+                            rng,
+                            cfg.cg_tol,
+                            cfg.max_cg,
+                            &opts,
+                        ),
+                    };
+                    (
+                        self.s.logdet() + run.logdet,
+                        Some((run, PrecondType::Vifdu)),
+                    )
+                }
+                PrecondType::Fitc => {
+                    // (19): log det(Σ_†W+I) = log det W + log det(W⁻¹+Σ_†)
+                    let op = OpWinvPlusCov { s: self.s, w: &self.w };
+                    let run = slq_logdet_opts(
+                        &op,
+                        self.fitc.as_ref().unwrap(),
+                        cfg.ell,
+                        rng,
+                        cfg.cg_tol,
+                        cfg.max_cg,
+                        &cfg.slq_options(),
+                    );
+                    let ld_w: f64 = self.w.iter().map(|w| w.ln()).sum();
+                    (ld_w + run.logdet, Some((run, PrecondType::Fitc)))
+                }
+            },
+        }
+    }
+
+    /// `diag((W + Σ_†⁻¹)⁻¹)` — exact (dense) or probe-based estimate.
+    pub fn diag_inv(&self, probes: Option<&(SlqRun, PrecondType)>) -> Vec<f64> {
+        match &self.mode {
+            SolveMode::Cholesky => {
+                let (sigma, chol) = self.dense.as_ref().unwrap();
+                // diag(Σ − ΣW½ B_K⁻¹ W½Σ)
+                let n = self.s.n();
+                let mut out = vec![0.0; n];
+                for j in 0..n {
+                    let col: Vec<f64> = (0..n)
+                        .map(|i| sigma.get(i, j) * self.w[i].sqrt())
+                        .collect();
+                    let t = chol.solve(&col);
+                    out[j] = sigma.get(j, j) - dot(&col, &t);
+                }
+                out
+            }
+            SolveMode::Iterative(_) => {
+                let (run, system) = probes.expect("iterative diag needs probes");
+                let raw = crate::iterative::slq::diag_inv_estimate(&run.probes);
+                match system {
+                    PrecondType::Vifdu | PrecondType::None => raw,
+                    PrecondType::Fitc => {
+                        // diag((W+Σ⁻¹)⁻¹) = 1/W − (1/W²)·diag((W⁻¹+Σ)⁻¹)
+                        raw.iter()
+                            .zip(&self.w)
+                            .map(|(d, w)| 1.0 / w - d / (w * w))
+                            .collect()
+                    }
+                }
+            }
+        }
+    }
+}

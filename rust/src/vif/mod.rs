@@ -52,12 +52,47 @@
 //! coordinate panels, `B_poᵀ` scatter pattern) plus a batched numeric
 //! pass — which both the Gaussian and the Laplace `predict` entry
 //! points run through.
+//!
+//! # Structure lifecycle (select → plan → refresh → append → compact)
+//!
+//! Over a model's life the pieces above compose into one cycle:
+//!
+//! 1. **select** — [`select_structure`] picks inducing points `Z`
+//!    (kMeans++/Lloyd in λ-scaled space) and conditioning sets `N(i)`.
+//! 2. **plan** — [`VifPlan::build`] freezes those choices symbolically;
+//!    [`VifStructure::from_plan`] runs the one numeric assembly of the
+//!    round.
+//! 3. **refresh** — every optimizer evaluation rewrites the θ-dependent
+//!    numbers in place via [`VifStructure::refresh`]; the plan and the
+//!    structure's *generation* are untouched.
+//! 4. **append** — [`VifStructure::append`] (driven by the models'
+//!    `append_points`) ingests new observations incrementally: new
+//!    low-rank columns ([`LowRank::append_cols`]), leaf conditioning
+//!    sets among pre-existing points only, new Vecchia rows
+//!    (`ResidualFactor::append_rows`), extended plan pieces
+//!    ([`VifPlan::append`]), and a blocked rank-k Woodbury-core update.
+//!    Equivalent to a from-scratch rebuild at the same θ (≤1e-12,
+//!    pinned by `tests/append.rs`), and it **bumps the structure
+//!    generation**, invalidating every cached
+//!    [`predict::PredictPlan`] exactly as a refit does.
+//! 5. **compact** — leaf-only conditioning accumulates approximation
+//!    drift (appended points never enter earlier rows' conditioning
+//!    sets), so past an appended-fraction threshold the models'
+//!    `compact()` re-runs a full selection over all data — inducing
+//!    points warm-started through Lloyd (see `inducing`) — producing a
+//!    fresh plan, structure, and generation.
+//!
+//! Serving-side, [`predict::PredictPlan`] records the generation of the
+//! structure it was built against and the numeric pass refuses a stale
+//! plan (generation mismatch ⇒ panic with a rebuild hint); the softer
+//! θ/Z-keyed panel-cache fallback stays observable through
+//! [`predict::lr_panel_cache_misses`].
 
 pub mod gaussian;
 pub mod laplace;
 pub mod predict;
 
-use crate::covertree::Metric;
+use crate::covertree::{CoverTree, Metric, QueryScratch};
 use crate::inducing;
 use crate::kernels::{ArdMatern, Smoothness};
 use crate::linalg::{dot, norm2_sq, CholeskyFactor, Mat};
@@ -65,6 +100,7 @@ use crate::rng::Rng;
 use crate::vecchia::neighbors::{self, NeighborSelection};
 use crate::vecchia::{LevelSchedule, ResidualCov, ResidualFactor, TransposedIndex};
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Configuration of a VIF approximation.
 #[derive(Clone, Debug)]
@@ -157,6 +193,29 @@ impl LowRank {
         self.sig_m = sig_m;
         crate::runtime::cross_cov_panel_into(x, &self.z, kernel, &mut self.sigma_nm);
         Self::fill_vt_et(&self.chol_m, &self.sigma_nm, &mut self.vt, &mut self.et);
+    }
+
+    /// Grow the panels by columns for appended inputs — the low-rank
+    /// layer of the streaming-append path. `Z`, `Σ_m`, and its Cholesky
+    /// depend only on the inducing set and stay frozen; the update
+    /// evaluates one `K(X_new, Z)` cross-covariance panel plus the
+    /// matching `V`/`E` rows (the same per-row `fill_vt_et` math as
+    /// [`build`](Self::build)) and appends them. Existing rows are
+    /// untouched, so the extended block matches a from-scratch build
+    /// over the extended inputs row for row.
+    pub fn append_cols(&mut self, x_new: &Mat, kernel: &ArdMatern) {
+        let k_new = x_new.rows();
+        if k_new == 0 {
+            return;
+        }
+        let m = self.m();
+        let panel = crate::runtime::cross_cov_panel(x_new, &self.z, kernel);
+        let mut vt_new = Mat::zeros(k_new, m);
+        let mut et_new = Mat::zeros(k_new, m);
+        Self::fill_vt_et(&self.chol_m, &panel, &mut vt_new, &mut et_new);
+        self.sigma_nm.append_rows(&panel);
+        self.vt.append_rows(&vt_new);
+        self.et.append_rows(&et_new);
     }
 
     /// Fill the `V = (L_m⁻¹Σ_mn)ᵀ` and `E = (Σ_m⁻¹Σ_mn)ᵀ` rows from the
@@ -293,6 +352,22 @@ impl NeighborPanels {
         NeighborPanels { off, data, dim: d }
     }
 
+    /// Grow the panels for appended rows (the streaming-append path):
+    /// existing rows' blocks are untouched and the new blocks land at
+    /// the end, so the result is identical to re-gathering over the
+    /// extended graph.
+    pub fn append(&mut self, x: &Mat, new_neighbors: &[Vec<u32>]) {
+        debug_assert_eq!(self.dim, x.cols());
+        let mut count = *self.off.last().expect("panels always cover row 0");
+        for nb in new_neighbors {
+            for &j in nb {
+                self.data.extend_from_slice(x.row(j as usize));
+            }
+            count += nb.len();
+            self.off.push(count);
+        }
+    }
+
     /// The gathered panel for row `i` (`|N(i)| × dim`, row-major).
     pub fn row_panel(&self, i: usize) -> &[f64] {
         &self.data[self.off[i] * self.dim..self.off[i + 1] * self.dim]
@@ -332,6 +407,29 @@ impl VifPlan {
         let bt_index = TransposedIndex::pattern(&neighbors);
         let x_panels = NeighborPanels::gather(x, &neighbors);
         VifPlan { neighbors, z, schedule, bt_index, x_panels }
+    }
+
+    /// Extend a frozen plan for appended points — the symbolic layer of
+    /// the streaming-append path. The existing graph, schedule, pattern,
+    /// and panels are untouched; the appended rows' conditioning sets
+    /// (selected among pre-existing points by [`VifStructure::append`])
+    /// grow each piece through its incremental primitive
+    /// ([`LevelSchedule::extend_leaves`],
+    /// [`TransposedIndex::append_pattern`], [`NeighborPanels::append`]),
+    /// each of which reproduces its from-scratch counterpart on the
+    /// extended graph exactly. `x_full` must already contain the
+    /// appended rows.
+    pub fn append(&mut self, x_full: &Mat, new_neighbors: Vec<Vec<u32>>) {
+        let base = self.n();
+        assert_eq!(
+            x_full.rows(),
+            base + new_neighbors.len(),
+            "x_full must contain exactly the appended rows"
+        );
+        self.schedule.extend_leaves(&new_neighbors, base);
+        self.bt_index.append_pattern(&new_neighbors, base);
+        self.x_panels.append(x_full, &new_neighbors);
+        self.neighbors.extend(new_neighbors);
     }
 
     /// Number of data points the plan covers.
@@ -702,6 +800,16 @@ impl Metric for CorrelationMetric<'_> {
     }
 }
 
+/// Process-wide monotone source of structure generations. Starts at 1 so
+/// generation 0 stays free as the "unchecked" sentinel of externally
+/// built prediction plans (`predict::PredictPlan::from_neighbor_sets`).
+static STRUCTURE_GENERATION: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh, process-unique structure generation.
+fn next_generation() -> u64 {
+    STRUCTURE_GENERATION.fetch_add(1, Ordering::Relaxed)
+}
+
 /// The assembled VIF structure for one parameter vector θ.
 pub struct VifStructure {
     /// Low-rank part (None when m = 0 → pure Vecchia).
@@ -724,6 +832,14 @@ pub struct VifStructure {
     pub chol_mcal: Option<CholeskyFactor>,
     /// Error-variance nugget baked into the residual factor (0 = latent scale).
     pub nugget: f64,
+    /// Monotone structure generation: assigned fresh at assembly and
+    /// bumped by every [`append`](Self::append), so serving-side caches
+    /// (`predict::PredictPlan`) can detect that the point set they were
+    /// built against changed. A θ-only [`refresh`](Self::refresh) keeps
+    /// the generation — the conditioning sets a prediction plan froze
+    /// are still the plan's own business to invalidate on θ changes
+    /// (the keyed panel cache handles that softly).
+    pub generation: u64,
 }
 
 impl VifStructure {
@@ -821,7 +937,18 @@ impl VifStructure {
                 None,
             ),
         };
-        VifStructure { lr, resid, bsig, h, ssig, ss, mcal, chol_mcal, nugget }
+        VifStructure {
+            lr,
+            resid,
+            bsig,
+            h,
+            ssig,
+            ss,
+            mcal,
+            chol_mcal,
+            nugget,
+            generation: next_generation(),
+        }
     }
 
     /// θ-refresh — the numeric (factorize) half of the plan/refresh
@@ -876,6 +1003,148 @@ impl VifStructure {
             self.chol_mcal = Some(chol);
         }
         self.nugget = nugget;
+    }
+
+    /// Incrementally ingest appended points — the numeric heart of the
+    /// streaming-append path, layered bottom-up over the incremental
+    /// primitives of every subsystem:
+    ///
+    /// 1. [`LowRank::append_cols`] grows `Σ_mn`/`V`/`E` by panel
+    ///    evaluation of the new columns only (`Z`, `Σ_m`, `L_m` frozen);
+    /// 2. leaf conditioning sets for the new rows are searched among the
+    ///    **pre-existing** points only (cover-tree
+    ///    `knn_ordered_with` over the frozen members via
+    ///    [`CorrelationMetric`], brute-force panel sweeps otherwise);
+    /// 3. [`VifPlan::append`] extends the frozen symbolic plan;
+    /// 4. the new factor rows run through the same panelized oracle and
+    ///    per-row math as a build (`ResidualFactor::compute_rows_at` +
+    ///    `append_rows` — bit-identical rows, bit-identical `Bᵀ`
+    ///    pattern);
+    /// 5. the Woodbury side blocks grow by rows whose gather order
+    ///    matches the rebuilt sweeps bit for bit, and the `m×m` core
+    ///    takes one blocked weighted rank-k update
+    ///    (`Mat::syrk_add_panel_weighted`) per batch.
+    ///
+    /// The result is numerically equivalent (≤1e-12, pinned by
+    /// `tests/append.rs`) to a from-scratch [`from_plan`](Self::from_plan)
+    /// over the extended data — `B`/`D`/schedule/pattern and the
+    /// `BΣ_mnᵀ`/`H`/`SΣ_mnᵀ` blocks are exactly reproduced; `SS` and `M`
+    /// differ only by floating-point regrouping of the rank-k sum. The
+    /// structure generation is bumped, invalidating cached prediction
+    /// plans. Appending never revisits existing rows' conditioning sets;
+    /// the models' `compact()` bounds the drift.
+    #[allow(clippy::too_many_arguments)]
+    pub fn append(
+        &mut self,
+        plan: &mut VifPlan,
+        x_full: &Mat,
+        kernel: &ArdMatern,
+        x_new: &Mat,
+        m_v: usize,
+        selection: NeighborSelection,
+        jitter: f64,
+    ) {
+        let base = plan.n();
+        let k_new = x_new.rows();
+        assert_eq!(self.n(), base, "structure/plan size mismatch");
+        assert_eq!(
+            x_full.rows(),
+            base + k_new,
+            "x_full must already contain the appended rows"
+        );
+        if k_new == 0 {
+            return; // bitwise no-op; generation unchanged
+        }
+        // 1. Low-rank columns first: the correlation metric and the
+        // residual oracle below read `V` rows of the appended points.
+        if let Some(lr) = self.lr.as_mut() {
+            lr.append_cols(x_new, kernel);
+        }
+        // 2. Leaf conditioning sets among pre-existing points only.
+        let new_nb =
+            append_neighbor_sets(x_full, kernel, self.lr.as_ref(), base, m_v, selection);
+        // 3. Extend the frozen plan (graph, schedule, pattern, panels).
+        plan.append(x_full, new_nb.clone());
+        // 4. New factor rows through the panelized oracle (plan panels).
+        let (a_new, d_new) = {
+            let oracle = VifResidualOracle {
+                kernel,
+                x: x_full,
+                lr: self.lr.as_ref(),
+                grad_aux: None,
+                extra_params: 0, // gradients never flow through this path
+                x_panels: Some(&plan.x_panels),
+            };
+            ResidualFactor::compute_rows_at(&oracle, &new_nb, base, self.nugget, jitter)
+        };
+        self.resid.append_rows(new_nb, a_new, d_new);
+        // 5. Woodbury side blocks + blocked rank-k core update.
+        if self.lr.is_some() {
+            self.append_woodbury(base, k_new, jitter);
+        }
+        self.generation = next_generation();
+    }
+
+    /// Grow the Woodbury blocks for `k_new` appended rows. The row
+    /// updates replay exactly the gather sequences the rebuilt sweeps
+    /// would run — `ΔBΣ_mnᵀ` rows mirror `mul_b_mat`'s copy-then-subtract
+    /// order, and existing `SΣ_mnᵀ` rows gain their new owners' terms in
+    /// ascending owner order, matching `mul_bt_mat`'s per-column gather —
+    /// so `BΣ_mnᵀ`, `H`, and `SΣ_mnᵀ` stay bit-identical to a rebuild.
+    /// `SS` and `M` take the mathematically exact rank-k update
+    /// `Σ_{new i} (1/D_i)·(BΣ)_iᵀ(BΣ)_i` (a different summation grouping
+    /// than the rebuilt GEMM, hence ≤1e-12 rather than bitwise), and the
+    /// `m×m` core is re-factorized — O(m³) per batch, negligible next to
+    /// the per-batch panel work; a lazily updated factor past a fill
+    /// threshold is the documented upgrade path if m grows.
+    fn append_woodbury(&mut self, base: usize, k_new: usize, jitter: f64) {
+        let lr = self.lr.as_ref().expect("append_woodbury needs the low-rank part");
+        let m = lr.m();
+        // ΔBΣ_mnᵀ rows (same per-row arithmetic order as mul_b_mat).
+        let mut dbsig = Mat::zeros(k_new, m);
+        let mut buf = vec![0.0; m];
+        for t in 0..k_new {
+            let i = base + t;
+            buf.copy_from_slice(lr.sigma_nm.row(i));
+            for (kk, &j) in self.resid.neighbors[i].iter().enumerate() {
+                let a = self.resid.a[i][kk];
+                for (o, &v) in buf.iter_mut().zip(lr.sigma_nm.row(j as usize)) {
+                    *o -= a * v;
+                }
+            }
+            dbsig.row_mut(t).copy_from_slice(&buf);
+        }
+        // ΔH = D⁻¹ ΔBΣ_mnᵀ rows.
+        let w: Vec<f64> = self.resid.inv_d()[base..].to_vec();
+        let mut dh = dbsig.clone();
+        dh.scale_rows(&w);
+        // Existing SΣ_mnᵀ rows gain the appended owners' gather terms in
+        // ascending owner order — exactly where the rebuilt `mul_bt_mat`
+        // gather would append them, so each row stays bit-identical.
+        // Appended rows equal ΔH: new columns have no owners (appended
+        // rows condition only on pre-existing points).
+        for t in 0..k_new {
+            let i = base + t;
+            for (kk, &j) in self.resid.neighbors[i].iter().enumerate() {
+                let a = self.resid.a[i][kk];
+                let dst = self.ssig.row_mut(j as usize);
+                for (o, &v) in dst.iter_mut().zip(dh.row(t)) {
+                    *o -= a * v;
+                }
+            }
+        }
+        self.bsig.append_rows(&dbsig);
+        self.h.append_rows(&dh);
+        self.ssig.append_rows(&dh);
+        // Rank-k core updates: SS += ΔΣᵀD⁻¹ΔΣ, M likewise (old rows of
+        // BΣ_mnᵀ and D are untouched by the append, so the delta is
+        // exactly the appended rows' weighted outer products).
+        self.ss.syrk_add_panel_weighted(dbsig.data(), m, &w);
+        let mcal = self.mcal.as_mut().expect("low-rank structure without Woodbury core");
+        mcal.syrk_add_panel_weighted(dbsig.data(), m, &w);
+        let chol = CholeskyFactor::new_with_jitter(self.mcal.as_ref().unwrap(), jitter.max(1e-10))
+            .expect("Woodbury core M not PD after append");
+        self.chol_mcal = Some(chol);
     }
 
     pub fn n(&self) -> usize {
@@ -1048,6 +1317,102 @@ pub fn select_neighbors(
     }
 }
 
+/// Conditioning sets for appended points among the `base` pre-existing
+/// points only — leaf conditioning: the frozen graph over `0..base` is
+/// untouched and every appended row conditions strictly on earlier data
+/// (the drift this one-sided rule accumulates is bounded by the models'
+/// `compact()` re-selection). `x_full` already contains the appended
+/// rows at `base..`, and `lr` — when present — already covers them
+/// ([`LowRank::append_cols`] runs first). Mirrors the prediction-side
+/// search in `predict`: same metric family, same cover-tree-over-members
+/// external-query pattern, same brute-force fallback for small batches.
+fn append_neighbor_sets(
+    x_full: &Mat,
+    kernel: &ArdMatern,
+    lr: Option<&LowRank>,
+    base: usize,
+    m_v: usize,
+    selection: NeighborSelection,
+) -> Vec<Vec<u32>> {
+    let k_new = x_full.rows() - base;
+    if m_v == 0 || base == 0 {
+        return vec![vec![]; k_new];
+    }
+    if base <= m_v {
+        // Same convention as the ordered training search: with too few
+        // predecessors every appended point conditions on all of them.
+        return vec![(0..base as u32).collect(); k_new];
+    }
+    match selection {
+        NeighborSelection::EuclideanTransformed => {
+            crate::coordinator::parallel_map(k_new, |t| {
+                let sp = x_full.row(base + t);
+                let cand: Vec<(f64, u32)> = (0..base)
+                    .map(|j| {
+                        let d2: f64 = sp
+                            .iter()
+                            .zip(x_full.row(j))
+                            .zip(&kernel.length_scales)
+                            .map(|((a, b), l)| {
+                                let u = (a - b) / l;
+                                u * u
+                            })
+                            .sum();
+                        (d2, j as u32)
+                    })
+                    .collect();
+                predict::take_m_v(cand, m_v)
+            })
+        }
+        NeighborSelection::CorrelationCoverTree | NeighborSelection::CorrelationBruteForce => {
+            let metric = CorrelationMetric::new(kernel, x_full, lr);
+            let use_tree = selection == NeighborSelection::CorrelationCoverTree
+                && k_new >= predict::COVER_TREE_MIN_QUERIES;
+            if use_tree {
+                // Tree over the pre-existing points only; every appended
+                // query index exceeds every member, so the ordered
+                // query's `< i` pruning never hides a candidate (the
+                // same external-query pattern as prediction search).
+                let tree = CoverTree::build(base, &metric);
+                let mut out: Vec<Vec<u32>> = vec![vec![]; k_new];
+                {
+                    let out_ptr = crate::coordinator::SyncSlice(out.as_mut_ptr());
+                    let out_ptr = &out_ptr;
+                    crate::coordinator::parallel_for_chunks(k_new, |start, end| {
+                        let mut scratch = QueryScratch::new(base);
+                        for t in start..end {
+                            let mut idx =
+                                tree.knn_ordered_with(base + t, m_v, &metric, &mut scratch);
+                            idx.sort_unstable();
+                            // SAFETY: disjoint indices per chunk.
+                            unsafe {
+                                *out_ptr.get().add(t) = idx;
+                            }
+                        }
+                    });
+                }
+                out
+            } else {
+                let ids: Vec<u32> = (0..base as u32).collect();
+                crate::coordinator::parallel_map(k_new, |t| {
+                    let mut dists = vec![0.0; base];
+                    metric.dist_batch(base + t, &ids, &mut dists);
+                    let cand: Vec<(f64, u32)> =
+                        dists.into_iter().zip(ids.iter().copied()).collect();
+                    predict::take_m_v(cand, m_v)
+                })
+            }
+        }
+    }
+}
+
+/// Appended fraction of the training set past which the models'
+/// `append_points` triggers a full [`FitModel::compact`] re-selection:
+/// appended rows condition only on pre-existing points and never become
+/// candidates for older rows' conditioning sets, so the approximation
+/// drifts as the appended share grows — compaction bounds that drift.
+pub(crate) const APPEND_COMPACT_FRACTION: f64 = 0.25;
+
 /// Re-select the structure choices (§6) for the current kernel: inducing
 /// points by kMeans++ in the λ-scaled space (warm-started from `warm`
 /// when given), then Vecchia conditioning sets for the induced residual
@@ -1106,6 +1471,20 @@ pub trait FitModel {
     fn lbfgs_tol(&self) -> f64;
     /// Append one round's accepted-step objective trace.
     fn record_trace(&mut self, trace: &[f64]);
+    /// Incrementally ingest new observations at the current θ (the
+    /// streaming-append path): validate, extend the model data, and run
+    /// the layered [`VifStructure::append`] update — equivalent to a
+    /// from-scratch re-assembly to ≤1e-12 (`tests/append.rs`). Bumps the
+    /// structure generation (stale prediction plans are refused) and
+    /// triggers [`compact`](Self::compact) past the appended-fraction
+    /// threshold. Errors (dimension mismatch, non-finite inputs) leave
+    /// the model untouched.
+    fn append_points(&mut self, x_new: &Mat, y_new: &[f64]) -> Result<(), String>;
+    /// Full re-selection over all current data at the current θ —
+    /// the compaction story that bounds leaf-conditioning drift from
+    /// appends. Inducing points are warm-started through Lloyd, and the
+    /// append drift counter resets.
+    fn compact(&mut self);
 }
 
 /// Shared fit driver (§6 cadence) for Gaussian and Laplace models: up to

@@ -46,6 +46,7 @@
 //! CG solves *and* projections — is a multi-RHS batch.
 
 use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::covertree::{CoverTree, Metric, QueryScratch};
 use crate::kernels::ArdMatern;
@@ -79,6 +80,26 @@ pub struct PredictPlan {
     /// panel or its forward substitutions. `None` for
     /// Euclidean-selection or externally supplied plans.
     lr_panels: Option<LrPanelCache>,
+    /// Generation of the [`VifStructure`] the plan was built against
+    /// (0 = externally built, unchecked). The numeric pass refuses a
+    /// mismatch: an append/compact/re-selection changed the training
+    /// point set, so the frozen conditioning sets index the wrong rows
+    /// — recomputation could not save the plan, unlike the soft
+    /// θ/Z-keyed panel-cache fallback.
+    generation: u64,
+}
+
+/// Process-wide count of soft panel-cache fallbacks: a plan reused after
+/// a θ or inducing-set change had its `K(X_p, Z)` panels recomputed
+/// instead of served from the cache. Cheap observability for the
+/// "silently degrades to recomputation" path — serving setups polling
+/// this can tell cache-hot plans from ones that should be rebuilt.
+static LR_PANEL_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative [`PredictPlan`] panel-cache misses in this process (see
+/// [`PredictBlocks::compute`]; debug builds also log each miss).
+pub fn lr_panel_cache_misses() -> u64 {
+    LR_PANEL_MISSES.load(Ordering::Relaxed)
 }
 
 /// θ-dependent low-rank panels cached on a [`PredictPlan`], keyed by
@@ -113,6 +134,7 @@ impl PredictPlan {
         let (neighbors, lr_panels) = pred_neighbor_sets(s, x, kernel, xp, m_v, selection);
         let mut plan = Self::from_neighbor_sets(x, neighbors);
         plan.lr_panels = lr_panels;
+        plan.generation = s.generation;
         plan
     }
 
@@ -139,12 +161,25 @@ impl PredictPlan {
                 *c += 1;
             }
         }
-        PredictPlan { neighbors, x_panels, bt_ptr, bt_entries, lr_panels: None }
+        PredictPlan {
+            neighbors,
+            x_panels,
+            bt_ptr,
+            bt_entries,
+            lr_panels: None,
+            generation: 0,
+        }
     }
 
     /// Number of prediction points the plan covers.
     pub fn n_points(&self) -> usize {
         self.neighbors.len()
+    }
+
+    /// Generation of the structure this plan was built against
+    /// (0 = externally built plan, exempt from the staleness check).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 }
 
@@ -183,15 +218,37 @@ impl<'a> PredictBlocks<'a> {
         block_jitter: f64,
     ) -> Self {
         let np = plan.n_points();
+        assert!(
+            plan.generation == 0 || plan.generation == s.generation,
+            "stale prediction plan: built for structure generation {}, structure is at {} \
+             (append_points/compact/reselect invalidates prediction plans — rebuild via \
+             build_predict_plan)",
+            plan.generation,
+            s.generation
+        );
         assert_eq!(xp.rows(), np, "plan built for different prediction inputs");
         let m = s.m();
         let nugget = s.nugget;
         // Trust the plan's panel cache only when it was evaluated at
-        // this exact θ and inducing set.
-        let cache = plan.lr_panels.as_ref().filter(|c| match &s.lr {
-            Some(lr) => c.theta == kernel.log_params() && c.z == lr.z,
-            None => false,
-        });
+        // this exact θ and inducing set; count key mismatches so the
+        // silent fall-back to recomputation stays observable.
+        let cache = match (plan.lr_panels.as_ref(), &s.lr) {
+            (Some(c), Some(lr)) => {
+                if c.theta == kernel.log_params() && c.z == lr.z {
+                    Some(c)
+                } else {
+                    LR_PANEL_MISSES.fetch_add(1, Ordering::Relaxed);
+                    if cfg!(debug_assertions) {
+                        eprintln!(
+                            "vifgp: predict plan low-rank panel cache miss \
+                             (θ or Z changed since the plan was built); recomputing panels"
+                        );
+                    }
+                    None
+                }
+            }
+            _ => None,
+        };
         let kp: Cow<'a, Mat> = match (&s.lr, cache) {
             (Some(_), Some(c)) => Cow::Borrowed(&c.kp),
             (Some(lr), None) => {
@@ -502,7 +559,7 @@ pub fn project_qt_batch(
 /// order of `n · depth` metric evaluations, which only amortizes once
 /// enough queries share it. Both paths score through the same batched
 /// metric, so the selected sets agree up to distance ties.
-const COVER_TREE_MIN_QUERIES: usize = 32;
+pub(crate) const COVER_TREE_MIN_QUERIES: usize = 32;
 
 /// Conditioning sets for prediction points among training points, under
 /// the same metric family as training-set selection (§6). The
@@ -602,7 +659,7 @@ fn pred_neighbor_sets(
 }
 
 /// Keep the `m_v` smallest-score candidates, ascending index order.
-fn take_m_v(mut cand: Vec<(f64, u32)>, m_v: usize) -> Vec<u32> {
+pub(crate) fn take_m_v(mut cand: Vec<(f64, u32)>, m_v: usize) -> Vec<u32> {
     if cand.len() > m_v {
         cand.select_nth_unstable_by(m_v - 1, |a, b| a.0.total_cmp(&b.0));
         cand.truncate(m_v);

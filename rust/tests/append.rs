@@ -1,0 +1,374 @@
+//! Append ≡ rebuild oracle suite for the streaming-append path.
+//!
+//! Streams interleaved `append_points` batches (sizes 1, 7, 64) into both
+//! models and pins, after every batch, that the incrementally updated
+//! structure matches a from-scratch `VifStructure::from_plan` over the
+//! extended plan — the factor rows, schedule, low-rank panels, and
+//! Woodbury blocks all land within ≤1e-12 (most are bitwise). NLL,
+//! gradients, and predictions are compared on top, the extended level
+//! schedule is checked bit-identical across worker-pool sizes 1/2/8, and
+//! the structure-generation counter is pinned to refuse stale
+//! prediction plans.
+
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::{sigmoid, Likelihood};
+use vifgp::linalg::Mat;
+use vifgp::rng::Rng;
+use vifgp::testing::{
+    assert_b_kernels_pool_size_invariant, random_points, structures_max_abs_diff,
+};
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::gaussian::{self, GaussianParams, VifRegression};
+use vifgp::vif::laplace::{self, PredVarMethod, SolveMode, VifLaplaceModel};
+use vifgp::vif::{predict, VifConfig, VifStructure};
+
+const BATCHES: [usize; 3] = [1, 7, 64];
+
+fn test_kernel() -> ArdMatern {
+    ArdMatern::new(1.0, vec![0.3, 0.4], Smoothness::ThreeHalves)
+}
+
+fn test_config() -> VifConfig {
+    VifConfig {
+        num_inducing: 20,
+        num_neighbors: 6,
+        selection: NeighborSelection::CorrelationBruteForce,
+        lloyd_iters: 2,
+        ..Default::default()
+    }
+}
+
+/// Rows `lo..hi` of `x` as a fresh matrix (the append batch).
+fn rows(x: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, x.cols(), |i, j| x.get(lo + i, j))
+}
+
+fn sim_gaussian(n: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::seed_from(seed);
+    let x = random_points(&mut rng, n, 2);
+    let latent = vifgp::data::simulate_latent_gp(&mut rng, &x, &test_kernel());
+    let y: Vec<f64> = latent.iter().map(|l| l + 0.05 * rng.normal()).collect();
+    (x, y)
+}
+
+fn gaussian_model(x: Mat, y: Vec<f64>) -> VifRegression {
+    let init = GaussianParams { kernel: test_kernel(), noise: 0.05 };
+    VifRegression::new(x, y, test_config(), init)
+}
+
+/// Rebuild the Gaussian model's structure from scratch over its (already
+/// extended) plan — the oracle the appended structure must match.
+fn rebuild_gaussian(model: &VifRegression) -> VifStructure {
+    VifStructure::from_plan(
+        &model.x,
+        &model.params.kernel,
+        model.plan.as_ref().unwrap(),
+        model.params.noise,
+        model.config.jitter,
+        1,
+    )
+}
+
+#[test]
+fn gaussian_append_equals_rebuild() {
+    // Base chosen so the streamed fraction (72/472) stays below the
+    // compaction threshold: every batch takes the incremental path.
+    let total: usize = 400 + BATCHES.iter().sum::<usize>();
+    let (x, y) = sim_gaussian(total, 71);
+    let mut rng = Rng::seed_from(72);
+    let xp = random_points(&mut rng, 12, 2);
+
+    let mut done = 400;
+    let mut model = gaussian_model(rows(&x, 0, done), y[..done].to_vec());
+    model.assemble();
+
+    for &k in &BATCHES {
+        model
+            .append_points(&rows(&x, done, done + k), &y[done..done + k])
+            .unwrap();
+        done += k;
+        assert_eq!(model.x.rows(), done);
+
+        let rebuilt = rebuild_gaussian(&model);
+        let appended = model.structure.as_ref().unwrap();
+        let sdiff = structures_max_abs_diff(appended, &rebuilt);
+        assert!(sdiff <= 1e-12, "batch {k}: structure diff {sdiff}");
+
+        let kernel = &model.params.kernel;
+        let (v1, g1) = gaussian::nll_and_grad(appended, &model.x, kernel, &model.y);
+        let (v2, g2) = gaussian::nll_and_grad(&rebuilt, &model.x, kernel, &model.y);
+        assert!(
+            (v1 - v2).abs() <= 1e-12 * (1.0 + v2.abs()),
+            "batch {k}: nll {v1} vs {v2}"
+        );
+        for (p, (a, b)) in g1.iter().zip(&g2).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+                "batch {k}: grad[{p}] {a} vs {b}"
+            );
+        }
+
+        let sel = model.config.selection;
+        let (m1, var1) = gaussian::predict(appended, &model.x, kernel, &model.y, &xp, 6, sel);
+        let (m2, var2) = gaussian::predict(&rebuilt, &model.x, kernel, &model.y, &xp, 6, sel);
+        for p in 0..xp.rows() {
+            assert!(
+                (m1[p] - m2[p]).abs() <= 1e-12 * (1.0 + m2[p].abs()),
+                "batch {k}: mean[{p}] {} vs {}",
+                m1[p],
+                m2[p]
+            );
+            assert!(
+                (var1[p] - var2[p]).abs() <= 1e-12 * (1.0 + var2[p].abs()),
+                "batch {k}: var[{p}] {} vs {}",
+                var1[p],
+                var2[p]
+            );
+        }
+    }
+    assert_eq!(done, total);
+}
+
+#[test]
+fn laplace_append_equals_rebuild() {
+    let total: usize = 300 + BATCHES.iter().sum::<usize>();
+    let mut rng = Rng::seed_from(91);
+    let x = random_points(&mut rng, total, 2);
+    let latent = vifgp::data::simulate_latent_gp(&mut rng, &x, &test_kernel());
+    let y: Vec<f64> = latent
+        .iter()
+        .map(|l| if rng.bernoulli(sigmoid(*l)) { 1.0 } else { 0.0 })
+        .collect();
+    let xp = random_points(&mut rng, 6, 2);
+
+    let mut done = 300;
+    let mut model = VifLaplaceModel::new(
+        rows(&x, 0, done),
+        y[..done].to_vec(),
+        test_config(),
+        SolveMode::Cholesky,
+        test_kernel(),
+        Likelihood::BernoulliLogit,
+    );
+    model.assemble();
+
+    for &k in &BATCHES {
+        model
+            .append_points(&rows(&x, done, done + k), &y[done..done + k])
+            .unwrap();
+        done += k;
+        assert!(model.state.is_none(), "append must clear the mode state");
+
+        // Latent-scale rebuild over the extended plan.
+        let rebuilt = VifStructure::from_plan(
+            &model.x,
+            &model.kernel,
+            model.plan.as_ref().unwrap(),
+            0.0,
+            model.config.jitter,
+            0,
+        );
+        let appended = model.structure.as_ref().unwrap();
+        let sdiff = structures_max_abs_diff(appended, &rebuilt);
+        assert!(sdiff <= 1e-12, "batch {k}: structure diff {sdiff}");
+    }
+    assert_eq!(done, total);
+
+    // NLL, gradient, and predictions once on the fully streamed model.
+    // Mode finding is itself iterative, so the appended/rebuilt mode
+    // paths amplify the ≤1e-12 structure difference slightly; the
+    // tolerances below are still far under any real approximation drift.
+    let rebuilt = VifStructure::from_plan(
+        &model.x,
+        &model.kernel,
+        model.plan.as_ref().unwrap(),
+        0.0,
+        model.config.jitter,
+        0,
+    );
+    let appended = model.structure.as_ref().unwrap();
+    let mode = SolveMode::Cholesky;
+    let mut r1 = Rng::seed_from(5);
+    let (v1, g1, _) = laplace::nll_and_grad(
+        appended,
+        &model.x,
+        &model.kernel,
+        &model.lik,
+        &model.y,
+        &mode,
+        &mut r1,
+    );
+    let mut r2 = Rng::seed_from(5);
+    let (v2, g2, _) = laplace::nll_and_grad(
+        &rebuilt,
+        &model.x,
+        &model.kernel,
+        &model.lik,
+        &model.y,
+        &mode,
+        &mut r2,
+    );
+    assert!((v1 - v2).abs() <= 1e-10 * (1.0 + v2.abs()), "nll {v1} vs {v2}");
+    for (p, (a, b)) in g1.iter().zip(&g2).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-8 * (1.0 + b.abs()),
+            "grad[{p}] {a} vs {b}"
+        );
+    }
+
+    // Predictions share one mode state so the comparison isolates the
+    // structure difference.
+    let state = laplace::find_mode(
+        appended,
+        &model.x,
+        &model.kernel,
+        &model.lik,
+        &model.y,
+        &mode,
+        None,
+    );
+    let mut rp = Rng::seed_from(7);
+    let p1 = laplace::predict(
+        appended,
+        &model.x,
+        &model.kernel,
+        &model.lik,
+        &state,
+        &xp,
+        6,
+        model.config.selection,
+        &mode,
+        PredVarMethod::Exact,
+        0,
+        &mut rp,
+    );
+    let p2 = laplace::predict(
+        &rebuilt,
+        &model.x,
+        &model.kernel,
+        &model.lik,
+        &state,
+        &xp,
+        6,
+        model.config.selection,
+        &mode,
+        PredVarMethod::Exact,
+        0,
+        &mut rp,
+    );
+    for p in 0..xp.rows() {
+        assert!(
+            (p1.latent_mean[p] - p2.latent_mean[p]).abs()
+                <= 1e-11 * (1.0 + p2.latent_mean[p].abs()),
+            "mean[{p}]: {} vs {}",
+            p1.latent_mean[p],
+            p2.latent_mean[p]
+        );
+        assert!(
+            (p1.latent_var[p] - p2.latent_var[p]).abs()
+                <= 1e-11 * (1.0 + p2.latent_var[p].abs()),
+            "var[{p}]: {} vs {}",
+            p1.latent_var[p],
+            p2.latent_var[p]
+        );
+    }
+}
+
+#[test]
+fn appended_schedule_bitwise_identical_across_pool_sizes() {
+    // The extended level schedule must preserve the determinism contract:
+    // every scheduled sweep over the appended factor is bit-identical
+    // across worker pools of size 1/2/8 and the sequential reference.
+    let total: usize = 400 + BATCHES.iter().sum::<usize>();
+    let (x, y) = sim_gaussian(total, 77);
+    let mut done = 400;
+    let mut model = gaussian_model(rows(&x, 0, done), y[..done].to_vec());
+    model.assemble();
+    for &k in &BATCHES {
+        model
+            .append_points(&rows(&x, done, done + k), &y[done..done + k])
+            .unwrap();
+        done += k;
+    }
+    let mut rng = Rng::seed_from(123);
+    assert_b_kernels_pool_size_invariant(
+        &model.structure.as_ref().unwrap().resid,
+        &mut rng,
+        &[1, 2, 8],
+        3,
+    );
+}
+
+#[test]
+fn append_bumps_generation_and_fresh_plans_serve() {
+    let (x, y) = sim_gaussian(140, 31);
+    let mut model = gaussian_model(rows(&x, 0, 120), y[..120].to_vec());
+    model.assemble();
+    let mut rng = Rng::seed_from(32);
+    let xp = random_points(&mut rng, 8, 2);
+
+    let g0 = model.structure.as_ref().unwrap().generation;
+    let plan = model.build_predict_plan(&xp);
+    assert_eq!(plan.generation(), g0, "plan must record the structure generation");
+
+    model
+        .append_points(&rows(&x, 120, 140), &y[120..140])
+        .unwrap();
+    let g1 = model.structure.as_ref().unwrap().generation;
+    assert!(g1 > g0, "append must bump the generation ({g0} -> {g1})");
+
+    // A freshly built plan serves the appended structure.
+    let plan2 = model.build_predict_plan(&xp);
+    assert_eq!(plan2.generation(), g1);
+    let (mean, var) = model.predict_with_plan(&xp, &plan2);
+    assert!(mean.iter().chain(&var).all(|v| v.is_finite()));
+}
+
+#[test]
+#[should_panic(expected = "stale prediction plan")]
+fn stale_plan_is_refused_after_append() {
+    let (x, y) = sim_gaussian(140, 33);
+    let mut model = gaussian_model(rows(&x, 0, 120), y[..120].to_vec());
+    model.assemble();
+    let mut rng = Rng::seed_from(34);
+    let xp = random_points(&mut rng, 8, 2);
+    let plan = model.build_predict_plan(&xp);
+    model
+        .append_points(&rows(&x, 120, 140), &y[120..140])
+        .unwrap();
+    let _ = model.predict_with_plan(&xp, &plan); // panics: generation mismatch
+}
+
+#[test]
+fn theta_change_is_counted_as_panel_cache_miss() {
+    // A θ refresh does not change the generation (the symbolic structure
+    // is untouched), so a reused plan is *allowed* — but its low-rank
+    // panel cache no longer matches and the fallback must be counted.
+    let (x, y) = sim_gaussian(120, 41);
+    let mut model = gaussian_model(x, y);
+    model.assemble();
+    let mut rng = Rng::seed_from(42);
+    let xp = random_points(&mut rng, 8, 2);
+    let plan = model.build_predict_plan(&xp);
+
+    model.params.kernel = ArdMatern::new(0.9, vec![0.35, 0.45], Smoothness::ThreeHalves);
+    let vplan = model.plan.take().unwrap();
+    let mut s = model.structure.take().unwrap();
+    s.refresh(
+        &vplan,
+        &model.x,
+        &model.params.kernel,
+        model.params.noise,
+        model.config.jitter,
+    );
+    model.plan = Some(vplan);
+    model.structure = Some(s);
+
+    let before = predict::lr_panel_cache_misses();
+    let (mean, _) = model.predict_with_plan(&xp, &plan);
+    assert!(mean.iter().all(|v| v.is_finite()));
+    assert!(
+        predict::lr_panel_cache_misses() > before,
+        "θ-mismatched panel cache fallback must be observable"
+    );
+}

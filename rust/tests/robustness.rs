@@ -7,8 +7,9 @@ use vifgp::linalg::{CholeskyFactor, Mat};
 use vifgp::rng::Rng;
 use vifgp::testing::random_points;
 use vifgp::vecchia::neighbors::{self, NeighborSelection};
+use vifgp::vif::gaussian::{GaussianParams, VifRegression};
 use vifgp::vif::laplace::{find_mode, SolveMode};
-use vifgp::vif::{select_neighbors, VifStructure};
+use vifgp::vif::{select_neighbors, VifConfig, VifStructure};
 
 #[test]
 fn cg_reports_non_convergence_gracefully() {
@@ -126,6 +127,101 @@ fn huge_and_tiny_length_scales_stay_finite() {
         let (_, g) = vifgp::vif::gaussian::nll_and_grad(&s, &x, &kernel, &y);
         assert!(g.iter().all(|x| x.is_finite()), "ls={ls} grad={g:?}");
     }
+}
+
+/// Small assembled Gaussian model for the degenerate-append cases.
+fn append_fixture() -> VifRegression {
+    let mut rng = Rng::seed_from(61);
+    let n = 80;
+    let x = random_points(&mut rng, n, 2);
+    let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
+    let config = VifConfig {
+        num_inducing: 10,
+        num_neighbors: 4,
+        selection: NeighborSelection::CorrelationBruteForce,
+        lloyd_iters: 2,
+        ..Default::default()
+    };
+    let init = GaussianParams {
+        kernel: ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::ThreeHalves),
+        noise: 0.05,
+    };
+    let mut model = VifRegression::new(x, y, config, init);
+    model.assemble();
+    model
+}
+
+#[test]
+fn empty_append_is_bitwise_noop() {
+    let mut model = append_fixture();
+    let s0 = model.structure.as_ref().unwrap();
+    let a0 = s0.resid.a.clone();
+    let d0 = s0.resid.d.clone();
+    let gen0 = s0.generation;
+    let n0 = model.x.rows();
+
+    model.append_points(&Mat::zeros(0, 2), &[]).unwrap();
+
+    let s1 = model.structure.as_ref().unwrap();
+    assert_eq!(model.x.rows(), n0);
+    assert_eq!(s1.generation, gen0, "empty append must not bump the generation");
+    assert_eq!(s1.resid.a, a0, "coefficient rows must be bitwise untouched");
+    assert_eq!(s1.resid.d, d0, "conditional variances must be bitwise untouched");
+}
+
+#[test]
+fn duplicate_point_append_stays_finite() {
+    // An exact copy of an existing training point: zero residual
+    // distance to its duplicate, so the conditional variance collapses
+    // to the nugget — the factorization must stay finite and positive.
+    let mut model = append_fixture();
+    let dup = Mat::from_fn(1, 2, |_, j| model.x.get(17, j));
+    let ydup = model.y[17];
+    model.append_points(&dup, &[ydup]).unwrap();
+
+    let s = model.structure.as_ref().unwrap();
+    assert!(s.resid.d.iter().all(|d| d.is_finite() && *d > 0.0));
+    let nll = vifgp::vif::gaussian::nll(s, &model.y);
+    assert!(nll.is_finite(), "nll after duplicate append: {nll}");
+    let xp = Mat::from_fn(3, 2, |i, j| 0.1 + 0.2 * (i + j) as f64 / 3.0);
+    let (mean, var) = model.predict(&xp);
+    assert!(mean.iter().chain(&var).all(|v| v.is_finite()));
+}
+
+#[test]
+fn non_finite_and_mismatched_appends_rejected_cleanly() {
+    let mut model = append_fixture();
+    let s0_d = model.structure.as_ref().unwrap().resid.d.clone();
+    let gen0 = model.structure.as_ref().unwrap().generation;
+    let n0 = model.x.rows();
+
+    let err = model
+        .append_points(&Mat::from_vec(1, 2, vec![f64::NAN, 0.5]), &[1.0])
+        .unwrap_err();
+    assert!(err.contains("non-finite"), "{err}");
+    let err = model
+        .append_points(&Mat::from_vec(1, 2, vec![0.4, 0.5]), &[f64::INFINITY])
+        .unwrap_err();
+    assert!(err.contains("non-finite"), "{err}");
+    let err = model
+        .append_points(&Mat::from_vec(1, 2, vec![0.4, 0.5]), &[1.0, 2.0])
+        .unwrap_err();
+    assert!(err.contains("responses"), "{err}");
+    let err = model
+        .append_points(&Mat::from_vec(1, 3, vec![0.4, 0.5, 0.6]), &[1.0])
+        .unwrap_err();
+    assert!(err.contains("dimension"), "{err}");
+
+    // Every rejection left the model untouched...
+    let s = model.structure.as_ref().unwrap();
+    assert_eq!(model.x.rows(), n0);
+    assert_eq!(s.generation, gen0);
+    assert_eq!(s.resid.d, s0_d);
+    // ...and it still ingests a valid batch afterwards.
+    model
+        .append_points(&Mat::from_vec(1, 2, vec![0.4, 0.5]), &[1.0])
+        .unwrap();
+    assert_eq!(model.x.rows(), n0 + 1);
 }
 
 #[test]
