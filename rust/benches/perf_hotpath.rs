@@ -4,8 +4,10 @@
 //!   covariance panels (PJRT vs native), low-rank solves, residual B/D
 //!   construction, CG matvec, and the full Gaussian NLL at scale.
 //! Also covers the serving-side pipelines: plan/refresh trajectories,
-//! panelized batched prediction, and streaming append ingestion vs
-//! assemble-from-scratch (stage 13, BENCH_append.json).
+//! panelized batched prediction, streaming append ingestion vs
+//! assemble-from-scratch (stage 13, BENCH_append.json), and the
+//! concurrent serving engine's latency/throughput sweep with generation
+//! swaps under load (stage 14, BENCH_serving.json).
 
 #[path = "common.rs"]
 mod common;
@@ -645,6 +647,210 @@ fn main() {
         );
         let path = std::env::var("VIFGP_BENCH_APPEND_JSON")
             .unwrap_or_else(|_| "BENCH_append.json".into());
+        match std::fs::write(&path, json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
+
+    // 14. Concurrent serving engine (ROADMAP item 1): micro-batched point
+    // queries against a published `FittedGaussian` snapshot, swept over
+    // client concurrency 1→64 with p50/p99 latency and points/sec per
+    // sweep, plus a generation-swap-under-load phase (writer ingests +
+    // publishes while readers hammer the engine). Served results must
+    // match the single-threaded `predict_with_plan` reference to ≤1e-12;
+    // writes machine-readable BENCH_serving.json (override the path with
+    // VIFGP_BENCH_SERVING_JSON).
+    {
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        use std::sync::{Arc, Mutex};
+        use vifgp::serve::{ServeEngine, ServeOptions};
+        use vifgp::vif::gaussian::{GaussianParams, VifRegression};
+        use vifgp::vif::VifConfig;
+
+        let n_srv = common::scaled(4_000).max(64);
+        let x_srv = data::uniform_inputs(&mut rng, n_srv, d);
+        let y_srv: Vec<f64> = (0..n_srv).map(|_| rng.normal()).collect();
+        let config = VifConfig {
+            smoothness: Smoothness::ThreeHalves,
+            num_inducing: m.min(n_srv),
+            num_neighbors: m_v,
+            selection: NeighborSelection::CorrelationCoverTree,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut model = VifRegression::new(
+            x_srv,
+            y_srv,
+            config,
+            GaussianParams { kernel: kernel.clone(), noise: 0.05 },
+        );
+        let (_, t_assemble) = common::timed(|| model.assemble());
+        let n_query = common::scaled(2_000).max(128);
+        let xq = data::uniform_inputs(&mut rng, n_query, d);
+
+        // Single-threaded reference: the oracle every served reply is
+        // checked against, and the throughput baseline.
+        let plan = model.build_predict_plan(&xq);
+        let ((mean_ref, var_ref), t_ref) = common::timed(|| model.predict_with_plan(&xq, &plan));
+        let ref_pts = n_query as f64 / t_ref.max(1e-9);
+
+        let mut opts = ServeOptions::from_env();
+        if std::env::var("VIFGP_SERVE_BATCH_WINDOW_US").is_err() {
+            // Bench default: a tighter window than the serving default so
+            // the concurrency-1 leg isn't dominated by coalescing waits.
+            opts.batch_window = std::time::Duration::from_micros(50);
+        }
+        let window_us = opts.batch_window.as_micros() as u64;
+        let max_batch = opts.max_batch;
+        let engine = ServeEngine::start(Arc::new(model.snapshot()), opts);
+
+        println!(
+            "serving sweep ({n_query} queries/leg, max_batch {max_batch}, window {window_us}µs; \
+             assemble {t_assemble:.3}s, single-thread ref {t_ref:.3}s = {ref_pts:.0} pts/s):"
+        );
+        let sweep = [1usize, 2, 4, 8, 16, 32, 64];
+        let mut rows: Vec<String> = Vec::new();
+        for &clients in &sweep {
+            let _ = engine.metrics().drain();
+            let (_, t_sweep) = common::timed(|| {
+                std::thread::scope(|scope| {
+                    for t in 0..clients {
+                        let engine = &engine;
+                        let xq = &xq;
+                        let mean_ref = &mean_ref;
+                        let var_ref = &var_ref;
+                        scope.spawn(move || {
+                            let mut i = t;
+                            while i < xq.rows() {
+                                let p = engine.predict(xq.row(i)).expect("serve request failed");
+                                let dm =
+                                    (p.mean - mean_ref[i]).abs() / (1.0 + mean_ref[i].abs());
+                                let dv = (p.var - var_ref[i]).abs() / (1.0 + var_ref[i].abs());
+                                assert!(
+                                    dm <= 1e-12 && dv <= 1e-12,
+                                    "served prediction diverged at {i}: {dm:.3e}/{dv:.3e}"
+                                );
+                                i += clients;
+                            }
+                        });
+                    }
+                })
+            });
+            let rep = engine.metrics().drain();
+            println!(
+                "  c={clients:>2}: p50 {:>8.0}µs  p99 {:>8.0}µs  {:>9.0} pts/s  mean batch {:>5.1}  ({t_sweep:.3}s)",
+                rep.p50_latency_us, rep.p99_latency_us, rep.points_per_sec, rep.mean_batch
+            );
+            rows.push(format!(
+                concat!(
+                    "    {{\"concurrency\": {}, \"requests\": {}, \"p50_latency_us\": {:.2}, ",
+                    "\"p99_latency_us\": {:.2}, \"mean_latency_us\": {:.2}, ",
+                    "\"points_per_sec\": {:.1}, \"batches\": {}, \"mean_batch\": {:.2}, ",
+                    "\"wall_s\": {:.6}}}"
+                ),
+                clients,
+                rep.requests,
+                rep.p50_latency_us,
+                rep.p99_latency_us,
+                rep.mean_latency_us,
+                rep.points_per_sec,
+                rep.batches,
+                rep.mean_batch,
+                t_sweep,
+            ));
+        }
+
+        // Generation swap under load: 8 readers keep the queue full while
+        // the writer appends three batches and publishes each new
+        // generation. Every reply must carry a published generation.
+        let published: Mutex<std::collections::HashSet<u64>> = Mutex::new(Default::default());
+        published.lock().unwrap().insert(engine.current_generation());
+        let swap_requests = AtomicUsize::new(0);
+        let done = AtomicBool::new(false);
+        let publishes = 3usize;
+        std::thread::scope(|scope| {
+            let engine = &engine;
+            let xq = &xq;
+            let done = &done;
+            let published = &published;
+            let swap_requests = &swap_requests;
+            for t in 0..8usize {
+                scope.spawn(move || {
+                    let mut i = t;
+                    while !done.load(Ordering::Acquire) {
+                        let p = engine
+                            .predict(xq.row(i % xq.rows()))
+                            .expect("reader failed during swap");
+                        assert!(
+                            published.lock().unwrap().contains(&p.generation),
+                            "served unpublished generation {}",
+                            p.generation
+                        );
+                        swap_requests.fetch_add(1, Ordering::Relaxed);
+                        i += 8;
+                    }
+                });
+            }
+            for _ in 0..publishes {
+                let xa = data::uniform_inputs(&mut rng, 32, d);
+                let ya: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+                model.append_points(&xa, &ya).expect("append failed");
+                let snap = Arc::new(model.snapshot());
+                published.lock().unwrap().insert(snap.generation());
+                engine.publish(snap);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            done.store(true, Ordering::Release);
+        });
+        // After the last publish, serving must match the final model.
+        let plan_f = model.build_predict_plan(&xq);
+        let (mean_f, var_f) = model.predict_with_plan(&xq, &plan_f);
+        let mut swap_diff = 0.0f64;
+        for i in 0..xq.rows() {
+            let p = engine.predict(xq.row(i)).expect("post-swap request failed");
+            swap_diff = swap_diff
+                .max((p.mean - mean_f[i]).abs() / (1.0 + mean_f[i].abs()))
+                .max((p.var - var_f[i]).abs() / (1.0 + var_f[i].abs()));
+        }
+        assert!(swap_diff <= 1e-12, "post-swap serving diverged: {swap_diff:.3e}");
+        let swap_served = swap_requests.load(Ordering::Relaxed);
+        println!(
+            "  swap under load: {publishes} publishes, {swap_served} concurrent requests, \
+             post-swap max rel diff {swap_diff:.2e}"
+        );
+
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath stage 14: concurrent serving engine sweep\",\n",
+                "  \"config\": {{\"n\": {ns}, \"d\": {d}, \"m\": {m}, \"m_v\": {m_v}, ",
+                "\"n_query\": {nq}, \"max_batch\": {mb}, \"batch_window_us\": {bw}}},\n",
+                "  \"assemble_s\": {ta:.6},\n",
+                "  \"single_thread_ref_s\": {tr:.6},\n",
+                "  \"single_thread_points_per_sec\": {rp:.1},\n",
+                "  \"sweep\": [\n{rows}\n  ],\n",
+                "  \"swap\": {{\"publishes\": {pb}, \"requests_under_swap\": {sr}, ",
+                "\"post_swap_max_rel_diff\": {sd:.3e}}}\n",
+                "}}\n"
+            ),
+            ns = n_srv,
+            d = d,
+            m = m.min(n_srv),
+            m_v = m_v,
+            nq = n_query,
+            mb = max_batch,
+            bw = window_us,
+            ta = t_assemble,
+            tr = t_ref,
+            rp = ref_pts,
+            rows = rows.join(",\n"),
+            pb = publishes,
+            sr = swap_served,
+            sd = swap_diff,
+        );
+        let path = std::env::var("VIFGP_BENCH_SERVING_JSON")
+            .unwrap_or_else(|_| "BENCH_serving.json".into());
         match std::fs::write(&path, json) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => println!("could not write {path}: {e}"),

@@ -1,0 +1,179 @@
+//! Flag parsing for the `vifgp` binary.
+//!
+//! Lives in the library (not `main.rs`) so the malformed-input contract
+//! is unit-testable: every parser returns `Result<_, String>` and the
+//! binary maps `Err` to "print to stderr, exit 2". The contract —
+//! established by `--precond` (PR 1) and `VIFGP_SCHED_THRESHOLD` (PR 6)
+//! and now uniform across the whole surface — is that a value that does
+//! not parse **never** silently falls back to a default: a typoed
+//! `--likelihood` must not quietly train the wrong model, and `--m abc`
+//! must not quietly run with `--m 200`.
+
+use std::collections::HashMap;
+
+use crate::kernels::Smoothness;
+use crate::likelihoods::Likelihood;
+
+/// Split `--key value` pairs (a bare `--key` becomes `key = "true"`)
+/// into a flag map. Positional arguments are ignored.
+pub fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Human name of the expected value type, for error messages.
+fn type_desc<T: 'static>() -> &'static str {
+    use std::any::TypeId;
+    let id = TypeId::of::<T>();
+    if id == TypeId::of::<usize>() || id == TypeId::of::<u64>() || id == TypeId::of::<u32>() {
+        "a non-negative integer"
+    } else if id == TypeId::of::<f64>() {
+        "a number"
+    } else if id == TypeId::of::<bool>() {
+        "`true` or `false`"
+    } else {
+        "a valid value"
+    }
+}
+
+/// Typed flag lookup: absent → `default`; present but unparseable →
+/// `Err` naming the flag, the offending value, and the expected type.
+pub fn flag<T: std::str::FromStr + 'static>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T, String> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse::<T>().map_err(|_| {
+            format!("--{key} expects {}, got `{v}`", type_desc::<T>())
+        }),
+    }
+}
+
+/// Spellings [`parse_likelihood`] accepts, for error messages.
+pub const VALID_LIKELIHOODS: &[&str] =
+    &["gaussian", "bernoulli", "binary", "poisson", "gamma", "student_t", "studentt"];
+
+/// `--likelihood` (default `gaussian`). An unknown name is an error —
+/// never a silent Gaussian fallback.
+pub fn parse_likelihood(flags: &HashMap<String, String>) -> Result<Likelihood, String> {
+    match flags.get("likelihood").map(|s| s.as_str()).unwrap_or("gaussian") {
+        "gaussian" => Ok(Likelihood::Gaussian { variance: 0.1 }),
+        "bernoulli" | "binary" => Ok(Likelihood::BernoulliLogit),
+        "poisson" => Ok(Likelihood::Poisson),
+        "gamma" => Ok(Likelihood::Gamma { shape: 2.0 }),
+        "student_t" | "studentt" => Ok(Likelihood::StudentT { scale: 0.2, df: 4.0 }),
+        other => Err(format!(
+            "unknown --likelihood `{other}`; valid names: {}",
+            VALID_LIKELIHOODS.join(", ")
+        )),
+    }
+}
+
+/// Spellings [`parse_smoothness`] accepts (any positive number also
+/// works), for error messages.
+pub const VALID_SMOOTHNESS: &[&str] = &[
+    "0.5", "half", "exp", "matern12", "1.5", "matern32", "2.5", "matern52", "inf", "gaussian",
+    "rbf", "sqexp",
+];
+
+/// `--smoothness` (default `1.5`). A typo is an error — never a silent
+/// Matérn-3/2 fallback.
+pub fn parse_smoothness(flags: &HashMap<String, String>) -> Result<Smoothness, String> {
+    let s = flags.get("smoothness").map(|s| s.as_str()).unwrap_or("1.5");
+    Smoothness::parse(s).ok_or_else(|| {
+        format!(
+            "unknown --smoothness `{s}`; valid names: {} (or any smoothness value ν > 0)",
+            VALID_SMOOTHNESS.join(", ")
+        )
+    })
+}
+
+/// `--test-frac` must be finite and in `[0, 1)` — anything else would
+/// hand `train_test_split` a nonsense held-out count (NaN rounds to 0,
+/// `1.0` leaves an empty training set).
+pub fn validate_test_frac(f: f64) -> Result<f64, String> {
+    if f.is_finite() && (0.0..1.0).contains(&f) {
+        Ok(f)
+    } else {
+        Err(format!("--test-frac expects a fraction in [0, 1), got `{f}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn parse_flags_pairs_and_booleans() {
+        let args: Vec<String> =
+            ["--n", "50", "--verbose", "--out", "f.csv"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args);
+        assert_eq!(f.get("n").map(String::as_str), Some("50"));
+        assert_eq!(f.get("verbose").map(String::as_str), Some("true"));
+        assert_eq!(f.get("out").map(String::as_str), Some("f.csv"));
+    }
+
+    #[test]
+    fn flag_defaults_and_errors() {
+        let f = flags(&[("m", "abc"), ("iters", "1e3"), ("test-frac", "20%")]);
+        assert_eq!(flag::<usize>(&f, "mv", 30).unwrap(), 30);
+        let e = flag::<usize>(&f, "m", 200).unwrap_err();
+        assert!(e.contains("--m") && e.contains("`abc`") && e.contains("integer"), "{e}");
+        let e = flag::<usize>(&f, "iters", 50).unwrap_err();
+        assert!(e.contains("--iters") && e.contains("`1e3`"), "{e}");
+        let e = flag::<f64>(&f, "test-frac", 0.2).unwrap_err();
+        assert!(e.contains("--test-frac") && e.contains("`20%`") && e.contains("number"), "{e}");
+    }
+
+    #[test]
+    fn likelihood_and_smoothness_reject_typos() {
+        assert!(matches!(
+            parse_likelihood(&flags(&[])),
+            Ok(Likelihood::Gaussian { .. })
+        ));
+        assert!(matches!(
+            parse_likelihood(&flags(&[("likelihood", "poisson")])),
+            Ok(Likelihood::Poisson)
+        ));
+        let e = parse_likelihood(&flags(&[("likelihood", "gausian")])).unwrap_err();
+        assert!(e.contains("gausian") && e.contains("gaussian"), "{e}");
+
+        assert_eq!(parse_smoothness(&flags(&[])).unwrap(), Smoothness::ThreeHalves);
+        assert_eq!(
+            parse_smoothness(&flags(&[("smoothness", "2.5")])).unwrap(),
+            Smoothness::FiveHalves
+        );
+        let e = parse_smoothness(&flags(&[("smoothness", "matern3/2")])).unwrap_err();
+        assert!(e.contains("matern3/2") && e.contains("matern32"), "{e}");
+    }
+
+    #[test]
+    fn test_frac_bounds() {
+        assert_eq!(validate_test_frac(0.0).unwrap(), 0.0);
+        assert_eq!(validate_test_frac(0.2).unwrap(), 0.2);
+        assert!(validate_test_frac(1.0).is_err());
+        assert!(validate_test_frac(-0.1).is_err());
+        assert!(validate_test_frac(f64::NAN).is_err());
+        assert!(validate_test_frac(f64::INFINITY).is_err());
+    }
+}

@@ -26,13 +26,19 @@ use std::sync::OnceLock;
 /// kernels consult this on every dispatch, and `std::env::var` takes a
 /// process-wide lock. Set the variable before first use (the CLI's
 /// `--threads` does), not mid-run.
+///
+/// A set-but-malformed `VIFGP_THREADS` (including `0`) panics loudly —
+/// the crate-doc policy for every `VIFGP_*` knob (see
+/// `VIFGP_SCHED_THRESHOLD`) — instead of silently running on the
+/// detected parallelism.
 pub fn num_threads() -> usize {
     static CACHE: OnceLock<usize> = OnceLock::new();
     *CACHE.get_or_init(|| {
         if let Ok(s) = std::env::var("VIFGP_THREADS") {
-            if let Ok(v) = s.parse::<usize>() {
-                return v.max(1);
-            }
+            return match s.parse::<usize>() {
+                Ok(v) if v >= 1 => v,
+                _ => panic!("VIFGP_THREADS expects a positive integer, got `{s}`"),
+            };
         }
         std::thread::available_parallelism()
             .map(|n| n.get())

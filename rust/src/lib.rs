@@ -25,16 +25,21 @@
 //!
 //! | Variable | Consumed by | Meaning |
 //! |---|---|---|
-//! | `VIFGP_THREADS` | [`coordinator`] | Worker-pool size for level-scheduled sweeps and panel loops. Default: detected parallelism. Set `1` to force sequential execution (CI runs both legs). |
+//! | `VIFGP_THREADS` | [`coordinator`] | Worker-pool size for level-scheduled sweeps and panel loops. Default: detected parallelism. Set `1` to force sequential execution (CI runs both legs). Must parse as a positive integer — a malformed or zero value panics loudly rather than silently falling back to the detected parallelism. |
 //! | `VIFGP_SCHED_THRESHOLD` | [`vecchia`] | Row count below which level-scheduled sweeps stay sequential. Must parse as a non-negative integer — a malformed value panics loudly rather than silently falling back to the default. |
+//! | `VIFGP_SERVE_MAX_BATCH` | [`serve`] | Maximum points per serving micro-batch (default `64`, the numeric pass's column-block width). Must parse as a positive integer; malformed values panic loudly. |
+//! | `VIFGP_SERVE_BATCH_WINDOW_US` | [`serve`] | Microseconds the dispatcher waits past the oldest queued request to coalesce more arrivals (default `200`; `0` dispatches immediately). Must parse as a non-negative integer; malformed values panic loudly. |
+//! | `VIFGP_SERVE_METRICS_JSON` | `vifgp serve` (CLI) | When set, the serve subcommand writes its final [`serve::MetricsReport`] JSON to this path on shutdown. |
 //! | `VIFGP_ARTIFACTS` | [`runtime`] | Directory of AOT-compiled HLO artifacts for the PJRT engine. Unset → native fallback. |
 //! | `VIFGP_BENCH_SCALE` | benches (`benches/common.rs`) | Multiplier on bench workload sizes (default `1.0`; CI smoke uses `0.05`). |
 //! | `VIFGP_BENCH_JSON` | `benches/perf_hotpath.rs` stage 10 | Output path for `BENCH_assembly.json`. |
 //! | `VIFGP_BENCH_REFRESH_JSON` | `benches/perf_hotpath.rs` stage 11 | Output path for `BENCH_refresh.json`. |
 //! | `VIFGP_BENCH_PREDICT_JSON` | `benches/perf_hotpath.rs` stage 12 | Output path for `BENCH_predict.json`. |
 //! | `VIFGP_BENCH_APPEND_JSON` | `benches/perf_hotpath.rs` stage 13 | Output path for `BENCH_append.json` (streaming-append ingestion throughput). |
+//! | `VIFGP_BENCH_SERVING_JSON` | `benches/perf_hotpath.rs` stage 14 | Output path for `BENCH_serving.json` (concurrent serving latency/throughput sweep). |
 
 pub mod baselines;
+pub mod cli;
 pub mod coordinator;
 pub mod covertree;
 pub mod data;
@@ -47,6 +52,7 @@ pub mod metrics;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod vecchia;
 pub mod vif;

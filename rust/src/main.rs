@@ -10,21 +10,45 @@
 //! vifgp train    --data data.csv [--m 200] [--mv 30] [--smoothness 1.5]
 //!                [--likelihood gaussian|bernoulli|poisson|gamma|student_t]
 //!                [--precond fitc|vifdu|none] [--iters 50] [--test-frac 0.2]
+//! vifgp serve    --data data.csv [--m 200] [--mv 30] [--iters 30]
+//!                [--requests 4096] [--concurrency 8] [--append-every 0]
+//!                [--max-batch 64] [--batch-window-us 200]
 //! vifgp experiment <fig2|fig4|tab1|...>   (thin wrappers over the benches)
 //! ```
+//!
+//! Flag parsing lives in [`vifgp::cli`] so its contract is testable: a
+//! malformed value (numeric flags, `--likelihood`, `--smoothness`,
+//! `--test-frac` bounds) exits 2 with an error naming the flag, the
+//! offending value, and the expected type — never a silent default.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use vifgp::cli::{flag, parse_flags, parse_likelihood, parse_smoothness, validate_test_frac};
 use vifgp::data;
 use vifgp::iterative::{IterConfig, PrecondType};
-use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::kernels::ArdMatern;
 use vifgp::likelihoods::Likelihood;
 use vifgp::metrics;
 use vifgp::rng::Rng;
+use vifgp::serve::{ServeEngine, ServeModel, ServeOptions};
 use vifgp::vecchia::neighbors::NeighborSelection;
 use vifgp::vif::gaussian::{GaussianParams, VifRegression};
 use vifgp::vif::laplace::{PredVarMethod, SolveMode, VifLaplaceModel};
 use vifgp::vif::VifConfig;
+
+/// Unwrap a `cli` parse result or exit 2 with the error on stderr.
+macro_rules! require {
+    ($e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(msg) => {
+                eprintln!("{msg}");
+                return 2;
+            }
+        }
+    };
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,6 +65,7 @@ fn main() {
         "info" => cmd_info(),
         "simulate" => cmd_simulate(&flags),
         "train" => cmd_train(&flags),
+        "serve" => cmd_serve(&flags),
         "experiment" => cmd_experiment(&args[1..]),
         "help" | "--help" | "-h" => {
             usage();
@@ -63,6 +88,10 @@ USAGE:
   vifgp simulate --n N --d D [--smoothness S] [--likelihood L] [--seed K] --out FILE
   vifgp train --data FILE [--m M] [--mv MV] [--smoothness S] [--likelihood L]
               [--precond fitc|vifdu|none] [--iters I] [--test-frac F] [--seed K]
+  vifgp serve --data FILE [--m M] [--mv MV] [--smoothness S] [--likelihood L]
+              [--iters I] [--test-frac F] [--seed K] [--requests N]
+              [--concurrency C] [--append-every A] [--max-batch B]
+              [--batch-window-us W]
   vifgp experiment NAME   (see rust/benches/ for the table/figure harnesses)
 GLOBAL FLAGS (any command):
   --threads N           worker-pool size (default: detected parallelism;
@@ -96,46 +125,6 @@ fn apply_runtime_flags(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut out = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                out.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                out.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
-        } else {
-            i += 1;
-        }
-    }
-    out
-}
-
-fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
-    flags
-        .get(key)
-        .and_then(|v| v.parse::<T>().ok())
-        .unwrap_or(default)
-}
-
-fn parse_likelihood(flags: &HashMap<String, String>) -> Likelihood {
-    match flags.get("likelihood").map(|s| s.as_str()).unwrap_or("gaussian") {
-        "gaussian" => Likelihood::Gaussian { variance: 0.1 },
-        "bernoulli" | "binary" => Likelihood::BernoulliLogit,
-        "poisson" => Likelihood::Poisson,
-        "gamma" => Likelihood::Gamma { shape: 2.0 },
-        "student_t" | "studentt" => Likelihood::StudentT { scale: 0.2, df: 4.0 },
-        other => {
-            eprintln!("unknown likelihood `{other}`, using gaussian");
-            Likelihood::Gaussian { variance: 0.1 }
-        }
-    }
-}
-
 fn init_runtime() {
     let dir = vifgp::runtime::default_artifact_dir();
     if vifgp::runtime::init_from_artifacts(&dir) {
@@ -161,12 +150,11 @@ fn cmd_info() -> i32 {
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
-    let n: usize = flag(flags, "n", 5000);
-    let d: usize = flag(flags, "d", 2);
-    let seed: u64 = flag(flags, "seed", 0);
-    let smoothness = Smoothness::parse(flags.get("smoothness").map(|s| s.as_str()).unwrap_or("1.5"))
-        .unwrap_or(Smoothness::ThreeHalves);
-    let lik = parse_likelihood(flags);
+    let n: usize = require!(flag(flags, "n", 5000));
+    let d: usize = require!(flag(flags, "d", 2));
+    let seed: u64 = require!(flag(flags, "seed", 0));
+    let smoothness = require!(parse_smoothness(flags));
+    let lik = require!(parse_likelihood(flags));
     let Some(out) = flags.get("out") else {
         eprintln!("--out FILE required");
         return 2;
@@ -189,11 +177,28 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
 }
 
 fn cmd_train(flags: &HashMap<String, String>) -> i32 {
-    init_runtime();
+    // Validate the whole flag surface before touching the filesystem, so
+    // a malformed flag is always the exit-2 error the user sees.
+    let seed: u64 = require!(flag(flags, "seed", 0));
+    let test_frac: f64 = require!(flag(flags, "test-frac", 0.2).and_then(validate_test_frac));
+    let m: usize = require!(flag(flags, "m", 200));
+    let mv: usize = require!(flag(flags, "mv", 30));
+    let iters: usize = require!(flag(flags, "iters", 50));
+    let smoothness = require!(parse_smoothness(flags));
+    let lik = require!(parse_likelihood(flags));
+    let precond_name = flags.get("precond").map(|s| s.as_str()).unwrap_or("fitc");
+    let Some(precond) = PrecondType::parse(precond_name) else {
+        eprintln!(
+            "unknown --precond `{precond_name}`; valid names (case-insensitive): {}",
+            PrecondType::VALID_NAMES.join(", ")
+        );
+        return 2;
+    };
     let Some(path) = flags.get("data") else {
         eprintln!("--data FILE required");
         return 2;
     };
+    init_runtime();
     let (x, y) = match data::load_csv(std::path::Path::new(path)) {
         Ok(v) => v,
         Err(e) => {
@@ -203,22 +208,6 @@ fn cmd_train(flags: &HashMap<String, String>) -> i32 {
     };
     let n = x.rows();
     let d = x.cols();
-    let seed: u64 = flag(flags, "seed", 0);
-    let test_frac: f64 = flag(flags, "test-frac", 0.2);
-    let m: usize = flag(flags, "m", 200);
-    let mv: usize = flag(flags, "mv", 30);
-    let iters: usize = flag(flags, "iters", 50);
-    let smoothness = Smoothness::parse(flags.get("smoothness").map(|s| s.as_str()).unwrap_or("1.5"))
-        .unwrap_or(Smoothness::ThreeHalves);
-    let lik = parse_likelihood(flags);
-    let precond_name = flags.get("precond").map(|s| s.as_str()).unwrap_or("fitc");
-    let Some(precond) = PrecondType::parse(precond_name) else {
-        eprintln!(
-            "unknown --precond `{precond_name}`; valid names (case-insensitive): {}",
-            PrecondType::VALID_NAMES.join(", ")
-        );
-        return 2;
-    };
 
     let mut rng = Rng::seed_from(seed);
     let n_test = ((n as f64) * test_frac).round() as usize;
@@ -307,6 +296,187 @@ fn cmd_train(flags: &HashMap<String, String>) -> i32 {
                 }
             }
         }
+    }
+    0
+}
+
+/// `vifgp serve`: fit a model, freeze a serving snapshot, and drive the
+/// concurrent engine with an in-process load generator — `--concurrency`
+/// client threads issuing `--requests` point queries total, optionally
+/// with a writer ingesting `--append-batch` points every
+/// `--append-every` requests and publishing the new generation under
+/// traffic. Prints the p50/p99 latency and points/sec report; writes it
+/// to `VIFGP_SERVE_METRICS_JSON` when set.
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    // Flags and env knobs first (exit 2 / loud panic), filesystem second.
+    let seed: u64 = require!(flag(flags, "seed", 0));
+    let test_frac: f64 = require!(flag(flags, "test-frac", 0.2).and_then(validate_test_frac));
+    let m: usize = require!(flag(flags, "m", 200));
+    let mv: usize = require!(flag(flags, "mv", 30));
+    let iters: usize = require!(flag(flags, "iters", 30));
+    let requests: usize = require!(flag(flags, "requests", 4096));
+    let concurrency: usize = require!(flag(flags, "concurrency", 8));
+    let append_every: usize = require!(flag(flags, "append-every", 0));
+    let append_batch: usize = require!(flag(flags, "append-batch", 16));
+    let smoothness = require!(parse_smoothness(flags));
+    let lik = require!(parse_likelihood(flags));
+    if concurrency == 0 {
+        eprintln!("--concurrency expects a positive integer, got `0`");
+        return 2;
+    }
+    let mut opts = ServeOptions::from_env();
+    if flags.contains_key("max-batch") {
+        opts.max_batch = require!(flag(flags, "max-batch", opts.max_batch));
+        if opts.max_batch == 0 {
+            eprintln!("--max-batch expects a positive integer, got `0`");
+            return 2;
+        }
+    }
+    if flags.contains_key("batch-window-us") {
+        let us: u64 = require!(flag(flags, "batch-window-us", 200));
+        opts.batch_window = std::time::Duration::from_micros(us);
+    }
+    let Some(path) = flags.get("data") else {
+        eprintln!("--data FILE required");
+        return 2;
+    };
+    init_runtime();
+    let (x, y) = match data::load_csv(std::path::Path::new(path)) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("load failed: {e}");
+            return 1;
+        }
+    };
+    let n = x.rows();
+    let d = x.cols();
+
+    let mut rng = Rng::seed_from(seed);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (tr, te) = data::train_test_split(&mut rng, n, n_test);
+    let (xtr, ytr) = (data::subset_rows(&x, &tr), data::subset_vec(&y, &tr));
+    let (xte, yte) = (data::subset_rows(&x, &te), data::subset_vec(&y, &te));
+    println!("loaded {n}×{d}; train {} / query pool {}", tr.len(), te.len());
+    // Query pool: held-out rows, or resampled training rows when the
+    // split leaves none. The writer's ingest stream reuses the pool too.
+    let (qpool, qresp) = if te.is_empty() { (xtr.clone(), ytr.clone()) } else { (xte, yte) };
+
+    let config = VifConfig {
+        smoothness,
+        num_inducing: m.min(xtr.rows()),
+        num_neighbors: mv,
+        selection: NeighborSelection::CorrelationCoverTree,
+        seed,
+        ..Default::default()
+    };
+    let init_kernel = ArdMatern::isotropic(1.0, 0.5, d, smoothness);
+    let t0 = std::time::Instant::now();
+    // Fit, snapshot, and keep the writer-side model for ingest.
+    enum Writer {
+        Gaussian(VifRegression),
+        Laplace(VifLaplaceModel),
+    }
+    let (snapshot, mut writer): (Arc<dyn ServeModel>, Writer) = match lik {
+        Likelihood::Gaussian { .. } => {
+            let init = GaussianParams { kernel: init_kernel, noise: 0.2 };
+            let mut model = VifRegression::new(xtr, ytr, config, init);
+            let nll = model.fit(iters);
+            println!("fit done in {:.1}s  NLL {:.3}", t0.elapsed().as_secs_f64(), nll);
+            (Arc::new(model.snapshot()), Writer::Gaussian(model))
+        }
+        _ => {
+            let mode = SolveMode::Iterative(IterConfig { seed, ..Default::default() });
+            let mut model = VifLaplaceModel::new(xtr, ytr, config, mode, init_kernel, lik);
+            let nll = model.fit(iters);
+            println!("fit done in {:.1}s  L^VIFLA {:.3}", t0.elapsed().as_secs_f64(), nll);
+            if model.state.is_none() {
+                model.refresh_state();
+            }
+            (Arc::new(model.snapshot()), Writer::Laplace(model))
+        }
+    };
+
+    let mut engine = ServeEngine::start(snapshot, opts.clone());
+    println!(
+        "serving generation {} (max_batch {}, batch_window {:?}, {} clients, {} requests)",
+        engine.current_generation(),
+        opts.max_batch,
+        opts.batch_window,
+        concurrency,
+        requests
+    );
+    let served = std::sync::atomic::AtomicUsize::new(0);
+    let t1 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        let engine = &engine;
+        let served = &served;
+        let qpool = &qpool;
+        // Client threads: round-robin over the query pool.
+        for t in 0..concurrency {
+            scope.spawn(move || {
+                let mut i = t;
+                while i < requests {
+                    let row = qpool.row(i % qpool.rows());
+                    if let Err(e) = engine.predict(row) {
+                        eprintln!("request failed: {e}");
+                    }
+                    served.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    i += concurrency;
+                }
+            });
+        }
+        // Writer: ingest + publish new generations under traffic.
+        if append_every > 0 {
+            scope.spawn(move || {
+                let mut appended = 0usize;
+                loop {
+                    let done = served.load(std::sync::atomic::Ordering::Relaxed);
+                    if done >= requests {
+                        break;
+                    }
+                    if done / append_every > appended {
+                        appended = done / append_every;
+                        let lo = (appended * append_batch) % qpool.rows();
+                        let take = append_batch.min(qpool.rows() - lo);
+                        let xa = vifgp::Mat::from_fn(take, d, |i, j| qpool.get(lo + i, j));
+                        let ya: Vec<f64> = (0..take).map(|i| qresp[lo + i]).collect();
+                        let generation = match &mut writer {
+                            Writer::Gaussian(mdl) => {
+                                mdl.append_points(&xa, &ya).expect("append failed");
+                                engine.publish(Arc::new(mdl.snapshot()))
+                            }
+                            Writer::Laplace(mdl) => {
+                                mdl.append_points(&xa, &ya).expect("append failed");
+                                mdl.refresh_state();
+                                engine.publish(Arc::new(mdl.snapshot()))
+                            }
+                        };
+                        println!("published generation {generation} (+{take} points)");
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            });
+        }
+    });
+    let wall = t1.elapsed().as_secs_f64();
+    engine.shutdown();
+    let report = engine.metrics().report();
+    println!(
+        "served {} requests in {:.2}s: p50 {:.0}µs  p99 {:.0}µs  {:.0} points/sec  \
+         mean batch {:.1}",
+        report.requests,
+        wall,
+        report.p50_latency_us,
+        report.p99_latency_us,
+        report.points_per_sec,
+        report.mean_batch
+    );
+    if let Ok(path) = std::env::var("VIFGP_SERVE_METRICS_JSON") {
+        if let Err(e) = std::fs::write(&path, report.to_json()) {
+            eprintln!("metrics write failed ({path}): {e}");
+            return 1;
+        }
+        println!("metrics written to {path}");
     }
     0
 }

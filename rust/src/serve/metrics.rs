@@ -1,0 +1,165 @@
+//! Serving metrics: per-request latency recording and windowed
+//! percentile reports (p50/p99, points/sec).
+//!
+//! The recorder is deliberately simple — a mutex-guarded latency vector
+//! per measurement window. Requests finish at micro-batch granularity
+//! (≤ `max_batch` per dispatch), so the dispatcher takes the lock once
+//! per *batch*, not once per point, and the lock never sits on the
+//! request threads' enqueue path.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe latency/throughput recorder for one serving engine.
+pub struct ServeMetrics {
+    inner: Mutex<Window>,
+}
+
+struct Window {
+    /// Per-request end-to-end latency (enqueue → reply), microseconds.
+    latencies_us: Vec<f64>,
+    /// Micro-batches dispatched in this window.
+    batches: u64,
+    /// Window start (for points/sec).
+    started: Instant,
+}
+
+impl Window {
+    fn fresh() -> Self {
+        Window { latencies_us: Vec::new(), batches: 0, started: Instant::now() }
+    }
+}
+
+/// A point-in-time summary of one measurement window.
+#[derive(Clone, Debug)]
+pub struct MetricsReport {
+    /// Requests completed in the window.
+    pub requests: u64,
+    /// Median end-to-end latency (µs).
+    pub p50_latency_us: f64,
+    /// 99th-percentile end-to-end latency (µs).
+    pub p99_latency_us: f64,
+    /// Mean end-to-end latency (µs).
+    pub mean_latency_us: f64,
+    /// Completed points per second over the window.
+    pub points_per_sec: f64,
+    /// Micro-batches dispatched.
+    pub batches: u64,
+    /// Mean points per micro-batch.
+    pub mean_batch: f64,
+    /// Window length (seconds).
+    pub elapsed_secs: f64,
+}
+
+impl MetricsReport {
+    /// Render as a compact JSON object (used by `vifgp serve` and the
+    /// serving bench artifact).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"requests\": {}, \"p50_latency_us\": {:.2}, \"p99_latency_us\": {:.2}, ",
+                "\"mean_latency_us\": {:.2}, \"points_per_sec\": {:.1}, \"batches\": {}, ",
+                "\"mean_batch\": {:.2}, \"elapsed_secs\": {:.4}}}"
+            ),
+            self.requests,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.mean_latency_us,
+            self.points_per_sec,
+            self.batches,
+            self.mean_batch,
+            self.elapsed_secs,
+        )
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`q` in [0,1]).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        ServeMetrics { inner: Mutex::new(Window::fresh()) }
+    }
+
+    /// Record one dispatched micro-batch (one latency entry per point).
+    pub(crate) fn record_batch(&self, latencies_us: &[f64]) {
+        let mut w = self.inner.lock().unwrap();
+        w.latencies_us.extend_from_slice(latencies_us);
+        w.batches += 1;
+    }
+
+    fn summarize(w: &Window) -> MetricsReport {
+        let mut sorted = w.latencies_us.clone();
+        sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+        let requests = sorted.len() as u64;
+        let elapsed = w.started.elapsed().as_secs_f64();
+        MetricsReport {
+            requests,
+            p50_latency_us: percentile(&sorted, 0.50),
+            p99_latency_us: percentile(&sorted, 0.99),
+            mean_latency_us: if sorted.is_empty() {
+                0.0
+            } else {
+                sorted.iter().sum::<f64>() / sorted.len() as f64
+            },
+            points_per_sec: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            batches: w.batches,
+            mean_batch: if w.batches > 0 { requests as f64 / w.batches as f64 } else { 0.0 },
+            elapsed_secs: elapsed,
+        }
+    }
+
+    /// Summarize the current window without resetting it.
+    pub fn report(&self) -> MetricsReport {
+        Self::summarize(&self.inner.lock().unwrap())
+    }
+
+    /// Summarize the current window and start a fresh one (the bench's
+    /// per-concurrency-sweep reset).
+    pub fn drain(&self) -> MetricsReport {
+        let mut w = self.inner.lock().unwrap();
+        let report = Self::summarize(&w);
+        *w = Window::fresh();
+        report
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn drain_resets_window() {
+        let m = ServeMetrics::new();
+        m.record_batch(&[10.0, 20.0, 30.0]);
+        let r = m.drain();
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.batches, 1);
+        assert!((r.mean_batch - 3.0).abs() < 1e-12);
+        let r2 = m.report();
+        assert_eq!(r2.requests, 0);
+        assert_eq!(r2.batches, 0);
+    }
+}

@@ -1,0 +1,316 @@
+//! Long-lived concurrent serving engine for fitted VIF models
+//! (ROADMAP item 1): generation-snapshotted read state, micro-batched
+//! request coalescing, and latency/throughput metrics.
+//!
+//! # Architecture
+//!
+//! ```text
+//! request threads        dispatcher thread            writer thread
+//! ──────────────        ─────────────────            ─────────────
+//! predict(point) ──► queue (Mutex + Condvar)         append_points /
+//!      ▲                    │ coalesce ≤ max_batch    refit on its own
+//!      │                    │ within batch_window     model copy, then
+//!      │                    ▼                         snapshot()
+//!   reply ◄── ServeModel::predict_batch(X_batch)          │
+//!              ▲                                          │
+//!              └── RwLock<Arc<dyn ServeModel>> ◄── publish(Arc::new(snap))
+//! ```
+//!
+//! * **Generation snapshots.** The engine never mutates model state. It
+//!   holds an `Arc<dyn ServeModel>` — in practice a
+//!   [`crate::vif::gaussian::FittedGaussian`] or
+//!   [`crate::vif::laplace::FittedLaplace`] snapshot, which owns its
+//!   structure *and* its per-generation read caches (the prediction
+//!   cover tree and the hoisted global mean solves). A writer ingests or
+//!   refits on its own authoritative model and [`ServeEngine::publish`]es
+//!   a fresh snapshot; the swap is one `Arc` store under a write lock.
+//!   Every request batch grabs the current `Arc` once and serves
+//!   entirely against that coherent generation, so the
+//!   `PredictBlocks::compute` stale-plan panic path is unreachable by
+//!   construction: plans are built from the same snapshot they are
+//!   evaluated against, and in-flight batches keep the old generation
+//!   alive until their last reply is sent (old-complete or new-complete,
+//!   never mixed).
+//! * **Micro-batching.** Point queries enqueue onto a `Mutex<VecDeque>`;
+//!   a dispatcher thread coalesces them — up to
+//!   [`ServeOptions::max_batch`] points (default 64, the numeric pass's
+//!   column-block width) or until [`ServeOptions::batch_window`] has
+//!   passed since the oldest enqueued request — and runs one batched
+//!   prediction. The batched numeric pass is per-point independent, so
+//!   coalescing changes throughput, never results.
+//! * **Metrics.** Per-request end-to-end latency (enqueue → reply) and
+//!   batch occupancy land in [`ServeMetrics`]; [`ServeMetrics::drain`]
+//!   yields p50/p99/points-per-sec windows for the load bench
+//!   (`BENCH_serving.json`, perf_hotpath stage 14).
+//!
+//! # Env knobs (see the crate-level table)
+//!
+//! `VIFGP_SERVE_MAX_BATCH`, `VIFGP_SERVE_BATCH_WINDOW_US` configure
+//! [`ServeOptions::from_env`]; `VIFGP_SERVE_METRICS_JSON` is consumed by
+//! the `vifgp serve` subcommand. Malformed values panic loudly, like
+//! every other `VIFGP_*` knob.
+
+mod metrics;
+
+pub use metrics::{MetricsReport, ServeMetrics};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::linalg::Mat;
+
+/// What the engine needs from a fitted model: an immutable, thread-safe
+/// batched read path stamped with its structure generation.
+///
+/// Implementors are *snapshots* — all interior state (including caches)
+/// is built at construction, so `predict_batch` is a pure read and may
+/// run concurrently from many threads.
+pub trait ServeModel: Send + Sync {
+    /// Input dimension the model was trained on.
+    fn input_dim(&self) -> usize;
+    /// Structure generation this snapshot serves.
+    fn generation(&self) -> u64;
+    /// Batched posterior (mean, variance) at `xp` (one row per point).
+    /// Gaussian snapshots return the response-scale mean/variance;
+    /// Laplace snapshots the latent mean and deterministic variance.
+    fn predict_batch(&self, xp: &Mat) -> (Vec<f64>, Vec<f64>);
+}
+
+impl ServeModel for crate::vif::gaussian::FittedGaussian {
+    fn input_dim(&self) -> usize {
+        self.x.cols()
+    }
+    fn generation(&self) -> u64 {
+        self.generation()
+    }
+    fn predict_batch(&self, xp: &Mat) -> (Vec<f64>, Vec<f64>) {
+        self.predict(xp)
+    }
+}
+
+impl ServeModel for crate::vif::laplace::FittedLaplace {
+    fn input_dim(&self) -> usize {
+        self.x.cols()
+    }
+    fn generation(&self) -> u64 {
+        self.generation()
+    }
+    fn predict_batch(&self, xp: &Mat) -> (Vec<f64>, Vec<f64>) {
+        self.predict(xp)
+    }
+}
+
+/// Micro-batching knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Maximum points per dispatched batch (≥ 1). Default 64 — the
+    /// `PRED_BLOCK` column width of the batched numeric pass, so a full
+    /// micro-batch is exactly one block.
+    pub max_batch: usize,
+    /// How long the dispatcher waits past the *oldest* queued request
+    /// for more arrivals before dispatching a partial batch. `0` serves
+    /// whatever is queued immediately. Default 200µs.
+    pub batch_window: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_batch: 64, batch_window: Duration::from_micros(200) }
+    }
+}
+
+/// Parse an integer env knob loudly: a set-but-malformed value panics
+/// (crate policy), absent uses the default.
+fn env_knob(name: &str, default: u64, min: u64) -> u64 {
+    match std::env::var(name) {
+        Ok(s) => match s.parse::<u64>() {
+            Ok(v) if v >= min => v,
+            _ => panic!("{name} expects an integer ≥ {min}, got `{s}`"),
+        },
+        Err(_) => default,
+    }
+}
+
+impl ServeOptions {
+    /// Defaults overridden by `VIFGP_SERVE_MAX_BATCH` /
+    /// `VIFGP_SERVE_BATCH_WINDOW_US`. Malformed values panic loudly.
+    pub fn from_env() -> Self {
+        ServeOptions {
+            max_batch: env_knob("VIFGP_SERVE_MAX_BATCH", 64, 1) as usize,
+            batch_window: Duration::from_micros(env_knob("VIFGP_SERVE_BATCH_WINDOW_US", 200, 0)),
+        }
+    }
+}
+
+/// One served prediction, stamped with the generation that produced it
+/// so callers (and the swap-under-traffic tests) can tell which
+/// published state they observed.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub mean: f64,
+    pub var: f64,
+    pub generation: u64,
+}
+
+struct Pending {
+    point: Vec<f64>,
+    enqueued: Instant,
+    reply: mpsc::SyncSender<Result<Prediction, String>>,
+}
+
+struct Shared {
+    /// The published generation. Readers clone the `Arc` once per batch.
+    state: RwLock<Arc<dyn ServeModel>>,
+    queue: Mutex<VecDeque<Pending>>,
+    arrived: Condvar,
+    shutdown: AtomicBool,
+    opts: ServeOptions,
+    metrics: ServeMetrics,
+}
+
+/// The serving engine: one dispatcher thread draining a shared request
+/// queue into micro-batched reads of the published model snapshot. See
+/// the module docs for the full lifecycle.
+pub struct ServeEngine {
+    shared: Arc<Shared>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeEngine {
+    /// Start the engine serving `model`.
+    pub fn start(model: Arc<dyn ServeModel>, opts: ServeOptions) -> Self {
+        assert!(opts.max_batch >= 1, "ServeOptions::max_batch must be ≥ 1");
+        let shared = Arc::new(Shared {
+            state: RwLock::new(model),
+            queue: Mutex::new(VecDeque::new()),
+            arrived: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            opts,
+            metrics: ServeMetrics::new(),
+        });
+        let worker = Arc::clone(&shared);
+        let dispatcher = std::thread::Builder::new()
+            .name("vifgp-serve".into())
+            .spawn(move || dispatcher_loop(&worker))
+            .expect("spawn serve dispatcher");
+        ServeEngine { shared, dispatcher: Some(dispatcher) }
+    }
+
+    /// Serve one point query: enqueue, wait for the micro-batched reply.
+    /// Blocks the calling thread; safe from any number of threads.
+    pub fn predict(&self, point: &[f64]) -> Result<Prediction, String> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                return Err("serving engine is shut down".to_string());
+            }
+            q.push_back(Pending { point: point.to_vec(), enqueued: Instant::now(), reply: tx });
+        }
+        self.shared.arrived.notify_one();
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("serving engine dropped the request".to_string()),
+        }
+    }
+
+    /// Atomically publish a new model snapshot (a refit or an
+    /// `append_points` ingest). In-flight batches finish against the
+    /// generation they started with; every later batch sees the new one.
+    /// Returns the published generation.
+    pub fn publish(&self, model: Arc<dyn ServeModel>) -> u64 {
+        let generation = model.generation();
+        *self.shared.state.write().unwrap() = model;
+        generation
+    }
+
+    /// Generation currently being served.
+    pub fn current_generation(&self) -> u64 {
+        self.shared.state.read().unwrap().generation()
+    }
+
+    /// Latency/throughput recorder (use `report()`/`drain()`).
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.shared.metrics
+    }
+
+    /// Stop accepting requests, serve everything already queued, and
+    /// join the dispatcher. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.arrived.notify_all();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dispatcher_loop(shared: &Shared) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut q = shared.queue.lock().unwrap();
+            // Wait for work (or shutdown with an empty queue → done).
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.arrived.wait(q).unwrap();
+            }
+            // Coalesce: fill up to max_batch, bounded by batch_window
+            // past the oldest request's enqueue time. On shutdown, flush
+            // immediately.
+            let deadline = q.front().unwrap().enqueued + shared.opts.batch_window;
+            while q.len() < shared.opts.max_batch && !shared.shutdown.load(Ordering::Acquire) {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared.arrived.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+            }
+            let take = q.len().min(shared.opts.max_batch);
+            q.drain(..take).collect()
+        };
+        serve_batch(shared, batch);
+    }
+}
+
+fn serve_batch(shared: &Shared, batch: Vec<Pending>) {
+    // One coherent snapshot per batch: the Arc clone pins the generation
+    // for the whole dispatch even if a publish lands mid-compute.
+    let model = Arc::clone(&shared.state.read().unwrap());
+    let d = model.input_dim();
+    let generation = model.generation();
+    // Reject malformed queries up front; serve the rest as one block.
+    let mut ok: Vec<Pending> = Vec::with_capacity(batch.len());
+    for p in batch {
+        if p.point.len() == d {
+            ok.push(p);
+        } else {
+            let msg = format!("query has dimension {}, model expects {}", p.point.len(), d);
+            let _ = p.reply.send(Err(msg));
+        }
+    }
+    if ok.is_empty() {
+        return;
+    }
+    let xp = Mat::from_fn(ok.len(), d, |i, j| ok[i].point[j]);
+    let (mean, var) = model.predict_batch(&xp);
+    let mut latencies = Vec::with_capacity(ok.len());
+    for (i, p) in ok.iter().enumerate() {
+        latencies.push(p.enqueued.elapsed().as_secs_f64() * 1e6);
+        let _ = p.reply.send(Ok(Prediction { mean: mean[i], var: var[i], generation }));
+    }
+    shared.metrics.record_batch(&latencies);
+}

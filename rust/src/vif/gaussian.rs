@@ -445,6 +445,76 @@ impl VifRegression {
         let s = self.structure.as_ref().expect("fit or assemble first");
         predict_with_plan(s, &self.params.kernel, &self.y, xp, plan)
     }
+
+    /// Freeze the fitted state into an immutable serving snapshot
+    /// ([`FittedGaussian`]): the data, parameters, and assembled
+    /// structure are cloned (no fit-time scratch — no [`VifPlan`], no
+    /// optimizer trace), and the per-generation read caches (the hoisted
+    /// mean solves and the prediction cover tree) are built once here so
+    /// request threads only ever run the per-batch numeric pass. The
+    /// model must be assembled (`fit`/`assemble`) first.
+    pub fn snapshot(&self) -> FittedGaussian {
+        let s = self.structure.as_ref().expect("fit or assemble before snapshot");
+        let mean_cache = predict::MeanCache::build(s, &self.y);
+        let search_cache =
+            predict::PredSearchCache::build(s, &self.x, &self.params.kernel, self.config.selection);
+        FittedGaussian {
+            config: self.config.clone(),
+            x: self.x.clone(),
+            y: self.y.clone(),
+            params: self.params.clone(),
+            structure: s.clone(),
+            mean_cache,
+            search_cache,
+        }
+    }
+}
+
+/// Immutable fitted-state snapshot of a [`VifRegression`] — the serving
+/// handle. Owns exactly what the prediction read path needs (data,
+/// parameters, assembled [`VifStructure`]) plus the per-generation read
+/// caches ([`predict::MeanCache`], [`predict::PredSearchCache`]), so a
+/// server publishes one `Arc<FittedGaussian>` per θ-generation and every
+/// request batch against it is a pure read: plan build from the cached
+/// cover tree, batched numeric pass, cached-mean gather. No interior
+/// mutability — a refit or append produces a *new* snapshot (new
+/// generation) instead of mutating this one.
+pub struct FittedGaussian {
+    pub config: VifConfig,
+    pub x: Mat,
+    pub y: Vec<f64>,
+    pub params: GaussianParams,
+    pub structure: VifStructure,
+    mean_cache: predict::MeanCache,
+    search_cache: predict::PredSearchCache,
+}
+
+impl FittedGaussian {
+    /// Structure generation this snapshot serves.
+    pub fn generation(&self) -> u64 {
+        self.structure.generation
+    }
+
+    /// Predictive mean and response variance for a batch of points —
+    /// numerically identical to [`VifRegression::predict_with_plan`] on
+    /// the source model (same conditioning-set search, same batched
+    /// numeric pass; the global mean solves come from the snapshot's
+    /// cache instead of being recomputed per call).
+    pub fn predict(&self, xp: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let s = &self.structure;
+        let plan = predict::PredictPlan::build_cached(
+            s,
+            &self.x,
+            &self.params.kernel,
+            xp,
+            self.config.num_neighbors.max(1),
+            self.config.selection,
+            Some(&self.search_cache),
+        );
+        let blocks = predict::PredictBlocks::compute(s, &self.params.kernel, xp, &plan, 1e-10);
+        let mean = predict::posterior_mean_cached(&plan, &blocks, &self.mean_cache);
+        (mean, blocks.var_det)
+    }
 }
 
 impl FitModel for VifRegression {

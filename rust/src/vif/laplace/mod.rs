@@ -27,6 +27,10 @@ mod wsolver;
 pub use wsolver::{OpWinvPlusCov, OpWPlusPrec, SolveMode, WSolver};
 
 /// Mode-finding result (Newton's method, Eq. 13).
+///
+/// `Clone` exists for the serving snapshot path ([`crate::serve`]): the
+/// mode vector is part of the immutable per-generation read state.
+#[derive(Clone)]
 pub struct LaplaceState {
     /// The mode b̃.
     pub b: Vec<f64>,
@@ -1336,6 +1340,76 @@ impl VifLaplaceModel {
         let mut rng = Rng::seed_from(self.config.seed ^ 0xC0FFEE);
         let (_, state) = nll(s, &self.x, &self.kernel, &self.lik, &self.y, &self.mode, &mut rng);
         self.state = Some(state);
+    }
+
+    /// Freeze the fitted state into an immutable serving snapshot
+    /// ([`FittedLaplace`]): data, kernel/likelihood parameters, the
+    /// assembled latent-scale structure, and the Laplace mode are cloned
+    /// (no fit-time scratch — no [`VifPlan`], no optimizer trace), and
+    /// the per-generation read caches are built once here. The model
+    /// must be assembled and have a mode (`fit`, or
+    /// `assemble` + [`Self::refresh_state`]) first.
+    pub fn snapshot(&self) -> FittedLaplace {
+        let s = self.structure.as_ref().expect("fit or assemble before snapshot");
+        let state = self.state.as_ref().expect("fit or refresh_state before snapshot");
+        let mean_cache = predict::MeanCache::build(s, &state.b);
+        let search_cache =
+            predict::PredSearchCache::build(s, &self.x, &self.kernel, self.config.selection);
+        FittedLaplace {
+            config: self.config.clone(),
+            x: self.x.clone(),
+            kernel: self.kernel.clone(),
+            lik: self.lik.clone(),
+            structure: s.clone(),
+            state: state.clone(),
+            mean_cache,
+            search_cache,
+        }
+    }
+}
+
+/// Immutable fitted-state snapshot of a [`VifLaplaceModel`] — the
+/// serving handle, mirroring [`crate::vif::gaussian::FittedGaussian`].
+/// Serves the *deterministic* predictive quantities (latent mean and the
+/// Eq. 20 variance with `B_p = I`); the stochastic SBPV/SPV correction
+/// needs a CG solver and probe RNG per call, which stays on the offline
+/// [`VifLaplaceModel::predict_with_plan`] path.
+pub struct FittedLaplace {
+    pub config: crate::vif::VifConfig,
+    pub x: Mat,
+    pub kernel: ArdMatern,
+    pub lik: Likelihood,
+    pub structure: VifStructure,
+    pub state: LaplaceState,
+    mean_cache: predict::MeanCache,
+    search_cache: predict::PredSearchCache,
+}
+
+impl FittedLaplace {
+    /// Structure generation this snapshot serves.
+    pub fn generation(&self) -> u64 {
+        self.structure.generation
+    }
+
+    /// Latent posterior mean and deterministic latent variance for a
+    /// batch of points — identical to the `latent_mean` /
+    /// deterministic-variance half of [`predict_with_plan`] (the shared
+    /// batched pipeline at latent-scale jitter `1e-8`), with the global
+    /// mean solves served from the snapshot's cache.
+    pub fn predict(&self, xp: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let s = &self.structure;
+        let plan = predict::PredictPlan::build_cached(
+            s,
+            &self.x,
+            &self.kernel,
+            xp,
+            self.config.num_neighbors.max(1),
+            self.config.selection,
+            Some(&self.search_cache),
+        );
+        let blocks = predict::PredictBlocks::compute(s, &self.kernel, xp, &plan, 1e-8);
+        let mean = predict::posterior_mean_cached(&plan, &blocks, &self.mean_cache);
+        (mean, blocks.var_det)
     }
 }
 

@@ -87,6 +87,37 @@
 //! plan (generation mismatch ⇒ panic with a rebuild hint); the softer
 //! θ/Z-keyed panel-cache fallback stays observable through
 //! [`predict::lr_panel_cache_misses`].
+//!
+//! # Serving lifecycle (snapshot → publish → swap)
+//!
+//! The lifecycle above describes a *mutating* model (fit, append,
+//! compact). Concurrent serving ([`crate::serve`]) never takes locks
+//! around that mutation; it freezes it out instead:
+//!
+//! 1. **snapshot** — `VifRegression::snapshot` /
+//!    `VifLaplaceModel::snapshot` clone the fitted read state (data,
+//!    parameters, assembled [`VifStructure`]) into an immutable
+//!    [`gaussian::FittedGaussian`] / [`laplace::FittedLaplace`] and
+//!    build the per-generation read caches once: the hoisted global
+//!    mean solves ([`predict::MeanCache`] — the two Σ_†⁻¹-sized solves
+//!    shared by every query) and the prediction cover tree
+//!    ([`predict::PredSearchCache`] — the tree only touches
+//!    training–training correlations, so one tree serves every future
+//!    query batch, however the micro-batcher slices it).
+//! 2. **publish** — the writer hands an `Arc` of the snapshot to
+//!    [`crate::serve::ServeEngine::publish`]; the swap is one atomic
+//!    `Arc` store. The authoritative model keeps mutating on the writer
+//!    thread only.
+//! 3. **swap semantics** — each request batch clones the published
+//!    `Arc` once and builds its [`predict::PredictPlan`] *from that
+//!    snapshot* ([`predict::PredictPlan::build_cached`]), so plan and
+//!    numeric pass always see one coherent generation: the stale-plan
+//!    panic is unreachable on the serving path, and in-flight batches
+//!    finish against the old generation while new batches pick up the
+//!    new one (old-complete or new-complete, never mixed). Cache-key
+//!    mismatches degrade softly and observably
+//!    ([`predict::pred_search_cache_misses`]), mirroring the
+//!    [`predict::lr_panel_cache_misses`] precedent.
 
 pub mod gaussian;
 pub mod laplace;
@@ -138,6 +169,11 @@ impl Default for VifConfig {
 /// Low-rank (predictive-process) blocks for a fixed kernel and inducing
 /// set: `Σ_m = K(Z,Z)`, `Σ_mn = K(Z,X)` and the two solved panels used
 /// everywhere downstream.
+///
+/// `Clone` exists for the serving snapshot path ([`crate::serve`]): a
+/// publish clones the fitted numeric state once so request threads read
+/// an immutable generation while the writer keeps mutating its own copy.
+#[derive(Clone)]
 pub struct LowRank {
     /// Inducing inputs Z (m×d).
     pub z: Mat,
@@ -811,6 +847,12 @@ fn next_generation() -> u64 {
 }
 
 /// The assembled VIF structure for one parameter vector θ.
+///
+/// `Clone` copies every numeric block (O(n·(m + m_v)) memory) and keeps
+/// the generation stamp; it exists so the serving engine
+/// ([`crate::serve`]) can freeze a fitted structure into an immutable
+/// snapshot while the writer's copy continues to `append`/`refresh`.
+#[derive(Clone)]
 pub struct VifStructure {
     /// Low-rank part (None when m = 0 → pure Vecchia).
     pub lr: Option<LowRank>,

@@ -171,6 +171,37 @@ impl PredictPlan {
         }
     }
 
+    /// Like [`PredictPlan::build`], but reuses a per-generation
+    /// [`PredSearchCache`] so repeated small-batch builds (the serving
+    /// micro-batch path) skip the per-call cover-tree construction. A
+    /// cache keyed for a different generation or θ is ignored (counted
+    /// by [`pred_search_cache_misses`]) and the per-call path runs —
+    /// same soft-fallback contract as the low-rank panel cache.
+    pub fn build_cached(
+        s: &VifStructure,
+        x: &Mat,
+        kernel: &ArdMatern,
+        xp: &Mat,
+        m_v: usize,
+        selection: NeighborSelection,
+        search: Option<&PredSearchCache>,
+    ) -> Self {
+        let tree = search.and_then(|c| {
+            if c.generation == s.generation && c.theta == kernel.log_params() {
+                c.tree.as_ref()
+            } else {
+                PRED_SEARCH_MISSES.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        });
+        let (neighbors, lr_panels) =
+            pred_neighbor_sets_with(s, x, kernel, xp, m_v, selection, tree);
+        let mut plan = Self::from_neighbor_sets(x, neighbors);
+        plan.lr_panels = lr_panels;
+        plan.generation = s.generation;
+        plan
+    }
+
     /// Number of prediction points the plan covers.
     pub fn n_points(&self) -> usize {
         self.neighbors.len()
@@ -178,6 +209,112 @@ impl PredictPlan {
 
     /// Generation of the structure this plan was built against
     /// (0 = externally built plan, exempt from the staleness check).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Non-panicking form of the [`PredictBlocks::compute`] staleness
+    /// check: `true` when the plan may be used against `s` (built for
+    /// the same structure generation, or externally built and therefore
+    /// unchecked). The serving read path consults this before the
+    /// numeric pass so a racing `append`/`compact` downgrades to a plan
+    /// rebuild instead of a panic.
+    pub fn is_current(&self, s: &VifStructure) -> bool {
+        self.generation == 0 || self.generation == s.generation
+    }
+}
+
+/// Process-wide count of [`PredSearchCache`] key mismatches (generation
+/// or θ moved since the cache was built); the same observability hook as
+/// [`lr_panel_cache_misses`].
+static PRED_SEARCH_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative [`PredSearchCache`] misses in this process.
+pub fn pred_search_cache_misses() -> u64 {
+    PRED_SEARCH_MISSES.load(Ordering::Relaxed)
+}
+
+/// Per-generation neighbor-search state shared across plan builds: one
+/// correlation cover tree over the **training** points, reusable for any
+/// batch of prediction queries at the same `(generation, θ)`. The tree
+/// only encodes training–training distances, so a query batch `X_p`
+/// supplies its own stacked metric at search time; building it once per
+/// published generation turns the serving micro-batch path from
+/// `O(n·depth)` metric evaluations per batch into a lookup.
+pub struct PredSearchCache {
+    tree: Option<CoverTree>,
+    theta: Vec<f64>,
+    generation: u64,
+}
+
+impl PredSearchCache {
+    /// Build the search cache for the current `(structure, θ)`. Only the
+    /// correlation cover-tree selection has per-generation state; other
+    /// selections yield an empty cache (plan builds fall through to the
+    /// per-call path).
+    pub fn build(
+        s: &VifStructure,
+        x: &Mat,
+        kernel: &ArdMatern,
+        selection: NeighborSelection,
+    ) -> Self {
+        let n = x.rows();
+        let tree = if selection == NeighborSelection::CorrelationCoverTree && n > 0 {
+            let empty = Mat::zeros(0, x.cols());
+            // Panels for an empty query set: the metric only ever sees
+            // training indices during the build.
+            let vt_empty = s.lr.as_ref().map(|lr| pred_lr_panels(lr, kernel, &empty).1);
+            let metric = PredCorrelationMetric::new(s, x, kernel, &empty, vt_empty.as_ref());
+            Some(CoverTree::build(n, &metric))
+        } else {
+            None
+        };
+        PredSearchCache { tree, theta: kernel.log_params(), generation: s.generation }
+    }
+
+    /// Generation of the structure the cache was built against.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}
+
+/// Hoisted global solves of [`posterior_mean`] for a fixed
+/// `(structure, target)`: the residual-scale target
+/// `t − Σ_mnᵀ M⁻¹ Σ_mn S t` and the contraction `Σ_mn Σ_†⁻¹ t`. Both
+/// are per-θ-generation constants of the serving read path — computing
+/// them per `predict` call costs `O(n·m)` plus a Vecchia sweep, so a
+/// long-lived server builds one `MeanCache` per published generation and
+/// every request batch reuses it through [`posterior_mean_cached`].
+pub struct MeanCache {
+    generation: u64,
+    /// `t − Σ_mnᵀ M⁻¹ Σ_mn S t` (length n).
+    resid_target: Vec<f64>,
+    /// `Σ_mn Σ_†⁻¹ t` (length m; `None` when the structure has no
+    /// low-rank part).
+    smu: Option<Vec<f64>>,
+}
+
+impl MeanCache {
+    /// Run the global solves once for `target` (`y` on the Gaussian
+    /// response scale, the Laplace mode `b̃` on the latent scale).
+    pub fn build(s: &VifStructure, target: &[f64]) -> Self {
+        let resid_target: Vec<f64> = match (&s.lr, &s.chol_mcal) {
+            (Some(lr), Some(cm)) => {
+                // t − Σ_mnᵀ M⁻¹ Σ_mn S t : the residual-scale target (§2.3).
+                let c = cm.solve(&s.ssig.matvec_t(target));
+                let corr = lr.sigma_nm.matvec(&c);
+                target.iter().zip(&corr).map(|(t, co)| t - co).collect()
+            }
+            _ => target.to_vec(),
+        };
+        let smu = s.lr.as_ref().map(|lr| {
+            let u = s.apply_sigma_dagger_inv(target);
+            lr.sigma_nm.matvec_t(&u) // hoisted: one O(n·m) pass
+        });
+        MeanCache { generation: s.generation, resid_target, smu }
+    }
+
+    /// Generation of the structure the cache was built against.
     pub fn generation(&self) -> u64 {
         self.generation
     }
@@ -429,22 +566,29 @@ pub fn posterior_mean(
     blocks: &PredictBlocks<'_>,
     target: &[f64],
 ) -> Vec<f64> {
+    posterior_mean_cached(plan, blocks, &MeanCache::build(s, target))
+}
+
+/// [`posterior_mean`] with the global solves supplied by a pre-built
+/// [`MeanCache`] — the serving read path (one cache per published
+/// generation, reused across every request batch). Panics on a
+/// generation mismatch between the plan and the cache, mirroring the
+/// [`PredictBlocks::compute`] staleness contract.
+pub fn posterior_mean_cached(
+    plan: &PredictPlan,
+    blocks: &PredictBlocks<'_>,
+    cache: &MeanCache,
+) -> Vec<f64> {
+    assert!(
+        plan.generation == 0 || cache.generation == 0 || plan.generation == cache.generation,
+        "stale mean cache: plan built for structure generation {}, cache for {}",
+        plan.generation,
+        cache.generation
+    );
     let np = plan.n_points();
-    let resid_target: Vec<f64> = match (&s.lr, &s.chol_mcal) {
-        (Some(lr), Some(cm)) => {
-            // t − Σ_mnᵀ M⁻¹ Σ_mn S t : the residual-scale target (§2.3).
-            let c = cm.solve(&s.ssig.matvec_t(target));
-            let corr = lr.sigma_nm.matvec(&c);
-            target.iter().zip(&corr).map(|(t, co)| t - co).collect()
-        }
-        _ => target.to_vec(),
-    };
-    let mut mean = match &s.lr {
-        Some(lr) => {
-            let u = s.apply_sigma_dagger_inv(target);
-            let smu = lr.sigma_nm.matvec_t(&u); // hoisted: one O(n·m) pass
-            blocks.alpha.matvec(&smu)
-        }
+    let resid_target = &cache.resid_target;
+    let mut mean = match &cache.smu {
+        Some(smu) => blocks.alpha.matvec(smu),
         None => vec![0.0; np],
     };
     let mp = SyncSlice(mean.as_mut_ptr());
@@ -581,6 +725,24 @@ fn pred_neighbor_sets(
     m_v: usize,
     selection: NeighborSelection,
 ) -> (Vec<Vec<u32>>, Option<LrPanelCache>) {
+    pred_neighbor_sets_with(s, x, kernel, xp, m_v, selection, None)
+}
+
+/// [`pred_neighbor_sets`] with an optional pre-built cover tree over the
+/// training points (from a [`PredSearchCache`]). With a cached tree the
+/// cover-tree search runs even below [`COVER_TREE_MIN_QUERIES`] — the
+/// build cost is already paid, and micro-batched serving queries then
+/// select the *same* conditioning sets as one large batched call (the
+/// tree and the query-to-training metric are both batch-independent).
+fn pred_neighbor_sets_with(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &ArdMatern,
+    xp: &Mat,
+    m_v: usize,
+    selection: NeighborSelection,
+    cached_tree: Option<&CoverTree>,
+) -> (Vec<Vec<u32>>, Option<LrPanelCache>) {
     let n = x.rows();
     let np = xp.rows();
     if m_v == 0 || n == 0 {
@@ -622,9 +784,16 @@ fn pred_neighbor_sets(
                 panels.as_ref().map(|c| &c.vt),
             );
             let use_tree = selection == NeighborSelection::CorrelationCoverTree
-                && np >= COVER_TREE_MIN_QUERIES;
+                && (cached_tree.is_some() || np >= COVER_TREE_MIN_QUERIES);
             let sets = if use_tree {
-                let tree = CoverTree::build(n, &metric);
+                let built;
+                let tree = match cached_tree {
+                    Some(t) => t,
+                    None => {
+                        built = CoverTree::build(n, &metric);
+                        &built
+                    }
+                };
                 let mut out: Vec<Vec<u32>> = vec![vec![]; np];
                 {
                     let out_ptr = SyncSlice(out.as_mut_ptr());

@@ -1,0 +1,183 @@
+//! End-to-end CLI contract tests against the built `vifgp` binary:
+//! malformed flags and env knobs must fail loudly (exit 2 / loud panic)
+//! naming the offending flag and value — never a silent fallback — and
+//! the happy paths (simulate → train → serve) must round-trip.
+
+use std::process::{Command, Output};
+
+fn vifgp() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_vifgp"))
+}
+
+fn run(args: &[&str]) -> Output {
+    vifgp().args(args).output().expect("spawn vifgp")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn info_succeeds() {
+    let out = run(&["info"]);
+    assert!(out.status.success(), "info failed: {}", stderr(&out));
+}
+
+#[test]
+fn unknown_command_exits_2() {
+    let out = run(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("unknown command"));
+}
+
+/// The satellite bugfix: numeric flags that don't parse must exit 2
+/// naming the flag, the value, and the expected type — previously they
+/// silently fell back to the default.
+#[test]
+fn malformed_numeric_flags_exit_2() {
+    let cases: &[(&[&str], &str)] = &[
+        (&["train", "--data", "x.csv", "--m", "abc"], "--m"),
+        (&["train", "--data", "x.csv", "--iters", "1e3"], "--iters"),
+        (&["train", "--data", "x.csv", "--test-frac", "20%"], "--test-frac"),
+        (&["train", "--data", "x.csv", "--mv", "-3"], "--mv"),
+        (&["train", "--data", "x.csv", "--seed", "0x10"], "--seed"),
+        (&["simulate", "--n", "12.5", "--out", "x.csv"], "--n"),
+        (&["serve", "--data", "x.csv", "--requests", "many"], "--requests"),
+        (&["serve", "--data", "x.csv", "--concurrency", "8.0"], "--concurrency"),
+    ];
+    for (args, flag) in cases {
+        let out = run(args);
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "{args:?} should exit 2, stderr: {}",
+            stderr(&out)
+        );
+        let err = stderr(&out);
+        assert!(err.contains(flag), "{args:?} stderr must name {flag}: {err}");
+        assert!(err.contains(args[args.len() - 1]), "{args:?} stderr must echo the value: {err}");
+    }
+}
+
+/// `--test-frac` must be finite and in [0, 1): a full-test split (or
+/// worse) is a config error, not something to clamp quietly.
+#[test]
+fn test_frac_out_of_range_exits_2() {
+    for bad in ["1.0", "-0.1", "nan", "inf"] {
+        let out = run(&["train", "--data", "x.csv", "--test-frac", bad]);
+        assert_eq!(out.status.code(), Some(2), "--test-frac {bad} should exit 2");
+        assert!(stderr(&out).contains("--test-frac"), "stderr: {}", stderr(&out));
+    }
+}
+
+/// The satellite bugfix: likelihood/smoothness typos used to be
+/// swallowed (warn-then-Gaussian, `.unwrap_or(ThreeHalves)`). Now they
+/// exit 2 listing the valid names.
+#[test]
+fn unknown_likelihood_and_smoothness_exit_2() {
+    let out = run(&["simulate", "--n", "10", "--likelihood", "gausian"]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr(&out);
+    assert!(err.contains("gausian") && err.contains("gaussian"), "stderr: {err}");
+
+    let out = run(&["simulate", "--n", "10", "--smoothness", "matern3/2"]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr(&out);
+    assert!(err.contains("matern3/2") && err.contains("1.5"), "stderr: {err}");
+}
+
+#[test]
+fn malformed_threads_flag_exits_2() {
+    for bad in ["0", "abc"] {
+        let out = run(&["info", "--threads", bad]);
+        assert_eq!(out.status.code(), Some(2), "--threads {bad} should exit 2");
+        assert!(stderr(&out).contains("--threads"));
+    }
+}
+
+/// The env-knob satellite: a malformed `VIFGP_THREADS` must panic loudly
+/// (naming the variable and value) instead of being ignored; `0` is no
+/// longer clamped to 1.
+#[test]
+fn malformed_threads_env_panics_loudly() {
+    for bad in ["abc", "0", "-2", "1.5"] {
+        let out = vifgp().args(["info"]).env("VIFGP_THREADS", bad).output().expect("spawn");
+        assert!(!out.status.success(), "VIFGP_THREADS={bad} must fail");
+        let err = stderr(&out);
+        assert!(
+            err.contains("VIFGP_THREADS") && err.contains(bad),
+            "VIFGP_THREADS={bad} stderr must name the knob and value: {err}"
+        );
+    }
+}
+
+#[test]
+fn malformed_serve_env_knobs_panic_loudly() {
+    for (knob, bad) in
+        [("VIFGP_SERVE_MAX_BATCH", "0"), ("VIFGP_SERVE_MAX_BATCH", "lots"), ("VIFGP_SERVE_BATCH_WINDOW_US", "-1")]
+    {
+        let out = vifgp()
+            .args(["serve", "--data", "/nonexistent.csv"])
+            .env(knob, bad)
+            .output()
+            .expect("spawn");
+        assert!(!out.status.success(), "{knob}={bad} must fail");
+        let err = stderr(&out);
+        assert!(err.contains(knob), "{knob}={bad} stderr must name the knob: {err}");
+    }
+}
+
+/// Happy path: simulate a small dataset, train on it, then serve it with
+/// a writer publishing generations under traffic. Exercises the full
+/// flag surface end to end.
+#[test]
+fn simulate_train_serve_round_trip() {
+    let dir = std::env::temp_dir().join(format!("vifgp-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("tmp dir");
+    let csv = dir.join("toy.csv");
+    let csv_s = csv.to_str().unwrap();
+
+    let out = run(&["simulate", "--n", "80", "--d", "2", "--seed", "3", "--out", csv_s]);
+    assert!(out.status.success(), "simulate failed: {}", stderr(&out));
+
+    let out = run(&[
+        "train", "--data", csv_s, "--m", "10", "--mv", "4", "--iters", "2", "--test-frac", "0.25",
+    ]);
+    assert!(out.status.success(), "train failed: {}", stderr(&out));
+
+    let metrics = dir.join("serve_metrics.json");
+    let out = vifgp()
+        .args([
+            "serve",
+            "--data",
+            csv_s,
+            "--m",
+            "10",
+            "--mv",
+            "4",
+            "--iters",
+            "1",
+            "--requests",
+            "64",
+            "--concurrency",
+            "4",
+            "--append-every",
+            "24",
+            "--append-batch",
+            "4",
+            "--max-batch",
+            "8",
+            "--batch-window-us",
+            "100",
+        ])
+        .env("VIFGP_SERVE_METRICS_JSON", metrics.to_str().unwrap())
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "serve failed: {}", stderr(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(stdout.contains("served 64 requests"), "stdout: {stdout}");
+    let json = std::fs::read_to_string(&metrics).expect("metrics json written");
+    assert!(json.contains("\"requests\": 64"), "metrics: {json}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,289 @@
+//! Serving-engine tests: micro-batched served predictions must match the
+//! single-threaded `predict_with_plan` reference to ≤ 1e-12, and
+//! generation swaps under concurrent traffic (readers hammering
+//! `predict` while a writer `append_points` + publishes) must never
+//! panic or serve a mixed generation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::rng::Rng;
+use vifgp::serve::{ServeEngine, ServeModel, ServeOptions};
+use vifgp::testing::random_points;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::gaussian::{GaussianParams, VifRegression};
+use vifgp::vif::laplace::{SolveMode, VifLaplaceModel};
+use vifgp::vif::{predict, VifConfig};
+use vifgp::Mat;
+
+const TOL: f64 = 1e-12;
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / (1.0 + b.abs())
+}
+
+fn make_config(selection: NeighborSelection, seed: u64) -> VifConfig {
+    VifConfig {
+        smoothness: Smoothness::ThreeHalves,
+        num_inducing: 12,
+        num_neighbors: 5,
+        selection,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Assembled (not optimized — serving only needs a structure) Gaussian
+/// model over `n` random 2-d points.
+fn make_gaussian(n: usize, selection: NeighborSelection) -> VifRegression {
+    let mut rng = Rng::seed_from(42);
+    let x = random_points(&mut rng, n, 2);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let kernel = ArdMatern::new(1.1, vec![0.4, 0.5], Smoothness::ThreeHalves);
+    let mut model =
+        VifRegression::new(x, y, make_config(selection, 7), GaussianParams { kernel, noise: 0.1 });
+    model.assemble();
+    model
+}
+
+fn query_points(np: usize) -> Mat {
+    let mut rng = Rng::seed_from(1234);
+    random_points(&mut rng, np, 2)
+}
+
+/// Served predictions (micro-batched, concurrent clients) must equal the
+/// one-shot batched reference bit-for-bit (≤ 1e-12): the snapshot's
+/// cached cover tree makes every micro-batch select the same
+/// conditioning sets as the single large reference call, and the numeric
+/// pass is per-point independent.
+fn check_served_matches_reference(selection: NeighborSelection) {
+    let model = make_gaussian(130, selection);
+    let xq = query_points(96);
+    let plan = model.build_predict_plan(&xq);
+    let (mean_ref, var_ref) = model.predict_with_plan(&xq, &plan);
+
+    let snapshot = Arc::new(model.snapshot());
+    // Sanity: the snapshot's own batched read path matches first.
+    let (mean_snap, var_snap) = snapshot.predict(&xq);
+    for i in 0..xq.rows() {
+        assert!(rel_diff(mean_snap[i], mean_ref[i]) < TOL, "snapshot mean {i}");
+        assert!(rel_diff(var_snap[i], var_ref[i]) < TOL, "snapshot var {i}");
+    }
+
+    let engine = ServeEngine::start(
+        snapshot,
+        ServeOptions { max_batch: 16, batch_window: Duration::from_micros(300) },
+    );
+    let clients = 8;
+    let results: Mutex<Vec<(usize, f64, f64)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for t in 0..clients {
+            let engine = &engine;
+            let xq = &xq;
+            let results = &results;
+            scope.spawn(move || {
+                let mut i = t;
+                while i < xq.rows() {
+                    let p = engine.predict(xq.row(i)).expect("serve request failed");
+                    results.lock().unwrap().push((i, p.mean, p.var));
+                    i += clients;
+                }
+            });
+        }
+    });
+    let results = results.into_inner().unwrap();
+    assert_eq!(results.len(), xq.rows());
+    for (i, mean, var) in results {
+        assert!(
+            rel_diff(mean, mean_ref[i]) < TOL,
+            "served mean {i}: {mean} vs {} ({selection:?})",
+            mean_ref[i]
+        );
+        assert!(
+            rel_diff(var, var_ref[i]) < TOL,
+            "served var {i}: {var} vs {} ({selection:?})",
+            var_ref[i]
+        );
+    }
+    let report = engine.metrics().report();
+    assert_eq!(report.requests, xq.rows() as u64);
+    assert!(report.batches >= 1 && report.batches <= report.requests);
+    assert!(report.p50_latency_us <= report.p99_latency_us);
+}
+
+#[test]
+fn served_matches_reference_cover_tree() {
+    check_served_matches_reference(NeighborSelection::CorrelationCoverTree);
+}
+
+#[test]
+fn served_matches_reference_brute_force() {
+    check_served_matches_reference(NeighborSelection::CorrelationBruteForce);
+}
+
+/// Laplace snapshots serve the latent mean and deterministic variance of
+/// the shared batched pipeline (the stochastic correction stays on the
+/// offline path).
+#[test]
+fn laplace_snapshot_matches_deterministic_reference() {
+    let n = 110;
+    let mut rng = Rng::seed_from(5);
+    let x = random_points(&mut rng, n, 2);
+    let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+    let kernel = ArdMatern::new(0.9, vec![0.35, 0.5], Smoothness::ThreeHalves);
+    let mut model = VifLaplaceModel::new(
+        x,
+        y,
+        make_config(NeighborSelection::CorrelationCoverTree, 3),
+        SolveMode::Cholesky,
+        kernel,
+        Likelihood::BernoulliLogit,
+    );
+    model.assemble();
+    model.refresh_state();
+
+    let xq = query_points(64);
+    let plan = model.build_predict_plan(&xq);
+    let s = model.structure.as_ref().unwrap();
+    let state = model.state.as_ref().unwrap();
+    let blocks = predict::PredictBlocks::compute(s, &model.kernel, &xq, &plan, 1e-8);
+    let mean_ref = predict::posterior_mean(s, &plan, &blocks, &state.b);
+    let var_ref = &blocks.var_det;
+
+    let snapshot = model.snapshot();
+    let (mean, var) = snapshot.predict(&xq);
+    for i in 0..xq.rows() {
+        assert!(rel_diff(mean[i], mean_ref[i]) < TOL, "laplace mean {i}");
+        assert!(rel_diff(var[i], var_ref[i]) < TOL, "laplace var {i}");
+    }
+}
+
+/// Queries with the wrong input dimension get a loud per-request error,
+/// not a panic, and don't poison the batch they rode in with.
+#[test]
+fn dimension_mismatch_is_rejected_per_request() {
+    let model = make_gaussian(80, NeighborSelection::CorrelationBruteForce);
+    let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
+    let engine = ServeEngine::start(snapshot, ServeOptions::default());
+    let err = engine.predict(&[0.5]).unwrap_err();
+    assert!(err.contains("dimension"), "unexpected error: {err}");
+    // A well-formed query still succeeds afterwards.
+    let ok = engine.predict(&[0.5, 0.5]).expect("well-formed query");
+    assert!(ok.var.is_finite() && ok.mean.is_finite());
+}
+
+/// The swap-under-traffic contract: `readers` client threads hammer the
+/// engine while a writer ingests batches and publishes new generations.
+/// Every reply must (a) succeed, (b) carry a generation that was
+/// actually published (old-complete or new-complete — never a stale-plan
+/// panic, never a mixed state), and (c) after the final publish, served
+/// results must match the final model's single-threaded reference.
+fn check_generation_swap_under_traffic(readers: usize) {
+    let mut model = make_gaussian(150, NeighborSelection::CorrelationCoverTree);
+    let mut ingest_rng = Rng::seed_from(777);
+
+    let published: Mutex<std::collections::HashSet<u64>> = Mutex::new(Default::default());
+    let snapshot = Arc::new(model.snapshot());
+    published.lock().unwrap().insert(snapshot.generation());
+    let engine = ServeEngine::start(
+        snapshot,
+        ServeOptions { max_batch: 8, batch_window: Duration::from_micros(100) },
+    );
+    let xq = query_points(32);
+    let done = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        let engine = &engine;
+        let xq = &xq;
+        let done = &done;
+        let published = &published;
+        for t in 0..readers {
+            scope.spawn(move || {
+                let mut i = t;
+                let mut last_gen = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let p = engine
+                        .predict(xq.row(i % xq.rows()))
+                        .expect("reader request failed during swap");
+                    assert!(p.mean.is_finite() && p.var.is_finite());
+                    assert!(
+                        published.lock().unwrap().contains(&p.generation),
+                        "served unpublished generation {}",
+                        p.generation
+                    );
+                    // Batches are dispatched in order against a
+                    // monotonically-published state, so one reader never
+                    // sees generations go backwards.
+                    assert!(p.generation >= last_gen, "generation went backwards");
+                    last_gen = p.generation;
+                    i += 1;
+                }
+            });
+        }
+        // Writer: five ingest rounds, each publishing a new generation.
+        for round in 0..5 {
+            let xa = random_points(&mut ingest_rng, 6, 2);
+            let ya: Vec<f64> = (0..6).map(|_| ingest_rng.normal()).collect();
+            model.append_points(&xa, &ya).expect("append failed");
+            let snap = Arc::new(model.snapshot());
+            // Register before publishing so readers can never observe a
+            // generation that isn't in the set.
+            published.lock().unwrap().insert(snap.generation());
+            engine.publish(snap);
+            if round % 2 == 1 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        done.store(true, Ordering::Release);
+    });
+
+    // After the last publish, serving matches the final model exactly.
+    let plan = model.build_predict_plan(&xq);
+    let (mean_ref, var_ref) = model.predict_with_plan(&xq, &plan);
+    let final_gen = engine.current_generation();
+    assert_eq!(final_gen, model.structure.as_ref().unwrap().generation);
+    for i in 0..xq.rows() {
+        let p = engine.predict(xq.row(i)).expect("post-swap request failed");
+        assert_eq!(p.generation, final_gen);
+        assert!(rel_diff(p.mean, mean_ref[i]) < TOL, "post-swap mean {i}");
+        assert!(rel_diff(p.var, var_ref[i]) < TOL, "post-swap var {i}");
+    }
+}
+
+#[test]
+fn generation_swap_under_traffic_pool_1() {
+    check_generation_swap_under_traffic(1);
+}
+
+#[test]
+fn generation_swap_under_traffic_pool_2() {
+    check_generation_swap_under_traffic(2);
+}
+
+#[test]
+fn generation_swap_under_traffic_pool_8() {
+    check_generation_swap_under_traffic(8);
+}
+
+/// Shutdown drains the queue: every request enqueued before shutdown
+/// still gets a reply, and late requests get a clean error.
+#[test]
+fn shutdown_drains_and_rejects_late_requests() {
+    let model = make_gaussian(80, NeighborSelection::CorrelationBruteForce);
+    let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
+    let mut engine = ServeEngine::start(
+        snapshot,
+        ServeOptions { max_batch: 4, batch_window: Duration::from_micros(50) },
+    );
+    let xq = query_points(12);
+    for i in 0..xq.rows() {
+        engine.predict(xq.row(i)).expect("pre-shutdown request");
+    }
+    engine.shutdown();
+    let err = engine.predict(xq.row(0)).unwrap_err();
+    assert!(err.contains("shut down"), "unexpected error: {err}");
+}
