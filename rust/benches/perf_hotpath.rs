@@ -711,6 +711,7 @@ fn main() {
         );
         let sweep = [1usize, 2, 4, 8, 16, 32, 64];
         let mut rows: Vec<String> = Vec::new();
+        let mut c8_pts = 0.0f64;
         for &clients in &sweep {
             let _ = engine.metrics().drain();
             let (_, t_sweep) = common::timed(|| {
@@ -738,6 +739,9 @@ fn main() {
                 })
             });
             let rep = engine.metrics().drain();
+            if clients == 8 {
+                c8_pts = rep.points_per_sec;
+            }
             println!(
                 "  c={clients:>2}: p50 {:>8.0}µs  p99 {:>8.0}µs  {:>9.0} pts/s  mean batch {:>5.1}  ({t_sweep:.3}s)",
                 rep.p50_latency_us, rep.p99_latency_us, rep.points_per_sec, rep.mean_batch
@@ -820,6 +824,59 @@ fn main() {
              post-swap max rel diff {swap_diff:.2e}"
         );
 
+        // 15. Disabled-faults hot path: the containment hooks (fault
+        // checks, quarantine plumbing, deadline handling) compile into
+        // the serving path unconditionally and must cost nothing
+        // measurable with no fault plan armed. Re-run the concurrency-8
+        // leg against the final snapshot and compare points/sec with
+        // the in-sweep c=8 result.
+        assert!(
+            !vifgp::faults::enabled(),
+            "perf_hotpath must run with fault injection disarmed"
+        );
+        let _ = engine.metrics().drain();
+        let (_, t_hot) = common::timed(|| {
+            std::thread::scope(|scope| {
+                for t in 0..8usize {
+                    let engine = &engine;
+                    let xq = &xq;
+                    let mean_f = &mean_f;
+                    let var_f = &var_f;
+                    scope.spawn(move || {
+                        let mut i = t;
+                        while i < xq.rows() {
+                            let p = engine.predict(xq.row(i)).expect("hot-path request failed");
+                            let dm = (p.mean - mean_f[i]).abs() / (1.0 + mean_f[i].abs());
+                            let dv = (p.var - var_f[i]).abs() / (1.0 + var_f[i].abs());
+                            assert!(
+                                dm <= 1e-12 && dv <= 1e-12,
+                                "hot-path prediction diverged at {i}: {dm:.3e}/{dv:.3e}"
+                            );
+                            i += 8;
+                        }
+                    });
+                }
+            })
+        });
+        let hot_rep = engine.metrics().drain();
+        let hot_pts = hot_rep.points_per_sec;
+        let overhead_ratio = hot_pts / c8_pts.max(1e-9);
+        // Generous floor: this guards against a structural slowdown (a
+        // lock or fault check on the per-point path), not scheduler noise.
+        assert!(
+            overhead_ratio >= 0.5,
+            "disabled-faults hot path regressed: {hot_pts:.0} pts/s vs sweep c=8 {c8_pts:.0} pts/s"
+        );
+        assert_eq!(
+            hot_rep.panics_caught + hot_rep.quarantined_requests + hot_rep.nonfinite_replies,
+            0,
+            "containment events fired during a clean bench run"
+        );
+        println!(
+            "  faults-disabled hot path (c=8): {hot_pts:.0} pts/s vs sweep {c8_pts:.0} pts/s \
+             (ratio {overhead_ratio:.2}, {t_hot:.3}s)"
+        );
+
         let json = format!(
             concat!(
                 "{{\n",
@@ -831,7 +888,10 @@ fn main() {
                 "  \"single_thread_points_per_sec\": {rp:.1},\n",
                 "  \"sweep\": [\n{rows}\n  ],\n",
                 "  \"swap\": {{\"publishes\": {pb}, \"requests_under_swap\": {sr}, ",
-                "\"post_swap_max_rel_diff\": {sd:.3e}}}\n",
+                "\"post_swap_max_rel_diff\": {sd:.3e}}},\n",
+                "  \"faults_overhead\": {{\"faults_enabled\": false, ",
+                "\"sweep_c8_points_per_sec\": {c8:.1}, ",
+                "\"recheck_c8_points_per_sec\": {hp:.1}, \"ratio\": {orr:.3}}}\n",
                 "}}\n"
             ),
             ns = n_srv,
@@ -848,6 +908,9 @@ fn main() {
             pb = publishes,
             sr = swap_served,
             sd = swap_diff,
+            c8 = c8_pts,
+            hp = hot_pts,
+            orr = overhead_ratio,
         );
         let path = std::env::var("VIFGP_BENCH_SERVING_JSON")
             .unwrap_or_else(|_| "BENCH_serving.json".into());

@@ -1,0 +1,342 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! The production code calls the tiny hook functions in this module at
+//! the points where numerical or operational failures can originate:
+//! Cholesky factorization attempts, CG convergence checks, kernel panel
+//! evaluation, and the serving engine's dispatch loop. Every hook is a
+//! single relaxed atomic load when injection is disarmed, so the hot
+//! path pays no measurable cost (perf_hotpath stage 15 asserts this
+//! against the stage-14 serving numbers).
+//!
+//! Faults are armed in one of two ways:
+//!
+//! * **Environment / CLI** — `VIFGP_FAULTS` (or `vifgp --faults SPEC`)
+//!   holds a comma-separated spec, e.g.
+//!   `chol_fail_below=1e-8,cg_stall=2,seed=7`. `1`/`on` arms the
+//!   machinery with an empty plan (hooks stay no-ops until a test
+//!   installs one); `0`/unset disables it. Malformed specs panic — the
+//!   crate's loud-failure policy, same as the other `VIFGP_*` knobs.
+//! * **Test API** — [`install`] force-enables a [`FaultPlan`] for the
+//!   lifetime of the returned [`FaultGuard`] and serializes chaos tests
+//!   behind a global lock, so `rust/tests/chaos.rs` is deterministic
+//!   regardless of the harness' thread count and also passes under a
+//!   plain `cargo test` with `VIFGP_FAULTS` unset.
+//!
+//! All triggers are deterministic: budgets are decremented in solver
+//! call order (one fit / one dispatcher thread), and the serve-request
+//! poison is content-based (a sentinel coordinate), so batch bisection
+//! always isolates the same request. The plan's `seed` feeds the chaos
+//! suite's data generation through the crate's own [`crate::rng`]
+//! (xoshiro256++), keeping the whole suite reproducible from one value.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::linalg::Mat;
+
+/// What to break, and how hard. All fields default to "no fault".
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for chaos-test data generation (reported back by
+    /// [`active_seed`]); the triggers themselves are counter/content
+    /// based and need no randomness.
+    pub seed: u64,
+    /// Fail every Cholesky attempt whose diagonal jitter is strictly
+    /// below this value, forcing the escalation ladder to climb.
+    pub chol_fail_below: Option<f64>,
+    /// Suppress the CG convergence check for this many `pcg*` calls,
+    /// so each affected solve runs to `max_iter` without converging.
+    pub cg_stall: Option<u32>,
+    /// Poison kernel correlation panels (write NaN) while armed.
+    pub nan_panel: bool,
+    /// Panic inside the serve batch for any request containing a
+    /// coordinate exactly equal to this sentinel value.
+    pub serve_poison: Option<f64>,
+    /// Sleep this many microseconds at the start of every serve batch.
+    pub serve_slow_us: Option<u64>,
+    /// Panic the dispatcher loop body for this many batches.
+    pub dispatcher_panic: Option<u32>,
+}
+
+struct FaultState {
+    plan: Mutex<FaultPlan>,
+    cg_stall_left: AtomicU32,
+    dispatcher_panic_left: AtomicU32,
+}
+
+/// Master switch: a single relaxed load of this is the entire cost of
+/// every hook when faults are disabled.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+static STATE: OnceLock<FaultState> = OnceLock::new();
+
+/// Serializes chaos tests that `install` plans (see [`FaultGuard`]).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn state() -> &'static FaultState {
+    STATE.get_or_init(|| FaultState {
+        plan: Mutex::new(FaultPlan::default()),
+        cg_stall_left: AtomicU32::new(0),
+        dispatcher_panic_left: AtomicU32::new(0),
+    })
+}
+
+fn lock_plan() -> MutexGuard<'static, FaultPlan> {
+    // A panicking hook (that's the point of this module) may poison the
+    // plan lock; the plan itself is always in a consistent state.
+    state().plan.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn set_plan(plan: FaultPlan) {
+    let st = state();
+    st.cg_stall_left.store(plan.cg_stall.unwrap_or(0), Ordering::Relaxed);
+    st.dispatcher_panic_left.store(plan.dispatcher_panic.unwrap_or(0), Ordering::Relaxed);
+    *lock_plan() = plan;
+}
+
+/// Parse a `VIFGP_FAULTS` spec. `""`/`"0"`/`"off"` → disabled; `"1"`/
+/// `"on"` → armed with an empty plan; otherwise a comma-separated
+/// `key=value` list. Panics on malformed input (loud-failure policy).
+fn parse_spec(spec: &str) -> Option<FaultPlan> {
+    match spec.trim() {
+        "" | "0" | "off" => return None,
+        "1" | "on" => return Some(FaultPlan::default()),
+        _ => {}
+    }
+    let mut plan = FaultPlan::default();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, val) = part
+            .split_once('=')
+            .unwrap_or_else(|| panic!("VIFGP_FAULTS: expected key=value, got {part:?}"));
+        let bad = |what: &str| -> ! {
+            panic!("VIFGP_FAULTS: invalid {what} value {val:?} in {part:?}")
+        };
+        match key.trim() {
+            "seed" => plan.seed = val.parse().unwrap_or_else(|_| bad("integer")),
+            "chol_fail_below" => {
+                plan.chol_fail_below = Some(val.parse().unwrap_or_else(|_| bad("float")))
+            }
+            "cg_stall" => plan.cg_stall = Some(val.parse().unwrap_or_else(|_| bad("integer"))),
+            "nan_panel" => {
+                plan.nan_panel = match val.trim() {
+                    "1" | "on" | "true" => true,
+                    "0" | "off" | "false" => false,
+                    _ => bad("boolean"),
+                }
+            }
+            "serve_poison" => {
+                plan.serve_poison = Some(val.parse().unwrap_or_else(|_| bad("float")))
+            }
+            "serve_slow_us" => {
+                plan.serve_slow_us = Some(val.parse().unwrap_or_else(|_| bad("integer")))
+            }
+            "dispatcher_panic" => {
+                plan.dispatcher_panic = Some(val.parse().unwrap_or_else(|_| bad("integer")))
+            }
+            other => panic!("VIFGP_FAULTS: unknown fault key {other:?}"),
+        }
+    }
+    Some(plan)
+}
+
+/// Arm faults from the `VIFGP_FAULTS` environment variable. Called once
+/// from the CLI entry point; library users call [`install`] instead.
+/// Panics on a malformed spec.
+pub fn init_from_env() {
+    if let Ok(spec) = std::env::var("VIFGP_FAULTS") {
+        if let Some(plan) = parse_spec(&spec) {
+            set_plan(plan);
+            ACTIVE.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// True when fault injection is armed (env or an active [`FaultGuard`]).
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// The armed plan's seed (0 when disarmed) — chaos tests derive their
+/// data RNG from this so the whole suite keys off one value.
+pub fn active_seed() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    lock_plan().seed
+}
+
+/// Force-enable `plan` for the lifetime of the returned guard. Takes a
+/// global lock so concurrently running chaos tests serialize instead of
+/// trampling each other's plans.
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    let lock = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_plan(plan);
+    ACTIVE.store(true, Ordering::Relaxed);
+    FaultGuard { _lock: lock }
+}
+
+/// RAII handle from [`install`]: dropping it disarms all faults and
+/// releases the chaos-test lock.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl FaultGuard {
+    /// Swap the active plan without releasing the test lock — lets one
+    /// chaos test inject, then clear, then assert recovery.
+    pub fn set(&self, plan: FaultPlan) {
+        set_plan(plan);
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ACTIVE.store(false, Ordering::Relaxed);
+        set_plan(FaultPlan::default());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hooks — each is one relaxed load when disarmed.
+// ---------------------------------------------------------------------
+
+/// Should the Cholesky attempt at diagonal jitter level `jitter` be
+/// forced to fail?
+#[inline]
+pub fn chol_should_fail(jitter: f64) -> bool {
+    if !enabled() {
+        return false;
+    }
+    matches!(lock_plan().chol_fail_below, Some(below) if jitter < below)
+}
+
+/// Consume one unit of the CG-stall budget. While it returns true the
+/// caller must suppress its convergence check so the solve runs to
+/// `max_iter` without converging.
+#[inline]
+pub fn cg_stall_active() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let left = &state().cg_stall_left;
+    left.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+        .is_ok()
+}
+
+/// Poison a freshly computed kernel panel with NaN while armed.
+#[inline]
+pub fn poison_panel(out: &mut [f64]) {
+    if !enabled() {
+        return;
+    }
+    if lock_plan().nan_panel {
+        for v in out.iter_mut() {
+            *v = f64::NAN;
+        }
+    }
+}
+
+/// Panic if any coordinate of the gathered query batch equals the
+/// configured poison sentinel. Called *inside* the serve engine's
+/// `catch_unwind` so bisection can quarantine the poisoned request.
+#[inline]
+pub fn serve_check_poison(xp: &Mat) {
+    if !enabled() {
+        return;
+    }
+    if let Some(sentinel) = lock_plan().serve_poison {
+        if xp.data().iter().any(|&v| v == sentinel) {
+            panic!("injected fault: poisoned serve request (sentinel {sentinel})");
+        }
+    }
+}
+
+/// Sleep the configured per-batch delay (deadline testing).
+#[inline]
+pub fn serve_delay() {
+    if !enabled() {
+        return;
+    }
+    if let Some(us) = lock_plan().serve_slow_us {
+        std::thread::sleep(std::time::Duration::from_micros(us));
+    }
+}
+
+/// Consume one unit of the dispatcher-panic budget; while it returns
+/// true the dispatcher loop body panics (outside the per-batch
+/// quarantine, to prove the outer recovery net).
+#[inline]
+pub fn dispatcher_should_panic() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let left = &state().dispatcher_panic_left;
+    left.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+        .is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_hooks_are_noops() {
+        // Not under a guard here — relies on VIFGP_FAULTS being unset in
+        // the unit-test environment; `install`-based tests below take
+        // the lock.
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!enabled());
+        assert!(!chol_should_fail(0.0));
+        assert!(!cg_stall_active());
+        assert!(!dispatcher_should_panic());
+        let mut v = [1.0, 2.0];
+        poison_panel(&mut v);
+        assert_eq!(v, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn guard_arms_and_disarms() {
+        // Only an *empty* plan here: unit tests share the lib test
+        // binary with every other suite, and arming a live fault (a CG
+        // stall budget, NaN panels) would leak into concurrently
+        // running tests. Budget countdown and panel poisoning are
+        // asserted in `rust/tests/chaos.rs`, whose tests all hold the
+        // install lock. An empty armed plan must leave every hook a
+        // no-op.
+        let g = install(FaultPlan::default());
+        assert!(enabled());
+        assert!(!chol_should_fail(0.0));
+        assert!(!cg_stall_active());
+        assert!(!dispatcher_should_panic());
+        let mut v = [1.0, 2.0];
+        poison_panel(&mut v);
+        assert_eq!(v, [1.0, 2.0]);
+        g.set(FaultPlan::default());
+        drop(g);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn spec_parsing_round_trips() {
+        assert!(parse_spec("0").is_none());
+        assert!(parse_spec("").is_none());
+        let plan = parse_spec("1").expect("armed");
+        assert!(plan.chol_fail_below.is_none() && plan.cg_stall.is_none());
+        let plan = parse_spec("chol_fail_below=1e-8,cg_stall=3,seed=7,nan_panel=on")
+            .expect("armed");
+        assert_eq!(plan.chol_fail_below, Some(1e-8));
+        assert_eq!(plan.cg_stall, Some(3));
+        assert_eq!(plan.seed, 7);
+        assert!(plan.nan_panel);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown fault key")]
+    fn spec_parsing_rejects_unknown_keys() {
+        parse_spec("frobnicate=1");
+    }
+}

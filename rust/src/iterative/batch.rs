@@ -42,6 +42,11 @@ use crate::linalg::SymTridiag;
 pub struct BatchColumnResult {
     pub iters: usize,
     pub converged: bool,
+    /// This column hit the `pᵀAp ≤ 0` exit (numerically indefinite
+    /// operator) and was frozen as best effort — distinct from ordinary
+    /// max-iteration non-convergence. Mirrors
+    /// [`CgResult::breakdown`](super::CgResult::breakdown).
+    pub breakdown: bool,
     /// Lanczos tridiagonal of the preconditioned operator for this
     /// column's Krylov process (if requested).
     pub tridiag: Option<SymTridiag>,
@@ -139,6 +144,7 @@ struct ColState {
     betas: Vec<f64>,
     iters: usize,
     converged: bool,
+    breakdown: bool,
     active: bool,
 }
 
@@ -165,6 +171,9 @@ pub fn pcg_batch_with_min(
     assert_eq!(op.n(), n);
     assert_eq!(pre.n(), n);
 
+    // Fault injection: a stalled batch suppresses every column's
+    // convergence check (budget consumed once per pcg_batch call).
+    let stall = crate::faults::cg_stall_active();
     let z0 = solve_chunked(pre, b);
     let mut cols: Vec<ColState> = (0..k)
         .map(|j| {
@@ -182,6 +191,7 @@ pub fn pcg_batch_with_min(
                 betas: Vec::new(),
                 iters: 0,
                 converged: false,
+                breakdown: false,
                 active: true,
             }
         })
@@ -211,6 +221,7 @@ pub fn pcg_batch_with_min(
             let pap = dot(&c.p, &ap_j);
             if pap <= 0.0 || !pap.is_finite() {
                 // loss of positive definiteness — freeze as best effort
+                c.breakdown = true;
                 c.active = false;
                 continue;
             }
@@ -221,7 +232,7 @@ pub fn pcg_batch_with_min(
                 c.r[i] -= alpha * ap_j[i];
             }
             c.iters += 1;
-            if c.iters >= min_iter && dot(&c.r, &c.r).sqrt() <= tol * c.b_norm {
+            if !stall && c.iters >= min_iter && dot(&c.r, &c.r).sqrt() <= tol * c.b_norm {
                 c.converged = true;
                 c.active = false;
             }
@@ -254,6 +265,7 @@ pub fn pcg_batch_with_min(
         columns.push(BatchColumnResult {
             iters: c.iters,
             converged: c.converged,
+            breakdown: c.breakdown,
             tridiag: if want_tridiag {
                 lanczos_tridiag_from_cg(&c.alphas, &c.betas)
             } else {
@@ -309,6 +321,35 @@ mod tests {
             let qg = tg.quadrature(|l| l.max(1e-300).ln());
             let qw = tw.quadrature(|l| l.max(1e-300).ln());
             assert!((qg - qw).abs() < 1e-9, "col {j}: quad {qg} vs {qw}");
+        }
+    }
+
+    #[test]
+    fn batch_mirrors_breakdown_per_column() {
+        // Indefinite diagonal operator: every column eventually hits
+        // pᵀAp ≤ 0 and must carry the breakdown flag, matching the
+        // scalar path column by column.
+        let n = 10;
+        let a = Mat::from_fn(n, n, |i, j| {
+            if i == j {
+                if i % 3 == 0 {
+                    -1.0 - i as f64 * 0.2
+                } else {
+                    1.0 + i as f64 * 0.1
+                }
+            } else {
+                0.0
+            }
+        });
+        let b = Mat::from_fn(n, 3, |i, j| 1.0 + (i + j) as f64 * 0.3);
+        let op = DenseOp(a);
+        let pre = IdentityPrecond(n);
+        let res = pcg_batch_with_min(&op, &pre, &b, 1e-12, 0, 50, false);
+        for j in 0..3 {
+            let want = pcg_with_min(&op, &pre, &b.col(j), 1e-12, 0, 50, false);
+            assert_eq!(res.columns[j].breakdown, want.breakdown, "col {j}");
+            assert!(res.columns[j].breakdown, "col {j} must break down");
+            assert!(res.x.col(j).iter().all(|v| v.is_finite()));
         }
     }
 

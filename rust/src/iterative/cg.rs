@@ -65,8 +65,30 @@ pub struct CgResult {
     pub x: Vec<f64>,
     pub iters: usize,
     pub converged: bool,
+    /// The solve hit the `pᵀAp ≤ 0` exit: the operator is numerically
+    /// indefinite and `x` is best-effort only (distinct from ordinary
+    /// max-iteration non-convergence).
+    pub breakdown: bool,
     /// Lanczos tridiagonal of the preconditioned operator (if requested).
     pub tridiag: Option<SymTridiag>,
+}
+
+impl CgResult {
+    /// Classify this solve per the crate failure taxonomy (severity:
+    /// non-finite > breakdown > max-iter).
+    pub fn diag(&self) -> super::diag::SolveDiag {
+        use super::diag::{SolveDiag, SolveFailure};
+        let failure = if self.x.iter().any(|v| !v.is_finite()) {
+            Some(SolveFailure::NonFinite)
+        } else if self.breakdown {
+            Some(SolveFailure::Breakdown)
+        } else if !self.converged {
+            Some(SolveFailure::MaxIter)
+        } else {
+            None
+        };
+        SolveDiag { failure, iters: self.iters, ..Default::default() }
+    }
 }
 
 /// Solve `A x = b` by preconditioned CG. `tol` is relative to `‖b‖`.
@@ -105,12 +127,17 @@ pub fn pcg_with_min(
     let mut alphas: Vec<f64> = Vec::new();
     let mut betas: Vec<f64> = Vec::new();
     let mut converged = false;
+    let mut breakdown = false;
     let mut iters = 0;
+    // Fault injection: a stalled solve suppresses its convergence check
+    // and runs to max_iter (budget consumed per pcg call).
+    let stall = crate::faults::cg_stall_active();
 
     for _ in 0..max_iter {
         let ap = op.apply(&p);
         let pap = dot(&p, &ap);
         if pap <= 0.0 || !pap.is_finite() {
+            breakdown = true;
             break; // loss of positive definiteness — return best effort
         }
         let alpha = rz / pap;
@@ -120,7 +147,7 @@ pub fn pcg_with_min(
             r[i] -= alpha * ap[i];
         }
         iters += 1;
-        if iters >= min_iter && dot(&r, &r).sqrt() <= tol * b_norm {
+        if !stall && iters >= min_iter && dot(&r, &r).sqrt() <= tol * b_norm {
             converged = true;
             break;
         }
@@ -140,7 +167,7 @@ pub fn pcg_with_min(
         None
     };
 
-    CgResult { x, iters, converged, tridiag }
+    CgResult { x, iters, converged, breakdown, tridiag }
 }
 
 /// Reconstruct the Lanczos tridiagonal of the preconditioned operator
@@ -260,6 +287,39 @@ mod tests {
             (quad - want).abs() < 1e-6 * want.abs(),
             "{quad} vs {want}"
         );
+    }
+
+    #[test]
+    fn indefinite_operator_reports_breakdown() {
+        // A has a negative eigenvalue, so some CG direction hits
+        // pᵀAp ≤ 0: the solve must flag breakdown (not plain max-iter)
+        // and still return finite best-effort iterates.
+        let n = 12;
+        let a = Mat::from_fn(n, n, |i, j| {
+            if i == j {
+                if i == n - 1 {
+                    -3.0
+                } else {
+                    1.0 + i as f64 * 0.1
+                }
+            } else {
+                0.0
+            }
+        });
+        let b = vec![1.0; n];
+        let res = pcg(&DenseOp(a), &IdentityPrecond(n), &b, 1e-10, 100, false);
+        assert!(res.breakdown, "indefinite operator must report breakdown");
+        assert!(!res.converged);
+        assert!(res.x.iter().all(|v| v.is_finite()));
+        assert_eq!(
+            res.diag().failure,
+            Some(crate::iterative::SolveFailure::Breakdown)
+        );
+
+        // A healthy SPD solve reports neither breakdown nor failure.
+        let res = pcg(&DenseOp(spd(12)), &IdentityPrecond(12), &b, 1e-10, 200, false);
+        assert!(!res.breakdown && res.converged);
+        assert!(res.diag().failure.is_none());
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Structured solve diagnostics: the failure taxonomy of the iterative
+//! stack and a process-wide counter registry.
+//!
+//! Iterative solves fail in three distinguishable ways — CG *breakdown*
+//! (the operator went numerically indefinite, `pᵀAp ≤ 0`), ordinary
+//! *max-iteration* exhaustion, and *non-finite* results — and the
+//! containment layer reacts differently to each (see the crate-root
+//! "Failure semantics" section). [`SolveDiag`] carries the classified
+//! outcome of one solve attempt; [`solve_stats`] is the global registry
+//! the escalation ladder records into, so a fit that recovered from a
+//! transient breakdown leaves an audit trail instead of silence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Why an iterative solve (or one column of a batched solve) failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveFailure {
+    /// The solution (or the objective it feeds) contains NaN/Inf.
+    NonFinite,
+    /// CG hit the `pᵀAp ≤ 0` exit: the operator is numerically
+    /// indefinite and the returned iterate is best-effort only.
+    Breakdown,
+    /// The iteration budget ran out before the tolerance was met.
+    MaxIter,
+}
+
+/// Classified outcome of one solve stage, after any escalation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveDiag {
+    /// `None` = clean solve; `Some` = the most severe failure observed
+    /// (severity order: non-finite > breakdown > max-iter).
+    pub failure: Option<SolveFailure>,
+    /// Iterations spent by the final attempt.
+    pub iters: usize,
+    /// An escalated retry (raised budget / upgraded preconditioner) ran.
+    pub retried: bool,
+    /// The dense factorization backstop produced the returned values.
+    pub dense_fallback: bool,
+}
+
+/// Process-wide containment counters. All monotone; `snapshot` reads a
+/// consistent-enough view for tests and logs, `reset` zeroes them
+/// (chaos tests bracket themselves with it).
+#[derive(Default)]
+pub struct SolveStats {
+    cg_breakdown: AtomicU64,
+    cg_max_iter: AtomicU64,
+    cg_non_finite: AtomicU64,
+    retries: AtomicU64,
+    retry_successes: AtomicU64,
+    dense_fallbacks: AtomicU64,
+    unrecovered: AtomicU64,
+    chol_jitter_escalations: AtomicU64,
+    nonfinite_evals: AtomicU64,
+}
+
+/// Plain-data copy of the counters at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SolveStatsReport {
+    pub cg_breakdown: u64,
+    pub cg_max_iter: u64,
+    pub cg_non_finite: u64,
+    /// Escalated retries launched (raised budget / upgraded precond).
+    pub retries: u64,
+    /// Escalated retries that recovered a clean solve.
+    pub retry_successes: u64,
+    /// Solves answered by the dense factorization backstop.
+    pub dense_fallbacks: u64,
+    /// Solves that exhausted the ladder and returned best-effort values.
+    pub unrecovered: u64,
+    /// Cholesky factorizations that consumed nonzero diagonal jitter.
+    pub chol_jitter_escalations: u64,
+    /// Objective evaluations sanitized to +∞ for L-BFGS (non-finite
+    /// value or gradient).
+    pub nonfinite_evals: u64,
+}
+
+impl SolveStats {
+    /// Record one classified failure of an initial solve attempt.
+    pub fn note_failure(&self, f: SolveFailure) {
+        match f {
+            SolveFailure::Breakdown => &self.cg_breakdown,
+            SolveFailure::MaxIter => &self.cg_max_iter,
+            SolveFailure::NonFinite => &self.cg_non_finite,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_retry_success(&self) {
+        self.retry_successes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_dense_fallback(&self) {
+        self.dense_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_unrecovered(&self) {
+        self.unrecovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the jitter a Cholesky escalation consumed (no-op at 0).
+    pub fn note_jitter(&self, consumed: f64) {
+        if consumed > 0.0 {
+            self.chol_jitter_escalations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn note_nonfinite_eval(&self) {
+        self.nonfinite_evals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> SolveStatsReport {
+        SolveStatsReport {
+            cg_breakdown: self.cg_breakdown.load(Ordering::Relaxed),
+            cg_max_iter: self.cg_max_iter.load(Ordering::Relaxed),
+            cg_non_finite: self.cg_non_finite.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            retry_successes: self.retry_successes.load(Ordering::Relaxed),
+            dense_fallbacks: self.dense_fallbacks.load(Ordering::Relaxed),
+            unrecovered: self.unrecovered.load(Ordering::Relaxed),
+            chol_jitter_escalations: self.chol_jitter_escalations.load(Ordering::Relaxed),
+            nonfinite_evals: self.nonfinite_evals.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        for c in [
+            &self.cg_breakdown,
+            &self.cg_max_iter,
+            &self.cg_non_finite,
+            &self.retries,
+            &self.retry_successes,
+            &self.dense_fallbacks,
+            &self.unrecovered,
+            &self.chol_jitter_escalations,
+            &self.nonfinite_evals,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl SolveStatsReport {
+    /// Total recorded failures of initial attempts.
+    pub fn failures(&self) -> u64 {
+        self.cg_breakdown + self.cg_max_iter + self.cg_non_finite
+    }
+}
+
+/// The process-wide containment-counter registry.
+pub fn solve_stats() -> &'static SolveStats {
+    static STATS: OnceLock<SolveStats> = OnceLock::new();
+    STATS.get_or_init(SolveStats::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_reset() {
+        let stats = SolveStats::default();
+        stats.note_failure(SolveFailure::Breakdown);
+        stats.note_failure(SolveFailure::MaxIter);
+        stats.note_failure(SolveFailure::NonFinite);
+        stats.note_retry();
+        stats.note_retry_success();
+        stats.note_dense_fallback();
+        stats.note_unrecovered();
+        stats.note_jitter(1e-8);
+        stats.note_jitter(0.0); // clean factorization — not an escalation
+        stats.note_nonfinite_eval();
+        let s = stats.snapshot();
+        assert_eq!(s.cg_breakdown, 1);
+        assert_eq!(s.cg_max_iter, 1);
+        assert_eq!(s.cg_non_finite, 1);
+        assert_eq!(s.failures(), 3);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.retry_successes, 1);
+        assert_eq!(s.dense_fallbacks, 1);
+        assert_eq!(s.unrecovered, 1);
+        assert_eq!(s.chol_jitter_escalations, 1);
+        assert_eq!(s.nonfinite_evals, 1);
+        stats.reset();
+        assert_eq!(stats.snapshot(), SolveStatsReport::default());
+    }
+}

@@ -33,6 +33,7 @@
 
 pub mod batch;
 mod cg;
+pub mod diag;
 mod precond;
 mod pred_var;
 pub mod slq;
@@ -42,6 +43,7 @@ pub use batch::{
     BatchColumnResult,
 };
 pub use cg::{pcg, pcg_with_min, CgResult, IdentityPrecond, LinOp, Preconditioner};
+pub use diag::{solve_stats, SolveDiag, SolveFailure, SolveStats, SolveStatsReport};
 pub use precond::{FitcPrecond, PrecondType, VifduPrecond};
 pub use pred_var::{sbpv_diag, spv_diag};
 pub use slq::{slq_logdet, slq_logdet_opts, SlqOptions, SlqProbe, SlqRun};

@@ -12,6 +12,15 @@
 //! per-column matvecs or triangular sweeps remain on the probe path.
 //! Probe draws stay sequential on the caller's RNG so probe streams
 //! match the scalar implementations.
+//!
+//! Failure containment lives one layer down: the `solve_batch` closures
+//! the VIF models pass in are backed by
+//! [`crate::vif::laplace::WSolver::solve_batch`], whose escalation
+//! ladder (retry with a raised budget, then dense fallback below the
+//! size cutoff) runs per column — a CG breakdown in one probe column is
+//! recovered or replaced there, so the estimators here always average
+//! finite probe contributions (see the crate-root "Failure semantics"
+//! section).
 
 use crate::linalg::Mat;
 use crate::rng::Rng;

@@ -61,6 +61,11 @@ pub struct SlqRun {
     pub probes: Vec<SlqProbe>,
     /// Average CG iterations per probe.
     pub avg_iters: f64,
+    /// Probes whose solve failed (breakdown, max-iter without
+    /// convergence, non-finite solution, or no recoverable Lanczos
+    /// degree). Nonzero means the logdet/probe quantities are suspect
+    /// and the caller should escalate (see `WSolver::logdet_and_probes`).
+    pub failed_probes: usize,
 }
 
 /// Estimate `log det A` with ℓ probes and default [`SlqOptions`],
@@ -96,6 +101,8 @@ pub fn slq_logdet_opts(
     let mut acc = 0.0;
     let mut probes = Vec::with_capacity(ell);
     let mut total_iters = 0usize;
+    let mut failed_probes = 0usize;
+    let mut contributed = 0usize;
     let mut start = 0;
     while start < ell {
         let end = (start + block).min(ell);
@@ -108,17 +115,34 @@ pub fn slq_logdet_opts(
             let pinv_z = pinv.col(j);
             let norm2 = dot(&z, &pinv_z); // ‖P^{-1/2} z‖²
             let col = &res.columns[j];
-            let t = col.tridiag.as_ref().expect("tridiag requested");
-            acc += norm2 * t.quadrature(|lam| lam.max(1e-300).ln());
+            let ainv_z = res.x.col(j);
+            let healthy = col.converged
+                && !col.breakdown
+                && ainv_z.iter().all(|v| v.is_finite());
+            // A probe with no completed iteration (breakdown on the
+            // first direction) has no tridiagonal at all; skip its
+            // quadrature instead of panicking, and average over the
+            // probes that did contribute.
+            match (healthy, col.tridiag.as_ref()) {
+                (true, Some(t)) => {
+                    acc += norm2 * t.quadrature(|lam| lam.max(1e-300).ln());
+                    contributed += 1;
+                }
+                _ => failed_probes += 1,
+            }
             total_iters += col.iters;
-            probes.push(SlqProbe { z, pinv_z, ainv_z: res.x.col(j) });
+            // Retain the probe either way so downstream shapes (STE
+            // gradients, diag estimates) stay intact; the caller decides
+            // whether to escalate based on `failed_probes`.
+            probes.push(SlqProbe { z, pinv_z, ainv_z });
         }
         start = end;
     }
     SlqRun {
-        logdet: acc / ell as f64 + pre.logdet(),
+        logdet: acc / contributed.max(1) as f64 + pre.logdet(),
         probes,
         avg_iters: total_iters as f64 / ell.max(1) as f64,
+        failed_probes,
     }
 }
 

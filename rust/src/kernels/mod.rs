@@ -216,6 +216,8 @@ impl ArdMatern {
         for r in out.iter_mut() {
             *r = self.corr_of_dist(*r);
         }
+        // Chaos hook: one relaxed atomic load when faults are disarmed.
+        crate::faults::poison_panel(out);
     }
 
     /// Covariances `σ₁² k_ν(r_t)` of one query point against a gathered

@@ -30,6 +30,7 @@
 //! | `VIFGP_SERVE_MAX_BATCH` | [`serve`] | Maximum points per serving micro-batch (default `64`, the numeric pass's column-block width). Must parse as a positive integer; malformed values panic loudly. |
 //! | `VIFGP_SERVE_BATCH_WINDOW_US` | [`serve`] | Microseconds the dispatcher waits past the oldest queued request to coalesce more arrivals (default `200`; `0` dispatches immediately). Must parse as a non-negative integer; malformed values panic loudly. |
 //! | `VIFGP_SERVE_METRICS_JSON` | `vifgp serve` (CLI) | When set, the serve subcommand writes its final [`serve::MetricsReport`] JSON to this path on shutdown. |
+//! | `VIFGP_FAULTS` | [`faults`] | Deterministic fault injection for chaos testing. `0`/unset → disabled (hooks are a single relaxed atomic load); `1`/`on` → armed with an empty plan; otherwise a comma-separated spec, e.g. `chol_fail_below=1e-8,cg_stall=2,seed=7`. Malformed specs panic loudly. Never set this in production. |
 //! | `VIFGP_ARTIFACTS` | [`runtime`] | Directory of AOT-compiled HLO artifacts for the PJRT engine. Unset → native fallback. |
 //! | `VIFGP_BENCH_SCALE` | benches (`benches/common.rs`) | Multiplier on bench workload sizes (default `1.0`; CI smoke uses `0.05`). |
 //! | `VIFGP_BENCH_JSON` | `benches/perf_hotpath.rs` stage 10 | Output path for `BENCH_assembly.json`. |
@@ -37,12 +38,56 @@
 //! | `VIFGP_BENCH_PREDICT_JSON` | `benches/perf_hotpath.rs` stage 12 | Output path for `BENCH_predict.json`. |
 //! | `VIFGP_BENCH_APPEND_JSON` | `benches/perf_hotpath.rs` stage 13 | Output path for `BENCH_append.json` (streaming-append ingestion throughput). |
 //! | `VIFGP_BENCH_SERVING_JSON` | `benches/perf_hotpath.rs` stage 14 | Output path for `BENCH_serving.json` (concurrent serving latency/throughput sweep). |
+//!
+//! ## Failure semantics
+//!
+//! Numerical failures are classified, contained, and counted instead of
+//! silently propagating garbage. The taxonomy
+//! ([`iterative::SolveFailure`]) distinguishes, in severity order:
+//!
+//! 1. **Non-finite** — a solve or objective evaluation produced NaN/Inf;
+//! 2. **Breakdown** — CG hit the `pᵀAp ≤ 0` exit (numerically indefinite
+//!    operator; [`iterative::CgResult::breakdown`]);
+//! 3. **Max-iter** — the iteration budget ran out before tolerance.
+//!
+//! The escalation policy, applied in order by the Laplace `WSolver` and
+//! the SLQ log-determinant path:
+//!
+//! 1. **Attempt** the configured iterative solve and classify the result;
+//! 2. **Retry** with a 4× CG budget, a doubled Lanczos degree floor for
+//!    SLQ probes, and the preconditioner upgraded (`None` → VIFDU);
+//! 3. **Dense fallback** below a size cutoff (n ≤ 2048): an exact
+//!    factorization of `I + W^{1/2} Σ_† W^{1/2}` answers solves,
+//!    log-determinants, and probe recomputation exactly;
+//! 4. **Best effort** — if the ladder is exhausted the last iterate is
+//!    returned and the `unrecovered` counter records it; the fit driver
+//!    additionally sanitizes any non-finite objective/gradient to `+∞`
+//!    (with zeroed gradient) so L-BFGS rejects the step instead of
+//!    walking on NaNs.
+//!
+//! Every step is recorded in the process-wide [`iterative::solve_stats`]
+//! registry (breakdowns, retries, dense fallbacks, consumed Cholesky
+//! jitter, sanitized evaluations). Cholesky jitter escalation itself is
+//! part of the taxonomy: factorizations report the diagonal jitter they
+//! consumed ([`linalg::CholeskyFactor::new_with_jitter_tracked`]).
+//!
+//! The serving engine ([`serve`]) contains failures per request: panics
+//! inside batch dispatch are caught and bisected so only the poisoned
+//! request gets an error reply, expired client deadlines get a clean
+//! error instead of a hang, non-finite predictions are replaced by error
+//! replies, lock poisoning is recovered, and the dispatcher thread
+//! itself is wrapped in a recovery net so it survives injected panics.
+//! [`serve::ServeMetrics::health`] reports `Degraded` once any of those
+//! containment paths has fired (cumulative counters are in the metrics
+//! report). The whole layer is exercised by `rust/tests/chaos.rs`
+//! through the deterministic [`faults`] harness (`VIFGP_FAULTS`).
 
 pub mod baselines;
 pub mod cli;
 pub mod coordinator;
 pub mod covertree;
 pub mod data;
+pub mod faults;
 pub mod inducing;
 pub mod iterative;
 pub mod kernels;

@@ -27,6 +27,17 @@ pub struct CholeskyFactor {
     l: Mat,
 }
 
+/// Result of the jitter-escalation path
+/// ([`CholeskyFactor::new_with_jitter_tracked`]): the factor, the matrix
+/// actually factored, and the diagonal jitter consumed to get there.
+#[derive(Clone, Debug)]
+pub struct JitteredFactor {
+    pub factor: CholeskyFactor,
+    pub matrix: Mat,
+    /// `0.0` when the input factored cleanly on the first attempt.
+    pub jitter: f64,
+}
+
 impl CholeskyFactor {
     /// Factorize a symmetric positive definite matrix.
     pub fn new(a: &Mat) -> Result<Self, CholeskyError> {
@@ -55,10 +66,7 @@ impl CholeskyFactor {
     /// Factorize with escalating diagonal jitter (used when the residual
     /// covariance is numerically on the PSD boundary).
     pub fn new_with_jitter(a: &Mat, base_jitter: f64) -> Result<Self, CholeskyError> {
-        match Self::new(a) {
-            Ok(f) => Ok(f),
-            Err(_) => Self::new_with_jitter_mat(a, base_jitter).map(|(f, _)| f),
-        }
+        Self::new_with_jitter_tracked(a, base_jitter).map(|j| j.factor)
     }
 
     /// [`Self::new_with_jitter`], additionally returning the matrix that
@@ -66,25 +74,41 @@ impl CholeskyFactor {
     /// jitter). Callers that keep the matrix alongside its factor (e.g.
     /// `vif::LowRank`, whose `Σ_m` is later added into the Woodbury
     /// core) stay exactly consistent with `L Lᵀ` on the retry path.
-    /// This is the single home of the escalation policy.
     pub fn new_with_jitter_mat(a: &Mat, base_jitter: f64) -> Result<(Self, Mat), CholeskyError> {
-        match Self::new(a) {
-            Ok(f) => Ok((f, a.clone())),
-            Err(_) => {
-                let mut jitter = base_jitter.max(1e-12);
-                let mut last = None;
-                for _ in 0..10 {
-                    let mut aj = a.clone();
-                    aj.add_diag(jitter);
-                    match Self::new(&aj) {
-                        Ok(f) => return Ok((f, aj)),
-                        Err(e) => last = Some(e),
-                    }
-                    jitter *= 10.0;
-                }
-                Err(last.unwrap())
+        Self::new_with_jitter_tracked(a, base_jitter).map(|j| (j.factor, j.matrix))
+    }
+
+    /// The single home of the jitter-escalation policy, reporting the
+    /// diagonal jitter it consumed (`0.0` on a clean factorization) so
+    /// callers can record escalations in the crate failure taxonomy
+    /// instead of hiding them. Hooks `faults::chol_should_fail` so chaos
+    /// tests can force the ladder to climb deterministically.
+    pub fn new_with_jitter_tracked(
+        a: &Mat,
+        base_jitter: f64,
+    ) -> Result<JitteredFactor, CholeskyError> {
+        if !crate::faults::chol_should_fail(0.0) {
+            if let Ok(f) = Self::new(a) {
+                return Ok(JitteredFactor { factor: f, matrix: a.clone(), jitter: 0.0 });
             }
         }
+        let mut jitter = base_jitter.max(1e-12);
+        // Synthetic placeholder error for the all-attempts-injected case.
+        let mut last = CholeskyError { pivot: 0, value: f64::NAN };
+        for _ in 0..10 {
+            if crate::faults::chol_should_fail(jitter) {
+                jitter *= 10.0;
+                continue;
+            }
+            let mut aj = a.clone();
+            aj.add_diag(jitter);
+            match Self::new(&aj) {
+                Ok(f) => return Ok(JitteredFactor { factor: f, matrix: aj, jitter }),
+                Err(e) => last = e,
+            }
+            jitter *= 10.0;
+        }
+        Err(last)
     }
 
     /// The lower factor.
@@ -251,6 +275,24 @@ mod tests {
         // ... but jitter rescues a barely-indefinite matrix.
         let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0 - 1e-14]);
         assert!(CholeskyFactor::new_with_jitter(&b, 1e-10).is_ok());
+    }
+
+    #[test]
+    fn tracked_factorization_reports_consumed_jitter() {
+        // Clean input: no jitter consumed.
+        let a = spd(5);
+        let j = CholeskyFactor::new_with_jitter_tracked(&a, 1e-10).unwrap();
+        assert_eq!(j.jitter, 0.0);
+        assert!(j.matrix.max_abs_diff(&a) < 1e-15);
+
+        // Singular input: the escalation climbs and reports the level
+        // that succeeded, and the returned matrix carries that jitter.
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let j = CholeskyFactor::new_with_jitter_tracked(&b, 1e-10).unwrap();
+        assert!(j.jitter > 0.0, "singular input must consume jitter");
+        assert!((j.matrix.get(0, 0) - (1.0 + j.jitter)).abs() < 1e-15);
+        let rec = j.factor.l().matmul_nt(j.factor.l());
+        assert!(rec.max_abs_diff(&j.matrix) < 1e-10);
     }
 
     #[test]

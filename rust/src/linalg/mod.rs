@@ -10,7 +10,7 @@ mod chol;
 mod mat;
 mod tridiag;
 
-pub use chol::{CholeskyError, CholeskyFactor};
+pub use chol::{CholeskyError, CholeskyFactor, JitteredFactor};
 pub use mat::Mat;
 pub use tridiag::{tridiag_eigen, SymTridiag};
 

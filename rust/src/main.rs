@@ -61,6 +61,9 @@ fn main() {
         eprintln!("{msg}");
         std::process::exit(2);
     }
+    // Arm deterministic fault injection from `--faults` / `VIFGP_FAULTS`
+    // (chaos testing only; a malformed spec panics loudly, crate policy).
+    vifgp::faults::init_from_env();
     let code = match cmd.as_str() {
         "info" => cmd_info(),
         "simulate" => cmd_simulate(&flags),
@@ -98,7 +101,9 @@ GLOBAL FLAGS (any command):
                         same as VIFGP_THREADS)
   --sched-threshold N   min rows before Vecchia B sweeps use the level-
                         scheduled parallel path (0 = always; default 2048;
-                        same as VIFGP_SCHED_THRESHOLD)"
+                        same as VIFGP_SCHED_THRESHOLD)
+  --faults SPEC         deterministic fault injection for chaos testing
+                        (same as VIFGP_FAULTS; never use in production)"
     );
 }
 
@@ -121,6 +126,11 @@ fn apply_runtime_flags(flags: &HashMap<String, String>) -> Result<(), String> {
                 ))
             }
         }
+    }
+    if let Some(spec) = flags.get("faults") {
+        // Equivalent to VIFGP_FAULTS=SPEC; parsed (and loudly rejected
+        // if malformed) by `faults::init_from_env` right after this.
+        std::env::set_var("VIFGP_FAULTS", spec);
     }
     Ok(())
 }
@@ -229,7 +239,13 @@ fn cmd_train(flags: &HashMap<String, String>) -> i32 {
     match lik {
         Likelihood::Gaussian { .. } => {
             let init = GaussianParams { kernel: init_kernel, noise: 0.2 };
-            let mut model = VifRegression::new(xtr, ytr, config, init);
+            let mut model = match VifRegression::try_new(xtr, ytr, config, init) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("invalid training data: {e}");
+                    return 2;
+                }
+            };
             let nll = model.fit(iters);
             println!("fit done in {:.1}s  NLL {:.3}", t0.elapsed().as_secs_f64(), nll);
             println!(
@@ -260,7 +276,14 @@ fn cmd_train(flags: &HashMap<String, String>) -> i32 {
                 seed,
                 ..Default::default()
             });
-            let mut model = VifLaplaceModel::new(xtr, ytr, config, mode, init_kernel, lik.clone());
+            let mut model =
+                match VifLaplaceModel::try_new(xtr, ytr, config, mode, init_kernel, lik.clone()) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        eprintln!("invalid training data: {e}");
+                        return 2;
+                    }
+                };
             let nll = model.fit(iters);
             println!("fit done in {:.1}s  L^VIFLA {:.3}", t0.elapsed().as_secs_f64(), nll);
             println!(
@@ -296,6 +319,20 @@ fn cmd_train(flags: &HashMap<String, String>) -> i32 {
                 }
             }
         }
+    }
+    let stats = vifgp::iterative::solve_stats().snapshot();
+    if stats.failures() > 0 || stats.chol_jitter_escalations > 0 || stats.nonfinite_evals > 0 {
+        println!(
+            "  containment: {} solve failures ({} retries / {} recovered / {} dense fallbacks / \
+             {} unrecovered), {} jittered factorizations, {} sanitized evals",
+            stats.failures(),
+            stats.retries,
+            stats.retry_successes,
+            stats.dense_fallbacks,
+            stats.unrecovered,
+            stats.chol_jitter_escalations,
+            stats.nonfinite_evals
+        );
     }
     0
 }
@@ -379,14 +416,27 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let (snapshot, mut writer): (Arc<dyn ServeModel>, Writer) = match lik {
         Likelihood::Gaussian { .. } => {
             let init = GaussianParams { kernel: init_kernel, noise: 0.2 };
-            let mut model = VifRegression::new(xtr, ytr, config, init);
+            let mut model = match VifRegression::try_new(xtr, ytr, config, init) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("invalid training data: {e}");
+                    return 2;
+                }
+            };
             let nll = model.fit(iters);
             println!("fit done in {:.1}s  NLL {:.3}", t0.elapsed().as_secs_f64(), nll);
             (Arc::new(model.snapshot()), Writer::Gaussian(model))
         }
         _ => {
             let mode = SolveMode::Iterative(IterConfig { seed, ..Default::default() });
-            let mut model = VifLaplaceModel::new(xtr, ytr, config, mode, init_kernel, lik);
+            let mut model =
+                match VifLaplaceModel::try_new(xtr, ytr, config, mode, init_kernel, lik) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        eprintln!("invalid training data: {e}");
+                        return 2;
+                    }
+                };
             let nll = model.fit(iters);
             println!("fit done in {:.1}s  L^VIFLA {:.3}", t0.elapsed().as_secs_f64(), nll);
             if model.state.is_none() {
@@ -396,7 +446,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
     };
 
-    let mut engine = ServeEngine::start(snapshot, opts.clone());
+    let engine = ServeEngine::start(snapshot, opts.clone());
     println!(
         "serving generation {} (max_batch {}, batch_window {:?}, {} clients, {} requests)",
         engine.current_generation(),
@@ -470,6 +520,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         report.p99_latency_us,
         report.points_per_sec,
         report.mean_batch
+    );
+    println!(
+        "health: {}  (panics {}, quarantined {}, deadline-shed {}, non-finite {})",
+        match report.health {
+            vifgp::serve::Health::Healthy => "healthy",
+            vifgp::serve::Health::Degraded => "DEGRADED",
+        },
+        report.panics_caught,
+        report.quarantined_requests,
+        report.deadline_expired,
+        report.nonfinite_replies
     );
     if let Ok(path) = std::env::var("VIFGP_SERVE_METRICS_JSON") {
         if let Err(e) = std::fs::write(&path, report.to_json()) {

@@ -1,18 +1,49 @@
-//! Serving metrics: per-request latency recording and windowed
-//! percentile reports (p50/p99, points/sec).
+//! Serving metrics: per-request latency recording, windowed percentile
+//! reports (p50/p99, points/sec), and cumulative containment counters.
 //!
 //! The recorder is deliberately simple — a mutex-guarded latency vector
 //! per measurement window. Requests finish at micro-batch granularity
 //! (≤ `max_batch` per dispatch), so the dispatcher takes the lock once
 //! per *batch*, not once per point, and the lock never sits on the
 //! request threads' enqueue path.
+//!
+//! Containment counters (panics caught, quarantined requests, expired
+//! deadlines, non-finite replies) live *outside* the window mutex as
+//! plain atomics: they are cumulative over the engine's lifetime and are
+//! **not** reset by [`ServeMetrics::drain`], so an operator polling
+//! windowed reports still sees every incident since startup.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Coarse engine health derived from the containment counters.
+///
+/// `Degraded` means the engine has caught at least one prediction panic,
+/// quarantined a request, or produced a non-finite reply since startup —
+/// it is still serving, but something upstream (model state, input data)
+/// deserves a look. Expired deadlines alone do **not** degrade health:
+/// shedding late requests under load is the engine doing its job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+}
 
 /// Thread-safe latency/throughput recorder for one serving engine.
 pub struct ServeMetrics {
     inner: Mutex<Window>,
+    /// Prediction panics caught by the dispatch quarantine or the
+    /// dispatcher's outer recovery net (cumulative, never reset).
+    panics_caught: AtomicU64,
+    /// Requests isolated by batch bisection and answered with an error
+    /// instead of a prediction (cumulative).
+    quarantined_requests: AtomicU64,
+    /// Requests whose deadline expired before dispatch (cumulative).
+    deadline_expired: AtomicU64,
+    /// Requests answered with an error because the model produced a
+    /// non-finite mean or variance (cumulative).
+    nonfinite_replies: AtomicU64,
 }
 
 struct Window {
@@ -49,6 +80,17 @@ pub struct MetricsReport {
     pub mean_batch: f64,
     /// Window length (seconds).
     pub elapsed_secs: f64,
+    /// Prediction panics caught since engine startup (cumulative — not
+    /// reset by `drain`).
+    pub panics_caught: u64,
+    /// Requests quarantined by batch bisection since startup.
+    pub quarantined_requests: u64,
+    /// Requests shed because their deadline expired before dispatch.
+    pub deadline_expired: u64,
+    /// Requests answered with an error for non-finite predictions.
+    pub nonfinite_replies: u64,
+    /// Engine health at report time (see [`Health`]).
+    pub health: Health,
 }
 
 impl MetricsReport {
@@ -59,7 +101,9 @@ impl MetricsReport {
             concat!(
                 "{{\"requests\": {}, \"p50_latency_us\": {:.2}, \"p99_latency_us\": {:.2}, ",
                 "\"mean_latency_us\": {:.2}, \"points_per_sec\": {:.1}, \"batches\": {}, ",
-                "\"mean_batch\": {:.2}, \"elapsed_secs\": {:.4}}}"
+                "\"mean_batch\": {:.2}, \"elapsed_secs\": {:.4}, ",
+                "\"panics_caught\": {}, \"quarantined_requests\": {}, ",
+                "\"deadline_expired\": {}, \"nonfinite_replies\": {}, \"health\": \"{}\"}}"
             ),
             self.requests,
             self.p50_latency_us,
@@ -69,6 +113,14 @@ impl MetricsReport {
             self.batches,
             self.mean_batch,
             self.elapsed_secs,
+            self.panics_caught,
+            self.quarantined_requests,
+            self.deadline_expired,
+            self.nonfinite_replies,
+            match self.health {
+                Health::Healthy => "healthy",
+                Health::Degraded => "degraded",
+            },
         )
     }
 }
@@ -84,17 +136,55 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 
 impl ServeMetrics {
     pub fn new() -> Self {
-        ServeMetrics { inner: Mutex::new(Window::fresh()) }
+        ServeMetrics {
+            inner: Mutex::new(Window::fresh()),
+            panics_caught: AtomicU64::new(0),
+            quarantined_requests: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            nonfinite_replies: AtomicU64::new(0),
+        }
     }
 
     /// Record one dispatched micro-batch (one latency entry per point).
+    /// Recovers a poisoned window lock: a panic elsewhere must not take
+    /// the metrics down with it.
     pub(crate) fn record_batch(&self, latencies_us: &[f64]) {
-        let mut w = self.inner.lock().unwrap();
+        let mut w = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         w.latencies_us.extend_from_slice(latencies_us);
         w.batches += 1;
     }
 
-    fn summarize(w: &Window) -> MetricsReport {
+    pub(crate) fn note_panic(&self) {
+        self.panics_caught.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_quarantined(&self, n: u64) {
+        self.quarantined_requests.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_deadline_expired(&self, n: u64) {
+        self.deadline_expired.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_nonfinite(&self, n: u64) {
+        self.nonfinite_replies.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current engine health: `Degraded` once any panic, quarantine, or
+    /// non-finite reply has occurred; deadline sheds alone stay
+    /// `Healthy` (load shedding is intended behavior).
+    pub fn health(&self) -> Health {
+        let degraded = self.panics_caught.load(Ordering::Relaxed) > 0
+            || self.quarantined_requests.load(Ordering::Relaxed) > 0
+            || self.nonfinite_replies.load(Ordering::Relaxed) > 0;
+        if degraded {
+            Health::Degraded
+        } else {
+            Health::Healthy
+        }
+    }
+
+    fn summarize(&self, w: &Window) -> MetricsReport {
         let mut sorted = w.latencies_us.clone();
         sorted.sort_unstable_by(|a, b| a.total_cmp(b));
         let requests = sorted.len() as u64;
@@ -112,19 +202,26 @@ impl ServeMetrics {
             batches: w.batches,
             mean_batch: if w.batches > 0 { requests as f64 / w.batches as f64 } else { 0.0 },
             elapsed_secs: elapsed,
+            panics_caught: self.panics_caught.load(Ordering::Relaxed),
+            quarantined_requests: self.quarantined_requests.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            nonfinite_replies: self.nonfinite_replies.load(Ordering::Relaxed),
+            health: self.health(),
         }
     }
 
     /// Summarize the current window without resetting it.
     pub fn report(&self) -> MetricsReport {
-        Self::summarize(&self.inner.lock().unwrap())
+        let w = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        self.summarize(&w)
     }
 
     /// Summarize the current window and start a fresh one (the bench's
-    /// per-concurrency-sweep reset).
+    /// per-concurrency-sweep reset). Containment counters are cumulative
+    /// and survive the reset.
     pub fn drain(&self) -> MetricsReport {
-        let mut w = self.inner.lock().unwrap();
-        let report = Self::summarize(&w);
+        let mut w = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let report = self.summarize(&w);
         *w = Window::fresh();
         report
     }
@@ -161,5 +258,33 @@ mod tests {
         let r2 = m.report();
         assert_eq!(r2.requests, 0);
         assert_eq!(r2.batches, 0);
+    }
+
+    #[test]
+    fn containment_counters_are_cumulative_across_drains() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.health(), Health::Healthy);
+        m.note_deadline_expired(2);
+        // Deadline sheds alone never degrade health (load shedding).
+        assert_eq!(m.health(), Health::Healthy);
+        m.note_panic();
+        m.note_quarantined(1);
+        m.note_nonfinite(3);
+        assert_eq!(m.health(), Health::Degraded);
+        let r = m.drain();
+        assert_eq!(r.panics_caught, 1);
+        assert_eq!(r.quarantined_requests, 1);
+        assert_eq!(r.deadline_expired, 2);
+        assert_eq!(r.nonfinite_replies, 3);
+        assert_eq!(r.health, Health::Degraded);
+        // Counters survive the window reset.
+        let r2 = m.report();
+        assert_eq!(r2.requests, 0);
+        assert_eq!(r2.panics_caught, 1);
+        assert_eq!(r2.nonfinite_replies, 3);
+        assert_eq!(r2.health, Health::Degraded);
+        let json = r2.to_json();
+        assert!(json.contains("\"health\": \"degraded\""));
+        assert!(json.contains("\"panics_caught\": 1"));
     }
 }

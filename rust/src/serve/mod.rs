@@ -43,6 +43,28 @@
 //!   yields p50/p99/points-per-sec windows for the load bench
 //!   (`BENCH_serving.json`, perf_hotpath stage 14).
 //!
+//! # Failure containment
+//!
+//! The dispatcher is **immortal**: its loop body runs under
+//! `catch_unwind`, so a panic escaping a batch dispatch (a model bug, or
+//! injected via [`crate::faults`]) drops that batch's reply senders —
+//! every waiter gets a clean error instead of a hang — and the loop
+//! keeps serving. Inside a batch, [`ServeModel::predict_batch`] runs
+//! under its own panic net with **bisection quarantine**: if a batch
+//! panics, it is split in half and each half retried, until the single
+//! poisoned request is isolated and answered with an error while every
+//! healthy request in the batch still gets its prediction (one poisoned
+//! request costs O(log max_batch) extra dispatches). Non-finite
+//! predictions are converted to error replies rather than returned as
+//! data. [`ServeEngine::predict_deadline`] adds a per-request client
+//! timeout: a request whose deadline has passed when its batch is
+//! dispatched is shed with a clean error. All incidents land in
+//! cumulative [`ServeMetrics`] counters and fold into a
+//! [`Health`] flag (`Degraded` on panic / quarantine / non-finite;
+//! deadline sheds alone stay `Healthy`). All engine locks recover from
+//! poisoning — a panic anywhere never wedges enqueue, publish, or
+//! metrics.
+//!
 //! # Env knobs (see the crate-level table)
 //!
 //! `VIFGP_SERVE_MAX_BATCH`, `VIFGP_SERVE_BATCH_WINDOW_US` configure
@@ -52,11 +74,12 @@
 
 mod metrics;
 
-pub use metrics::{MetricsReport, ServeMetrics};
+pub use metrics::{Health, MetricsReport, ServeMetrics};
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::linalg::Mat;
@@ -157,7 +180,18 @@ pub struct Prediction {
 struct Pending {
     point: Vec<f64>,
     enqueued: Instant,
+    /// Client deadline: if this has passed when the batch is dispatched,
+    /// the request is shed with a clean error instead of computed.
+    deadline: Option<Instant>,
     reply: mpsc::SyncSender<Result<Prediction, String>>,
+}
+
+/// Recover a possibly poisoned mutex guard: a panic caught elsewhere
+/// (quarantine, fault injection) must never wedge the engine's queue or
+/// metrics. Invariants are re-established by the panicking code path
+/// itself (replies are per-request; the queue only holds whole entries).
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 struct Shared {
@@ -170,12 +204,18 @@ struct Shared {
     metrics: ServeMetrics,
 }
 
+impl Shared {
+    fn current_model(&self) -> Arc<dyn ServeModel> {
+        Arc::clone(&self.state.read().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
 /// The serving engine: one dispatcher thread draining a shared request
 /// queue into micro-batched reads of the published model snapshot. See
-/// the module docs for the full lifecycle.
+/// the module docs for the full lifecycle and failure containment.
 pub struct ServeEngine {
     shared: Arc<Shared>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl ServeEngine {
@@ -195,19 +235,46 @@ impl ServeEngine {
             .name("vifgp-serve".into())
             .spawn(move || dispatcher_loop(&worker))
             .expect("spawn serve dispatcher");
-        ServeEngine { shared, dispatcher: Some(dispatcher) }
+        ServeEngine { shared, dispatcher: Mutex::new(Some(dispatcher)) }
     }
 
     /// Serve one point query: enqueue, wait for the micro-batched reply.
     /// Blocks the calling thread; safe from any number of threads.
     pub fn predict(&self, point: &[f64]) -> Result<Prediction, String> {
+        self.enqueue_and_wait(point, None)
+    }
+
+    /// Like [`Self::predict`], but with a client timeout: if `timeout`
+    /// has elapsed by the time the request's batch is dispatched, the
+    /// request is shed with a clean error instead of being computed.
+    /// A request that makes it into a dispatch is always computed and
+    /// answered, even if the computation finishes past the deadline —
+    /// the deadline bounds *queueing*, the dominant delay under load.
+    pub fn predict_deadline(
+        &self,
+        point: &[f64],
+        timeout: Duration,
+    ) -> Result<Prediction, String> {
+        self.enqueue_and_wait(point, Some(Instant::now() + timeout))
+    }
+
+    fn enqueue_and_wait(
+        &self,
+        point: &[f64],
+        deadline: Option<Instant>,
+    ) -> Result<Prediction, String> {
         let (tx, rx) = mpsc::sync_channel(1);
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_recover(&self.shared.queue);
             if self.shared.shutdown.load(Ordering::Acquire) {
                 return Err("serving engine is shut down".to_string());
             }
-            q.push_back(Pending { point: point.to_vec(), enqueued: Instant::now(), reply: tx });
+            q.push_back(Pending {
+                point: point.to_vec(),
+                enqueued: Instant::now(),
+                deadline,
+                reply: tx,
+            });
         }
         self.shared.arrived.notify_one();
         match rx.recv() {
@@ -222,13 +289,13 @@ impl ServeEngine {
     /// Returns the published generation.
     pub fn publish(&self, model: Arc<dyn ServeModel>) -> u64 {
         let generation = model.generation();
-        *self.shared.state.write().unwrap() = model;
+        *self.shared.state.write().unwrap_or_else(|e| e.into_inner()) = model;
         generation
     }
 
     /// Generation currently being served.
     pub fn current_generation(&self) -> u64 {
-        self.shared.state.read().unwrap().generation()
+        self.shared.current_model().generation()
     }
 
     /// Latency/throughput recorder (use `report()`/`drain()`).
@@ -236,12 +303,20 @@ impl ServeEngine {
         &self.shared.metrics
     }
 
+    /// Current engine health (see [`Health`]): `Degraded` once any
+    /// prediction panic, quarantine, or non-finite reply has occurred.
+    pub fn health(&self) -> Health {
+        self.shared.metrics.health()
+    }
+
     /// Stop accepting requests, serve everything already queued, and
-    /// join the dispatcher. Idempotent; also runs on drop.
-    pub fn shutdown(&mut self) {
+    /// join the dispatcher. Idempotent; also runs on drop. Takes `&self`
+    /// so it can be invoked while client threads still hold references
+    /// (the shutdown-with-queued-waiters path).
+    pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.arrived.notify_all();
-        if let Some(h) = self.dispatcher.take() {
+        if let Some(h) = lock_recover(&self.dispatcher).take() {
             let _ = h.join();
         }
     }
@@ -253,64 +328,150 @@ impl Drop for ServeEngine {
     }
 }
 
+/// Drain the next micro-batch from the queue, or `None` on shutdown
+/// with an empty queue (dispatcher exit).
+fn next_batch(shared: &Shared) -> Option<Vec<Pending>> {
+    let mut q = lock_recover(&shared.queue);
+    // Wait for work (or shutdown with an empty queue → done).
+    loop {
+        if !q.is_empty() {
+            break;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        q = shared.arrived.wait(q).unwrap_or_else(|e| e.into_inner());
+    }
+    // Coalesce: fill up to max_batch, bounded by batch_window past the
+    // oldest request's enqueue time. On shutdown, flush immediately.
+    let deadline = q.front().unwrap().enqueued + shared.opts.batch_window;
+    while q.len() < shared.opts.max_batch && !shared.shutdown.load(Ordering::Acquire) {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (guard, _) = shared
+            .arrived
+            .wait_timeout(q, deadline - now)
+            .unwrap_or_else(|e| e.into_inner());
+        q = guard;
+    }
+    let take = q.len().min(shared.opts.max_batch);
+    Some(q.drain(..take).collect())
+}
+
 fn dispatcher_loop(shared: &Shared) {
     loop {
-        let batch: Vec<Pending> = {
-            let mut q = shared.queue.lock().unwrap();
-            // Wait for work (or shutdown with an empty queue → done).
-            loop {
-                if !q.is_empty() {
-                    break;
-                }
-                if shared.shutdown.load(Ordering::Acquire) {
-                    return;
-                }
-                q = shared.arrived.wait(q).unwrap();
-            }
-            // Coalesce: fill up to max_batch, bounded by batch_window
-            // past the oldest request's enqueue time. On shutdown, flush
-            // immediately.
-            let deadline = q.front().unwrap().enqueued + shared.opts.batch_window;
-            while q.len() < shared.opts.max_batch && !shared.shutdown.load(Ordering::Acquire) {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (guard, _) = shared.arrived.wait_timeout(q, deadline - now).unwrap();
-                q = guard;
-            }
-            let take = q.len().min(shared.opts.max_batch);
-            q.drain(..take).collect()
+        let batch = match next_batch(shared) {
+            Some(b) => b,
+            None => return,
         };
-        serve_batch(shared, batch);
+        // The dispatcher is immortal: any panic escaping a batch — the
+        // injected dispatcher fault, or a model bug the per-group
+        // quarantine net somehow missed — drops the batch's reply
+        // senders (every waiter gets a clean "dropped the request"
+        // error, no hang) and the loop keeps serving.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if crate::faults::dispatcher_should_panic() {
+                panic!("injected fault: dispatcher loop panic");
+            }
+            serve_batch(shared, batch);
+        }));
+        if outcome.is_err() {
+            shared.metrics.note_panic();
+        }
     }
 }
 
 fn serve_batch(shared: &Shared, batch: Vec<Pending>) {
     // One coherent snapshot per batch: the Arc clone pins the generation
     // for the whole dispatch even if a publish lands mid-compute.
-    let model = Arc::clone(&shared.state.read().unwrap());
+    let model = shared.current_model();
     let d = model.input_dim();
     let generation = model.generation();
-    // Reject malformed queries up front; serve the rest as one block.
+    crate::faults::serve_delay();
+    // Shed expired deadlines and reject malformed queries up front;
+    // serve the rest as one block.
+    let now = Instant::now();
     let mut ok: Vec<Pending> = Vec::with_capacity(batch.len());
+    let mut expired = 0u64;
     for p in batch {
-        if p.point.len() == d {
+        if p.deadline.is_some_and(|dl| now >= dl) {
+            expired += 1;
+            let _ = p.reply.send(Err("deadline expired before dispatch".to_string()));
+        } else if p.point.len() == d {
             ok.push(p);
         } else {
             let msg = format!("query has dimension {}, model expects {}", p.point.len(), d);
             let _ = p.reply.send(Err(msg));
         }
     }
+    if expired > 0 {
+        shared.metrics.note_deadline_expired(expired);
+    }
     if ok.is_empty() {
         return;
     }
-    let xp = Mat::from_fn(ok.len(), d, |i, j| ok[i].point[j]);
-    let (mean, var) = model.predict_batch(&xp);
-    let mut latencies = Vec::with_capacity(ok.len());
-    for (i, p) in ok.iter().enumerate() {
-        latencies.push(p.enqueued.elapsed().as_secs_f64() * 1e6);
-        let _ = p.reply.send(Ok(Prediction { mean: mean[i], var: var[i], generation }));
-    }
+    dispatch_quarantine(shared, model.as_ref(), generation, &ok);
+    // Every request in `ok` has been answered (prediction or error);
+    // record end-to-end latency for the whole micro-batch.
+    let latencies: Vec<f64> =
+        ok.iter().map(|p| p.enqueued.elapsed().as_secs_f64() * 1e6).collect();
     shared.metrics.record_batch(&latencies);
+}
+
+/// Run `group` through `predict_batch` under a panic net. On success,
+/// reply per request (converting non-finite predictions to errors). On
+/// a panic, bisect: a group of one *is* the poisoned request —
+/// quarantine it with an error reply; larger groups split in half and
+/// recurse, so one poisoned request costs O(log max_batch) extra
+/// dispatches and every healthy request still gets its prediction.
+fn dispatch_quarantine(
+    shared: &Shared,
+    model: &dyn ServeModel,
+    generation: u64,
+    group: &[Pending],
+) {
+    if group.is_empty() {
+        return;
+    }
+    let d = model.input_dim();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let xp = Mat::from_fn(group.len(), d, |i, j| group[i].point[j]);
+        crate::faults::serve_check_poison(&xp);
+        model.predict_batch(&xp)
+    }));
+    match result {
+        Ok((mean, var)) => {
+            let mut nonfinite = 0u64;
+            for (i, p) in group.iter().enumerate() {
+                if mean[i].is_finite() && var[i].is_finite() {
+                    let _ =
+                        p.reply.send(Ok(Prediction { mean: mean[i], var: var[i], generation }));
+                } else {
+                    nonfinite += 1;
+                    let _ = p.reply.send(Err(format!(
+                        "model produced a non-finite prediction (mean {}, var {})",
+                        mean[i], var[i]
+                    )));
+                }
+            }
+            if nonfinite > 0 {
+                shared.metrics.note_nonfinite(nonfinite);
+            }
+        }
+        Err(_) => {
+            shared.metrics.note_panic();
+            if group.len() == 1 {
+                shared.metrics.note_quarantined(1);
+                let _ = group[0]
+                    .reply
+                    .send(Err("prediction panicked; request quarantined".to_string()));
+            } else {
+                let mid = group.len() / 2;
+                dispatch_quarantine(shared, model, generation, &group[..mid]);
+                dispatch_quarantine(shared, model, generation, &group[mid..]);
+            }
+        }
+    }
 }

@@ -274,9 +274,23 @@ pub struct VifRegression {
 }
 
 impl VifRegression {
+    /// Panicking constructor; see [`Self::try_new`] for the validating
+    /// variant (CLI surfaces route through it).
     pub fn new(x: Mat, y: Vec<f64>, config: VifConfig, init: GaussianParams) -> Self {
-        assert_eq!(x.rows(), y.len());
-        VifRegression {
+        Self::try_new(x, y, config, init).unwrap_or_else(|e| panic!("VifRegression::new: {e}"))
+    }
+
+    /// Construct after validating the training data (the same checks as
+    /// [`Self::append_points`]: row/response match, no NaN/Inf on either
+    /// side). A rejected construction builds no structure at all.
+    pub fn try_new(
+        x: Mat,
+        y: Vec<f64>,
+        config: VifConfig,
+        init: GaussianParams,
+    ) -> Result<Self, crate::vif::VifError> {
+        crate::vif::validate_training_data(&x, &y)?;
+        Ok(VifRegression {
             config,
             x,
             y,
@@ -286,7 +300,7 @@ impl VifRegression {
             plan: None,
             fit_trace: vec![],
             appended_since_select: 0,
-        }
+        })
     }
 
     /// (Re-)select inducing points and neighbors for the current kernel,
@@ -770,9 +784,12 @@ pub fn gls_beta(s: &VifStructure, f: &Mat, y: &[f64]) -> Vec<f64> {
     let sx = s.apply_sigma_dagger_inv_batch(f);
     let xtx = f.matmul_tn(&sx); // XᵀΣ⁻¹X (p×p)
     let xty = sx.matvec_t(y); // (Σ⁻¹X)ᵀy
-    let chol = crate::linalg::CholeskyFactor::new_with_jitter(&xtx, 1e-10)
-        .expect("fixed-effects design is rank-deficient");
-    chol.solve(&xty)
+    let jf = crate::linalg::CholeskyFactor::new_with_jitter_tracked(&xtx, 1e-10)
+        .unwrap_or_else(|e| {
+            panic!("gls_beta: fixed-effects normal equations not PD ({e}); rank-deficient design?")
+        });
+    crate::iterative::solve_stats().note_jitter(jf.jitter);
+    jf.factor.solve(&xty)
 }
 
 /// Profile NLL and gradient with linear fixed effects (envelope theorem).

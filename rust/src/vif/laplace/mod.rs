@@ -1138,8 +1138,23 @@ impl VifLaplaceModel {
         kernel: ArdMatern,
         lik: Likelihood,
     ) -> Self {
-        assert_eq!(x.rows(), y.len());
-        VifLaplaceModel {
+        Self::try_new(x, y, config, mode, kernel, lik)
+            .unwrap_or_else(|e| panic!("VifLaplaceModel::new: {e}"))
+    }
+
+    /// Validating constructor: rejects dimension-mismatched or non-finite
+    /// training data before any VIF structure is built (see
+    /// [`crate::vif::VifError`]).
+    pub fn try_new(
+        x: Mat,
+        y: Vec<f64>,
+        config: crate::vif::VifConfig,
+        mode: SolveMode,
+        kernel: ArdMatern,
+        lik: Likelihood,
+    ) -> Result<Self, crate::vif::VifError> {
+        crate::vif::validate_training_data(&x, &y)?;
+        Ok(VifLaplaceModel {
             config,
             mode,
             x,
@@ -1152,7 +1167,7 @@ impl VifLaplaceModel {
             state: None,
             fit_trace: vec![],
             appended_since_select: 0,
-        }
+        })
     }
 
     fn pack(&self) -> Vec<f64> {

@@ -3,15 +3,36 @@
 //! preconditioned-CG / SLQ machinery of §4, split out of the parent
 //! module so the model's append/refresh surface lives apart from the
 //! mode-finding internals.
+//!
+//! # Failure containment
+//!
+//! Iterative solves here never silently return garbage. Every attempt is
+//! classified per the crate taxonomy ([`crate::iterative::SolveDiag`]),
+//! and on failure the escalation ladder runs: an escalated retry (4× CG
+//! budget, doubled SLQ Lanczos floor, `None` preconditioner upgraded to
+//! VIFDU), then an exact dense factorization below
+//! [`DENSE_FALLBACK_MAX_N`], and only past that a best-effort result
+//! with the `unrecovered` counter bumped. All steps are recorded in
+//! [`crate::iterative::solve_stats`]. The escalation state (upgraded
+//! preconditioner, dense backend) is built lazily behind `OnceLock`s so
+//! the solver stays `&self` — the prediction path captures `solve_batch`
+//! in `impl Fn` closures for the SBPV/SPV probe drivers.
+
+use std::sync::OnceLock;
 
 use crate::iterative::{
-    map_columns, pcg, pcg_batch, slq_logdet_opts, FitcPrecond, IterConfig, LinOp, PrecondType,
-    SlqRun, VifduPrecond,
+    map_columns, pcg, pcg_batch, slq_logdet_opts, solve_stats, FitcPrecond, IdentityPrecond,
+    IterConfig, LinOp, PrecondType, SlqRun, SolveDiag, SolveFailure, VifduPrecond,
 };
 use crate::kernels::ArdMatern;
 use crate::linalg::{dot, CholeskyFactor, Mat};
 use crate::rng::Rng;
 use crate::vif::VifStructure;
+
+/// Size cutoff for the dense `O(n³)` fallback factorization: below this
+/// the ladder's last resort is exact; above it, best-effort iterates are
+/// returned (with counters) rather than risking an enormous dense solve.
+pub const DENSE_FALLBACK_MAX_N: usize = 2048;
 
 /// Solver backend for all `(W + Σ_†⁻¹)`-type operations.
 #[derive(Clone, Debug)]
@@ -94,6 +115,14 @@ pub struct WSolver<'a> {
     pub(super) dense: Option<(Mat, CholeskyFactor)>,
     vifdu: Option<VifduPrecond<'a>>,
     fitc: Option<FitcPrecond>,
+    /// Escalation state, built lazily on first failure (interior
+    /// mutability keeps the solver `&self` for the `impl Fn` closure
+    /// consumers of `solve_batch`).
+    vifdu_upgrade: OnceLock<VifduPrecond<'a>>,
+    /// Dense backstop `(Σ_†, chol(I + W½ΣW½))`; `None` inside means the
+    /// build itself was attempted and failed (or n exceeds the cutoff
+    /// check happens before init).
+    fallback: OnceLock<Option<(Mat, CholeskyFactor)>>,
 }
 
 impl<'a> WSolver<'a> {
@@ -119,15 +148,18 @@ impl<'a> WSolver<'a> {
                     }
                 }
                 bk.add_diag(1.0);
-                let chol = CholeskyFactor::new_with_jitter(&bk, 1e-10)
+                let jf = CholeskyFactor::new_with_jitter_tracked(&bk, 1e-10)
                     .expect("I + W½ΣW½ not PD");
+                solve_stats().note_jitter(jf.jitter);
                 WSolver {
                     s,
                     w,
                     mode: mode.clone(),
-                    dense: Some((sigma, chol)),
+                    dense: Some((sigma, jf.factor)),
                     vifdu: None,
                     fitc: None,
+                    vifdu_upgrade: OnceLock::new(),
+                    fallback: OnceLock::new(),
                 }
             }
             SolveMode::Iterative(cfg) => {
@@ -139,157 +171,380 @@ impl<'a> WSolver<'a> {
                     ),
                     PrecondType::None => (None, None),
                 };
-                WSolver { s, w, mode: mode.clone(), dense: None, vifdu, fitc }
+                WSolver {
+                    s,
+                    w,
+                    mode: mode.clone(),
+                    dense: None,
+                    vifdu,
+                    fitc,
+                    vifdu_upgrade: OnceLock::new(),
+                    fallback: OnceLock::new(),
+                }
             }
         }
+    }
+
+    /// The VIFDU preconditioner to use: the configured one, or — on the
+    /// escalated retry when the configuration runs unpreconditioned — a
+    /// lazily built upgrade.
+    fn vifdu_precond(&self, escalate: bool) -> Option<&VifduPrecond<'a>> {
+        if let Some(p) = &self.vifdu {
+            return Some(p);
+        }
+        if !escalate {
+            return None;
+        }
+        Some(self.vifdu_upgrade.get_or_init(|| VifduPrecond::new(self.s, &self.w)))
+    }
+
+    /// The dense `(Σ_†, chol(B_K))` backstop: the primary dense backend
+    /// in Cholesky mode, or the lazily built fallback below
+    /// [`DENSE_FALLBACK_MAX_N`] in iterative mode.
+    fn dense_backend(&self) -> Option<(&Mat, &CholeskyFactor)> {
+        if let Some((sigma, chol)) = self.dense.as_ref() {
+            return Some((sigma, chol));
+        }
+        if self.s.n() > DENSE_FALLBACK_MAX_N {
+            return None;
+        }
+        self.fallback
+            .get_or_init(|| {
+                let sigma = self.s.dense_sigma_dagger();
+                let n = self.s.n();
+                let mut bk = Mat::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        bk.set(i, j, self.w[i].sqrt() * sigma.get(i, j) * self.w[j].sqrt());
+                    }
+                }
+                bk.add_diag(1.0);
+                match CholeskyFactor::new_with_jitter_tracked(&bk, 1e-10) {
+                    Ok(jf) => {
+                        solve_stats().note_jitter(jf.jitter);
+                        Some((sigma, jf.factor))
+                    }
+                    Err(_) => None,
+                }
+            })
+            .as_ref()
+            .map(|(sigma, chol)| (sigma, chol))
+    }
+
+    /// Exact `(W + Σ_†⁻¹)⁻¹ v = Σv − ΣW½ B_K⁻¹ W½Σv` through a dense
+    /// backend.
+    fn dense_apply(&self, sigma: &Mat, chol: &CholeskyFactor, v: &[f64]) -> Vec<f64> {
+        let sv = sigma.matvec(v);
+        let ws: Vec<f64> = sv.iter().zip(&self.w).map(|(a, w)| a * w.sqrt()).collect();
+        let t = chol.solve(&ws);
+        let wt: Vec<f64> = t.iter().zip(&self.w).map(|(a, w)| a * w.sqrt()).collect();
+        let c = sigma.matvec(&wt);
+        sv.iter().zip(&c).map(|(a, b)| a - b).collect()
+    }
+
+    /// One iterative attempt at `(W + Σ_†⁻¹)⁻¹ v`, classified.
+    /// `escalate` raises the CG budget 4× and upgrades a `None`
+    /// preconditioner to VIFDU.
+    fn solve_attempt(&self, cfg: &IterConfig, v: &[f64], escalate: bool) -> (Vec<f64>, SolveDiag) {
+        let max_cg = if escalate { cfg.max_cg * 4 } else { cfg.max_cg };
+        match cfg.precond {
+            PrecondType::Vifdu | PrecondType::None => {
+                let op = OpWPlusPrec { s: self.s, w: &self.w };
+                let res = match self.vifdu_precond(escalate) {
+                    Some(p) => pcg(&op, p, v, cfg.cg_tol, max_cg, false),
+                    None => pcg(&op, &IdentityPrecond(self.s.n()), v, cfg.cg_tol, max_cg, false),
+                };
+                let mut diag = res.diag();
+                diag.retried = escalate;
+                (res.x, diag)
+            }
+            PrecondType::Fitc => {
+                // (W+Σ⁻¹)⁻¹v = W⁻¹ (W⁻¹+Σ)⁻¹ Σ v
+                let op = OpWinvPlusCov { s: self.s, w: &self.w };
+                let rhs = self.s.apply_sigma_dagger(v);
+                let res = pcg(&op, self.fitc.as_ref().unwrap(), &rhs, cfg.cg_tol, max_cg, false);
+                let mut diag = res.diag();
+                diag.retried = escalate;
+                (
+                    res.x.iter().zip(&self.w).map(|(a, w)| a / w).collect(),
+                    diag,
+                )
+            }
+        }
+    }
+
+    /// One iterative attempt at the batched solve; per-column failure
+    /// classification (severity: non-finite > breakdown > max-iter).
+    fn solve_batch_attempt(
+        &self,
+        cfg: &IterConfig,
+        v: &Mat,
+        escalate: bool,
+    ) -> (Mat, Vec<Option<SolveFailure>>) {
+        let max_cg = if escalate { cfg.max_cg * 4 } else { cfg.max_cg };
+        let res = match cfg.precond {
+            PrecondType::Vifdu | PrecondType::None => {
+                let op = OpWPlusPrec { s: self.s, w: &self.w };
+                match self.vifdu_precond(escalate) {
+                    Some(p) => pcg_batch(&op, p, v, cfg.cg_tol, max_cg, false),
+                    None => {
+                        pcg_batch(&op, &IdentityPrecond(self.s.n()), v, cfg.cg_tol, max_cg, false)
+                    }
+                }
+            }
+            PrecondType::Fitc => {
+                // (W+Σ⁻¹)⁻¹V = W⁻¹ (W⁻¹+Σ)⁻¹ Σ V
+                let op = OpWinvPlusCov { s: self.s, w: &self.w };
+                let rhs = self.s.apply_sigma_dagger_batch(v);
+                let mut res =
+                    pcg_batch(&op, self.fitc.as_ref().unwrap(), &rhs, cfg.cg_tol, max_cg, false);
+                for i in 0..res.x.rows() {
+                    let wi = self.w[i];
+                    for xi in res.x.row_mut(i) {
+                        *xi /= wi;
+                    }
+                }
+                res
+            }
+        };
+        let failures = (0..v.cols())
+            .map(|j| {
+                let col = &res.columns[j];
+                if res.x.col(j).iter().any(|t| !t.is_finite()) {
+                    Some(SolveFailure::NonFinite)
+                } else if col.breakdown {
+                    Some(SolveFailure::Breakdown)
+                } else if !col.converged {
+                    Some(SolveFailure::MaxIter)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        (res.x, failures)
     }
 
     pub fn w(&self) -> &[f64] {
         &self.w
     }
 
-    /// `(W + Σ_†⁻¹)⁻¹ v`.
+    /// `(W + Σ_†⁻¹)⁻¹ v`, contained: on a classified failure the
+    /// escalation ladder runs (retry → dense fallback → best effort).
     pub fn solve(&self, v: &[f64]) -> Vec<f64> {
         match &self.mode {
             SolveMode::Cholesky => {
                 // (W+Σ⁻¹)⁻¹ = Σ − ΣW½ B_K⁻¹ W½Σ
                 let (sigma, chol) = self.dense.as_ref().unwrap();
-                let sv = sigma.matvec(v);
-                let ws: Vec<f64> = sv.iter().zip(&self.w).map(|(a, w)| a * w.sqrt()).collect();
-                let t = chol.solve(&ws);
-                let wt: Vec<f64> = t.iter().zip(&self.w).map(|(a, w)| a * w.sqrt()).collect();
-                let c = sigma.matvec(&wt);
-                sv.iter().zip(&c).map(|(a, b)| a - b).collect()
+                self.dense_apply(sigma, chol, v)
             }
-            SolveMode::Iterative(cfg) => match cfg.precond {
-                PrecondType::Vifdu | PrecondType::None => {
-                    let op = OpWPlusPrec { s: self.s, w: &self.w };
-                    let res = match &self.vifdu {
-                        Some(p) => pcg(&op, p, v, cfg.cg_tol, cfg.max_cg, false),
-                        None => pcg(
-                            &op,
-                            &crate::iterative::IdentityPrecond(self.s.n()),
-                            v,
-                            cfg.cg_tol,
-                            cfg.max_cg,
-                            false,
-                        ),
-                    };
-                    res.x
+            SolveMode::Iterative(cfg) => {
+                let (x, diag) = self.solve_attempt(cfg, v, false);
+                let Some(failure) = diag.failure else {
+                    return x;
+                };
+                let stats = solve_stats();
+                stats.note_failure(failure);
+                stats.note_retry();
+                let (x2, diag2) = self.solve_attempt(cfg, v, true);
+                if diag2.failure.is_none() {
+                    stats.note_retry_success();
+                    return x2;
                 }
-                PrecondType::Fitc => {
-                    // (W+Σ⁻¹)⁻¹v = W⁻¹ (W⁻¹+Σ)⁻¹ Σ v
-                    let op = OpWinvPlusCov { s: self.s, w: &self.w };
-                    let rhs = self.s.apply_sigma_dagger(v);
-                    let res = pcg(
-                        &op,
-                        self.fitc.as_ref().unwrap(),
-                        &rhs,
-                        cfg.cg_tol,
-                        cfg.max_cg,
-                        false,
-                    );
-                    res.x.iter().zip(&self.w).map(|(a, w)| a / w).collect()
+                if let Some((sigma, chol)) = self.dense_backend() {
+                    stats.note_dense_fallback();
+                    return self.dense_apply(sigma, chol, v);
                 }
-            },
+                stats.note_unrecovered();
+                // Best effort: prefer a finite iterate.
+                if x2.iter().all(|t| t.is_finite()) {
+                    x2
+                } else {
+                    x
+                }
+            }
         }
     }
 
     /// `(W + Σ_†⁻¹)⁻¹ V` for a column block of right-hand sides (batched
-    /// preconditioned CG; dense path maps columns).
+    /// preconditioned CG; dense path maps columns). The escalation
+    /// ladder runs per failed column: only failing columns are retried
+    /// and, if still failing, answered by the dense backstop.
     pub fn solve_batch(&self, v: &Mat) -> Mat {
         match &self.mode {
             SolveMode::Cholesky => map_columns(v, |col| self.solve(col)),
-            SolveMode::Iterative(cfg) => match cfg.precond {
-                PrecondType::Vifdu | PrecondType::None => {
-                    let op = OpWPlusPrec { s: self.s, w: &self.w };
-                    let res = match &self.vifdu {
-                        Some(p) => pcg_batch(&op, p, v, cfg.cg_tol, cfg.max_cg, false),
-                        None => pcg_batch(
-                            &op,
-                            &crate::iterative::IdentityPrecond(self.s.n()),
-                            v,
-                            cfg.cg_tol,
-                            cfg.max_cg,
-                            false,
-                        ),
-                    };
-                    res.x
+            SolveMode::Iterative(cfg) => {
+                let (mut x, failures) = self.solve_batch_attempt(cfg, v, false);
+                let failed: Vec<usize> =
+                    (0..v.cols()).filter(|&j| failures[j].is_some()).collect();
+                if failed.is_empty() {
+                    return x;
                 }
-                PrecondType::Fitc => {
-                    // (W+Σ⁻¹)⁻¹V = W⁻¹ (W⁻¹+Σ)⁻¹ Σ V
-                    let op = OpWinvPlusCov { s: self.s, w: &self.w };
-                    let rhs = self.s.apply_sigma_dagger_batch(v);
-                    let res = pcg_batch(
-                        &op,
-                        self.fitc.as_ref().unwrap(),
-                        &rhs,
-                        cfg.cg_tol,
-                        cfg.max_cg,
-                        false,
-                    );
-                    let mut x = res.x;
-                    for i in 0..x.rows() {
-                        let wi = self.w[i];
-                        for xi in x.row_mut(i) {
-                            *xi /= wi;
+                let stats = solve_stats();
+                for &j in &failed {
+                    stats.note_failure(failures[j].unwrap());
+                }
+                stats.note_retry();
+                let n = v.rows();
+                let sub = Mat::from_fn(n, failed.len(), |i, slot| v.get(i, failed[slot]));
+                let (x2, failures2) = self.solve_batch_attempt(cfg, &sub, true);
+                let mut still: Vec<(usize, usize)> = Vec::new();
+                for (slot, &j) in failed.iter().enumerate() {
+                    if failures2[slot].is_none() {
+                        for i in 0..n {
+                            x.set(i, j, x2.get(i, slot));
+                        }
+                    } else {
+                        still.push((slot, j));
+                    }
+                }
+                if still.is_empty() {
+                    stats.note_retry_success();
+                    return x;
+                }
+                if let Some((sigma, chol)) = self.dense_backend() {
+                    stats.note_dense_fallback();
+                    // Recovered escalated columns keep their iterates;
+                    // still-failing ones get the exact dense solve.
+                    for &(_, j) in &still {
+                        let xd = self.dense_apply(sigma, chol, &v.col(j));
+                        for i in 0..n {
+                            x.set(i, j, xd[i]);
                         }
                     }
-                    x
+                    return x;
                 }
-            },
+                stats.note_unrecovered();
+                // Best effort: take the escalated iterate where finite.
+                for &(slot, j) in &still {
+                    let cand = x2.col(slot);
+                    if cand.iter().all(|t| t.is_finite()) {
+                        for i in 0..n {
+                            x.set(i, j, cand[i]);
+                        }
+                    }
+                }
+                x
+            }
         }
     }
 
-    /// `log det(Σ_† W + I)` plus retained probes for gradient STE.
-    /// `probes_system` marks which system the probes solve.
-    pub fn logdet_and_probes(&self, rng: &mut Rng) -> (f64, Option<(SlqRun, PrecondType)>) {
-        match &self.mode {
-            SolveMode::Cholesky => {
-                let (_, chol) = self.dense.as_ref().unwrap();
-                (chol.logdet(), None)
-            }
-            SolveMode::Iterative(cfg) => match cfg.precond {
-                PrecondType::Vifdu | PrecondType::None => {
-                    // (18): log det(Σ_†W+I) = log det Σ_† + log det(W+Σ_†⁻¹)
-                    let op = OpWPlusPrec { s: self.s, w: &self.w };
-                    let opts = cfg.slq_options();
-                    let run = match &self.vifdu {
-                        Some(p) => {
-                            slq_logdet_opts(&op, p, cfg.ell, rng, cfg.cg_tol, cfg.max_cg, &opts)
-                        }
-                        None => slq_logdet_opts(
-                            &op,
-                            &crate::iterative::IdentityPrecond(self.s.n()),
-                            cfg.ell,
-                            rng,
-                            cfg.cg_tol,
-                            cfg.max_cg,
-                            &opts,
-                        ),
-                    };
-                    (
-                        self.s.logdet() + run.logdet,
-                        Some((run, PrecondType::Vifdu)),
-                    )
-                }
-                PrecondType::Fitc => {
-                    // (19): log det(Σ_†W+I) = log det W + log det(W⁻¹+Σ_†)
-                    let op = OpWinvPlusCov { s: self.s, w: &self.w };
-                    let run = slq_logdet_opts(
+    /// One SLQ attempt on the configured system. `escalate` raises the
+    /// CG budget 4×, doubles the Lanczos degree floor, and upgrades a
+    /// `None` preconditioner to VIFDU.
+    fn slq_attempt(&self, cfg: &IterConfig, rng: &mut Rng, escalate: bool) -> (SlqRun, PrecondType) {
+        let max_cg = if escalate { cfg.max_cg * 4 } else { cfg.max_cg };
+        let mut opts = cfg.slq_options();
+        if escalate {
+            opts.min_iter *= 2;
+        }
+        match cfg.precond {
+            PrecondType::Vifdu | PrecondType::None => {
+                // (18): log det(Σ_†W+I) = log det Σ_† + log det(W+Σ_†⁻¹)
+                let op = OpWPlusPrec { s: self.s, w: &self.w };
+                let run = match self.vifdu_precond(escalate) {
+                    Some(p) => slq_logdet_opts(&op, p, cfg.ell, rng, cfg.cg_tol, max_cg, &opts),
+                    None => slq_logdet_opts(
                         &op,
-                        self.fitc.as_ref().unwrap(),
+                        &IdentityPrecond(self.s.n()),
                         cfg.ell,
                         rng,
                         cfg.cg_tol,
-                        cfg.max_cg,
-                        &cfg.slq_options(),
-                    );
-                    let ld_w: f64 = self.w.iter().map(|w| w.ln()).sum();
-                    (ld_w + run.logdet, Some((run, PrecondType::Fitc)))
-                }
-            },
+                        max_cg,
+                        &opts,
+                    ),
+                };
+                (run, PrecondType::Vifdu)
+            }
+            PrecondType::Fitc => {
+                // (19): log det(Σ_†W+I) = log det W + log det(W⁻¹+Σ_†)
+                let op = OpWinvPlusCov { s: self.s, w: &self.w };
+                let run = slq_logdet_opts(
+                    &op,
+                    self.fitc.as_ref().unwrap(),
+                    cfg.ell,
+                    rng,
+                    cfg.cg_tol,
+                    max_cg,
+                    &opts,
+                );
+                (run, PrecondType::Fitc)
+            }
         }
+    }
+
+    /// Add the system-specific composition constant so the returned
+    /// total is `log det(Σ_† W + I)`.
+    fn compose_logdet(
+        &self,
+        run: SlqRun,
+        system: PrecondType,
+    ) -> (f64, Option<(SlqRun, PrecondType)>) {
+        let total = match system {
+            PrecondType::Vifdu | PrecondType::None => self.s.logdet() + run.logdet,
+            PrecondType::Fitc => self.w.iter().map(|w| w.ln()).sum::<f64>() + run.logdet,
+        };
+        (total, Some((run, system)))
+    }
+
+    /// `log det(Σ_† W + I)` plus retained probes for gradient STE.
+    /// The second tuple element marks which system the probes solve.
+    ///
+    /// Contained: a run with failed probes is retried escalated; if
+    /// probes still fail and a dense backend is available, the
+    /// log-determinant is replaced by the exact `log det chol(B_K)` and
+    /// every probe's `A⁻¹z` is recomputed exactly, so downstream STE
+    /// gradients and diagonal estimates reuse exact solves with
+    /// unchanged shapes.
+    pub fn logdet_and_probes(&self, rng: &mut Rng) -> (f64, Option<(SlqRun, PrecondType)>) {
+        let cfg = match &self.mode {
+            SolveMode::Cholesky => {
+                let (_, chol) = self.dense.as_ref().unwrap();
+                return (chol.logdet(), None);
+            }
+            SolveMode::Iterative(cfg) => cfg,
+        };
+        let (run, system) = self.slq_attempt(cfg, rng, false);
+        if run.failed_probes == 0 {
+            return self.compose_logdet(run, system);
+        }
+        let stats = solve_stats();
+        stats.note_retry();
+        let (run2, system) = self.slq_attempt(cfg, rng, true);
+        if run2.failed_probes == 0 {
+            stats.note_retry_success();
+            return self.compose_logdet(run2, system);
+        }
+        if let Some((sigma, chol)) = self.dense_backend() {
+            stats.note_dense_fallback();
+            let mut run = run2;
+            let exact_bk = chol.logdet();
+            match system {
+                PrecondType::Vifdu | PrecondType::None => {
+                    // A = W+Σ⁻¹: log det A = log det B_K − log det Σ, and
+                    // A⁻¹z is exactly the dense apply.
+                    run.logdet = exact_bk - self.s.logdet();
+                    for p in run.probes.iter_mut() {
+                        p.ainv_z = self.dense_apply(sigma, chol, &p.z);
+                    }
+                }
+                PrecondType::Fitc => {
+                    // A = W⁻¹+Σ = W^{-½} B_K W^{-½}: log det A =
+                    // log det B_K − Σ log w, and A⁻¹ = W½ B_K⁻¹ W½.
+                    let ld_w: f64 = self.w.iter().map(|w| w.ln()).sum();
+                    run.logdet = exact_bk - ld_w;
+                    for p in run.probes.iter_mut() {
+                        let wz: Vec<f64> =
+                            p.z.iter().zip(&self.w).map(|(z, w)| z * w.sqrt()).collect();
+                        let t = chol.solve(&wz);
+                        p.ainv_z = t.iter().zip(&self.w).map(|(t, w)| t * w.sqrt()).collect();
+                    }
+                }
+            }
+            run.failed_probes = 0;
+            return self.compose_logdet(run, system);
+        }
+        stats.note_unrecovered();
+        self.compose_logdet(run2, system)
     }
 
     /// `diag((W + Σ_†⁻¹)⁻¹)` — exact (dense) or probe-based estimate.

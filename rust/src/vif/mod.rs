@@ -166,6 +166,58 @@ impl Default for VifConfig {
     }
 }
 
+/// Structured validation/containment errors of the VIF model layer
+/// (part of the crate failure taxonomy; see the crate-root "Failure
+/// semantics" section). Constructor and ingest validation reject bad
+/// inputs with one of these *before* any structure is built or mutated.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VifError {
+    /// Row/response or column-dimension mismatch between inputs.
+    DimensionMismatch { expected: usize, got: usize, what: &'static str },
+    /// An input contains NaN/Inf.
+    NonFinite { what: &'static str },
+}
+
+impl std::fmt::Display for VifError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VifError::DimensionMismatch { expected, got, what } => {
+                write!(f, "{what}: expected {expected}, got {got}")
+            }
+            VifError::NonFinite { what } => write!(f, "{what} contains non-finite values"),
+        }
+    }
+}
+
+impl std::error::Error for VifError {}
+
+impl From<VifError> for String {
+    fn from(e: VifError) -> String {
+        e.to_string()
+    }
+}
+
+/// Fit-time input validation shared by both models' constructors
+/// (mirrors the `append_points` checks): responses must match the input
+/// rows, and neither side may carry NaN/Inf. Returns before any
+/// structure is built, so a rejected model leaves no partial state.
+pub(crate) fn validate_training_data(x: &Mat, y: &[f64]) -> Result<(), VifError> {
+    if x.rows() != y.len() {
+        return Err(VifError::DimensionMismatch {
+            expected: x.rows(),
+            got: y.len(),
+            what: "training responses y must match X rows",
+        });
+    }
+    if x.data().iter().any(|v| !v.is_finite()) {
+        return Err(VifError::NonFinite { what: "training inputs X" });
+    }
+    if y.iter().any(|v| !v.is_finite()) {
+        return Err(VifError::NonFinite { what: "training responses y" });
+    }
+    Ok(())
+}
+
 /// Low-rank (predictive-process) blocks for a fixed kernel and inducing
 /// set: `Σ_m = K(Z,Z)`, `Σ_mn = K(Z,X)` and the two solved panels used
 /// everywhere downstream.
@@ -198,12 +250,15 @@ impl LowRank {
         let n = x.rows();
         let mut sig_m = kernel.sym_cov(&z, 0.0);
         sig_m.add_diag(jitter.max(1e-10) * kernel.variance);
-        // `new_with_jitter_mat` hands back the matrix actually factored
-        // (including any escalated jitter), so the stored Σ_m that
-        // `assemble` adds into the Woodbury core is exactly `L Lᵀ` even
-        // on the ill-conditioned retry path.
-        let (chol_m, sig_m) = CholeskyFactor::new_with_jitter_mat(&sig_m, jitter.max(1e-10))
+        // The tracked factorization hands back the matrix actually
+        // factored (including any escalated jitter), so the stored Σ_m
+        // that `assemble` adds into the Woodbury core is exactly `L Lᵀ`
+        // even on the ill-conditioned retry path; consumed jitter is
+        // recorded in the containment counters.
+        let jf = CholeskyFactor::new_with_jitter_tracked(&sig_m, jitter.max(1e-10))
             .expect("inducing-point covariance not PD");
+        crate::iterative::solve_stats().note_jitter(jf.jitter);
+        let (chol_m, sig_m) = (jf.factor, jf.matrix);
         // Σ_mn panel: served by the AOT/PJRT engine when available (the
         // Layer-1 Pallas kernel), native fallback otherwise.
         let sigma_nm = crate::runtime::cross_cov_panel(x, &z, kernel);
@@ -223,10 +278,11 @@ impl LowRank {
         debug_assert_eq!(self.sigma_nm.rows(), x.rows());
         kernel.sym_cov_into(&self.z, 0.0, &mut self.sig_m);
         self.sig_m.add_diag(jitter.max(1e-10) * kernel.variance);
-        let (chol_m, sig_m) = CholeskyFactor::new_with_jitter_mat(&self.sig_m, jitter.max(1e-10))
+        let jf = CholeskyFactor::new_with_jitter_tracked(&self.sig_m, jitter.max(1e-10))
             .expect("inducing-point covariance not PD");
-        self.chol_m = chol_m;
-        self.sig_m = sig_m;
+        crate::iterative::solve_stats().note_jitter(jf.jitter);
+        self.chol_m = jf.factor;
+        self.sig_m = jf.matrix;
         crate::runtime::cross_cov_panel_into(x, &self.z, kernel, &mut self.sigma_nm);
         Self::fill_vt_et(&self.chol_m, &self.sigma_nm, &mut self.vt, &mut self.et);
     }
@@ -966,8 +1022,10 @@ impl VifStructure {
                 // numerically symmetric by construction); add the Σ_m
                 // already formed in LowRank::build (no L Lᵀ rebuild).
                 mcal.add_assign(&lr.sig_m);
-                let chol_mcal = CholeskyFactor::new_with_jitter(&mcal, jitter.max(1e-10))
+                let jf = CholeskyFactor::new_with_jitter_tracked(&mcal, jitter.max(1e-10))
                     .expect("Woodbury core M not PD");
+                crate::iterative::solve_stats().note_jitter(jf.jitter);
+                let chol_mcal = jf.factor;
                 (bsig, h, ssig, ss, Some(mcal), Some(chol_mcal))
             }
             None => (
@@ -1040,9 +1098,10 @@ impl VifStructure {
             let mcal = self.mcal.as_mut().expect("structure built with m > 0");
             self.bsig.matmul_tn_into(&self.h, mcal);
             mcal.add_assign(&lr.sig_m);
-            let chol = CholeskyFactor::new_with_jitter(mcal, jitter.max(1e-10))
+            let jf = CholeskyFactor::new_with_jitter_tracked(mcal, jitter.max(1e-10))
                 .expect("Woodbury core M not PD");
-            self.chol_mcal = Some(chol);
+            crate::iterative::solve_stats().note_jitter(jf.jitter);
+            self.chol_mcal = Some(jf.factor);
         }
         self.nugget = nugget;
     }
@@ -1184,9 +1243,11 @@ impl VifStructure {
         self.ss.syrk_add_panel_weighted(dbsig.data(), m, &w);
         let mcal = self.mcal.as_mut().expect("low-rank structure without Woodbury core");
         mcal.syrk_add_panel_weighted(dbsig.data(), m, &w);
-        let chol = CholeskyFactor::new_with_jitter(self.mcal.as_ref().unwrap(), jitter.max(1e-10))
-            .expect("Woodbury core M not PD after append");
-        self.chol_mcal = Some(chol);
+        let jf =
+            CholeskyFactor::new_with_jitter_tracked(self.mcal.as_ref().unwrap(), jitter.max(1e-10))
+                .expect("Woodbury core M not PD after append");
+        crate::iterative::solve_stats().note_jitter(jf.jitter);
+        self.chol_mcal = Some(jf.factor);
     }
 
     pub fn n(&self) -> usize {
@@ -1552,7 +1613,23 @@ pub fn fit_with_reselection<M: FitModel>(model: &mut M, max_iters: usize, rounds
             let cell = RefCell::new(scratch);
             let f = |p: &[f64]| -> (f64, Vec<f64>) {
                 let mut s = cell.borrow_mut();
-                m.eval(&plan, &mut s, p)
+                let (v, mut g) = m.eval(&plan, &mut s, p);
+                // Containment: a non-finite objective or gradient is
+                // sanitized to (+∞, finite gradient) so the L-BFGS line
+                // search rejects the step (it only accepts finite trial
+                // values) instead of walking on NaNs; occurrences are
+                // counted in the process-wide containment registry.
+                let bad_g = g.iter().any(|t| !t.is_finite());
+                if !v.is_finite() || bad_g {
+                    crate::iterative::solve_stats().note_nonfinite_eval();
+                    for t in g.iter_mut() {
+                        if !t.is_finite() {
+                            *t = 0.0;
+                        }
+                    }
+                    return (f64::INFINITY, g);
+                }
+                (v, g)
             };
             crate::optim::lbfgs(&f, &packed, max_iters, tol)
         };

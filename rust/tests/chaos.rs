@@ -1,0 +1,291 @@
+//! End-to-end chaos tests: deterministic fault injection
+//! ([`vifgp::faults`]) driven through the public API, asserting the
+//! containment contracts of the crate-root "Failure semantics" section —
+//! injected numerical failures are escalated and recovered inside the
+//! iterative stack, and injected serving failures are quarantined
+//! per-request without taking the engine down.
+//!
+//! Every test brackets itself with [`vifgp::faults::install`], which
+//! serializes the suite behind a global lock: the tests are
+//! deterministic regardless of the harness' thread count and also pass
+//! under a plain `cargo test` with `VIFGP_FAULTS` unset. Fixtures are
+//! built while the guard holds an *empty* plan, so no other test's
+//! faults can leak into model construction.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use vifgp::faults::{self, FaultPlan};
+use vifgp::iterative::{solve_stats, IterConfig};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::linalg::{CholeskyFactor, Mat};
+use vifgp::rng::Rng;
+use vifgp::serve::{Health, Prediction, ServeEngine, ServeModel, ServeOptions};
+use vifgp::testing::random_points;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::gaussian::{GaussianParams, VifRegression};
+use vifgp::vif::laplace::{SolveMode, VifLaplaceModel};
+use vifgp::vif::VifConfig;
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / (1.0 + b.abs())
+}
+
+/// Assembled Gaussian model over `n` random 2-d points (serving only
+/// needs a structure, not an optimized fit).
+fn make_gaussian(n: usize) -> VifRegression {
+    let mut rng = Rng::seed_from(42);
+    let x = random_points(&mut rng, n, 2);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let kernel = ArdMatern::new(1.1, vec![0.4, 0.5], Smoothness::ThreeHalves);
+    let config = VifConfig {
+        smoothness: Smoothness::ThreeHalves,
+        num_inducing: 12,
+        num_neighbors: 5,
+        selection: NeighborSelection::CorrelationBruteForce,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut model = VifRegression::new(x, y, config, GaussianParams { kernel, noise: 0.1 });
+    model.assemble();
+    model
+}
+
+/// Fault budgets count down deterministically and the guard disarms
+/// everything on drop. Lives here (not in the `faults` unit tests)
+/// because arming a live CG-stall budget or NaN panels would leak into
+/// whatever lib test happens to run concurrently; in this binary every
+/// test holds the install lock.
+#[test]
+fn budgets_count_down_and_guard_disarms() {
+    let g = faults::install(FaultPlan { cg_stall: Some(2), ..Default::default() });
+    assert!(faults::cg_stall_active());
+    assert!(faults::cg_stall_active());
+    assert!(!faults::cg_stall_active(), "budget of 2 exhausted");
+    g.set(FaultPlan { nan_panel: true, ..Default::default() });
+    let mut v = [1.0];
+    faults::poison_panel(&mut v);
+    assert!(v[0].is_nan());
+    drop(g);
+    assert!(!faults::enabled());
+}
+
+/// Acceptance headline: one poisoned request inside a coalesced batch is
+/// isolated by bisection — only it gets an error reply, every healthy
+/// request in the same batch still gets its exact prediction, and the
+/// dispatcher keeps serving afterwards.
+#[test]
+fn poisoned_request_is_quarantined_by_bisection() {
+    const SENTINEL: f64 = -4321.25;
+    let g = faults::install(FaultPlan::default());
+    let model = make_gaussian(120);
+    let mut rng = Rng::seed_from(1234);
+    let xq = random_points(&mut rng, 16, 2);
+    let plan = model.build_predict_plan(&xq);
+    let (mean_ref, _) = model.predict_with_plan(&xq, &plan);
+    let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
+    g.set(FaultPlan { serve_poison: Some(SENTINEL), ..Default::default() });
+
+    let engine = ServeEngine::start(
+        snapshot,
+        // A wide window so the concurrent requests coalesce and the
+        // poison rides in a batch with healthy neighbors.
+        ServeOptions { max_batch: 16, batch_window: Duration::from_millis(5) },
+    );
+    let poisoned_idx = 7usize;
+    let results: Mutex<Vec<(usize, Result<Prediction, String>)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for i in 0..xq.rows() {
+            let engine = &engine;
+            let xq = &xq;
+            let results = &results;
+            scope.spawn(move || {
+                let r = if i == poisoned_idx {
+                    engine.predict(&[SENTINEL, 0.5])
+                } else {
+                    engine.predict(xq.row(i))
+                };
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let results = results.into_inner().unwrap();
+    assert_eq!(results.len(), xq.rows());
+    for (i, r) in results {
+        if i == poisoned_idx {
+            let e = r.expect_err("the poisoned request must get an error reply");
+            assert!(e.contains("quarantined"), "poisoned request error: {e}");
+        } else {
+            let p = r.unwrap_or_else(|e| panic!("healthy request {i} failed: {e}"));
+            assert!(
+                rel_diff(p.mean, mean_ref[i]) < 1e-12,
+                "healthy request {i} answered with a wrong value after bisection"
+            );
+        }
+    }
+    // The dispatcher survived: a follow-up request is served normally.
+    let p = engine.predict(xq.row(0)).expect("post-quarantine request");
+    assert!(p.mean.is_finite() && p.var.is_finite());
+    let rep = engine.metrics().report();
+    assert_eq!(rep.quarantined_requests, 1, "exactly the poisoned request is quarantined");
+    assert!(rep.panics_caught >= 1);
+    assert_eq!(rep.health, Health::Degraded);
+    drop(g);
+}
+
+/// Acceptance: an injected CG stall during a Laplace fit is classified,
+/// escalated (raised budget retry, then dense fallback if needed), and
+/// the fit completes with a finite objective — no garbage reaches
+/// L-BFGS, and the incident is visible in the solve-stats registry.
+#[test]
+fn cg_stall_during_fit_escalates_and_completes() {
+    let g = faults::install(FaultPlan { seed: 9, cg_stall: Some(1), ..Default::default() });
+    solve_stats().reset();
+    let mut rng = Rng::seed_from(faults::active_seed());
+    let n = 60;
+    let x = random_points(&mut rng, n, 2);
+    let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+    let config = VifConfig {
+        smoothness: Smoothness::ThreeHalves,
+        num_inducing: 8,
+        num_neighbors: 4,
+        selection: NeighborSelection::CorrelationBruteForce,
+        seed: 3,
+        ..Default::default()
+    };
+    let kernel = ArdMatern::new(1.0, vec![0.4, 0.4], Smoothness::ThreeHalves);
+    let mode = SolveMode::Iterative(IterConfig { seed: 3, ..Default::default() });
+    let mut model =
+        VifLaplaceModel::try_new(x, y, config, mode, kernel, Likelihood::BernoulliLogit).unwrap();
+    let nll = model.fit(2);
+    assert!(nll.is_finite(), "fit must complete with a finite objective, got {nll}");
+    assert!(model.fit_trace.iter().all(|v| v.is_finite()), "fit trace: {:?}", model.fit_trace);
+    let s = solve_stats().snapshot();
+    assert!(s.failures() >= 1, "the stalled solve must be classified: {s:?}");
+    assert!(s.retries >= 1, "the ladder must have escalated: {s:?}");
+    assert!(
+        s.retry_successes + s.dense_fallbacks >= 1,
+        "escalation must have recovered the solve: {s:?}"
+    );
+    drop(g);
+}
+
+/// Injected Cholesky failures below a jitter floor force the escalation
+/// ladder to climb exactly to that floor, record the consumed jitter,
+/// and still produce a usable factor; disarming restores clean
+/// zero-jitter factorization.
+#[test]
+fn injected_cholesky_failures_climb_the_jitter_ladder() {
+    let g = faults::install(FaultPlan { chol_fail_below: Some(1e-8), ..Default::default() });
+    solve_stats().reset();
+    let a = Mat::from_fn(4, 4, |i, j| if i == j { 2.0 } else { 0.1 });
+    let jf = CholeskyFactor::new_with_jitter_tracked(&a, 1e-12).expect("ladder must recover");
+    assert!(
+        jf.jitter >= 1e-8,
+        "consumed jitter {} must clear the injected failure floor",
+        jf.jitter
+    );
+    let id = jf.factor.solve(&[1.0, 0.0, 0.0, 0.0]);
+    assert!(id.iter().all(|v| v.is_finite()));
+    solve_stats().note_jitter(jf.jitter);
+    assert!(solve_stats().snapshot().chol_jitter_escalations >= 1);
+    drop(g);
+    // Disarmed: the same matrix factors cleanly with zero jitter.
+    let jf = CholeskyFactor::new_with_jitter_tracked(&a, 1e-12).unwrap();
+    assert_eq!(jf.jitter, 0.0, "no injected failure → first clean attempt succeeds");
+}
+
+/// NaN-poisoned kernel panels must never reach a client as data: the
+/// serving engine converts them into per-request error replies (or a
+/// quarantine, if the NaN trips a panic deeper in the prediction
+/// pipeline), flags itself Degraded — and recovers as soon as the fault
+/// clears, on the same engine instance.
+#[test]
+fn nan_panels_yield_error_replies_then_recovery() {
+    let g = faults::install(FaultPlan::default());
+    let model = make_gaussian(80);
+    let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
+    let engine = ServeEngine::start(snapshot, ServeOptions::default());
+    // Healthy baseline on the same engine.
+    let p = engine.predict(&[0.5, 0.5]).expect("pre-fault request");
+    assert!(p.mean.is_finite() && p.var.is_finite());
+    assert_eq!(engine.health(), Health::Healthy);
+
+    g.set(FaultPlan { nan_panel: true, ..Default::default() });
+    let err = engine.predict(&[0.5, 0.5]).expect_err("poisoned panels must not serve data");
+    assert!(
+        err.contains("non-finite") || err.contains("quarantined"),
+        "unexpected error reply: {err}"
+    );
+    assert_eq!(engine.health(), Health::Degraded);
+    let rep = engine.metrics().report();
+    assert!(rep.nonfinite_replies + rep.quarantined_requests >= 1, "{rep:?}");
+
+    // Clear the fault (guard still held): the same request now succeeds
+    // on the same engine — containment, not a crash-and-restart.
+    g.set(FaultPlan::default());
+    let p2 = engine.predict(&[0.5, 0.5]).expect("post-recovery request");
+    assert!(rel_diff(p2.mean, p.mean) < 1e-12 && rel_diff(p2.var, p.var) < 1e-12);
+    drop(g);
+}
+
+/// An injected dispatcher-loop panic (outside the per-batch quarantine)
+/// drops that batch's reply senders — the waiter gets a clean error, not
+/// a hang — and the dispatcher survives: the next request is answered
+/// normally, with the incident visible in metrics/health. Lives in this
+/// binary (not tests/serve.rs) because the armed panic budget is global:
+/// any concurrently running engine's dispatcher could consume it.
+#[test]
+fn request_after_dispatcher_panic_is_answered() {
+    let g = faults::install(FaultPlan::default());
+    let model = make_gaussian(80);
+    let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
+    g.set(FaultPlan { dispatcher_panic: Some(1), ..Default::default() });
+    let engine = ServeEngine::start(snapshot, ServeOptions::default());
+    let err = engine.predict(&[0.4, 0.6]).expect_err("panicked batch must error, not hang");
+    assert!(err.contains("dropped the request"), "unexpected error: {err}");
+    let p = engine.predict(&[0.4, 0.6]).expect("post-panic request must be answered");
+    assert!(p.mean.is_finite() && p.var.is_finite());
+    assert_eq!(engine.health(), Health::Degraded);
+    assert!(engine.metrics().report().panics_caught >= 1);
+    drop(g);
+}
+
+/// An injected slow batch plus a short client deadline: the request is
+/// shed with a clean deadline error instead of blocking, shedding alone
+/// keeps the engine Healthy, and a relaxed deadline is met once the
+/// slowdown clears.
+#[test]
+fn slow_batches_shed_expired_deadlines() {
+    let g = faults::install(FaultPlan::default());
+    let model = make_gaussian(80);
+    let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
+    g.set(FaultPlan { serve_slow_us: Some(20_000), ..Default::default() });
+    let engine = ServeEngine::start(
+        snapshot,
+        ServeOptions { max_batch: 4, batch_window: Duration::ZERO },
+    );
+    std::thread::scope(|scope| {
+        let engine = &engine;
+        // Occupies the dispatcher for ≥ 20ms per batch.
+        scope.spawn(move || {
+            let _ = engine.predict(&[0.2, 0.2]);
+        });
+        std::thread::sleep(Duration::from_millis(2));
+        let err = engine
+            .predict_deadline(&[0.3, 0.3], Duration::from_millis(1))
+            .expect_err("a 1ms deadline cannot survive a 20ms injected slowdown");
+        assert!(err.contains("deadline"), "unexpected error: {err}");
+    });
+    assert_eq!(engine.metrics().report().deadline_expired, 1);
+    // Load shedding is the engine doing its job — not a degradation.
+    assert_eq!(engine.health(), Health::Healthy);
+
+    g.set(FaultPlan::default());
+    let p = engine
+        .predict_deadline(&[0.4, 0.4], Duration::from_secs(5))
+        .expect("relaxed deadline met once the slowdown clears");
+    assert!(p.mean.is_finite() && p.var.is_finite());
+    drop(g);
+}

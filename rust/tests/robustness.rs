@@ -225,6 +225,59 @@ fn non_finite_and_mismatched_appends_rejected_cleanly() {
 }
 
 #[test]
+fn constructors_reject_invalid_training_data() {
+    let mut rng = Rng::seed_from(11);
+    let x = random_points(&mut rng, 20, 2);
+    let y: Vec<f64> = (0..20).map(|i| (i as f64 * 0.3).sin()).collect();
+    let config = VifConfig {
+        num_inducing: 5,
+        num_neighbors: 3,
+        selection: NeighborSelection::CorrelationBruteForce,
+        ..Default::default()
+    };
+    let params = GaussianParams {
+        kernel: ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::ThreeHalves),
+        noise: 0.1,
+    };
+
+    // Length mismatch between X rows and y.
+    let err = VifRegression::try_new(x.clone(), y[..19].to_vec(), config.clone(), params.clone())
+        .unwrap_err();
+    assert!(err.to_string().contains("must match X rows"), "{err}");
+
+    // Non-finite X entry.
+    let mut x_bad = x.clone();
+    x_bad.set(7, 1, f64::NAN);
+    let err =
+        VifRegression::try_new(x_bad, y.clone(), config.clone(), params.clone()).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "{err}");
+
+    // Non-finite response.
+    let mut y_bad = y.clone();
+    y_bad[3] = f64::INFINITY;
+    let err = VifRegression::try_new(x.clone(), y_bad, config.clone(), params.clone()).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "{err}");
+
+    // Laplace constructor shares the validation.
+    let labels: Vec<f64> = (0..20).map(|i| (i % 2) as f64).collect();
+    let mut x_bad = x.clone();
+    x_bad.set(0, 0, f64::NEG_INFINITY);
+    let err = vifgp::vif::laplace::VifLaplaceModel::try_new(
+        x_bad,
+        labels.clone(),
+        config.clone(),
+        SolveMode::Cholesky,
+        ArdMatern::new(1.0, vec![0.3, 0.3], Smoothness::ThreeHalves),
+        Likelihood::BernoulliLogit,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "{err}");
+
+    // Clean data constructs fine through the same path.
+    assert!(VifRegression::try_new(x, y, config, params).is_ok());
+}
+
+#[test]
 fn csv_loader_rejects_garbage() {
     let dir = std::env::temp_dir();
     let p = dir.join("vifgp_bad.csv");

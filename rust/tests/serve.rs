@@ -269,13 +269,115 @@ fn generation_swap_under_traffic_pool_8() {
     check_generation_swap_under_traffic(8);
 }
 
+/// A [`ServeModel`] wrapper that sleeps before every batched prediction
+/// — lets tests pile requests into the queue behind a slow dispatch.
+struct SlowModel {
+    inner: Arc<dyn ServeModel>,
+    delay: Duration,
+}
+
+impl ServeModel for SlowModel {
+    fn input_dim(&self) -> usize {
+        self.inner.input_dim()
+    }
+    fn generation(&self) -> u64 {
+        self.inner.generation()
+    }
+    fn predict_batch(&self, xp: &Mat) -> (Vec<f64>, Vec<f64>) {
+        std::thread::sleep(self.delay);
+        self.inner.predict_batch(xp)
+    }
+}
+
+/// Shutdown with the queue still loaded: every waiter gets a reply —
+/// requests already queued are served during the drain, anything racing
+/// the flag gets the clean shutdown error, and nobody hangs on a
+/// dropped channel.
+#[test]
+fn shutdown_replies_to_every_queued_waiter() {
+    let model = make_gaussian(80, NeighborSelection::CorrelationBruteForce);
+    let snapshot: Arc<dyn ServeModel> =
+        Arc::new(SlowModel { inner: Arc::new(model.snapshot()), delay: Duration::from_millis(10) });
+    // max_batch 1 → the first request occupies the dispatcher while the
+    // rest pile up in the queue.
+    let engine =
+        ServeEngine::start(snapshot, ServeOptions { max_batch: 1, batch_window: Duration::ZERO });
+    let xq = query_points(8);
+    let replies: Mutex<Vec<Result<vifgp::serve::Prediction, String>>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for t in 0..xq.rows() {
+            let engine = &engine;
+            let xq = &xq;
+            let replies = &replies;
+            scope.spawn(move || {
+                let r = engine.predict(xq.row(t));
+                replies.lock().unwrap().push(r);
+            });
+        }
+        // Let the first batch start computing and the rest enqueue, then
+        // shut down while the queue is still loaded.
+        std::thread::sleep(Duration::from_millis(3));
+        engine.shutdown();
+    });
+    let replies = replies.into_inner().unwrap();
+    assert_eq!(replies.len(), xq.rows(), "every waiter must get a reply");
+    let mut served = 0;
+    for r in replies {
+        match r {
+            Ok(p) => {
+                assert!(p.mean.is_finite() && p.var.is_finite());
+                served += 1;
+            }
+            Err(e) => assert!(e.contains("shut down"), "unexpected error: {e}"),
+        }
+    }
+    assert!(served >= 1, "the queued requests must be served during the drain");
+}
+
+/// `batch_window == 0` (serve whatever is queued immediately) under 8
+/// contending clients: no request is ever dropped or answered with the
+/// wrong value.
+#[test]
+fn zero_batch_window_under_contention_serves_every_request() {
+    let model = make_gaussian(100, NeighborSelection::CorrelationBruteForce);
+    let xq = query_points(64);
+    let plan = model.build_predict_plan(&xq);
+    let (mean_ref, _) = model.predict_with_plan(&xq, &plan);
+    let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
+    let engine =
+        ServeEngine::start(snapshot, ServeOptions { max_batch: 8, batch_window: Duration::ZERO });
+    let clients = 8;
+    let rounds = 5;
+    std::thread::scope(|scope| {
+        for t in 0..clients {
+            let engine = &engine;
+            let xq = &xq;
+            let mean_ref = &mean_ref;
+            scope.spawn(move || {
+                for _ in 0..rounds {
+                    let mut i = t;
+                    while i < xq.rows() {
+                        let p = engine.predict(xq.row(i)).expect("zero-window request dropped");
+                        assert!(rel_diff(p.mean, mean_ref[i]) < TOL, "zero-window mean {i}");
+                        i += clients;
+                    }
+                }
+            });
+        }
+    });
+    let report = engine.metrics().report();
+    assert_eq!(report.requests, (xq.rows() * rounds) as u64);
+    assert_eq!(report.quarantined_requests, 0);
+    assert_eq!(report.health, vifgp::serve::Health::Healthy);
+}
+
 /// Shutdown drains the queue: every request enqueued before shutdown
 /// still gets a reply, and late requests get a clean error.
 #[test]
 fn shutdown_drains_and_rejects_late_requests() {
     let model = make_gaussian(80, NeighborSelection::CorrelationBruteForce);
     let snapshot: Arc<dyn ServeModel> = Arc::new(model.snapshot());
-    let mut engine = ServeEngine::start(
+    let engine = ServeEngine::start(
         snapshot,
         ServeOptions { max_batch: 4, batch_window: Duration::from_micros(50) },
     );
