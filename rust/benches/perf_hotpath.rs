@@ -7,7 +7,9 @@
 //! panelized batched prediction, streaming append ingestion vs
 //! assemble-from-scratch (stage 13, BENCH_append.json), and the
 //! concurrent serving engine's latency/throughput sweep with generation
-//! swaps under load (stage 14, BENCH_serving.json).
+//! swaps under load (stage 14, BENCH_serving.json), and the per-kernel
+//! GFLOP/s trajectory of the SIMD lane backend vs the scalar oracle
+//! (stage 16, BENCH_kernels.json).
 
 #[path = "common.rs"]
 mod common;
@@ -918,5 +920,316 @@ fn main() {
             Ok(()) => println!("wrote {path}"),
             Err(e) => println!("could not write {path}: {e}"),
         }
+    }
+
+    // 16. Kernel micro-benchmarks: per-kernel GFLOP/s for the scalar
+    // oracle vs the 4-lane backend at production shapes (k = m ≈ 100
+    // low-rank panels, 64-point prediction blocks, nb-sized conditioning
+    // sets). Calls the backend-pinned `*_scalar`/`*_simd` variants
+    // directly, so the measured ratio is independent of `VIFGP_SIMD` and
+    // the assertions hold on both CI legs. Writes BENCH_kernels.json
+    // (override the path with VIFGP_BENCH_KERNELS_JSON).
+    {
+        use vifgp::linalg::{CholeskyFactor, Mat};
+
+        println!("\nstage 16: kernel micro-benchmarks (scalar oracle vs lane backend)");
+
+        fn filled(r: usize, c: usize, seed: usize) -> Mat {
+            Mat::from_fn(r, c, |i, j| ((i * 31 + j * 17 + seed * 7 + 3) as f64 * 0.37).sin())
+        }
+        fn spd_mat(n: usize, seed: usize) -> Mat {
+            let g = filled(n, n, seed);
+            let mut a = g.matmul_nt_scalar(&g);
+            a.add_diag(n as f64 + 1.0);
+            a
+        }
+        fn max_diff(a: &[f64], b: &[f64]) -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+        }
+        /// Best wall-clock of `trials` runs; the closure returns a
+        /// checksum so the compiler cannot elide the kernel calls.
+        fn best_of(trials: usize, mut f: impl FnMut() -> f64) -> f64 {
+            let mut best = f64::INFINITY;
+            for _ in 0..trials {
+                let start = std::time::Instant::now();
+                let acc = f();
+                let t = start.elapsed().as_secs_f64();
+                assert!(acc.is_finite(), "kernel bench produced a non-finite checksum");
+                best = best.min(t);
+            }
+            best
+        }
+
+        let trials = 3usize;
+        // Repeat each kernel until ~2e8 nominal flops per timed region,
+        // scaled down with the global bench scale for CI smoke runs.
+        let reps_for =
+            |flops: f64| (((2.0e8 / flops) * common::scale()).ceil() as usize).max(1);
+
+        let mut rows: Vec<String> = Vec::new();
+        let mut record = |name: &str,
+                          shape: &str,
+                          flops: f64,
+                          reps: usize,
+                          diff: f64,
+                          t_s: f64,
+                          t_v: f64|
+         -> f64 {
+            let gf_s = flops * reps as f64 / t_s / 1e9;
+            let gf_v = flops * reps as f64 / t_v / 1e9;
+            let sp = t_s / t_v;
+            println!(
+                "  {name:<11} {shape:<22} scalar {gf_s:7.2} GF/s | simd {gf_v:7.2} GF/s | \
+                 x{sp:5.2} | diff {diff:.2e}"
+            );
+            rows.push(format!(
+                "    {{\"kernel\": \"{name}\", \"shape\": \"{shape}\", \
+                 \"flops_per_call\": {flops:.0}, \"reps\": {reps}, \
+                 \"scalar_s\": {t_s:.6}, \"simd_s\": {t_v:.6}, \
+                 \"scalar_gflops\": {gf_s:.3}, \"simd_gflops\": {gf_v:.3}, \
+                 \"speedup\": {sp:.3}, \"max_abs_diff\": {diff:.3e}}}"
+            ));
+            sp
+        };
+        let mut diffs: Vec<(&str, f64)> = Vec::new();
+
+        // GEMM NN — Woodbury side block times an m×m core.
+        let a_nn = filled(512, 100, 1);
+        let b_nn = filled(100, 100, 2);
+        let d_nn = a_nn.matmul_simd(&b_nn).max_abs_diff(&a_nn.matmul_scalar(&b_nn));
+        diffs.push(("gemm_nn", d_nn));
+        let fl = 2.0 * 512.0 * 100.0 * 100.0;
+        let reps = reps_for(fl);
+        let t_s = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += a_nn.matmul_scalar(&b_nn).get(0, 0);
+            }
+            acc
+        });
+        let t_v = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += a_nn.matmul_simd(&b_nn).get(0, 0);
+            }
+            acc
+        });
+        let sp_nn = record("gemm_nn", "512x100 * 100x100", fl, reps, d_nn, t_s, t_v);
+
+        // GEMM TN — panel-transpose contraction (Uᵀ·V accumulation).
+        let a_tn = filled(2048, 100, 3);
+        let b_tn = filled(2048, 64, 4);
+        let mut out = Mat::zeros(100, 64);
+        let mut out_ref = Mat::zeros(100, 64);
+        a_tn.matmul_tn_into_scalar(&b_tn, &mut out_ref);
+        a_tn.matmul_tn_into_simd(&b_tn, &mut out);
+        let d_tn = out.max_abs_diff(&out_ref);
+        diffs.push(("gemm_tn", d_tn));
+        let fl = 2.0 * 2048.0 * 100.0 * 64.0;
+        let reps = reps_for(fl);
+        let t_s = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                a_tn.matmul_tn_into_scalar(&b_tn, &mut out);
+                acc += out.get(0, 0);
+            }
+            acc
+        });
+        let t_v = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                a_tn.matmul_tn_into_simd(&b_tn, &mut out);
+                acc += out.get(0, 0);
+            }
+            acc
+        });
+        record("gemm_tn", "2048x100^T * 2048x64", fl, reps, d_tn, t_s, t_v);
+
+        // GEMM NT — prediction-block cross term V·Vᵀ shape.
+        let v_nt = filled(64, 100, 5);
+        let d_nt = v_nt.matmul_nt_simd(&v_nt).max_abs_diff(&v_nt.matmul_nt_scalar(&v_nt));
+        diffs.push(("gemm_nt", d_nt));
+        let fl = 2.0 * 64.0 * 100.0 * 64.0;
+        let reps = reps_for(fl);
+        let t_s = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += v_nt.matmul_nt_scalar(&v_nt).get(0, 0);
+            }
+            acc
+        });
+        let t_v = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += v_nt.matmul_nt_simd(&v_nt).get(0, 0);
+            }
+            acc
+        });
+        record("gemm_nt", "64x100 * (64x100)^T", fl, reps, d_nt, t_s, t_v);
+
+        // SYRK — ρ_NN correction on a 64-point prediction block. The
+        // update mutates its target, so the timed copies drift linearly;
+        // that keeps every rep doing real work while staying finite.
+        let base = spd_mat(64, 6);
+        let vp = filled(64, 100, 7);
+        let mut got = base.clone();
+        got.syrk_sub_panel_simd(vp.data(), 100);
+        let mut want = base.clone();
+        want.syrk_sub_panel_scalar(vp.data(), 100);
+        let d_syrk = got.max_abs_diff(&want);
+        diffs.push(("syrk", d_syrk));
+        let fl = 64.0 * 65.0 * 100.0;
+        let reps = reps_for(fl);
+        let mut work = base.clone();
+        let t_s = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                work.syrk_sub_panel_scalar(vp.data(), 100);
+                acc += work.get(0, 0);
+            }
+            acc
+        });
+        let mut work = base.clone();
+        let t_v = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                work.syrk_sub_panel_simd(vp.data(), 100);
+                acc += work.get(0, 0);
+            }
+            acc
+        });
+        record("syrk", "64x64 -= 64x100 panel", fl, reps, d_syrk, t_s, t_v);
+
+        // TRSM — multi-RHS forward substitution against the m×m inducing
+        // factor (the low-rank build's dominant triangular solve).
+        let f = CholeskyFactor::new(&spd_mat(100, 8)).expect("spd factorizes");
+        let rhs = filled(100, 512, 9);
+        let d_trsm = f.solve_lower_mat_simd(&rhs).max_abs_diff(&f.solve_lower_mat_scalar(&rhs));
+        diffs.push(("trsm", d_trsm));
+        let fl = 100.0 * 100.0 * 512.0;
+        let reps = reps_for(fl);
+        let t_s = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += f.solve_lower_mat_scalar(&rhs).get(0, 0);
+            }
+            acc
+        });
+        let t_v = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += f.solve_lower_mat_simd(&rhs).get(0, 0);
+            }
+            acc
+        });
+        record("trsm", "L 100x100, B 100x512", fl, reps, d_trsm, t_s, t_v);
+
+        // dist-panel — one query against a gathered 4096×5 panel
+        // (nominal 3d+1 flops per entry: d subs, d muls, d−1 adds, sqrt).
+        let pd = 5usize;
+        let kn = ArdMatern::new(
+            1.3,
+            (0..pd).map(|j| 0.4 + 0.1 * j as f64).collect(),
+            Smoothness::ThreeHalves,
+        );
+        let q: Vec<f64> = (0..pd).map(|j| (j as f64 * 0.41).cos()).collect();
+        let panel = filled(4096, pd, 10);
+        let mut out_s = vec![0.0; 4096];
+        let mut out_v = vec![0.0; 4096];
+        kn.scaled_dist_panel_scalar(&q, panel.data(), &mut out_s);
+        kn.scaled_dist_panel_simd(&q, panel.data(), &mut out_v);
+        let d_dist = max_diff(&out_v, &out_s);
+        diffs.push(("dist_panel", d_dist));
+        let fl = 4096.0 * (3.0 * pd as f64 + 1.0);
+        let reps = reps_for(fl);
+        let t_s = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                kn.scaled_dist_panel_scalar(&q, panel.data(), &mut out_s);
+                acc += out_s[0];
+            }
+            acc
+        });
+        let t_v = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                kn.scaled_dist_panel_simd(&q, panel.data(), &mut out_v);
+                acc += out_v[0];
+            }
+            acc
+        });
+        let sp_dist = record("dist_panel", "len 4096, d 5", fl, reps, d_dist, t_s, t_v);
+
+        // grad-panel — fused covariance + 1+d log-parameter gradients
+        // (nominal 7d+10 flops per entry: dist, corr, d gradient chains).
+        let gpanel = filled(1024, pd, 11);
+        let mut cov_s = vec![0.0; 1024];
+        let mut cov_v = vec![0.0; 1024];
+        let mut g_s = vec![0.0; (1 + pd) * 1024];
+        let mut g_v = vec![0.0; (1 + pd) * 1024];
+        kn.cov_and_grad_panel_scalar(&q, gpanel.data(), &mut cov_s, &mut g_s);
+        kn.cov_and_grad_panel_simd(&q, gpanel.data(), &mut cov_v, &mut g_v);
+        let d_grad = max_diff(&g_v, &g_s).max(max_diff(&cov_v, &cov_s));
+        diffs.push(("grad_panel", d_grad));
+        let fl = 1024.0 * (7.0 * pd as f64 + 10.0);
+        let reps = reps_for(fl);
+        let t_s = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                kn.cov_and_grad_panel_scalar(&q, gpanel.data(), &mut cov_s, &mut g_s);
+                acc += g_s[0];
+            }
+            acc
+        });
+        let t_v = best_of(trials, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                kn.cov_and_grad_panel_simd(&q, gpanel.data(), &mut cov_v, &mut g_v);
+                acc += g_v[0];
+            }
+            acc
+        });
+        record("grad_panel", "len 1024, d 5", fl, reps, d_grad, t_s, t_v);
+
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath stage 16: kernel micro-benchmarks \
+                 (scalar oracle vs lane backend)\",\n",
+                "  \"lanes\": 4,\n",
+                "  \"bench_scale\": {scale},\n",
+                "  \"trials\": {trials},\n",
+                "  \"kernels\": [\n{rows}\n  ],\n",
+                "  \"asserts\": {{\"gemm_nn_min_speedup\": 1.2, \
+                 \"dist_panel_min_speedup\": 1.2, \"max_abs_diff_tol\": 1e-12}}\n",
+                "}}\n"
+            ),
+            scale = common::scale(),
+            trials = trials,
+            rows = rows.join(",\n"),
+        );
+        let path = std::env::var("VIFGP_BENCH_KERNELS_JSON")
+            .unwrap_or_else(|_| "BENCH_kernels.json".into());
+        match std::fs::write(&path, json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+
+        // Acceptance gates, checked after the JSON lands so the artifact
+        // records the trajectory even when a gate trips.
+        for (name, diff) in &diffs {
+            assert!(
+                *diff <= 1e-12,
+                "{name}: lane backend deviates from scalar oracle by {diff:.3e} > 1e-12"
+            );
+        }
+        assert!(
+            sp_nn >= 1.2,
+            "gemm_nn lane-backend speedup {sp_nn:.2}x < 1.2x over the scalar oracle"
+        );
+        assert!(
+            sp_dist >= 1.2,
+            "dist_panel lane-backend speedup {sp_dist:.2}x < 1.2x over the scalar oracle"
+        );
     }
 }

@@ -31,10 +31,30 @@
 //! (`covertree::Metric::dist_batch`), replacing the scalar per-pair hot
 //! loops of `ResidualFactor::build`, the Appendix-A gradient pass, and
 //! the correlation kNN search.
+//!
+//! # Lane backend
+//!
+//! The panel evaluators dispatch onto 4-lane kernels
+//! ([`crate::linalg::simd`]) when the panel work (`len × d` entries·dims,
+//! `q² × d` for symmetric blocks) reaches
+//! [`crate::linalg::simd::SIMD_MIN_WORK`] and `VIFGP_SIMD` ≠ `0`:
+//! [`ArdMatern::scaled_dist_panel`] precomputes inverse length scales
+//! (multiply instead of divide in the inner loop), accumulates four
+//! panel rows' r² chains per pass (unroll-and-jam), and batches the
+//! square roots into one contiguous vectorizable sweep; the
+//! length-scale gradient pass of [`ArdMatern::cov_and_grad_panel`]
+//! applies the same 4-row unrolling to the shared-`dcorr_dr` fusion.
+//! `cross_cov_into` / `sym_cov_into` are routed through the panel
+//! primitives row-wise (a row-major `Mat` is its own panel), so the
+//! dense covariance blocks — and `runtime::cross_cov_panel_into`'s
+//! native path — inherit the dispatch. The per-entry scalar loops stay
+//! as `*_scalar` oracles with `*_simd` pinning the lane path; SIMD ≡
+//! scalar ≤1e-12 is enforced by `rust/tests/simd.rs`, and below the
+//! threshold both backends are bit-identical (the scalar path runs).
 
 pub mod bessel;
 
-use crate::linalg::Mat;
+use crate::linalg::{simd, Mat};
 use bessel::{bessel_k, ln_gamma};
 
 /// Matérn smoothness parameter.
@@ -191,8 +211,19 @@ impl ArdMatern {
     /// Scaled distances `r_t = ‖q_λ(q) − q_λ(panel_t)‖` of one query
     /// point against a gathered row-major `len×d` panel (`len =
     /// out.len()`). Fused accumulation over the contiguous panel rows —
-    /// the building block of the panel kernels below.
+    /// the building block of the panel kernels below. Dispatches onto
+    /// the lane backend above the work threshold (`len·d`).
     pub fn scaled_dist_panel(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
+        if simd::use_simd(out.len() * self.dim()) {
+            self.scaled_dist_panel_simd(q, panel, out)
+        } else {
+            self.scaled_dist_panel_scalar(q, panel, out)
+        }
+    }
+
+    /// Scalar oracle for [`scaled_dist_panel`](Self::scaled_dist_panel):
+    /// per-entry divide-and-accumulate with an in-loop square root.
+    pub fn scaled_dist_panel_scalar(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
         let d = self.dim();
         let len = out.len();
         debug_assert_eq!(q.len(), d);
@@ -208,22 +239,108 @@ impl ArdMatern {
         }
     }
 
+    /// Lane-backend [`scaled_dist_panel`](Self::scaled_dist_panel):
+    /// inverse length scales precomputed (multiply, not divide, in the
+    /// inner loop), four panel rows' r² chains accumulated per pass,
+    /// and the square roots batched into one contiguous sweep.
+    pub fn scaled_dist_panel_simd(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
+        let d = self.dim();
+        let len = out.len();
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(panel.len(), len * d);
+        let mut inv_stack = [0.0f64; 16];
+        let inv_heap: Vec<f64>;
+        let il: &[f64] = if d <= inv_stack.len() {
+            for (s, &l) in inv_stack.iter_mut().zip(&self.length_scales) {
+                *s = 1.0 / l;
+            }
+            &inv_stack[..d]
+        } else {
+            inv_heap = self.length_scales.iter().map(|l| 1.0 / l).collect();
+            &inv_heap
+        };
+        let t4 = len - len % 4;
+        let mut t0 = 0;
+        while t0 < t4 {
+            let p0 = &panel[t0 * d..(t0 + 1) * d];
+            let p1 = &panel[(t0 + 1) * d..(t0 + 2) * d];
+            let p2 = &panel[(t0 + 2) * d..(t0 + 3) * d];
+            let p3 = &panel[(t0 + 3) * d..(t0 + 4) * d];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for j in 0..d {
+                let qj = q[j];
+                let ij = il[j];
+                let u0 = (qj - p0[j]) * ij;
+                let u1 = (qj - p1[j]) * ij;
+                let u2 = (qj - p2[j]) * ij;
+                let u3 = (qj - p3[j]) * ij;
+                s0 += u0 * u0;
+                s1 += u1 * u1;
+                s2 += u2 * u2;
+                s3 += u3 * u3;
+            }
+            out[t0] = s0;
+            out[t0 + 1] = s1;
+            out[t0 + 2] = s2;
+            out[t0 + 3] = s3;
+            t0 += 4;
+        }
+        for (t, r) in out.iter_mut().enumerate().take(len).skip(t4) {
+            let row = &panel[t * d..(t + 1) * d];
+            let mut s = 0.0;
+            for j in 0..d {
+                let u = (q[j] - row[j]) * il[j];
+                s += u * u;
+            }
+            *r = s;
+        }
+        for r in out.iter_mut() {
+            *r = r.sqrt();
+        }
+    }
+
     /// Correlations `k_ν(r_t)` (σ₁² **not** applied) of one query point
     /// against a gathered `len×d` panel: one scaled-distance pass, then
     /// the radial profile over the contiguous slice.
     pub fn corr_panel(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
-        self.scaled_dist_panel(q, panel, out);
+        self.corr_panel_impl(q, panel, out, simd::use_simd(out.len() * self.dim()))
+    }
+
+    /// [`corr_panel`](Self::corr_panel) pinned to the scalar oracle.
+    pub fn corr_panel_scalar(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
+        self.corr_panel_impl(q, panel, out, false)
+    }
+
+    /// [`corr_panel`](Self::corr_panel) pinned to the lane backend. The
+    /// fault-injection hook fires on this path exactly like the scalar
+    /// one (`rust/tests/simd.rs` asserts it).
+    pub fn corr_panel_simd(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
+        self.corr_panel_impl(q, panel, out, true)
+    }
+
+    fn corr_panel_impl(&self, q: &[f64], panel: &[f64], out: &mut [f64], use_lanes: bool) {
+        if use_lanes {
+            self.scaled_dist_panel_simd(q, panel, out);
+        } else {
+            self.scaled_dist_panel_scalar(q, panel, out);
+        }
         for r in out.iter_mut() {
             *r = self.corr_of_dist(*r);
         }
         // Chaos hook: one relaxed atomic load when faults are disarmed.
+        // Shared by both backends — the NaN-panel fault surface does not
+        // depend on the dispatch decision.
         crate::faults::poison_panel(out);
     }
 
     /// Covariances `σ₁² k_ν(r_t)` of one query point against a gathered
     /// `len×d` panel.
     pub fn cov_panel(&self, q: &[f64], panel: &[f64], out: &mut [f64]) {
-        self.corr_panel(q, panel, out);
+        self.cov_panel_impl(q, panel, out, simd::use_simd(out.len() * self.dim()))
+    }
+
+    fn cov_panel_impl(&self, q: &[f64], panel: &[f64], out: &mut [f64], use_lanes: bool) {
+        self.corr_panel_impl(q, panel, out, use_lanes);
         for c in out.iter_mut() {
             *c *= self.variance;
         }
@@ -238,19 +355,44 @@ impl ArdMatern {
     /// reads each point's pre-gathered neighbor panel straight from the
     /// frozen `PredictPlan`.
     pub fn sym_cov_panel(&self, panel: &[f64], out: &mut Mat) {
+        // One dispatch decision for the whole block (q²·d/2 entry·dims
+        // of work across the triangle).
+        let q = out.rows();
+        self.sym_cov_panel_impl(panel, out, simd::use_simd(q * q * self.dim() / 2))
+    }
+
+    /// [`sym_cov_panel`](Self::sym_cov_panel) pinned to the scalar oracle.
+    pub fn sym_cov_panel_scalar(&self, panel: &[f64], out: &mut Mat) {
+        self.sym_cov_panel_impl(panel, out, false)
+    }
+
+    /// [`sym_cov_panel`](Self::sym_cov_panel) pinned to the lane backend.
+    pub fn sym_cov_panel_simd(&self, panel: &[f64], out: &mut Mat) {
+        self.sym_cov_panel_impl(panel, out, true)
+    }
+
+    fn sym_cov_panel_impl(&self, panel: &[f64], out: &mut Mat, use_lanes: bool) {
         let d = self.dim();
         let q = out.rows();
         debug_assert_eq!(out.cols(), q, "sym_cov_panel output not square");
         debug_assert_eq!(panel.len(), q * d, "sym_cov_panel panel shape");
         for a in 0..q {
             let row = out.row_mut(a);
-            self.cov_panel(&panel[a * d..(a + 1) * d], &panel[..a * d], &mut row[..a]);
+            self.cov_panel_impl(
+                &panel[a * d..(a + 1) * d],
+                &panel[..a * d],
+                &mut row[..a],
+                use_lanes,
+            );
             row[a] = self.variance;
         }
-        for a in 0..q {
-            for b in 0..a {
-                let v = out.get(a, b);
-                out.set(b, a, v);
+        // Mirror the strictly-lower triangle, reading each source row as
+        // one contiguous slice instead of per-element get/set.
+        let data = out.data_mut();
+        for a in 1..q {
+            let (upper, lower) = data.split_at_mut(a * q);
+            for (b, &v) in lower[..a].iter().enumerate() {
+                upper[b * q + a] = v;
             }
         }
     }
@@ -264,12 +406,51 @@ impl ArdMatern {
     /// pays the same evaluation per pair but through a virtual call and
     /// strided writes).
     pub fn cov_and_grad_panel(&self, q: &[f64], panel: &[f64], cov: &mut [f64], grad: &mut [f64]) {
+        self.cov_and_grad_panel_impl(q, panel, cov, grad, simd::use_simd(cov.len() * self.dim()))
+    }
+
+    /// [`cov_and_grad_panel`](Self::cov_and_grad_panel) pinned to the
+    /// scalar oracle.
+    pub fn cov_and_grad_panel_scalar(
+        &self,
+        q: &[f64],
+        panel: &[f64],
+        cov: &mut [f64],
+        grad: &mut [f64],
+    ) {
+        self.cov_and_grad_panel_impl(q, panel, cov, grad, false)
+    }
+
+    /// [`cov_and_grad_panel`](Self::cov_and_grad_panel) pinned to the
+    /// lane backend.
+    pub fn cov_and_grad_panel_simd(
+        &self,
+        q: &[f64],
+        panel: &[f64],
+        cov: &mut [f64],
+        grad: &mut [f64],
+    ) {
+        self.cov_and_grad_panel_impl(q, panel, cov, grad, true)
+    }
+
+    fn cov_and_grad_panel_impl(
+        &self,
+        q: &[f64],
+        panel: &[f64],
+        cov: &mut [f64],
+        grad: &mut [f64],
+        use_lanes: bool,
+    ) {
         let d = self.dim();
         let len = cov.len();
         debug_assert_eq!(q.len(), d);
         debug_assert_eq!(panel.len(), len * d);
         debug_assert_eq!(grad.len(), (1 + d) * len);
-        self.scaled_dist_panel(q, panel, cov); // cov holds r_t for now
+        if use_lanes {
+            self.scaled_dist_panel_simd(q, panel, cov); // cov holds r_t for now
+        } else {
+            self.scaled_dist_panel_scalar(q, panel, cov);
+        }
         let (gsig, glen) = grad.split_at_mut(len);
         // Stash the shared factor s_t = σ₁² k'(r_t)/r_t in the log-σ₁²
         // block while the length-scale blocks are filled, then overwrite
@@ -283,14 +464,41 @@ impl ArdMatern {
             };
             cov[t] = self.variance * self.corr_of_dist(r);
         }
-        for j in 0..d {
-            let gj = &mut glen[j * len..(j + 1) * len];
-            let lj = self.length_scales[j];
-            let qj = q[j];
-            for (t, g) in gj.iter_mut().enumerate() {
-                // ∂c/∂log λ_j = −(σ₁² k'(r)/r) u_j²
-                let u = (qj - panel[t * d + j]) / lj;
-                *g = -gsig[t] * u * u;
+        if use_lanes {
+            // Lane path for the dcorr_dr-fused length-scale pass: inverse
+            // scale multiply plus four panel rows' u_j² chains per pass
+            // (the panel is row-major, so `panel[t*d + j]` strides by `d`
+            // — unroll-and-jam over `t` keeps four independent chains in
+            // flight per stride).
+            let t4 = len - len % 4;
+            for (j, (&lj, &qj)) in self.length_scales.iter().zip(q).enumerate() {
+                let gj = &mut glen[j * len..(j + 1) * len];
+                let ij = 1.0 / lj;
+                let mut t0 = 0;
+                while t0 < t4 {
+                    let u0 = (qj - panel[t0 * d + j]) * ij;
+                    let u1 = (qj - panel[(t0 + 1) * d + j]) * ij;
+                    let u2 = (qj - panel[(t0 + 2) * d + j]) * ij;
+                    let u3 = (qj - panel[(t0 + 3) * d + j]) * ij;
+                    gj[t0] = -gsig[t0] * u0 * u0;
+                    gj[t0 + 1] = -gsig[t0 + 1] * u1 * u1;
+                    gj[t0 + 2] = -gsig[t0 + 2] * u2 * u2;
+                    gj[t0 + 3] = -gsig[t0 + 3] * u3 * u3;
+                    t0 += 4;
+                }
+                for (t, g) in gj.iter_mut().enumerate().take(len).skip(t4) {
+                    let u = (qj - panel[t * d + j]) * ij;
+                    *g = -gsig[t] * u * u;
+                }
+            }
+        } else {
+            for (j, (&lj, &qj)) in self.length_scales.iter().zip(q).enumerate() {
+                let gj = &mut glen[j * len..(j + 1) * len];
+                for (t, g) in gj.iter_mut().enumerate() {
+                    // ∂c/∂log λ_j = −(σ₁² k'(r)/r) u_j²
+                    let u = (qj - panel[t * d + j]) / lj;
+                    *g = -gsig[t] * u * u;
+                }
             }
         }
         gsig.copy_from_slice(cov);
@@ -305,14 +513,21 @@ impl ArdMatern {
 
     /// [`cross_cov`](Self::cross_cov) writing into a preallocated
     /// `a.rows() × b.rows()` output (the θ-refresh path reuses panels).
+    /// Routed row-wise through [`scaled_dist_panel`](Self::scaled_dist_panel)
+    /// — a row-major `Mat` is its own `len×d` panel — so the dense
+    /// covariance blocks inherit the lane-backend dispatch. Deliberately
+    /// does **not** pass through `corr_panel`: the fault-injection
+    /// NaN-panel hook is scoped to the gathered-panel evaluators.
     pub fn cross_cov_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
         assert_eq!(out.rows(), a.rows(), "cross_cov_into row mismatch");
         assert_eq!(out.cols(), b.rows(), "cross_cov_into col mismatch");
+        assert_eq!(a.cols(), self.dim(), "cross_cov_into dim mismatch");
+        assert_eq!(b.cols(), self.dim(), "cross_cov_into dim mismatch");
         for i in 0..a.rows() {
-            let ra = a.row(i);
             let orow = out.row_mut(i);
-            for j in 0..b.rows() {
-                orow[j] = self.variance * self.corr_of_dist(self.scaled_dist(ra, b.row(j)));
+            self.scaled_dist_panel(a.row(i), b.data(), orow);
+            for v in orow.iter_mut() {
+                *v = self.variance * self.corr_of_dist(*v);
             }
         }
     }
@@ -326,17 +541,30 @@ impl ArdMatern {
     }
 
     /// [`sym_cov`](Self::sym_cov) writing into a preallocated `n × n`
-    /// output. Every entry is overwritten.
+    /// output. Every entry is overwritten. The strictly-lower triangle
+    /// is evaluated row-wise via
+    /// [`scaled_dist_panel`](Self::scaled_dist_panel) against the point
+    /// set's row-major prefix (inheriting the lane-backend dispatch),
+    /// then mirrored with row-slice reads.
     pub fn sym_cov_into(&self, a: &Mat, nugget: f64, out: &mut Mat) {
         let n = a.rows();
+        let d = self.dim();
         assert_eq!(out.rows(), n, "sym_cov_into row mismatch");
         assert_eq!(out.cols(), n, "sym_cov_into col mismatch");
+        assert_eq!(a.cols(), d, "sym_cov_into dim mismatch");
         for i in 0..n {
-            out.set(i, i, self.variance + nugget);
-            for j in 0..i {
-                let v = self.variance * self.corr_of_dist(self.scaled_dist(a.row(i), a.row(j)));
-                out.set(i, j, v);
-                out.set(j, i, v);
+            let row = out.row_mut(i);
+            self.scaled_dist_panel(a.row(i), &a.data()[..i * d], &mut row[..i]);
+            for v in row[..i].iter_mut() {
+                *v = self.variance * self.corr_of_dist(*v);
+            }
+            row[i] = self.variance + nugget;
+        }
+        let data = out.data_mut();
+        for i in 1..n {
+            let (upper, lower) = data.split_at_mut(i * n);
+            for (j, &v) in lower[..i].iter().enumerate() {
+                upper[j * n + i] = v;
             }
         }
     }

@@ -1,6 +1,14 @@
 //! Cholesky factorization and triangular solves.
+//!
+//! The multi-RHS solves (`solve_lower_mat`, `solve_upper_mat`,
+//! `solve_mat`) dispatch onto a row-oriented lane path above
+//! [`simd::SIMD_MIN_WORK`]: substitution runs in place over contiguous
+//! RHS rows with four pivot rows' updates fused per pass
+//! ([`simd::axpy4`]), instead of transposing the RHS and solving one
+//! column at a time. The transpose-per-column loop stays as the
+//! `*_scalar` oracle (see the `linalg` module docs, "Lane backend").
 
-use super::{dot, Mat};
+use super::{dot, simd, Mat};
 
 /// Error returned when a matrix is not (numerically) positive definite.
 #[derive(Debug)]
@@ -156,11 +164,21 @@ impl CholeskyFactor {
         x
     }
 
-    /// Solve `A X = B` column-wise for a matrix RHS.
+    /// Solve `A X = B` for a matrix RHS. Dispatches onto the
+    /// row-oriented lane path above the work threshold.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
+        if simd::use_simd(self.n() * self.n() * b.cols()) {
+            self.solve_mat_simd(b)
+        } else {
+            self.solve_mat_scalar(b)
+        }
+    }
+
+    /// Scalar oracle for [`solve_mat`](Self::solve_mat): column-wise on
+    /// the transpose for contiguity.
+    pub fn solve_mat_scalar(&self, b: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(b.rows(), n);
-        // Work column-blocked on the transpose for contiguity.
         let bt = b.t();
         let mut xt = Mat::zeros(b.cols(), n);
         for j in 0..b.cols() {
@@ -172,8 +190,28 @@ impl CholeskyFactor {
         xt.t()
     }
 
-    /// Solve `L X = B` for a matrix RHS (forward only).
+    /// Lane-backend [`solve_mat`](Self::solve_mat): both substitutions
+    /// run in place over contiguous RHS rows, no transposes.
+    pub fn solve_mat_simd(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows(), self.n());
+        let mut x = b.clone();
+        self.trsm_lower_rows(&mut x);
+        self.trsm_upper_rows(&mut x);
+        x
+    }
+
+    /// Solve `L X = B` for a matrix RHS (forward only). Dispatches onto
+    /// the row-oriented lane path above the work threshold.
     pub fn solve_lower_mat(&self, b: &Mat) -> Mat {
+        if simd::use_simd(self.n() * self.n() * b.cols()) {
+            self.solve_lower_mat_simd(b)
+        } else {
+            self.solve_lower_mat_scalar(b)
+        }
+    }
+
+    /// Scalar oracle for [`solve_lower_mat`](Self::solve_lower_mat).
+    pub fn solve_lower_mat_scalar(&self, b: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(b.rows(), n);
         let bt = b.t();
@@ -184,12 +222,30 @@ impl CholeskyFactor {
             xt.row_mut(j).copy_from_slice(&col);
         }
         xt.t()
+    }
+
+    /// Lane-backend [`solve_lower_mat`](Self::solve_lower_mat).
+    pub fn solve_lower_mat_simd(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows(), self.n());
+        let mut x = b.clone();
+        self.trsm_lower_rows(&mut x);
+        x
     }
 
     /// Solve `Lᵀ X = B` for a matrix RHS (backward only) — the second
     /// half of [`solve_mat`](Self::solve_mat) for callers that already
-    /// hold the forward-solved block.
+    /// hold the forward-solved block. Dispatches onto the row-oriented
+    /// lane path above the work threshold.
     pub fn solve_upper_mat(&self, b: &Mat) -> Mat {
+        if simd::use_simd(self.n() * self.n() * b.cols()) {
+            self.solve_upper_mat_simd(b)
+        } else {
+            self.solve_upper_mat_scalar(b)
+        }
+    }
+
+    /// Scalar oracle for [`solve_upper_mat`](Self::solve_upper_mat).
+    pub fn solve_upper_mat_scalar(&self, b: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(b.rows(), n);
         let bt = b.t();
@@ -200,6 +256,88 @@ impl CholeskyFactor {
             xt.row_mut(j).copy_from_slice(&col);
         }
         xt.t()
+    }
+
+    /// Lane-backend [`solve_upper_mat`](Self::solve_upper_mat).
+    pub fn solve_upper_mat_simd(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows(), self.n());
+        let mut x = b.clone();
+        self.trsm_upper_rows(&mut x);
+        x
+    }
+
+    /// Row-oriented forward substitution `L X = B` in place:
+    /// `x_i −= Σ_{k<i} L[i,k]·x_k` as fused 4-row axpys over contiguous
+    /// rows, then a division by the pivot (division, not reciprocal
+    /// multiply, to match the scalar substitution's rounding). Each
+    /// column's result is independent of the RHS width, so column-block
+    /// calls reproduce full-RHS entries bitwise.
+    fn trsm_lower_rows(&self, x: &mut Mat) {
+        let n = self.n();
+        let w = x.cols();
+        for i in 0..n {
+            let li = self.l.row(i);
+            let (solved, rest) = x.data_mut().split_at_mut(i * w);
+            let xi = &mut rest[..w];
+            let i4 = i - i % 4;
+            let mut k0 = 0;
+            while k0 < i4 {
+                simd::axpy4(
+                    [-li[k0], -li[k0 + 1], -li[k0 + 2], -li[k0 + 3]],
+                    &solved[k0 * w..(k0 + 1) * w],
+                    &solved[(k0 + 1) * w..(k0 + 2) * w],
+                    &solved[(k0 + 2) * w..(k0 + 3) * w],
+                    &solved[(k0 + 3) * w..(k0 + 4) * w],
+                    xi,
+                );
+                k0 += 4;
+            }
+            for k in i4..i {
+                super::axpy(-li[k], &solved[k * w..(k + 1) * w], xi);
+            }
+            let pivot = li[i];
+            for v in xi.iter_mut() {
+                *v /= pivot;
+            }
+        }
+    }
+
+    /// Row-oriented backward substitution `Lᵀ X = B` in place (reads the
+    /// stored lower factor column-wise: `x_i −= Σ_{k>i} L[k,i]·x_k`).
+    fn trsm_upper_rows(&self, x: &mut Mat) {
+        let n = self.n();
+        let w = x.cols();
+        for i in (0..n).rev() {
+            let (head, solved) = x.data_mut().split_at_mut((i + 1) * w);
+            let xi = &mut head[i * w..];
+            let cnt = n - i - 1;
+            let c4 = cnt - cnt % 4;
+            let mut t0 = 0;
+            while t0 < c4 {
+                let k = i + 1 + t0;
+                simd::axpy4(
+                    [
+                        -self.l.get(k, i),
+                        -self.l.get(k + 1, i),
+                        -self.l.get(k + 2, i),
+                        -self.l.get(k + 3, i),
+                    ],
+                    &solved[t0 * w..(t0 + 1) * w],
+                    &solved[(t0 + 1) * w..(t0 + 2) * w],
+                    &solved[(t0 + 2) * w..(t0 + 3) * w],
+                    &solved[(t0 + 3) * w..(t0 + 4) * w],
+                    xi,
+                );
+                t0 += 4;
+            }
+            for t in c4..cnt {
+                super::axpy(-self.l.get(i + 1 + t, i), &solved[t * w..(t + 1) * w], xi);
+            }
+            let pivot = self.l.get(i, i);
+            for v in xi.iter_mut() {
+                *v /= pivot;
+            }
+        }
     }
 
     /// Explicit inverse `A⁻¹` (small matrices only: Woodbury cores).

@@ -1,6 +1,11 @@
 //! Row-major dense matrix with blocked multiply.
+//!
+//! The GEMM/SYRK entry points dispatch onto the register-blocked lane
+//! kernels of [`super::simd`] above [`simd::SIMD_MIN_WORK`]; each keeps
+//! its scalar loop as a `*_scalar` oracle (see the `linalg` module docs,
+//! "Lane backend").
 
-use super::dot;
+use super::{dot, simd};
 
 /// A dense, row-major `f64` matrix.
 ///
@@ -155,6 +160,12 @@ impl Mat {
     }
 
     /// `selfᵀ * x` without forming the transpose.
+    ///
+    /// Keeps the `x[i] == 0` row skip as a **documented sparse fast
+    /// path**: the Vecchia scatter/gather callers pass `x` vectors that
+    /// are mostly zero (per-point conditioning-set masks), where skipping
+    /// whole rows beats streaming them. Dense GEMM paths must not carry
+    /// such skips — they defeat vectorization (see `matmul`).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.rows, x.len(), "matvec_t shape mismatch");
         let mut out = vec![0.0; self.cols];
@@ -171,26 +182,44 @@ impl Mat {
         out
     }
 
-    /// Matrix product `self * other`, blocked i-k-j loop order.
+    /// Matrix product `self * other`. Dispatches onto the 4×4
+    /// register-blocked lane kernel above the work threshold; the
+    /// blocked i-k-j scalar loop stays as the oracle
+    /// ([`matmul_scalar`](Self::matmul_scalar)).
     pub fn matmul(&self, other: &Mat) -> Mat {
+        if simd::use_simd(self.rows * self.cols * other.cols) {
+            self.matmul_simd(other)
+        } else {
+            self.matmul_scalar(other)
+        }
+    }
+
+    /// Scalar oracle for [`matmul`](Self::matmul): blocked i-k-j loop
+    /// order with the inner j loop over contiguous rows of `other`.
+    pub fn matmul_scalar(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        // i-k-j with the inner j loop over contiguous rows of `other`:
-        // streams both `other` and `out` rows — autovectorizes well.
         for i in 0..m {
             let arow = self.row(i);
             let orow = &mut out.data[i * n..(i + 1) * n];
             for (kk, &aik) in arow.iter().enumerate().take(k) {
-                if aik == 0.0 {
-                    continue;
-                }
                 let brow = &other.data[kk * n..(kk + 1) * n];
                 for (o, b) in orow.iter_mut().zip(brow) {
                     *o += aik * b;
                 }
             }
         }
+        out
+    }
+
+    /// Lane-backend [`matmul`](Self::matmul) (valid at every size;
+    /// remainders handled inside the micro-kernel).
+    pub fn matmul_simd(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        simd::matmul_nn(&self.data, &other.data, &mut out.data, m, k, n);
         out
     }
 
@@ -202,9 +231,19 @@ impl Mat {
     }
 
     /// [`matmul_tn`](Self::matmul_tn) writing into a preallocated
-    /// `self.cols × other.cols` output (overwritten, same accumulation
-    /// order as the allocating variant).
+    /// `self.cols × other.cols` output (overwritten). Dispatches like
+    /// [`matmul`](Self::matmul).
     pub fn matmul_tn_into(&self, other: &Mat, out: &mut Mat) {
+        if simd::use_simd(self.rows * self.cols * other.cols) {
+            self.matmul_tn_into_simd(other, out)
+        } else {
+            self.matmul_tn_into_scalar(other, out)
+        }
+    }
+
+    /// Scalar oracle for [`matmul_tn_into`](Self::matmul_tn_into):
+    /// kk-outer rank-1 accumulation over contiguous output rows.
+    pub fn matmul_tn_into_scalar(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         assert_eq!(out.rows, m, "matmul_tn_into row mismatch");
@@ -214,9 +253,6 @@ impl Mat {
             let arow = self.row(kk);
             let brow = other.row(kk);
             for (i, &aki) in arow.iter().enumerate().take(m) {
-                if aki == 0.0 {
-                    continue;
-                }
                 let orow = &mut out.data[i * n..(i + 1) * n];
                 for (o, b) in orow.iter_mut().zip(brow) {
                     *o += aki * b;
@@ -225,8 +261,30 @@ impl Mat {
         }
     }
 
-    /// `self * otherᵀ`.
+    /// Lane-backend [`matmul_tn_into`](Self::matmul_tn_into).
+    pub fn matmul_tn_into_simd(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        assert_eq!(out.rows, m, "matmul_tn_into row mismatch");
+        assert_eq!(out.cols, n, "matmul_tn_into col mismatch");
+        out.data.fill(0.0);
+        simd::matmul_tn(&self.data, &other.data, &mut out.data, k, m, n);
+    }
+
+    /// `self * otherᵀ`. Dispatches onto the k-vectorized `dot4` lane
+    /// kernel above the work threshold (the historical per-element `dot`
+    /// loop stays as [`matmul_nt_scalar`](Self::matmul_nt_scalar)).
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        if simd::use_simd(self.rows * self.cols * other.rows) {
+            self.matmul_nt_simd(other)
+        } else {
+            self.matmul_nt_scalar(other)
+        }
+    }
+
+    /// Scalar oracle for [`matmul_nt`](Self::matmul_nt): per-element
+    /// dots over the contiguous shared axis.
+    pub fn matmul_nt_scalar(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
         let (m, n) = (self.rows, other.rows);
         let mut out = Mat::zeros(m, n);
@@ -239,28 +297,89 @@ impl Mat {
         out
     }
 
-    /// Symmetric rank-k style product `selfᵀ * self` (upper computed, mirrored).
+    /// Lane-backend [`matmul_nt`](Self::matmul_nt): batches of four
+    /// `other` rows share each `self`-row load.
+    pub fn matmul_nt_simd(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        simd::matmul_nt(&self.data, &other.data, &mut out.data, m, k, n);
+        out
+    }
+
+    /// Symmetric rank-k style product `selfᵀ * self` (upper computed,
+    /// mirrored). Dispatches like [`matmul`](Self::matmul).
     pub fn gram_t(&self) -> Mat {
+        if simd::use_simd(self.rows * self.cols * self.cols) {
+            self.gram_t_simd()
+        } else {
+            self.gram_t_scalar()
+        }
+    }
+
+    /// Scalar oracle for [`gram_t`](Self::gram_t): kk-outer rank-1
+    /// updates on the upper triangle.
+    pub fn gram_t_scalar(&self) -> Mat {
         let (k, m) = (self.rows, self.cols);
         let mut out = Mat::zeros(m, m);
         for kk in 0..k {
             let row = self.row(kk);
             for i in 0..m {
                 let ri = row[i];
-                if ri == 0.0 {
-                    continue;
-                }
                 for j in i..m {
                     out.data[i * m + j] += ri * row[j];
                 }
             }
         }
-        for i in 0..m {
-            for j in 0..i {
-                out.data[i * m + j] = out.data[j * m + i];
+        Self::mirror_upper_to_lower(&mut out);
+        out
+    }
+
+    /// Lane-backend [`gram_t`](Self::gram_t): four rank-1 updates fused
+    /// per pass over each upper-triangle row.
+    pub fn gram_t_simd(&self) -> Mat {
+        let (k, m) = (self.rows, self.cols);
+        let mut out = Mat::zeros(m, m);
+        let k4 = k - k % 4;
+        let mut kk = 0;
+        while kk < k4 {
+            let r0 = self.row(kk);
+            let r1 = self.row(kk + 1);
+            let r2 = self.row(kk + 2);
+            let r3 = self.row(kk + 3);
+            for i in 0..m {
+                let coeff = [r0[i], r1[i], r2[i], r3[i]];
+                simd::axpy4(
+                    coeff,
+                    &r0[i..],
+                    &r1[i..],
+                    &r2[i..],
+                    &r3[i..],
+                    &mut out.data[i * m + i..(i + 1) * m],
+                );
+            }
+            kk += 4;
+        }
+        for kk in k4..k {
+            let row = self.row(kk);
+            for i in 0..m {
+                super::axpy(row[i], &row[i..], &mut out.data[i * m + i..(i + 1) * m]);
             }
         }
+        Self::mirror_upper_to_lower(&mut out);
         out
+    }
+
+    /// Copy the strictly-upper triangle of a square matrix to its lower
+    /// triangle, reading each source row as one contiguous slice.
+    fn mirror_upper_to_lower(out: &mut Mat) {
+        let m = out.rows;
+        for i in 1..m {
+            let (upper, lower) = out.data.split_at_mut(i * m);
+            for (j, l) in lower[..i].iter_mut().enumerate() {
+                *l = upper[j * m + i];
+            }
+        }
     }
 
     /// `self -= V Vᵀ` for a row-major `n×k` panel `v` (SYRK): the lower
@@ -268,6 +387,15 @@ impl Mat {
     /// is assumed symmetric on entry. This is the low-rank correction
     /// `ρ_NN −= V_nb V_nbᵀ` of the panelized residual assembly.
     pub fn syrk_sub_panel(&mut self, v: &[f64], k: usize) {
+        if simd::use_simd(self.rows * self.rows * k) {
+            self.syrk_sub_panel_simd(v, k)
+        } else {
+            self.syrk_sub_panel_scalar(v, k)
+        }
+    }
+
+    /// Scalar oracle for [`syrk_sub_panel`](Self::syrk_sub_panel).
+    pub fn syrk_sub_panel_scalar(&mut self, v: &[f64], k: usize) {
         let n = self.rows;
         debug_assert_eq!(self.rows, self.cols);
         debug_assert_eq!(v.len(), n * k);
@@ -283,11 +411,58 @@ impl Mat {
         }
     }
 
+    /// Lane-backend [`syrk_sub_panel`](Self::syrk_sub_panel): four
+    /// lower-triangle dots per `dot4` batch share each `v_i` load.
+    pub fn syrk_sub_panel_simd(&mut self, v: &[f64], k: usize) {
+        let n = self.rows;
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(v.len(), n * k);
+        for i in 0..n {
+            let vi = &v[i * k..(i + 1) * k];
+            let jmax = i + 1;
+            let j4 = jmax - jmax % 4;
+            let mut j0 = 0;
+            while j0 < j4 {
+                let s = simd::dot4(
+                    vi,
+                    &v[j0 * k..(j0 + 1) * k],
+                    &v[(j0 + 1) * k..(j0 + 2) * k],
+                    &v[(j0 + 2) * k..(j0 + 3) * k],
+                    &v[(j0 + 3) * k..(j0 + 4) * k],
+                );
+                for (t, &st) in s.iter().enumerate() {
+                    let j = j0 + t;
+                    self.data[i * n + j] -= st;
+                    if j != i {
+                        self.data[j * n + i] -= st;
+                    }
+                }
+                j0 += 4;
+            }
+            for j in j4..jmax {
+                let s = simd::dot1(vi, &v[j * k..(j + 1) * k]);
+                self.data[i * n + j] -= s;
+                if j != i {
+                    self.data[j * n + i] -= s;
+                }
+            }
+        }
+    }
+
     /// `self -= A Bᵀ + B Aᵀ` for row-major `n×k` panels (symmetric
     /// rank-2k update): lower triangle computed and mirrored, `self`
     /// square and symmetric on entry. This is the gradient correction
     /// `∂ρ_NN −= T^p_nb E_nbᵀ + E_nb (T^p_nb)ᵀ`.
     pub fn syr2k_sub_panel(&mut self, a: &[f64], b: &[f64], k: usize) {
+        if simd::use_simd(self.rows * self.rows * k) {
+            self.syr2k_sub_panel_simd(a, b, k)
+        } else {
+            self.syr2k_sub_panel_scalar(a, b, k)
+        }
+    }
+
+    /// Scalar oracle for [`syr2k_sub_panel`](Self::syr2k_sub_panel).
+    pub fn syr2k_sub_panel_scalar(&mut self, a: &[f64], b: &[f64], k: usize) {
         let n = self.rows;
         debug_assert_eq!(self.rows, self.cols);
         debug_assert_eq!(a.len(), n * k);
@@ -297,6 +472,55 @@ impl Mat {
             let bi = &b[i * k..(i + 1) * k];
             for j in 0..=i {
                 let s = dot(ai, &b[j * k..(j + 1) * k]) + dot(bi, &a[j * k..(j + 1) * k]);
+                self.data[i * n + j] -= s;
+                if j != i {
+                    self.data[j * n + i] -= s;
+                }
+            }
+        }
+    }
+
+    /// Lane-backend [`syr2k_sub_panel`](Self::syr2k_sub_panel): paired
+    /// `dot4` batches over the lower triangle.
+    pub fn syr2k_sub_panel_simd(&mut self, a: &[f64], b: &[f64], k: usize) {
+        let n = self.rows;
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(a.len(), n * k);
+        debug_assert_eq!(b.len(), n * k);
+        for i in 0..n {
+            let ai = &a[i * k..(i + 1) * k];
+            let bi = &b[i * k..(i + 1) * k];
+            let jmax = i + 1;
+            let j4 = jmax - jmax % 4;
+            let mut j0 = 0;
+            while j0 < j4 {
+                let sab = simd::dot4(
+                    ai,
+                    &b[j0 * k..(j0 + 1) * k],
+                    &b[(j0 + 1) * k..(j0 + 2) * k],
+                    &b[(j0 + 2) * k..(j0 + 3) * k],
+                    &b[(j0 + 3) * k..(j0 + 4) * k],
+                );
+                let sba = simd::dot4(
+                    bi,
+                    &a[j0 * k..(j0 + 1) * k],
+                    &a[(j0 + 1) * k..(j0 + 2) * k],
+                    &a[(j0 + 2) * k..(j0 + 3) * k],
+                    &a[(j0 + 3) * k..(j0 + 4) * k],
+                );
+                for t in 0..4 {
+                    let j = j0 + t;
+                    let s = sab[t] + sba[t];
+                    self.data[i * n + j] -= s;
+                    if j != i {
+                        self.data[j * n + i] -= s;
+                    }
+                }
+                j0 += 4;
+            }
+            for j in j4..jmax {
+                let s = simd::dot1(ai, &b[j * k..(j + 1) * k])
+                    + simd::dot1(bi, &a[j * k..(j + 1) * k]);
                 self.data[i * n + j] -= s;
                 if j != i {
                     self.data[j * n + i] -= s;
@@ -346,6 +570,17 @@ impl Mat {
     /// rank-k update `M += ΔΣᵀ D⁻¹ ΔΣ` of the streaming-append path
     /// (weights `w = 1/D` over the appended rows).
     pub fn syrk_add_panel_weighted(&mut self, v: &[f64], k: usize, w: &[f64]) {
+        if simd::use_simd(w.len() * k * k) {
+            self.syrk_add_panel_weighted_simd(v, k, w)
+        } else {
+            self.syrk_add_panel_weighted_scalar(v, k, w)
+        }
+    }
+
+    /// Scalar oracle for
+    /// [`syrk_add_panel_weighted`](Self::syrk_add_panel_weighted):
+    /// per-pair weighted dots with strided `v[t*k + i]` access.
+    pub fn syrk_add_panel_weighted_scalar(&mut self, v: &[f64], k: usize, w: &[f64]) {
         debug_assert_eq!(self.rows, self.cols);
         debug_assert_eq!(self.rows, k);
         debug_assert_eq!(v.len(), w.len() * k);
@@ -359,6 +594,55 @@ impl Mat {
                 if j != i {
                     self.data[j * k + i] += s;
                 }
+            }
+        }
+    }
+
+    /// Lane-backend
+    /// [`syrk_add_panel_weighted`](Self::syrk_add_panel_weighted),
+    /// restructured t-outer: four weighted rank-1 updates fused per pass
+    /// over each contiguous lower-triangle row (the scalar path streams
+    /// `v` with stride `k` per inner step). `self` is symmetric on entry
+    /// and the update is symmetric, so only the lower triangle is
+    /// accumulated and mirrored once at the end.
+    pub fn syrk_add_panel_weighted_simd(&mut self, v: &[f64], k: usize, w: &[f64]) {
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(self.rows, k);
+        debug_assert_eq!(v.len(), w.len() * k);
+        let nt = w.len();
+        let t4 = nt - nt % 4;
+        let mut t0 = 0;
+        while t0 < t4 {
+            let v0 = &v[t0 * k..(t0 + 1) * k];
+            let v1 = &v[(t0 + 1) * k..(t0 + 2) * k];
+            let v2 = &v[(t0 + 2) * k..(t0 + 3) * k];
+            let v3 = &v[(t0 + 3) * k..(t0 + 4) * k];
+            for i in 0..k {
+                let coeff =
+                    [w[t0] * v0[i], w[t0 + 1] * v1[i], w[t0 + 2] * v2[i], w[t0 + 3] * v3[i]];
+                simd::axpy4(
+                    coeff,
+                    &v0[..=i],
+                    &v1[..=i],
+                    &v2[..=i],
+                    &v3[..=i],
+                    &mut self.data[i * k..i * k + i + 1],
+                );
+            }
+            t0 += 4;
+        }
+        for t in t4..nt {
+            let vt = &v[t * k..(t + 1) * k];
+            for i in 0..k {
+                super::axpy(w[t] * vt[i], &vt[..=i], &mut self.data[i * k..i * k + i + 1]);
+            }
+        }
+        // Mirror the (symmetric-on-entry + symmetric-update) lower
+        // triangle back to the upper half, row-slice reads.
+        for i in 1..k {
+            let (upper, lower) = self.data.split_at_mut(i * k);
+            for (j, &l) in lower[..i].iter().enumerate() {
+                upper[j * k + i] = l;
             }
         }
     }

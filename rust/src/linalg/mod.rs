@@ -5,9 +5,23 @@
 //! Cholesky factorization, triangular solves, and a symmetric tridiagonal
 //! eigensolver for stochastic Lanczos quadrature — are implemented here
 //! from scratch. Matrices are row-major `f64`.
+//!
+//! # Lane backend
+//!
+//! The dense hot paths — `Mat::{matmul, matmul_tn_into, matmul_nt,
+//! gram_t, syrk_sub_panel, syr2k_sub_panel, syrk_add_panel_weighted}`
+//! and `CholeskyFactor::{solve_lower_mat, solve_upper_mat, solve_mat}` —
+//! dispatch onto the register-blocked micro-kernels of [`simd`] (4-lane
+//! `f64` arrays, 4×4 accumulator tiles) when the loop-nest work reaches
+//! [`simd::SIMD_MIN_WORK`] and `VIFGP_SIMD` ≠ `0`. Each entry point
+//! keeps its scalar loop as a `*_scalar` oracle and exposes the lane
+//! path as `*_simd`; the two agree to ≤1e-12 at every size (pinned by
+//! `rust/tests/simd.rs`). See the [`simd`] module docs for lane width,
+//! packing layout, and the dispatch contract.
 
 mod chol;
 mod mat;
+pub mod simd;
 mod tridiag;
 
 pub use chol::{CholeskyError, CholeskyFactor, JitteredFactor};

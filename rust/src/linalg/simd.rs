@@ -1,0 +1,495 @@
+//! Fixed-width SIMD lane backend and register-blocked micro-kernels.
+//!
+//! # Lane backend
+//!
+//! The offline registry has no BLAS and `std::simd` is nightly-only, so
+//! the lane type is a std-only `[f64; 4]` newtype ([`F64x4`]) whose
+//! add/mul/fma/hsum ops are fully unrolled: on any x86-64 baseline the
+//! compiler lowers each op to a pair of 128-bit packed instructions (and
+//! to single 256-bit ops when built with `-C target-cpu` enabling AVX).
+//! `fma` is deliberately `a*b + c` per lane — `f64::mul_add` without the
+//! `fma` target feature lowers to a libm call, and the two-rounding form
+//! keeps every lane's arithmetic directly comparable to the scalar
+//! oracle's.
+//!
+//! **Packing layout.** All kernels work on the crate's row-major slices
+//! directly (shapes are small enough that packed copies don't pay):
+//!
+//! * [`matmul_nn`] / [`matmul_tn`] hold a 4×4 accumulator tile of `C` in
+//!   registers across the whole `k` loop (broadcast-A × vector-B), so a
+//!   `C` tile is loaded/stored once instead of once per `k` step. 4×4 is
+//!   chosen to fit the 16 xmm registers of baseline x86-64 without
+//!   spilling.
+//! * [`matmul_nt`], [`dot4`] vectorize over the contiguous `k` axis with
+//!   four independent lane accumulators sharing each `A`-row load.
+//! * [`axpy4`] fuses four rank-1 row updates per pass over the
+//!   destination row (the TRSM and weighted-SYRK building block).
+//!
+//! **Dispatch threshold.** Public `Mat`/`CholeskyFactor`/`ArdMatern`
+//! entry points route onto these kernels when the loop-nest work (the
+//! product of its extents) reaches [`SIMD_MIN_WORK`] and the backend is
+//! enabled; below it the scalar path runs and results are bit-identical
+//! to `VIFGP_SIMD=0`.
+//!
+//! **Scalar-oracle contract.** Every dispatching entry point keeps its
+//! scalar loop as a `*_scalar` method and exposes the lane path as
+//! `*_simd` (both valid at every size, remainders included). `VIFGP_SIMD`
+//! selects the backend at runtime: unset or `1` → lane backend above the
+//! threshold, `0` → scalar everywhere; anything else panics loudly
+//! (crate env-knob policy). SIMD ≡ scalar is pinned to ≤1e-12 by the
+//! oracle suites (`rust/tests/simd.rs`) — observed differences are
+//! reassociation-level (~1e-15 relative).
+
+use std::sync::OnceLock;
+
+/// Lane width of the backend (f64 elements per [`F64x4`]).
+pub const LANES: usize = 4;
+
+/// Minimum loop-nest work (product of loop extents) before a dispatching
+/// entry point leaves the scalar path. Below this the tile setup costs
+/// more than it saves, and small panels stay bit-identical across
+/// backends (the existing ≤1e-14 panel unit tests run below it).
+pub const SIMD_MIN_WORK: usize = 256;
+
+/// Four f64 lanes with unrolled elementwise ops.
+#[derive(Clone, Copy, Debug, Default)]
+#[repr(transparent)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    pub const ZERO: F64x4 = F64x4([0.0; 4]);
+
+    #[inline(always)]
+    pub fn splat(v: f64) -> Self {
+        F64x4([v; 4])
+    }
+
+    /// Load four lanes from the front of `s` (`s.len() >= 4`).
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> Self {
+        F64x4([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Store the four lanes to the front of `s` (`s.len() >= 4`).
+    #[inline(always)]
+    pub fn store(self, s: &mut [f64]) {
+        s[..4].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        F64x4([
+            self.0[0] + o.0[0],
+            self.0[1] + o.0[1],
+            self.0[2] + o.0[2],
+            self.0[3] + o.0[3],
+        ])
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: Self) -> Self {
+        F64x4([
+            self.0[0] - o.0[0],
+            self.0[1] - o.0[1],
+            self.0[2] - o.0[2],
+            self.0[3] - o.0[3],
+        ])
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        F64x4([
+            self.0[0] * o.0[0],
+            self.0[1] * o.0[1],
+            self.0[2] * o.0[2],
+            self.0[3] * o.0[3],
+        ])
+    }
+
+    /// `self + a·b` per lane. Plain mul+add, **not** `f64::mul_add`: the
+    /// fused form is a libm call without the `fma` target feature, and
+    /// two-rounding arithmetic matches the scalar oracle's.
+    #[inline(always)]
+    pub fn fma(self, a: Self, b: Self) -> Self {
+        F64x4([
+            self.0[0] + a.0[0] * b.0[0],
+            self.0[1] + a.0[1] * b.0[1],
+            self.0[2] + a.0[2] * b.0[2],
+            self.0[3] + a.0[3] * b.0[3],
+        ])
+    }
+
+    /// Horizontal sum, pairwise: `(l0+l2) + (l1+l3)`.
+    #[inline(always)]
+    pub fn hsum(self) -> f64 {
+        (self.0[0] + self.0[2]) + (self.0[1] + self.0[3])
+    }
+}
+
+/// `VIFGP_SIMD`: `1`/unset → lane backend, `0` → scalar oracle. Only
+/// those two values are accepted — anything else panics loudly (crate
+/// env-knob policy; see the crate-root table).
+fn parse_simd(s: &str) -> bool {
+    match s.trim() {
+        "1" => true,
+        "0" => false,
+        other => panic!(
+            "VIFGP_SIMD must be `0` (scalar oracle) or `1` (lane backend), got `{other}`"
+        ),
+    }
+}
+
+/// Whether the lane backend is enabled (`VIFGP_SIMD`, parsed once).
+pub fn simd_enabled() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| match std::env::var("VIFGP_SIMD") {
+        Ok(s) => parse_simd(&s),
+        Err(_) => true,
+    })
+}
+
+/// Dispatch predicate used by every SIMD-capable entry point: take the
+/// lane path iff the backend is enabled and the loop-nest `work`
+/// (product of its extents) reaches [`SIMD_MIN_WORK`].
+#[inline]
+pub fn use_simd(work: usize) -> bool {
+    work >= SIMD_MIN_WORK && simd_enabled()
+}
+
+/// `C = A·B` for row-major `A (m×k)`, `B (k×n)` into zero-initialised
+/// row-major `out (m×n)`. Register-blocked 4×4 micro-kernel; row/column
+/// remainders fall to narrower tiles. Each `C[i][j]` accumulates over
+/// ascending `kk` in one chain, so results are independent of tile
+/// membership (column-block calls reproduce full-matrix entries bitwise).
+pub fn matmul_nn(a: &[f64], b: &[f64], out: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    const MR: usize = 4;
+    let n4 = n & !(LANES - 1);
+    let m4 = m - m % MR;
+    let mut i0 = 0;
+    while i0 < m4 {
+        let a0 = &a[i0 * k..(i0 + 1) * k];
+        let a1 = &a[(i0 + 1) * k..(i0 + 2) * k];
+        let a2 = &a[(i0 + 2) * k..(i0 + 3) * k];
+        let a3 = &a[(i0 + 3) * k..(i0 + 4) * k];
+        let mut j0 = 0;
+        while j0 < n4 {
+            let mut c0 = F64x4::ZERO;
+            let mut c1 = F64x4::ZERO;
+            let mut c2 = F64x4::ZERO;
+            let mut c3 = F64x4::ZERO;
+            let mut boff = j0;
+            for kk in 0..k {
+                let vb = F64x4::load(&b[boff..boff + LANES]);
+                c0 = c0.fma(F64x4::splat(a0[kk]), vb);
+                c1 = c1.fma(F64x4::splat(a1[kk]), vb);
+                c2 = c2.fma(F64x4::splat(a2[kk]), vb);
+                c3 = c3.fma(F64x4::splat(a3[kk]), vb);
+                boff += n;
+            }
+            c0.store(&mut out[i0 * n + j0..]);
+            c1.store(&mut out[(i0 + 1) * n + j0..]);
+            c2.store(&mut out[(i0 + 2) * n + j0..]);
+            c3.store(&mut out[(i0 + 3) * n + j0..]);
+            j0 += LANES;
+        }
+        for j in n4..n {
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            let mut boff = j;
+            for kk in 0..k {
+                let bv = b[boff];
+                s0 += a0[kk] * bv;
+                s1 += a1[kk] * bv;
+                s2 += a2[kk] * bv;
+                s3 += a3[kk] * bv;
+                boff += n;
+            }
+            out[i0 * n + j] = s0;
+            out[(i0 + 1) * n + j] = s1;
+            out[(i0 + 2) * n + j] = s2;
+            out[(i0 + 3) * n + j] = s3;
+        }
+        i0 += MR;
+    }
+    for i in m4..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n4 {
+            let mut c = F64x4::ZERO;
+            let mut boff = j0;
+            for &av in ai {
+                c = c.fma(F64x4::splat(av), F64x4::load(&b[boff..boff + LANES]));
+                boff += n;
+            }
+            c.store(&mut orow[j0..]);
+            j0 += LANES;
+        }
+        for (j, o) in orow.iter_mut().enumerate().take(n).skip(n4) {
+            let mut s = 0.0;
+            let mut boff = j;
+            for &av in ai {
+                s += av * b[boff];
+                boff += n;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// `C = Aᵀ·B` for row-major `A (k×m)`, `B (k×n)` into zero-initialised
+/// row-major `out (m×n)`, without forming the transpose: the 4×4 tile
+/// reads four contiguous `A`-row entries per `kk` step. Same
+/// tile-independent accumulation order as [`matmul_nn`].
+pub fn matmul_tn(a: &[f64], b: &[f64], out: &mut [f64], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    const MR: usize = 4;
+    let n4 = n & !(LANES - 1);
+    let m4 = m - m % MR;
+    let mut i0 = 0;
+    while i0 < m4 {
+        let mut j0 = 0;
+        while j0 < n4 {
+            let mut c0 = F64x4::ZERO;
+            let mut c1 = F64x4::ZERO;
+            let mut c2 = F64x4::ZERO;
+            let mut c3 = F64x4::ZERO;
+            for kk in 0..k {
+                let ar = &a[kk * m + i0..kk * m + i0 + MR];
+                let vb = F64x4::load(&b[kk * n + j0..kk * n + j0 + LANES]);
+                c0 = c0.fma(F64x4::splat(ar[0]), vb);
+                c1 = c1.fma(F64x4::splat(ar[1]), vb);
+                c2 = c2.fma(F64x4::splat(ar[2]), vb);
+                c3 = c3.fma(F64x4::splat(ar[3]), vb);
+            }
+            c0.store(&mut out[i0 * n + j0..]);
+            c1.store(&mut out[(i0 + 1) * n + j0..]);
+            c2.store(&mut out[(i0 + 2) * n + j0..]);
+            c3.store(&mut out[(i0 + 3) * n + j0..]);
+            j0 += LANES;
+        }
+        for j in n4..n {
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for kk in 0..k {
+                let ar = &a[kk * m + i0..kk * m + i0 + MR];
+                let bv = b[kk * n + j];
+                s0 += ar[0] * bv;
+                s1 += ar[1] * bv;
+                s2 += ar[2] * bv;
+                s3 += ar[3] * bv;
+            }
+            out[i0 * n + j] = s0;
+            out[(i0 + 1) * n + j] = s1;
+            out[(i0 + 2) * n + j] = s2;
+            out[(i0 + 3) * n + j] = s3;
+        }
+        i0 += MR;
+    }
+    for i in m4..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n4 {
+            let mut c = F64x4::ZERO;
+            for kk in 0..k {
+                let av = a[kk * m + i];
+                c = c.fma(F64x4::splat(av), F64x4::load(&b[kk * n + j0..kk * n + j0 + LANES]));
+            }
+            c.store(&mut orow[j0..]);
+            j0 += LANES;
+        }
+        for (j, o) in orow.iter_mut().enumerate().take(n).skip(n4) {
+            let mut s = 0.0;
+            for kk in 0..k {
+                s += a[kk * m + i] * b[kk * n + j];
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Four simultaneous dot products of `a` against `b0..b3` (equal
+/// lengths), k-vectorized with one shared `a` load per lane step. The
+/// per-pair accumulation order (lanes stride 4 over `k`, then the
+/// pairwise [`F64x4::hsum`]) is fixed regardless of which rows are
+/// batched together.
+#[inline]
+pub fn dot4(a: &[f64], b0: &[f64], b1: &[f64], b2: &[f64], b3: &[f64]) -> [f64; 4] {
+    let k = a.len();
+    debug_assert!(b0.len() == k && b1.len() == k && b2.len() == k && b3.len() == k);
+    let k4 = k & !(LANES - 1);
+    let mut c0 = F64x4::ZERO;
+    let mut c1 = F64x4::ZERO;
+    let mut c2 = F64x4::ZERO;
+    let mut c3 = F64x4::ZERO;
+    let mut kk = 0;
+    while kk < k4 {
+        let va = F64x4::load(&a[kk..kk + LANES]);
+        c0 = c0.fma(va, F64x4::load(&b0[kk..kk + LANES]));
+        c1 = c1.fma(va, F64x4::load(&b1[kk..kk + LANES]));
+        c2 = c2.fma(va, F64x4::load(&b2[kk..kk + LANES]));
+        c3 = c3.fma(va, F64x4::load(&b3[kk..kk + LANES]));
+        kk += LANES;
+    }
+    let mut s = [c0.hsum(), c1.hsum(), c2.hsum(), c3.hsum()];
+    for kk in k4..k {
+        let av = a[kk];
+        s[0] += av * b0[kk];
+        s[1] += av * b1[kk];
+        s[2] += av * b2[kk];
+        s[3] += av * b3[kk];
+    }
+    s
+}
+
+/// `C = A·Bᵀ` for row-major `A (m×k)`, `B (n×k)` into row-major
+/// `out (m×n)` (overwritten): per output row, [`dot4`]-style batches of
+/// four `B` rows share each `A`-row load.
+pub fn matmul_nt(a: &[f64], b: &[f64], out: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let n4 = n - n % 4;
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n4 {
+            let s = dot4(
+                ai,
+                &b[j0 * k..(j0 + 1) * k],
+                &b[(j0 + 1) * k..(j0 + 2) * k],
+                &b[(j0 + 2) * k..(j0 + 3) * k],
+                &b[(j0 + 3) * k..(j0 + 4) * k],
+            );
+            orow[j0..j0 + 4].copy_from_slice(&s);
+            j0 += 4;
+        }
+        for (j, o) in orow.iter_mut().enumerate().take(n).skip(n4) {
+            *o = dot1(ai, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Single k-vectorized dot with the same lane/hsum order as [`dot4`].
+#[inline]
+pub fn dot1(a: &[f64], b: &[f64]) -> f64 {
+    let k = a.len();
+    debug_assert_eq!(b.len(), k);
+    let k4 = k & !(LANES - 1);
+    let mut c = F64x4::ZERO;
+    let mut kk = 0;
+    while kk < k4 {
+        c = c.fma(F64x4::load(&a[kk..kk + LANES]), F64x4::load(&b[kk..kk + LANES]));
+        kk += LANES;
+    }
+    let mut s = c.hsum();
+    for kk in k4..k {
+        s += a[kk] * b[kk];
+    }
+    s
+}
+
+/// `y += α₀·x0 + α₁·x1 + α₂·x2 + α₃·x3` over equal-length rows, fused:
+/// one pass over `y` applies all four rank-1 row updates (the TRSM /
+/// weighted-SYRK building block).
+#[inline]
+pub fn axpy4(alpha: [f64; 4], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64], y: &mut [f64]) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let n4 = n & !(LANES - 1);
+    let va0 = F64x4::splat(alpha[0]);
+    let va1 = F64x4::splat(alpha[1]);
+    let va2 = F64x4::splat(alpha[2]);
+    let va3 = F64x4::splat(alpha[3]);
+    let mut j = 0;
+    while j < n4 {
+        let mut vy = F64x4::load(&y[j..j + LANES]);
+        vy = vy.fma(va0, F64x4::load(&x0[j..j + LANES]));
+        vy = vy.fma(va1, F64x4::load(&x1[j..j + LANES]));
+        vy = vy.fma(va2, F64x4::load(&x2[j..j + LANES]));
+        vy = vy.fma(va3, F64x4::load(&x3[j..j + LANES]));
+        vy.store(&mut y[j..]);
+        j += LANES;
+    }
+    for j in n4..n {
+        y[j] += ((alpha[0] * x0[j] + alpha[1] * x1[j]) + alpha[2] * x2[j]) + alpha[3] * x3[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops() {
+        let a = F64x4([1.0, 2.0, 3.0, 4.0]);
+        let b = F64x4([0.5, -1.0, 2.0, 0.0]);
+        assert_eq!(a.add(b).0, [1.5, 1.0, 5.0, 4.0]);
+        assert_eq!(a.sub(b).0, [0.5, 3.0, 1.0, 4.0]);
+        assert_eq!(a.mul(b).0, [0.5, -2.0, 6.0, 0.0]);
+        assert_eq!(F64x4::splat(10.0).fma(a, b).0, [10.5, 8.0, 16.0, 10.0]);
+        assert_eq!(a.hsum(), 10.0);
+        let mut out = [0.0; 5];
+        a.store(&mut out);
+        assert_eq!(F64x4::load(&out).0, a.0);
+    }
+
+    #[test]
+    fn parse_accepts_zero_and_one() {
+        assert!(parse_simd("1"));
+        assert!(!parse_simd("0"));
+        assert!(parse_simd(" 1 "));
+    }
+
+    #[test]
+    #[should_panic(expected = "VIFGP_SIMD")]
+    fn parse_rejects_malformed() {
+        parse_simd("2");
+    }
+
+    #[test]
+    #[should_panic(expected = "got `yes`")]
+    fn parse_names_the_offending_value() {
+        parse_simd("yes");
+    }
+
+    #[test]
+    fn dot4_and_dot1_match_naive() {
+        for k in [0usize, 1, 3, 4, 5, 8, 17] {
+            let a: Vec<f64> = (0..k).map(|i| (i as f64 * 0.7).sin()).collect();
+            let bs: Vec<Vec<f64>> = (0..4)
+                .map(|r| (0..k).map(|i| ((i * 3 + r) as f64 * 0.3).cos()).collect())
+                .collect();
+            let got = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for r in 0..4 {
+                let naive: f64 = a.iter().zip(&bs[r]).map(|(x, y)| x * y).sum();
+                assert!((got[r] - naive).abs() < 1e-12, "dot4 k={k} r={r}");
+                assert!((dot1(&a, &bs[r]) - naive).abs() < 1e-12, "dot1 k={k} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy4_matches_naive() {
+        for n in [0usize, 1, 4, 7, 13] {
+            let alpha = [0.3, -1.1, 2.0, 0.0];
+            let xs: Vec<Vec<f64>> = (0..4)
+                .map(|r| (0..n).map(|i| ((i + r) as f64 * 0.5).sin()).collect())
+                .collect();
+            let mut y: Vec<f64> = (0..n).map(|i| i as f64 * 0.1).collect();
+            let want: Vec<f64> = (0..n)
+                .map(|i| {
+                    y[i] + (0..4).map(|r| alpha[r] * xs[r][i]).sum::<f64>()
+                })
+                .collect();
+            axpy4(alpha, &xs[0], &xs[1], &xs[2], &xs[3], &mut y);
+            for i in 0..n {
+                assert!((y[i] - want[i]).abs() < 1e-12, "axpy4 n={n} i={i}");
+            }
+        }
+    }
+}

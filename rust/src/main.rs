@@ -64,6 +64,9 @@ fn main() {
     // Arm deterministic fault injection from `--faults` / `VIFGP_FAULTS`
     // (chaos testing only; a malformed spec panics loudly, crate policy).
     vifgp::faults::init_from_env();
+    // Resolve the dense-kernel backend up front so a malformed
+    // `VIFGP_SIMD` fails loudly at startup, not mid-fit (crate policy).
+    vifgp::linalg::simd::simd_enabled();
     let code = match cmd.as_str() {
         "info" => cmd_info(),
         "simulate" => cmd_simulate(&flags),
@@ -145,6 +148,14 @@ fn init_runtime() {
 fn cmd_info() -> i32 {
     println!("vifgp {} — three-layer Rust + JAX + Pallas VIF GP library", env!("CARGO_PKG_VERSION"));
     println!("threads: {}", vifgp::coordinator::num_threads());
+    println!(
+        "dense kernels: {}",
+        if vifgp::linalg::simd::simd_enabled() {
+            "SIMD lane backend (f64x4, register-blocked; VIFGP_SIMD=0 for scalar)"
+        } else {
+            "scalar oracle (VIFGP_SIMD=0)"
+        }
+    );
     let dir = vifgp::runtime::default_artifact_dir();
     if vifgp::runtime::init_from_artifacts(&dir) {
         let e = vifgp::runtime::engine().unwrap();

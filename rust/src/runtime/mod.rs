@@ -290,7 +290,9 @@ pub fn cross_cov_panel(x: &Mat, z: &Mat, kernel: &ArdMatern) -> Mat {
 /// [`cross_cov_panel`] writing into a preallocated `n × m` output — the
 /// θ-refresh path reuses the `Σ_mn` panel buffer across optimizer steps.
 /// Engine-served panels are copied into `out`; the native path fills it
-/// directly.
+/// directly via `ArdMatern::cross_cov_into`, which routes row-wise
+/// through the panel primitives and so inherits the CPU lane-backend
+/// dispatch (`VIFGP_SIMD`; see the `kernels` module docs).
 pub fn cross_cov_panel_into(x: &Mat, z: &Mat, kernel: &ArdMatern, out: &mut Mat) {
     assert_eq!(out.rows(), x.rows(), "cross_cov_panel_into row mismatch");
     assert_eq!(out.cols(), z.rows(), "cross_cov_panel_into col mismatch");

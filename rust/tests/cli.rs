@@ -127,6 +127,26 @@ fn malformed_serve_env_knobs_panic_loudly() {
     }
 }
 
+/// `VIFGP_SIMD` is a strict two-state switch: `0` and `1` are accepted,
+/// anything else must panic at startup naming the knob and the value
+/// rather than silently picking a backend.
+#[test]
+fn malformed_simd_env_panics_loudly() {
+    for bad in ["2", "yes", "true", "on", ""] {
+        let out = vifgp().args(["info"]).env("VIFGP_SIMD", bad).output().expect("spawn");
+        assert!(!out.status.success(), "VIFGP_SIMD={bad:?} must fail");
+        let err = stderr(&out);
+        assert!(
+            err.contains("VIFGP_SIMD") && err.contains(bad),
+            "VIFGP_SIMD={bad:?} stderr must name the knob and value: {err}"
+        );
+    }
+    for good in ["0", "1"] {
+        let out = vifgp().args(["info"]).env("VIFGP_SIMD", good).output().expect("spawn");
+        assert!(out.status.success(), "VIFGP_SIMD={good} must succeed: {}", stderr(&out));
+    }
+}
+
 /// Happy path: simulate a small dataset, train on it, then serve it with
 /// a writer publishing generations under traffic. Exercises the full
 /// flag surface end to end.

@@ -1,0 +1,311 @@
+//! Remainder-lane property suite for the SIMD lane backend.
+//!
+//! Every vectorized kernel is exercised at sizes 1..=17 — crossing the
+//! 4-lane width with every remainder phase — and at production shapes
+//! (k = m ≈ 100 low-rank panels, ≤64-point prediction blocks, nb-sized
+//! conditioning sets), pinning the backend-pinned `*_simd` variants to
+//! their `*_scalar` oracles at ≤1e-12. The public dispatching entry
+//! points are additionally pinned bit-identical to the scalar oracle
+//! below the work threshold (so the existing ≤1e-14 panel suites hold
+//! on both `VIFGP_SIMD` legs), and the fault-injection NaN-panel hook
+//! is asserted to fire on the pinned SIMD path.
+
+use vifgp::faults::{self, FaultPlan};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::linalg::{CholeskyFactor, Mat};
+
+const TOL: f64 = 1e-12;
+
+fn mat(r: usize, c: usize, seed: usize) -> Mat {
+    Mat::from_fn(r, c, |i, j| ((i * 31 + j * 17 + seed * 7 + 3) as f64 * 0.37).sin())
+}
+
+fn spd(n: usize, seed: usize) -> Mat {
+    let g = mat(n, n, seed);
+    let mut a = g.matmul_nt_scalar(&g);
+    a.add_diag(n as f64 + 1.0);
+    a
+}
+
+fn assert_close(got: &Mat, want: &Mat, tol: f64, what: &str) {
+    let d = got.max_abs_diff(want);
+    assert!(d <= tol, "{what}: max abs diff {d:.3e} > {tol:.1e}");
+}
+
+#[test]
+fn gemm_variants_match_scalar_at_remainder_sizes() {
+    for m in 1..=17usize {
+        for k in [1usize, 2, 3, 4, 5, 7, 8, 11, 16, 17] {
+            for n in 1..=17usize {
+                let a = mat(m, k, 1);
+                let b = mat(k, n, 2);
+                let tag = format!("m={m} k={k} n={n}");
+                assert_close(&a.matmul_simd(&b), &a.matmul_scalar(&b), TOL, &format!("nn {tag}"));
+                let at = mat(k, m, 3);
+                let mut out_s = Mat::zeros(m, n);
+                let mut out_v = Mat::zeros(m, n);
+                at.matmul_tn_into_scalar(&b, &mut out_s);
+                at.matmul_tn_into_simd(&b, &mut out_v);
+                assert_close(&out_v, &out_s, TOL, &format!("tn {tag}"));
+                let bt = mat(n, k, 4);
+                assert_close(
+                    &a.matmul_nt_simd(&bt),
+                    &a.matmul_nt_scalar(&bt),
+                    TOL,
+                    &format!("nt {tag}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_and_syrk_match_scalar_at_remainder_sizes() {
+    for n in 1..=17usize {
+        for k in [1usize, 3, 4, 5, 8, 16, 17] {
+            let tag = format!("n={n} k={k}");
+            let g = mat(k, n, 5);
+            assert_close(&g.gram_t_simd(), &g.gram_t_scalar(), TOL, &format!("gram {tag}"));
+
+            let v = mat(n, k, 6);
+            let base = spd(n, 7);
+            let mut got = base.clone();
+            got.syrk_sub_panel_simd(v.data(), k);
+            let mut want = base.clone();
+            want.syrk_sub_panel_scalar(v.data(), k);
+            assert_close(&got, &want, TOL, &format!("syrk {tag}"));
+
+            let b = mat(n, k, 8);
+            let mut got2 = base.clone();
+            got2.syr2k_sub_panel_simd(v.data(), b.data(), k);
+            let mut want2 = base.clone();
+            want2.syr2k_sub_panel_scalar(v.data(), b.data(), k);
+            assert_close(&got2, &want2, TOL, &format!("syr2k {tag}"));
+
+            // weighted SYRK: the panel has `n` rows of length `k`, the
+            // target is k×k (the Woodbury core orientation).
+            let w: Vec<f64> = (0..n).map(|t| 0.4 + 0.1 * t as f64).collect();
+            let basek = spd(k, 9);
+            let mut got3 = basek.clone();
+            got3.syrk_add_panel_weighted_simd(v.data(), k, &w);
+            let mut want3 = basek.clone();
+            want3.syrk_add_panel_weighted_scalar(v.data(), k, &w);
+            assert_close(&got3, &want3, TOL, &format!("wsyrk {tag}"));
+        }
+    }
+}
+
+#[test]
+fn trsm_matches_scalar_at_remainder_sizes() {
+    for n in (1..=17usize).chain([64]) {
+        let f = CholeskyFactor::new(&spd(n, 10)).expect("spd factorizes");
+        for w in [1usize, 3, 4, 8, 17] {
+            let b = mat(n, w, 11);
+            let tag = format!("n={n} w={w}");
+            assert_close(
+                &f.solve_lower_mat_simd(&b),
+                &f.solve_lower_mat_scalar(&b),
+                TOL,
+                &format!("trsm-lower {tag}"),
+            );
+            assert_close(
+                &f.solve_upper_mat_simd(&b),
+                &f.solve_upper_mat_scalar(&b),
+                TOL,
+                &format!("trsm-upper {tag}"),
+            );
+            assert_close(
+                &f.solve_mat_simd(&b),
+                &f.solve_mat_scalar(&b),
+                TOL,
+                &format!("trsm-full {tag}"),
+            );
+        }
+    }
+}
+
+fn kernel(d: usize) -> ArdMatern {
+    let ls: Vec<f64> = (0..d).map(|j| 0.4 + 0.15 * j as f64).collect();
+    ArdMatern::new(1.7, ls, Smoothness::ThreeHalves)
+}
+
+/// Row-major pseudo-random `len×d` panel; row `dup` (if in range)
+/// duplicates `q` so the r = 0 gradient branch is crossed.
+fn panel(len: usize, d: usize, q: &[f64], dup: usize) -> Vec<f64> {
+    let mut p = Vec::with_capacity(len * d);
+    for t in 0..len {
+        if t == dup {
+            p.extend_from_slice(q);
+        } else {
+            for j in 0..d {
+                p.push(((t * 13 + j * 5 + 1) as f64 * 0.29).sin());
+            }
+        }
+    }
+    p
+}
+
+fn assert_slices_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= tol, "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+#[test]
+fn panel_kernels_match_scalar_at_remainder_sizes() {
+    for d in [1usize, 2, 3, 5, 8, 17] {
+        let k = kernel(d);
+        let q: Vec<f64> = (0..d).map(|j| (j as f64 * 0.41).cos()).collect();
+        for len in (1..=17usize).chain([100]) {
+            let p = panel(len, d, &q, len / 2);
+            let tag = format!("d={d} len={len}");
+
+            let mut rs = vec![0.0; len];
+            let mut rv = vec![0.0; len];
+            k.scaled_dist_panel_scalar(&q, &p, &mut rs);
+            k.scaled_dist_panel_simd(&q, &p, &mut rv);
+            assert_slices_close(&rv, &rs, TOL, &format!("dist {tag}"));
+
+            let mut cs = vec![0.0; len];
+            let mut cv = vec![0.0; len];
+            k.corr_panel_scalar(&q, &p, &mut cs);
+            k.corr_panel_simd(&q, &p, &mut cv);
+            assert_slices_close(&cv, &cs, TOL, &format!("corr {tag}"));
+
+            let mut cov_s = vec![0.0; len];
+            let mut cov_v = vec![0.0; len];
+            let mut g_s = vec![0.0; (1 + d) * len];
+            let mut g_v = vec![0.0; (1 + d) * len];
+            k.cov_and_grad_panel_scalar(&q, &p, &mut cov_s, &mut g_s);
+            k.cov_and_grad_panel_simd(&q, &p, &mut cov_v, &mut g_v);
+            assert_slices_close(&cov_v, &cov_s, TOL, &format!("grad-cov {tag}"));
+            assert_slices_close(&g_v, &g_s, TOL, &format!("grad {tag}"));
+        }
+    }
+}
+
+#[test]
+fn sym_cov_panel_matches_scalar() {
+    let d = 3;
+    let k = kernel(d);
+    for q in [1usize, 2, 5, 13, 16, 17, 40, 64] {
+        let p = panel(q, d, &[0.1, 0.2, 0.3], q + 1);
+        let mut out_s = Mat::zeros(q, q);
+        let mut out_v = Mat::zeros(q, q);
+        k.sym_cov_panel_scalar(&p, &mut out_s);
+        k.sym_cov_panel_simd(&p, &mut out_v);
+        assert_close(&out_v, &out_s, TOL, &format!("sym_cov_panel q={q}"));
+    }
+}
+
+#[test]
+fn gemm_and_trsm_match_scalar_at_production_shapes() {
+    // Woodbury side blocks: (n-ish × m) panels against m×m cores.
+    let a = mat(512, 100, 20);
+    let b = mat(100, 100, 21);
+    assert_close(&a.matmul_simd(&b), &a.matmul_scalar(&b), TOL, "nn 512x100x100");
+
+    let at = mat(600, 100, 22);
+    let bt = mat(600, 64, 23);
+    let mut out_s = Mat::zeros(100, 64);
+    let mut out_v = Mat::zeros(100, 64);
+    at.matmul_tn_into_scalar(&bt, &mut out_s);
+    at.matmul_tn_into_simd(&bt, &mut out_v);
+    assert_close(&out_v, &out_s, TOL, "tn 600x100x64");
+
+    // Prediction-block ρ_NN correction: 64-point block, k = m = 100.
+    let v = mat(64, 100, 24);
+    assert_close(&v.matmul_nt_simd(&v), &v.matmul_nt_scalar(&v), TOL, "nt 64x100x64");
+    let base = spd(64, 25);
+    let mut got = base.clone();
+    got.syrk_sub_panel_simd(v.data(), 100);
+    let mut want = base.clone();
+    want.syrk_sub_panel_scalar(v.data(), 100);
+    assert_close(&got, &want, TOL, "syrk 64x100");
+
+    assert_close(&at.gram_t_simd(), &at.gram_t_scalar(), TOL, "gram 600x100");
+
+    let f = CholeskyFactor::new(&spd(100, 26)).expect("spd factorizes");
+    let rhs = mat(100, 64, 27);
+    assert_close(
+        &f.solve_lower_mat_simd(&rhs),
+        &f.solve_lower_mat_scalar(&rhs),
+        TOL,
+        "trsm 100x64",
+    );
+    assert_close(&f.solve_mat_simd(&rhs), &f.solve_mat_scalar(&rhs), TOL, "solve 100x64");
+}
+
+/// Below the work threshold the public entry points must route to the
+/// scalar path — bit-identical on both `VIFGP_SIMD` legs, which is what
+/// keeps the pre-existing ≤1e-14 small-panel suites backend-independent.
+#[test]
+fn public_dispatch_is_bitwise_scalar_below_threshold() {
+    let a = mat(3, 4, 30);
+    let b = mat(4, 3, 31);
+    assert_eq!(a.matmul(&b).data(), a.matmul_scalar(&b).data());
+    let k = kernel(3);
+    let q = [0.2, -0.1, 0.4];
+    let p = panel(5, 3, &q, 2);
+    let mut pub_out = vec![0.0; 5];
+    let mut sc_out = vec![0.0; 5];
+    k.corr_panel(&q, &p, &mut pub_out);
+    k.corr_panel_scalar(&q, &p, &mut sc_out);
+    assert_eq!(pub_out, sc_out);
+}
+
+/// The public dispatching entry points agree with both pinned backends
+/// to ≤1e-12 at above-threshold sizes, whichever leg is active.
+#[test]
+fn public_dispatch_matches_both_backends_above_threshold() {
+    let a = mat(40, 30, 32);
+    let b = mat(30, 20, 33);
+    let got = a.matmul(&b);
+    assert_close(&got, &a.matmul_scalar(&b), TOL, "dispatch vs scalar");
+    assert_close(&got, &a.matmul_simd(&b), TOL, "dispatch vs simd");
+}
+
+/// The dense covariance entry points (`cross_cov`, `sym_cov`) are routed
+/// through the panel primitives; pin them to the per-pair oracle above
+/// the dispatch threshold on whichever backend leg is active.
+#[test]
+fn dense_cov_blocks_match_per_pair_oracle() {
+    let d = 4;
+    let k = kernel(d);
+    let a = mat(23, d, 40);
+    let b = mat(37, d, 41);
+    let c = k.cross_cov(&a, &b);
+    for i in 0..a.rows() {
+        for j in 0..b.rows() {
+            let want = k.cov(a.row(i), b.row(j));
+            assert!((c.get(i, j) - want).abs() <= TOL, "cross_cov [{i},{j}]");
+        }
+    }
+    let s = k.sym_cov(&a, 0.013);
+    for i in 0..a.rows() {
+        for j in 0..a.rows() {
+            let want = if i == j { k.variance + 0.013 } else { k.cov(a.row(i), a.row(j)) };
+            assert!((s.get(i, j) - want).abs() <= TOL, "sym_cov [{i},{j}]");
+            assert_eq!(s.get(i, j), s.get(j, i), "sym_cov symmetry [{i},{j}]");
+        }
+    }
+}
+
+/// The chaos-harness NaN-panel hook must keep firing when the panel was
+/// computed by the lane backend (the fault surface is dispatch-independent).
+#[test]
+fn nan_panel_hook_fires_on_simd_path() {
+    let d = 3;
+    let k = kernel(d);
+    let q = [0.1, 0.2, 0.3];
+    let len = 128; // len·d well above the dispatch threshold
+    let p = panel(len, d, &q, 7);
+    let mut out = vec![0.0; len];
+    let guard = faults::install(FaultPlan { nan_panel: true, ..Default::default() });
+    k.corr_panel_simd(&q, &p, &mut out);
+    assert!(out.iter().all(|v| v.is_nan()), "armed hook must poison the SIMD panel");
+    drop(guard);
+    k.corr_panel_simd(&q, &p, &mut out);
+    assert!(out.iter().all(|v| v.is_finite()), "disarmed hook must leave the panel clean");
+}
