@@ -7,9 +7,11 @@
 //! panelized batched prediction, streaming append ingestion vs
 //! assemble-from-scratch (stage 13, BENCH_append.json), and the
 //! concurrent serving engine's latency/throughput sweep with generation
-//! swaps under load (stage 14, BENCH_serving.json), and the per-kernel
+//! swaps under load (stage 14, BENCH_serving.json), the per-kernel
 //! GFLOP/s trajectory of the SIMD lane backend vs the scalar oracle
-//! (stage 16, BENCH_kernels.json).
+//! (stage 16, BENCH_kernels.json), and the warm-started fit trajectory —
+//! cold vs warm `FitSession` over 20 objective evaluations (stage 17,
+//! BENCH_fit.json).
 
 #[path = "common.rs"]
 mod common;
@@ -1230,6 +1232,153 @@ fn main() {
         assert!(
             sp_dist >= 1.2,
             "dist_panel lane-backend speedup {sp_dist:.2}x < 1.2x over the scalar oracle"
+        );
+    }
+
+    // 17. Warm-started fit trajectory: 20 Laplace objective evaluations
+    // along a simulated L-BFGS θ walk (frozen plan, in-place refresh —
+    // the exact regime of a fit round), cold session vs warm
+    // `FitSession`. The warm leg carries the Newton mode, CG initial
+    // guesses, and the in-place-refreshed preconditioner across
+    // evaluations; the SLQ probe solves stay cold in both legs (their
+    // Lanczos recurrence forbids warm starts), so the savings measured
+    // here are the mode-finding and gradient-helper solves. Final NLLs
+    // must agree to ≤1e-6 and the warm leg must spend ≥20% fewer
+    // cumulative CG iterations; writes machine-readable BENCH_fit.json
+    // (override the path with VIFGP_BENCH_FIT_JSON).
+    {
+        use vifgp::iterative::{solve_stats, IterConfig, PrecondType};
+        use vifgp::likelihoods::Likelihood;
+        use vifgp::vif::laplace::{SolveMode, VifLaplaceModel};
+        use vifgp::vif::{FitModel, FitSession, VifConfig};
+
+        let n_fit = common::scaled(400);
+        let (d_fit, m_fit, mv_fit) = (2usize, 12usize, 6usize);
+        let evals = 20usize;
+        let lik = Likelihood::BernoulliLogit;
+        let wl = common::simulate(211, n_fit, 1, d_fit, Smoothness::ThreeHalves, &lik);
+        let cfg = IterConfig {
+            precond: PrecondType::Vifdu,
+            ell: 8,
+            cg_tol: 1e-8,
+            slq_min_iter: 15,
+            ..Default::default()
+        };
+        let config = VifConfig {
+            num_inducing: m_fit,
+            num_neighbors: mv_fit,
+            selection: NeighborSelection::EuclideanTransformed,
+            lloyd_iters: 2,
+            seed: 17,
+            ..Default::default()
+        };
+        let mut model = VifLaplaceModel::new(
+            wl.xtr.clone(),
+            wl.ytr.clone(),
+            config,
+            SolveMode::Iterative(cfg),
+            wl.kernel.clone(),
+            lik,
+        );
+        model.reselect();
+        let plan = model.take_plan();
+        let mut s = model.take_structure();
+        let p0 = model.pack_params();
+        // The same line-search-sized θ walk for both legs: consecutive
+        // evaluations are near each other, like an optimizer's.
+        let thetas: Vec<Vec<f64>> = (0..evals)
+            .map(|t| {
+                p0.iter()
+                    .enumerate()
+                    .map(|(j, pj)| pj + 0.05 * ((t * (j + 2)) as f64 * 0.61).sin())
+                    .collect()
+            })
+            .collect();
+
+        let mut run_leg = |warm: bool| -> (Vec<f64>, u64, f64) {
+            let mut session = FitSession::new(warm);
+            let before = solve_stats().snapshot().cg_iters;
+            let (nlls, t) = common::timed(|| {
+                thetas
+                    .iter()
+                    .map(|p| model.eval(&plan, &mut s, p, &mut session).0)
+                    .collect::<Vec<f64>>()
+            });
+            let cg = solve_stats().snapshot().cg_iters - before;
+            (nlls, cg, t)
+        };
+        let (nll_cold, cg_cold, t_cold) = run_leg(false);
+        let (nll_warm, cg_warm, t_warm) = run_leg(true);
+
+        let final_cold = nll_cold[evals - 1];
+        let final_warm = nll_warm[evals - 1];
+        let final_diff = (final_warm - final_cold).abs();
+        let max_diff = nll_cold
+            .iter()
+            .zip(&nll_warm)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let cg_ratio = cg_warm as f64 / cg_cold.max(1) as f64;
+        let speedup = t_cold / t_warm.max(1e-12);
+        println!(
+            "fit trajectory n={n_fit} ({evals} evals): cold {t_cold:.3}s / {cg_cold} CG iters, \
+             warm {t_warm:.3}s / {cg_warm} CG iters (ratio {cg_ratio:.2}, speedup {speedup:.2}x, \
+             max |ΔNLL| {max_diff:.3e})"
+        );
+
+        let json = format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"perf_hotpath stage 17: warm-started fit trajectory \
+                 (cold vs warm FitSession)\",\n",
+                "  \"config\": {{\"n\": {n}, \"d\": {d}, \"m\": {m}, \"m_v\": {mv}, \
+                 \"evals\": {ev}, \"ell\": 8, \"cg_tol\": 1e-8, \"precond\": \"vifdu\"}},\n",
+                "  \"cold_s\": {tc:.6},\n",
+                "  \"warm_s\": {tw:.6},\n",
+                "  \"time_speedup\": {sp:.3},\n",
+                "  \"cold_cg_iters\": {cc},\n",
+                "  \"warm_cg_iters\": {cw},\n",
+                "  \"cg_iters_ratio\": {cr:.4},\n",
+                "  \"final_nll_cold\": {fc:.9},\n",
+                "  \"final_nll_warm\": {fw:.9},\n",
+                "  \"final_nll_abs_diff\": {fd:.3e},\n",
+                "  \"max_nll_abs_diff\": {md:.3e},\n",
+                "  \"asserts\": {{\"max_cg_iters_ratio\": 0.8, \"final_nll_tol\": 1e-6}}\n",
+                "}}\n"
+            ),
+            n = n_fit,
+            d = d_fit,
+            m = m_fit,
+            mv = mv_fit,
+            ev = evals,
+            tc = t_cold,
+            tw = t_warm,
+            sp = speedup,
+            cc = cg_cold,
+            cw = cg_warm,
+            cr = cg_ratio,
+            fc = final_cold,
+            fw = final_warm,
+            fd = final_diff,
+            md = max_diff,
+        );
+        let path =
+            std::env::var("VIFGP_BENCH_FIT_JSON").unwrap_or_else(|_| "BENCH_fit.json".into());
+        match std::fs::write(&path, json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+
+        // Acceptance gates, checked after the JSON lands so the artifact
+        // records the trajectory even when a gate trips.
+        assert!(
+            cg_ratio <= 0.8,
+            "warm fit spent {cg_warm} CG iterations vs cold {cg_cold} \
+             (ratio {cg_ratio:.2} > 0.8): warm starts are not saving work"
+        );
+        assert!(
+            final_diff <= 1e-6 * (1.0 + final_cold.abs()),
+            "warm final NLL {final_warm} deviates from cold {final_cold} by {final_diff:.3e}"
         );
     }
 }

@@ -166,23 +166,75 @@ pub fn pcg_batch_with_min(
     max_iter: usize,
     want_tridiag: bool,
 ) -> BatchCgResult {
+    pcg_batch_with_min_from(op, pre, b, None, tol, min_iter, max_iter, want_tridiag)
+}
+
+/// [`pcg_batch_with_min`] with an optional per-column initial-guess block
+/// `x0` (warm start), mirroring
+/// [`pcg_with_min_from`](super::pcg_with_min_from): `None` is
+/// byte-identical to the historical cold start; `Some(g)` starts every
+/// column j from `x_j = g_j`, `r_j = b_j − A g_j`. The stopping rule
+/// stays relative to each column's `‖b_j‖`, and warm starts are rejected
+/// for `want_tridiag` batches (SLQ probes need pure Krylov recurrences).
+#[allow(clippy::too_many_arguments)]
+pub fn pcg_batch_with_min_from(
+    op: &dyn LinOp,
+    pre: &dyn Preconditioner,
+    b: &Mat,
+    x0: Option<&Mat>,
+    tol: f64,
+    min_iter: usize,
+    max_iter: usize,
+    want_tridiag: bool,
+) -> BatchCgResult {
     let n = b.rows();
     let k = b.cols();
     assert_eq!(op.n(), n);
     assert_eq!(pre.n(), n);
+    assert!(
+        x0.is_none() || !want_tridiag,
+        "warm-started batched PCG cannot recover Lanczos tridiagonals: \
+         SLQ probe solves must use a cold start"
+    );
 
     // Fault injection: a stalled batch suppresses every column's
     // convergence check (budget consumed once per pcg_batch call).
     let stall = crate::faults::cg_stall_active();
-    let z0 = solve_chunked(pre, b);
+    // Warm start: one blocked operator application computes every
+    // column's initial residual b − A g. Cold start keeps r = b with no
+    // extra apply, byte-identical to the historical path.
+    let rmat0: Mat = match x0 {
+        None => b.clone(),
+        Some(g) => {
+            assert_eq!(g.rows(), n, "initial-guess block rows {} != system size {n}", g.rows());
+            assert_eq!(g.cols(), k, "initial-guess block cols {} != rhs cols {k}", g.cols());
+            let ag = apply_chunked(op, g);
+            Mat::from_fn(n, k, |i, j| b.get(i, j) - ag.get(i, j))
+        }
+    };
+    let z0 = solve_chunked(pre, &rmat0);
     let mut cols: Vec<ColState> = (0..k)
         .map(|j| {
-            let r = b.col(j);
+            let r = rmat0.col(j);
             let z = z0.col(j);
             let rz = dot(&r, &z);
-            let b_norm = dot(&r, &r).sqrt().max(1e-300);
+            let b_norm = {
+                let bj = b.col(j);
+                dot(&bj, &bj).sqrt().max(1e-300)
+            };
+            let x = match x0 {
+                None => vec![0.0; n],
+                Some(g) => g.col(j),
+            };
+            // A warm column whose guess already meets the tolerance is
+            // retired before the lockstep loop (see the scalar-path
+            // note on spurious pᵀAp ≤ 0 exits at r = 0).
+            let converged = x0.is_some()
+                && !stall
+                && min_iter == 0
+                && dot(&r, &r).sqrt() <= tol * b_norm;
             ColState {
-                x: vec![0.0; n],
+                x,
                 r,
                 p: z,
                 rz,
@@ -190,9 +242,9 @@ pub fn pcg_batch_with_min(
                 alphas: Vec::new(),
                 betas: Vec::new(),
                 iters: 0,
-                converged: false,
+                converged,
                 breakdown: false,
-                active: true,
+                active: !converged,
             }
         })
         .collect();
@@ -256,6 +308,8 @@ pub fn pcg_batch_with_min(
         }
     }
 
+    let total_iters: u64 = cols.iter().map(|c| c.iters as u64).sum();
+    super::diag::solve_stats().note_cg_iters(total_iters);
     let mut x = Mat::zeros(n, k);
     let mut columns = Vec::with_capacity(k);
     for (j, c) in cols.into_iter().enumerate() {
@@ -350,6 +404,50 @@ mod tests {
             assert_eq!(res.columns[j].breakdown, want.breakdown, "col {j}");
             assert!(res.columns[j].breakdown, "col {j} must break down");
             assert!(res.x.col(j).iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn batch_zero_guess_is_bitwise_identical_to_cold_start() {
+        let n = 24;
+        let k = 4;
+        let a = spd(n);
+        let b = Mat::from_fn(n, k, |i, j| ((i + 5 * j) as f64 * 0.37).sin());
+        let op = DenseOp(a);
+        let pre = IdentityPrecond(n);
+        let cold = pcg_batch_with_min(&op, &pre, &b, 1e-10, 0, 200, false);
+        let zeros = Mat::zeros(n, k);
+        let warm = pcg_batch_with_min_from(&op, &pre, &b, Some(&zeros), 1e-10, 0, 200, false);
+        for j in 0..k {
+            assert_eq!(cold.columns[j].iters, warm.columns[j].iters, "col {j}");
+            assert_eq!(cold.columns[j].converged, warm.columns[j].converged);
+            for i in 0..n {
+                assert_eq!(cold.x.get(i, j).to_bits(), warm.x.get(i, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_warm_guess_cuts_iterations() {
+        let n = 32;
+        let k = 3;
+        let a = spd(n);
+        let b = Mat::from_fn(n, k, |i, j| ((i + 2 * j) as f64 * 0.19).cos());
+        let op = DenseOp(a.clone());
+        let pre = IdentityPrecond(n);
+        let cold = pcg_batch_with_min(&op, &pre, &b, 1e-9, 0, 300, false);
+        // Guess = slightly perturbed exact solutions.
+        let exact = crate::linalg::CholeskyFactor::new(&a).unwrap().solve_mat(&b);
+        let near = Mat::from_fn(n, k, |i, j| exact.get(i, j) * (1.0 + 1e-7));
+        let warm = pcg_batch_with_min_from(&op, &pre, &b, Some(&near), 1e-9, 0, 300, false);
+        for j in 0..k {
+            assert!(warm.columns[j].converged, "col {j}");
+            assert!(
+                warm.columns[j].iters < cold.columns[j].iters,
+                "col {j}: warm {} should beat cold {}",
+                warm.columns[j].iters,
+                cold.columns[j].iters
+            );
         }
     }
 

@@ -116,10 +116,46 @@ pub fn pcg_with_min(
     max_iter: usize,
     want_tridiag: bool,
 ) -> CgResult {
+    pcg_with_min_from(op, pre, b, None, tol, min_iter, max_iter, want_tridiag)
+}
+
+/// [`pcg_with_min`] with an optional initial guess `x0` (warm start).
+///
+/// With `x0 = None` the iteration is byte-identical to the historical
+/// cold start (`x = 0`, `r = b`); with `x0 = Some(g)` it starts from
+/// `x = g`, `r = b − A g`, so a guess near the solution converges in a
+/// handful of iterations. The convergence test stays relative to `‖b‖`
+/// (not the initial residual), so warm and cold solves stop at the same
+/// absolute accuracy. Warm starts are rejected for `want_tridiag` solves:
+/// the Lanczos recovery (Eq. 18/19 quadrature) is only valid for the
+/// Krylov recurrence seeded at `P^{-1/2} b`, so SLQ probes must stay cold.
+#[allow(clippy::too_many_arguments)]
+pub fn pcg_with_min_from(
+    op: &dyn LinOp,
+    pre: &dyn Preconditioner,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    tol: f64,
+    min_iter: usize,
+    max_iter: usize,
+    want_tridiag: bool,
+) -> CgResult {
     let n = b.len();
     assert_eq!(op.n(), n);
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
+    assert!(
+        x0.is_none() || !want_tridiag,
+        "warm-started PCG cannot recover a Lanczos tridiagonal: \
+         SLQ probe solves must use a cold start"
+    );
+    let (mut x, mut r) = match x0 {
+        None => (vec![0.0; n], b.to_vec()),
+        Some(g) => {
+            assert_eq!(g.len(), n, "initial guess length {} != system size {n}", g.len());
+            let ag = op.apply(g);
+            let r: Vec<f64> = b.iter().zip(&ag).map(|(bi, ai)| bi - ai).collect();
+            (g.to_vec(), r)
+        }
+    };
     let mut z = pre.solve(&r);
     let mut p = z.clone();
     let mut rz = dot(&r, &z);
@@ -132,6 +168,14 @@ pub fn pcg_with_min(
     // Fault injection: a stalled solve suppresses its convergence check
     // and runs to max_iter (budget consumed per pcg call).
     let stall = crate::faults::cg_stall_active();
+    // A warm guess may already satisfy the tolerance; without this check
+    // the r = 0 start would hit the pᵀAp ≤ 0 exit and flag a spurious
+    // breakdown. Warm-only, so the cold path stays byte-identical.
+    if x0.is_some() && !stall && min_iter == 0 && dot(&r, &r).sqrt() <= tol * b_norm {
+        converged = true;
+        super::diag::solve_stats().note_cg_iters(0);
+        return CgResult { x, iters, converged, breakdown, tridiag: None };
+    }
 
     for _ in 0..max_iter {
         let ap = op.apply(&p);
@@ -167,6 +211,7 @@ pub fn pcg_with_min(
         None
     };
 
+    super::diag::solve_stats().note_cg_iters(iters as u64);
     CgResult { x, iters, converged, breakdown, tridiag }
 }
 
@@ -320,6 +365,91 @@ mod tests {
         let res = pcg(&DenseOp(spd(12)), &IdentityPrecond(12), &b, 1e-10, 200, false);
         assert!(!res.breakdown && res.converged);
         assert!(res.diag().failure.is_none());
+    }
+
+    #[test]
+    fn zero_guess_is_bitwise_identical_to_cold_start() {
+        // x0 = Some(zeros) must reproduce the cold path exactly: A·0 = 0
+        // in floating point, so the initial residual is b either way.
+        let a = spd(30);
+        let b: Vec<f64> = (0..30).map(|i| (i as f64 * 0.3).cos()).collect();
+        let zeros = vec![0.0; 30];
+        let cold = pcg(&DenseOp(a.clone()), &JacobiPrecond(a.diag()), &b, 1e-10, 200, false);
+        let warm = pcg_with_min_from(
+            &DenseOp(a.clone()),
+            &JacobiPrecond(a.diag()),
+            &b,
+            Some(&zeros),
+            1e-10,
+            0,
+            200,
+            false,
+        );
+        assert_eq!(cold.iters, warm.iters);
+        assert_eq!(cold.converged, warm.converged);
+        for (c, w) in cold.x.iter().zip(&warm.x) {
+            assert_eq!(c.to_bits(), w.to_bits(), "{c} vs {w}");
+        }
+    }
+
+    #[test]
+    fn exact_guess_converges_without_iterating() {
+        let a = spd(25);
+        let b: Vec<f64> = (0..25).map(|i| (i as f64 * 0.17).sin()).collect();
+        let want = CholeskyFactor::new(&a).unwrap().solve(&b);
+        let res = pcg_with_min_from(
+            &DenseOp(a.clone()),
+            &IdentityPrecond(25),
+            &b,
+            Some(&want),
+            1e-8,
+            0,
+            200,
+            false,
+        );
+        assert!(res.converged && !res.breakdown);
+        assert_eq!(res.iters, 0, "an exact guess must short-circuit");
+        for (g, w) in res.x.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        // A merely-close guess converges in far fewer iterations than cold.
+        let near: Vec<f64> = want.iter().map(|w| w * (1.0 + 1e-6)).collect();
+        let warm = pcg_with_min_from(
+            &DenseOp(a.clone()),
+            &IdentityPrecond(25),
+            &b,
+            Some(&near),
+            1e-8,
+            0,
+            200,
+            false,
+        );
+        let cold = pcg(&DenseOp(a), &IdentityPrecond(25), &b, 1e-8, 200, false);
+        assert!(warm.converged);
+        assert!(
+            warm.iters < cold.iters,
+            "warm {} should beat cold {}",
+            warm.iters,
+            cold.iters
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cold start")]
+    fn warm_start_with_tridiag_request_panics() {
+        let a = spd(8);
+        let b = vec![1.0; 8];
+        let g = vec![0.5; 8];
+        let _ = pcg_with_min_from(
+            &DenseOp(a),
+            &IdentityPrecond(8),
+            &b,
+            Some(&g),
+            1e-8,
+            0,
+            50,
+            true,
+        );
     }
 
     #[test]

@@ -53,6 +53,9 @@ pub struct SolveStats {
     unrecovered: AtomicU64,
     chol_jitter_escalations: AtomicU64,
     nonfinite_evals: AtomicU64,
+    cg_iters: AtomicU64,
+    warm_hits: AtomicU64,
+    warm_misses: AtomicU64,
 }
 
 /// Plain-data copy of the counters at one instant.
@@ -74,6 +77,15 @@ pub struct SolveStatsReport {
     /// Objective evaluations sanitized to +∞ for L-BFGS (non-finite
     /// value or gradient).
     pub nonfinite_evals: u64,
+    /// Cumulative CG iterations across scalar and batched solves (the
+    /// per-evaluation deltas are what the warm-start bench scores).
+    pub cg_iters: u64,
+    /// Solves that started from carried session state (previous θ's
+    /// solution / converged Laplace mode / retained preconditioner).
+    pub warm_hits: u64,
+    /// Solves that wanted warm state but found none usable (first
+    /// evaluation, re-selection round, or size change) and ran cold.
+    pub warm_misses: u64,
 }
 
 impl SolveStats {
@@ -114,6 +126,19 @@ impl SolveStats {
         self.nonfinite_evals.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record iterations spent by one (scalar or batched) PCG call.
+    pub fn note_cg_iters(&self, iters: u64) {
+        self.cg_iters.fetch_add(iters, Ordering::Relaxed);
+    }
+
+    pub fn note_warm_hit(&self) {
+        self.warm_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_warm_miss(&self) {
+        self.warm_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> SolveStatsReport {
         SolveStatsReport {
             cg_breakdown: self.cg_breakdown.load(Ordering::Relaxed),
@@ -125,6 +150,9 @@ impl SolveStats {
             unrecovered: self.unrecovered.load(Ordering::Relaxed),
             chol_jitter_escalations: self.chol_jitter_escalations.load(Ordering::Relaxed),
             nonfinite_evals: self.nonfinite_evals.load(Ordering::Relaxed),
+            cg_iters: self.cg_iters.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            warm_misses: self.warm_misses.load(Ordering::Relaxed),
         }
     }
 
@@ -139,6 +167,9 @@ impl SolveStats {
             &self.unrecovered,
             &self.chol_jitter_escalations,
             &self.nonfinite_evals,
+            &self.cg_iters,
+            &self.warm_hits,
+            &self.warm_misses,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -175,6 +206,11 @@ mod tests {
         stats.note_jitter(1e-8);
         stats.note_jitter(0.0); // clean factorization — not an escalation
         stats.note_nonfinite_eval();
+        stats.note_cg_iters(17);
+        stats.note_cg_iters(3);
+        stats.note_warm_hit();
+        stats.note_warm_miss();
+        stats.note_warm_miss();
         let s = stats.snapshot();
         assert_eq!(s.cg_breakdown, 1);
         assert_eq!(s.cg_max_iter, 1);
@@ -186,6 +222,9 @@ mod tests {
         assert_eq!(s.unrecovered, 1);
         assert_eq!(s.chol_jitter_escalations, 1);
         assert_eq!(s.nonfinite_evals, 1);
+        assert_eq!(s.cg_iters, 20);
+        assert_eq!(s.warm_hits, 1);
+        assert_eq!(s.warm_misses, 2);
         stats.reset();
         assert_eq!(stats.snapshot(), SolveStatsReport::default());
     }

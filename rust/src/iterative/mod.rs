@@ -39,10 +39,12 @@ mod pred_var;
 pub mod slq;
 
 pub use batch::{
-    apply_chunked, map_columns, pcg_batch, pcg_batch_with_min, solve_chunked, BatchCgResult,
-    BatchColumnResult,
+    apply_chunked, map_columns, pcg_batch, pcg_batch_with_min, pcg_batch_with_min_from,
+    solve_chunked, BatchCgResult, BatchColumnResult,
 };
-pub use cg::{pcg, pcg_with_min, CgResult, IdentityPrecond, LinOp, Preconditioner};
+pub use cg::{
+    pcg, pcg_with_min, pcg_with_min_from, CgResult, IdentityPrecond, LinOp, Preconditioner,
+};
 pub use diag::{solve_stats, SolveDiag, SolveFailure, SolveStats, SolveStatsReport};
 pub use precond::{FitcPrecond, PrecondType, VifduPrecond};
 pub use pred_var::{sbpv_diag, spv_diag};

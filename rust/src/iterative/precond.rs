@@ -76,6 +76,29 @@ impl<'a> VifduPrecond<'a> {
         });
         VifduPrecond { s, w: w.to_vec(), wd_inv, chol_m3 }
     }
+
+    /// Refresh for new Laplace weights `w` against the same (already
+    /// refreshed) structure, mirroring the `VifPlan`/`refresh` split:
+    /// the diagonal and the m×m core are recomputed in the existing
+    /// buffers instead of reallocating. Numerically identical to
+    /// [`new`](Self::new) — the arithmetic is the same expression over
+    /// the same operands.
+    pub fn refresh(&mut self, w: &[f64]) {
+        let n = self.s.n();
+        assert_eq!(w.len(), n);
+        self.w.copy_from_slice(w);
+        for ((wd, wi), di) in self.wd_inv.iter_mut().zip(w).zip(&self.s.resid.d) {
+            *wd = 1.0 / (wi + 1.0 / di);
+        }
+        self.chol_m3 = self.s.mcal.as_ref().map(|mcal| {
+            let mut m3 = mcal.clone();
+            let mut hw = self.s.h.clone();
+            hw.scale_rows(&self.wd_inv);
+            let corr = self.s.h.matmul_tn(&hw);
+            m3.sub_assign(&corr);
+            CholeskyFactor::new_with_jitter(&m3, 1e-10).expect("M3 not PD")
+        });
+    }
 }
 
 impl<'a> Preconditioner for VifduPrecond<'a> {
@@ -150,10 +173,18 @@ impl<'a> Preconditioner for VifduPrecond<'a> {
 /// for the system `(Σ_† + W⁻¹) u = v` (Appendix E.2). Its inducing set
 /// may differ from (and be larger than) the VIF approximation's.
 pub struct FitcPrecond {
+    /// The inducing set `Ẑ`, kept so a warm-started fit can refresh the
+    /// θ-dependent panels in place without re-running kMeans++.
+    z: Mat,
     /// `K(X, Ẑ)` stored n×k.
     sigma_nk: Mat,
     /// `(L_k⁻¹ Σ_kn)ᵀ` n×k.
     vt: Mat,
+    /// `diag(Σ − Q_nn)` (θ-dependent, w-independent).
+    fitc_diag: Vec<f64>,
+    /// `Σ_k` (jittered), kept so a weights-only refresh can rebuild the
+    /// k×k core without an O(k³) `L·Lᵀ` reconstruction.
+    sig_k: Mat,
     /// `D_V = diag(Σ − Q_nn) + W⁻¹`.
     dv: Vec<f64>,
     chol_k: CholeskyFactor,
@@ -184,6 +215,7 @@ impl FitcPrecond {
             CholeskyFactor::new_with_jitter(&sig_k, 1e-10).expect("FITC precond Σ_k not PD");
         let mut sigma_nk = Mat::zeros(n, k);
         let mut vt = Mat::zeros(n, k);
+        let mut fitc_diag = vec![0.0; n];
         let mut dv = vec![0.0; n];
         for i in 0..n {
             let mut krow = vec![0.0; k];
@@ -192,17 +224,47 @@ impl FitcPrecond {
             }
             let mut v = krow.clone();
             chol_k.solve_lower_in_place(&mut v);
-            dv[i] = (kernel.variance - dot(&v, &v)).max(1e-12) + 1.0 / w[i];
+            fitc_diag[i] = (kernel.variance - dot(&v, &v)).max(1e-12);
+            dv[i] = fitc_diag[i] + 1.0 / w[i];
             sigma_nk.row_mut(i).copy_from_slice(&krow);
             vt.row_mut(i).copy_from_slice(&v);
         }
-        // M_V = Σ_k + Σ_kn D_V⁻¹ Σ_knᵀ
+        let chol_mv = Self::factor_mv(&sigma_nk, &sig_k, &dv);
+        FitcPrecond { z, sigma_nk, vt, fitc_diag, sig_k, dv, chol_k, chol_mv }
+    }
+
+    /// `M_V = Σ_k + Σ_kn D_V⁻¹ Σ_knᵀ` factored.
+    fn factor_mv(sigma_nk: &Mat, sig_k: &Mat, dv: &[f64]) -> CholeskyFactor {
         let mut snd = sigma_nk.clone();
         snd.scale_rows(&dv.iter().map(|d| 1.0 / d).collect::<Vec<_>>());
         let mut mv = sigma_nk.matmul_tn(&snd);
-        mv.add_assign(&sig_k);
-        let chol_mv = CholeskyFactor::new_with_jitter(&mv, 1e-10).expect("M_V not PD");
-        FitcPrecond { sigma_nk, vt, dv, chol_k, chol_mv }
+        mv.add_assign(sig_k);
+        CholeskyFactor::new_with_jitter(&mv, 1e-10).expect("M_V not PD")
+    }
+
+    /// Refresh for new kernel parameters θ and weights `w`, keeping the
+    /// inducing set `Ẑ` selected at construction. Numerically identical
+    /// to [`with_inducing`](Self::with_inducing) with the same `Ẑ`; what
+    /// it skips is the kMeans++ re-selection that
+    /// [`new`](Self::new) runs per call — the warm-start session keeps
+    /// `Ẑ` fixed between re-selection rounds so consecutive L-BFGS
+    /// evaluations see a smoothly varying preconditioner.
+    pub fn refresh(&mut self, x: &Mat, kernel: &ArdMatern, w: &[f64]) {
+        let z = std::mem::replace(&mut self.z, Mat::zeros(0, 0));
+        *self = Self::with_inducing(x, kernel, z, w);
+    }
+
+    /// Refresh for new weights `w` only (θ and `Ẑ` unchanged): reuses
+    /// the kernel panels and `Σ_k` factor, recomputing just `D_V` and
+    /// the k×k core. This is the intra-evaluation path — successive
+    /// Newton iterations of the Laplace mode search change only `W`.
+    pub fn refresh_weights(&mut self, w: &[f64]) {
+        let n = self.dv.len();
+        assert_eq!(w.len(), n);
+        for ((dv, fd), wi) in self.dv.iter_mut().zip(&self.fitc_diag).zip(w) {
+            *dv = fd + 1.0 / wi;
+        }
+        self.chol_mv = Self::factor_mv(&self.sigma_nk, &self.sig_k, &self.dv);
     }
 
     pub fn k(&self) -> usize {
@@ -384,6 +446,91 @@ mod tests {
         assert!(got.max_abs_diff(&want) < 1e-5, "diff {}", got.max_abs_diff(&want));
         let chol = CholeskyFactor::new(&want).unwrap();
         assert!((p.logdet() - chol.logdet()).abs() < 1e-5);
+    }
+
+    /// Max abs difference between two preconditioners' actions (solve on
+    /// unit vectors) plus their logdets — the full observable surface of
+    /// a `Preconditioner` apart from sampling (covered separately).
+    fn precond_max_diff(a: &dyn Preconditioner, b: &dyn Preconditioner) -> f64 {
+        let n = a.n();
+        assert_eq!(b.n(), n);
+        let mut diff = (a.logdet() - b.logdet()).abs();
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let sa = a.solve(&e);
+            let sb = b.solve(&e);
+            for (x, y) in sa.iter().zip(&sb) {
+                diff = diff.max((x - y).abs());
+            }
+        }
+        diff
+    }
+
+    #[test]
+    fn vifdu_refresh_matches_rebuild_over_w_trajectory() {
+        // Newton iterations change only W: refresh-in-place must agree
+        // with a from-scratch build at every step (≤1e-12 — same
+        // arithmetic over the same operands).
+        let (_, _, s, w) = setup(25);
+        let mut p = VifduPrecond::new(&s, &w);
+        for t in 1..=5 {
+            let wt: Vec<f64> =
+                w.iter().enumerate().map(|(i, wi)| wi * (1.0 + 0.3 * ((t * (i + 1)) as f64 * 0.41).sin().abs())).collect();
+            p.refresh(&wt);
+            let fresh = VifduPrecond::new(&s, &wt);
+            let d = precond_max_diff(&p, &fresh);
+            assert!(d <= 1e-12, "step {t}: refresh vs rebuild diff {d:.3e}");
+            // Sampling streams must match too (same retained state).
+            let mut r1 = Rng::seed_from(42);
+            let mut r2 = Rng::seed_from(42);
+            let s1 = p.sample(&mut r1);
+            let s2 = fresh.sample(&mut r2);
+            for (a, b) in s1.iter().zip(&s2) {
+                assert!((a - b).abs() <= 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fitc_refresh_matches_rebuild_over_theta_trajectory() {
+        let (x, kernel, _, w) = setup(20);
+        let mut rng = Rng::seed_from(8);
+        let z = select_inducing(&x, &kernel, 5, 2, &mut rng, None).unwrap();
+        let mut p = FitcPrecond::with_inducing(&x, &kernel, z.clone(), &w);
+        for t in 1..=5 {
+            // θ trajectory (L-BFGS-shaped multiplicative log steps) plus
+            // a W change — the per-evaluation refresh path.
+            let mut lp = kernel.log_params();
+            for (j, pj) in lp.iter_mut().enumerate() {
+                *pj += 0.06 * ((t * (j + 2)) as f64 * 0.7).sin();
+            }
+            let kt = ArdMatern::from_log_params(&lp, kernel.smoothness);
+            let wt: Vec<f64> = w.iter().enumerate().map(|(i, wi)| wi * (1.0 + 0.2 * ((t + i) as f64 * 0.23).cos().abs())).collect();
+            p.refresh(&x, &kt, &wt);
+            let fresh = FitcPrecond::with_inducing(&x, &kt, z.clone(), &wt);
+            let d = precond_max_diff(&p, &fresh);
+            assert!(d <= 1e-12, "step {t}: refresh vs rebuild diff {d:.3e}");
+        }
+    }
+
+    #[test]
+    fn fitc_refresh_weights_matches_full_rebuild() {
+        // Weights-only refresh (the intra-Newton path) must equal a full
+        // rebuild at the same θ/Ẑ: D_V and the k×k core are the only
+        // W-dependent parts.
+        let (x, kernel, _, w) = setup(18);
+        let mut rng = Rng::seed_from(21);
+        let z = select_inducing(&x, &kernel, 5, 2, &mut rng, None).unwrap();
+        let mut p = FitcPrecond::with_inducing(&x, &kernel, z.clone(), &w);
+        for t in 1..=4 {
+            let wt: Vec<f64> =
+                w.iter().enumerate().map(|(i, wi)| wi * (1.0 + 0.5 * ((t * i) as f64 * 0.17).sin().abs())).collect();
+            p.refresh_weights(&wt);
+            let fresh = FitcPrecond::with_inducing(&x, &kernel, z.clone(), &wt);
+            let d = precond_max_diff(&p, &fresh);
+            assert!(d <= 1e-12, "step {t}: refresh_weights vs rebuild diff {d:.3e}");
+        }
     }
 
     #[test]

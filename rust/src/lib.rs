@@ -32,6 +32,7 @@
 //! | `VIFGP_SERVE_METRICS_JSON` | `vifgp serve` (CLI) | When set, the serve subcommand writes its final [`serve::MetricsReport`] JSON to this path on shutdown. |
 //! | `VIFGP_FAULTS` | [`faults`] | Deterministic fault injection for chaos testing. `0`/unset → disabled (hooks are a single relaxed atomic load); `1`/`on` → armed with an empty plan; otherwise a comma-separated spec, e.g. `chol_fail_below=1e-8,cg_stall=2,seed=7`. Malformed specs panic loudly. Never set this in production. |
 //! | `VIFGP_SIMD` | [`linalg::simd`] | Dense-kernel backend selector: unset or `1` → the 4-lane SIMD backend with register-blocked micro-kernels (above a small work threshold), `0` → the scalar oracle everywhere. Any other value panics loudly rather than silently picking a backend. CI runs a `VIFGP_SIMD=0` tier-1 leg. |
+//! | `VIFGP_WARM_START` | [`vif`] (`vif::warm_start_enabled`) | Fit-trajectory warm starts: unset or `1` → consecutive L-BFGS evaluations share a [`vif::FitSession`] (CG initial guesses, in-place preconditioner refresh, Laplace-mode carry-over), `0` → the cold oracle path, bit-for-bit identical to session-free fitting. Any other value panics loudly. CI runs a `VIFGP_WARM_START=0` tier-1 leg. |
 //! | `VIFGP_ARTIFACTS` | [`runtime`] | Directory of AOT-compiled HLO artifacts for the PJRT engine. Unset → native fallback. |
 //! | `VIFGP_BENCH_SCALE` | benches (`benches/common.rs`) | Multiplier on bench workload sizes (default `1.0`; CI smoke uses `0.05`). |
 //! | `VIFGP_BENCH_JSON` | `benches/perf_hotpath.rs` stage 10 | Output path for `BENCH_assembly.json`. |
@@ -40,6 +41,7 @@
 //! | `VIFGP_BENCH_APPEND_JSON` | `benches/perf_hotpath.rs` stage 13 | Output path for `BENCH_append.json` (streaming-append ingestion throughput). |
 //! | `VIFGP_BENCH_SERVING_JSON` | `benches/perf_hotpath.rs` stage 14 | Output path for `BENCH_serving.json` (concurrent serving latency/throughput sweep). |
 //! | `VIFGP_BENCH_KERNELS_JSON` | `benches/perf_hotpath.rs` stage 16 | Output path for `BENCH_kernels.json` (per-kernel GFLOP/s, scalar vs SIMD backend, at production shapes). |
+//! | `VIFGP_BENCH_FIT_JSON` | `benches/perf_hotpath.rs` stage 17 | Output path for `BENCH_fit.json` (20-evaluation fit trajectory, cold vs warm: end-to-end time and cumulative CG iterations). |
 //!
 //! ## Failure semantics
 //!

@@ -64,9 +64,11 @@ fn main() {
     // Arm deterministic fault injection from `--faults` / `VIFGP_FAULTS`
     // (chaos testing only; a malformed spec panics loudly, crate policy).
     vifgp::faults::init_from_env();
-    // Resolve the dense-kernel backend up front so a malformed
-    // `VIFGP_SIMD` fails loudly at startup, not mid-fit (crate policy).
+    // Resolve the dense-kernel backend and the warm-start mode up front
+    // so a malformed `VIFGP_SIMD` / `VIFGP_WARM_START` fails loudly at
+    // startup, not mid-fit (crate policy).
     vifgp::linalg::simd::simd_enabled();
+    vifgp::vif::warm_start_enabled();
     let code = match cmd.as_str() {
         "info" => cmd_info(),
         "simulate" => cmd_simulate(&flags),
@@ -105,6 +107,9 @@ GLOBAL FLAGS (any command):
   --sched-threshold N   min rows before Vecchia B sweeps use the level-
                         scheduled parallel path (0 = always; default 2048;
                         same as VIFGP_SCHED_THRESHOLD)
+  --warm-start 0|1      fit-trajectory warm starts: 1 (default) carries
+                        solver state across L-BFGS evaluations, 0 runs the
+                        cold oracle path (same as VIFGP_WARM_START)
   --faults SPEC         deterministic fault injection for chaos testing
                         (same as VIFGP_FAULTS; never use in production)"
     );
@@ -126,6 +131,16 @@ fn apply_runtime_flags(flags: &HashMap<String, String>) -> Result<(), String> {
             _ => {
                 return Err(format!(
                     "--sched-threshold expects a non-negative integer, got `{t}`"
+                ))
+            }
+        }
+    }
+    if let Some(t) = flags.get("warm-start") {
+        match t.as_str() {
+            "0" | "1" => std::env::set_var("VIFGP_WARM_START", t),
+            _ => {
+                return Err(format!(
+                    "--warm-start expects `0` (cold oracle) or `1` (warm-started), got `{t}`"
                 ))
             }
         }
@@ -332,6 +347,15 @@ fn cmd_train(flags: &HashMap<String, String>) -> i32 {
         }
     }
     let stats = vifgp::iterative::solve_stats().snapshot();
+    if stats.cg_iters > 0 || stats.warm_hits > 0 || stats.warm_misses > 0 {
+        println!(
+            "  solver: {} CG iterations, warm-start {} hits / {} misses ({})",
+            stats.cg_iters,
+            stats.warm_hits,
+            stats.warm_misses,
+            if vifgp::vif::warm_start_enabled() { "warm" } else { "cold oracle" }
+        );
+    }
     if stats.failures() > 0 || stats.chol_jitter_escalations > 0 || stats.nonfinite_evals > 0 {
         println!(
             "  containment: {} solve failures ({} retries / {} recovered / {} dense fallbacks / \

@@ -28,7 +28,6 @@ pub fn lbfgs(
     tol: f64,
 ) -> OptResult {
     const M: usize = 8;
-    let _n = x0.len();
     let mut x = x0.to_vec();
     let (mut fx, mut g) = f(&x);
     let mut trace = vec![fx];

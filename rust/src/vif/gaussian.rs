@@ -552,7 +552,15 @@ impl FitModel for VifRegression {
         self.params = GaussianParams::unpack(packed, self.config.smoothness);
     }
 
-    fn eval(&self, plan: &VifPlan, s: &mut VifStructure, packed: &[f64]) -> (f64, Vec<f64>) {
+    fn eval(
+        &self,
+        plan: &VifPlan,
+        s: &mut VifStructure,
+        packed: &[f64],
+        _session: &mut super::FitSession,
+    ) -> (f64, Vec<f64>) {
+        // Gaussian evaluations are direct (Woodbury + Cholesky, no CG),
+        // so there is no iterative state to carry: warm ≡ cold bitwise.
         let pars = GaussianParams::unpack(packed, self.config.smoothness);
         s.refresh(plan, &self.x, &pars.kernel, pars.noise, self.config.jitter);
         nll_and_grad_panels(s, &self.x, &pars.kernel, &self.y, Some(&plan.x_panels))

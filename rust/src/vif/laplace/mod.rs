@@ -11,7 +11,9 @@
 //!   SLQ log-determinants (18)/(19), and stochastic trace estimation with
 //!   probe reuse for the gradients (Appendix D).
 
-use crate::iterative::{sbpv_diag, spv_diag, IterConfig, PrecondType};
+use crate::iterative::{
+    sbpv_diag, solve_stats, spv_diag, FitcPrecond, IterConfig, PrecondType, VifduPrecond,
+};
 use crate::kernels::ArdMatern;
 use crate::likelihoods::Likelihood;
 use crate::linalg::{dot, Mat};
@@ -41,6 +43,41 @@ pub struct LaplaceState {
     pub psi: f64,
 }
 
+/// Per-model warm-start state carried across consecutive L-BFGS
+/// objective evaluations by a [`super::FitSession`] (see the parent
+/// module's "Warm-start lifecycle" section). Everything here is a
+/// *guess* or a refreshable cache: dropping the whole struct at any
+/// point only costs speed, never correctness.
+///
+/// The VIFDU preconditioner is deliberately absent — it borrows the
+/// `VifStructure` that the fit driver refreshes mutably between
+/// evaluations, so it can only be carried *within* one evaluation
+/// (across Newton iterations); [`find_mode_session`] does that locally.
+#[derive(Default)]
+pub struct LaplaceSession {
+    /// Converged mode b̃ of the previous evaluation (Newton start).
+    pub mode: Option<Vec<f64>>,
+    /// Previous evaluation's `s̃ = (W+Σ_†⁻¹)⁻¹ s` gradient helper
+    /// (CG initial guess for the next one).
+    pub s_tilde: Option<Vec<f64>>,
+    /// FITC preconditioner retained across evaluations: owns its panels
+    /// and its kMeans++ inducing set `Ẑ`, refreshed in place per θ.
+    pub fitc: Option<FitcPrecond>,
+    /// Per-objective-evaluation CG iteration deltas (scalar + batched),
+    /// recorded by the fit driver from the [`solve_stats`] registry.
+    pub eval_cg_iters: Vec<u64>,
+}
+
+impl LaplaceSession {
+    /// Reset at a re-selection round boundary: the preconditioner's
+    /// inducing set should be re-selected against the new structure, so
+    /// it is dropped; the mode and s̃ stay — they approximate the same
+    /// posterior latents and remain good guesses across rounds.
+    pub fn clear_for_new_round(&mut self) {
+        self.fitc = None;
+    }
+}
+
 /// Find the Laplace mode by damped Newton iterations.
 pub fn find_mode(
     s: &VifStructure,
@@ -51,8 +88,41 @@ pub fn find_mode(
     mode: &SolveMode,
     sigma_dense_cache: Option<&Mat>,
 ) -> LaplaceState {
+    find_mode_session(s, x, kernel, lik, y, mode, sigma_dense_cache, None)
+}
+
+/// [`find_mode`] with warm-start state: the Newton search starts from
+/// the previous evaluation's converged mode (instead of `b = 0`), each
+/// Newton solve warm-starts CG from the current iterate, and the
+/// preconditioner is refreshed in place across Newton iterations —
+/// θ-refreshed on the first (the carried one came from the previous θ),
+/// weights-only after. `session = None` is bitwise identical to
+/// [`find_mode`].
+#[allow(clippy::too_many_arguments)]
+pub fn find_mode_session(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &ArdMatern,
+    lik: &Likelihood,
+    y: &[f64],
+    mode: &SolveMode,
+    sigma_dense_cache: Option<&Mat>,
+    mut session: Option<&mut LaplaceSession>,
+) -> LaplaceState {
     let n = y.len();
+    let warm = session.is_some();
     let mut b = vec![0.0; n];
+    if let Some(sess) = session.as_deref_mut() {
+        // Previous θ's converged mode seeds the Newton search; the first
+        // evaluation (or a size change after appends) runs from zero.
+        match sess.mode.take() {
+            Some(m) if m.len() == n => {
+                b = m;
+                solve_stats().note_warm_hit();
+            }
+            _ => solve_stats().note_warm_miss(),
+        }
+    }
     let psi = |b: &[f64]| -> f64 {
         let quad = dot(b, &s.apply_sigma_dagger_inv(b));
         -lik.log_density_sum(y, b) + 0.5 * quad
@@ -70,16 +140,47 @@ pub fn find_mode(
         }),
         other => other.clone(),
     };
+    let mut carried_vifdu: Option<VifduPrecond> = None;
+    let mut carried_fitc: Option<FitcPrecond> =
+        session.as_deref_mut().and_then(|sess| sess.fitc.take());
+    let mut theta_changed = true;
+    let mut converged = false;
     for _ in 0..100 {
         let w: Vec<f64> = y.iter().zip(&b).map(|(yi, bi)| lik.w(*yi, *bi)).collect();
-        let solver = WSolver::new(s, x, kernel, w.clone(), mode, sigma_dense_cache);
+        let mut solver = if warm {
+            WSolver::new_session(
+                s,
+                x,
+                kernel,
+                w.clone(),
+                mode,
+                sigma_dense_cache,
+                carried_vifdu.take(),
+                carried_fitc.take(),
+                theta_changed,
+            )
+        } else {
+            WSolver::new(s, x, kernel, w.clone(), mode, sigma_dense_cache)
+        };
+        theta_changed = false;
         let rhs: Vec<f64> = y
             .iter()
             .zip(&b)
             .zip(&w)
             .map(|((yi, bi), wi)| wi * bi + lik.d1(*yi, *bi))
             .collect();
-        let b_new = solver.solve(&rhs);
+        // `b_new` is the full next mode (not an increment), so the
+        // current iterate is a natural CG starting point.
+        let b_new = if warm {
+            solver.solve_from(&rhs, Some(&b))
+        } else {
+            solver.solve(&rhs)
+        };
+        if warm {
+            let (cv, cf) = solver.take_preconds();
+            carried_vifdu = cv;
+            carried_fitc = cf;
+        }
         // Damped step on ψ.
         let mut step = 1.0;
         let mut accepted = false;
@@ -97,20 +198,19 @@ pub fn find_mode(
                 accepted = true;
                 iters += 1;
                 if delta < 1e-8 * (1.0 + psi_cur.abs()) {
-                    let w = y
-                        .iter()
-                        .zip(&b)
-                        .map(|(yi, bi)| lik.w(*yi, *bi))
-                        .collect();
-                    return LaplaceState { b, w, newton_iters: iters, psi: psi_cur };
+                    converged = true;
                 }
                 break;
             }
             step *= 0.5;
         }
-        if !accepted {
+        if converged || !accepted {
             break;
         }
+    }
+    if let Some(sess) = session {
+        sess.mode = Some(b.clone());
+        sess.fitc = carried_fitc;
     }
     let w = y.iter().zip(&b).map(|(yi, bi)| lik.w(*yi, *bi)).collect();
     LaplaceState { b, w, newton_iters: iters, psi: psi_cur }
@@ -420,12 +520,50 @@ pub fn nll_and_grad_panels(
     rng: &mut Rng,
     x_panels: Option<&NeighborPanels>,
 ) -> (f64, Vec<f64>, LaplaceState) {
+    nll_and_grad_panels_session(s, x, kernel, lik, y, mode, rng, x_panels, None)
+}
+
+/// [`nll_and_grad_panels`] with warm-start state: the mode search,
+/// preconditioner, and `s̃` solve all start from the previous
+/// evaluation's results (see [`LaplaceSession`]); the SLQ probe solves
+/// deliberately stay cold — their Lanczos tridiagonals require the pure
+/// Krylov recurrence. `session = None` is bitwise identical to
+/// [`nll_and_grad_panels`].
+#[allow(clippy::too_many_arguments)]
+pub fn nll_and_grad_panels_session(
+    s: &VifStructure,
+    x: &Mat,
+    kernel: &ArdMatern,
+    lik: &Likelihood,
+    y: &[f64],
+    mode: &SolveMode,
+    rng: &mut Rng,
+    x_panels: Option<&NeighborPanels>,
+    mut session: Option<&mut LaplaceSession>,
+) -> (f64, Vec<f64>, LaplaceState) {
     let sigma_cache = match mode {
         SolveMode::Cholesky => Some(s.dense_sigma_dagger()),
         _ => None,
     };
-    let state = find_mode(s, x, kernel, lik, y, mode, sigma_cache.as_ref());
-    let solver = WSolver::new(s, x, kernel, state.w.clone(), mode, sigma_cache.as_ref());
+    let state =
+        find_mode_session(s, x, kernel, lik, y, mode, sigma_cache.as_ref(), session.as_deref_mut());
+    // The mode search leaves its FITC preconditioner in the session; a
+    // weights-only refresh aligns it with W(b̃) for the logdet/gradient
+    // solves (θ is unchanged since the last Newton iteration).
+    let mut solver = match session.as_deref_mut() {
+        Some(sess) => WSolver::new_session(
+            s,
+            x,
+            kernel,
+            state.w.clone(),
+            mode,
+            sigma_cache.as_ref(),
+            None,
+            sess.fitc.take(),
+            false,
+        ),
+        None => WSolver::new(s, x, kernel, state.w.clone(), mode, sigma_cache.as_ref()),
+    };
     let (logdet, probes) = solver.logdet_and_probes(rng);
     let value = state.psi + 0.5 * logdet;
 
@@ -440,10 +578,21 @@ pub fn nll_and_grad_panels(
     let s_vec: Vec<f64> = (0..n)
         .map(|i| -0.5 * lik.d3(y[i], state.b[i]) * diag[i])
         .collect();
-    let s_tilde = solver.solve(&s_vec);
+    let s_tilde = match session.as_deref_mut() {
+        Some(sess) => {
+            let guess = sess.s_tilde.take().filter(|g| g.len() == n);
+            solver.solve_from(&s_vec, guess.as_deref())
+        }
+        None => solver.solve(&s_vec),
+    };
 
-    // θ gradients.
-    for p in 0..nk {
+    // θ gradients: each parameter's trace/quadratic terms are
+    // independent solves above the column-blocked layer, so they fan out
+    // onto the process-wide pool (nested probe-level parallelism inside
+    // collapses deterministically on pool workers). The arithmetic per p
+    // is identical to the sequential loop, so results do not depend on
+    // thread count.
+    let theta_grads: Vec<f64> = crate::coordinator::parallel_map_heavy(nk, |p| {
         let g1 = pack.apply_dsig_dagger_inv(s, p, &state.b);
         // ∂logdet(Σ_†W+I)/∂θ
         let dld = match (&mode, &probes) {
@@ -483,8 +632,9 @@ pub fn nll_and_grad_panels(
             }
             _ => unreachable!("iterative mode always retains probes"),
         };
-        grad[p] = 0.5 * dot(&state.b, &g1) + 0.5 * dld - dot(&s_tilde, &g1);
-    }
+        0.5 * dot(&state.b, &g1) + 0.5 * dld - dot(&s_tilde, &g1)
+    });
+    grad[..nk].copy_from_slice(&theta_grads);
 
     // Auxiliary-parameter gradients.
     if naux > 0 {
@@ -496,6 +646,13 @@ pub fn nll_and_grad_panels(
                 grad[nk + l] += -daux[l] + 0.5 * diag[i] * dwa[l] + s_tilde[i] * dadb[l];
             }
         }
+    }
+
+    // Hand the reusable pieces back for the next evaluation.
+    if let Some(sess) = session {
+        let (_, carried_fitc) = solver.take_preconds();
+        sess.fitc = carried_fitc;
+        sess.s_tilde = Some(s_tilde);
     }
 
     (value, grad, state)
@@ -1451,13 +1608,22 @@ impl FitModel for VifLaplaceModel {
         self.lik = lik;
     }
 
-    fn eval(&self, plan: &VifPlan, s: &mut VifStructure, packed: &[f64]) -> (f64, Vec<f64>) {
+    fn eval(
+        &self,
+        plan: &VifPlan,
+        s: &mut VifStructure,
+        packed: &[f64],
+        session: &mut super::FitSession,
+    ) -> (f64, Vec<f64>) {
         let (kernel, lik) = self.unpack(packed);
         // Latent scale: nugget = 0 in every refresh.
         s.refresh(plan, &self.x, &kernel, 0.0, self.config.jitter);
-        // Common random numbers: same probe seed at every θ.
-        let mut rng = Rng::seed_from(self.config.seed ^ 0xC0FFEE);
-        let (v, g, _) = nll_and_grad_panels(
+        // Common random numbers: same probe seed at every θ within a
+        // round; the session tag re-draws them at re-selection rounds
+        // (it is 0 when cold or in round 0, reproducing the legacy seed).
+        let mut rng = Rng::seed_from(self.config.seed ^ 0xC0FFEE ^ session.probe_tag());
+        let laplace_session = session.warm().then_some(&mut session.laplace);
+        let (v, g, _) = nll_and_grad_panels_session(
             s,
             &self.x,
             &kernel,
@@ -1466,6 +1632,7 @@ impl FitModel for VifLaplaceModel {
             &self.mode,
             &mut rng,
             Some(&plan.x_panels),
+            laplace_session,
         );
         (v, g)
     }

@@ -21,8 +21,9 @@
 use std::sync::OnceLock;
 
 use crate::iterative::{
-    map_columns, pcg, pcg_batch, slq_logdet_opts, solve_stats, FitcPrecond, IdentityPrecond,
-    IterConfig, LinOp, PrecondType, SlqRun, SolveDiag, SolveFailure, VifduPrecond,
+    map_columns, pcg_batch, pcg_with_min_from, slq_logdet_opts, solve_stats, FitcPrecond,
+    IdentityPrecond, IterConfig, LinOp, PrecondType, Preconditioner, SlqRun, SolveDiag,
+    SolveFailure, VifduPrecond,
 };
 use crate::kernels::ArdMatern;
 use crate::linalg::{dot, CholeskyFactor, Mat};
@@ -185,6 +186,91 @@ impl<'a> WSolver<'a> {
         }
     }
 
+    /// Session-aware constructor: like [`new`](Self::new), but in
+    /// iterative mode a preconditioner carried over from the previous
+    /// `W` (or the previous θ) is *refreshed in place* instead of
+    /// rebuilt, mirroring the `VifPlan`/`refresh` split:
+    ///
+    /// * a carried [`VifduPrecond`] (borrowing the same structure) gets
+    ///   its diagonal and m×m core recomputed for the new `w`;
+    /// * a carried [`FitcPrecond`] keeps its kMeans++ inducing set `Ẑ`:
+    ///   with `theta_changed` the θ-dependent panels are recomputed
+    ///   against `Ẑ`, otherwise only the `D_V` diagonal and k×k core
+    ///   (weights-only Newton step).
+    ///
+    /// Each reuse is counted as a warm hit in
+    /// [`solve_stats`]; an unusable carry (size mismatch after
+    /// `append_points`, first evaluation) counts a warm miss and falls
+    /// back to a cold build. [`new`](Self::new) itself counts nothing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_session(
+        s: &'a VifStructure,
+        x: &Mat,
+        kernel: &ArdMatern,
+        w: Vec<f64>,
+        mode: &SolveMode,
+        sigma_dense_cache: Option<&Mat>,
+        carried_vifdu: Option<VifduPrecond<'a>>,
+        carried_fitc: Option<FitcPrecond>,
+        theta_changed: bool,
+    ) -> Self {
+        let SolveMode::Iterative(cfg) = mode else {
+            return Self::new(s, x, kernel, w, mode, sigma_dense_cache);
+        };
+        let (vifdu, fitc) = match cfg.precond {
+            PrecondType::Vifdu => {
+                let p = match carried_vifdu {
+                    Some(mut p) if p.n() == s.n() => {
+                        p.refresh(&w);
+                        solve_stats().note_warm_hit();
+                        p
+                    }
+                    _ => {
+                        solve_stats().note_warm_miss();
+                        VifduPrecond::new(s, &w)
+                    }
+                };
+                (Some(p), None)
+            }
+            PrecondType::Fitc => {
+                let p = match carried_fitc {
+                    Some(mut p) if p.n() == x.rows() && p.k() == cfg.fitc_k.min(x.rows()) => {
+                        if theta_changed {
+                            p.refresh(x, kernel, &w);
+                        } else {
+                            p.refresh_weights(&w);
+                        }
+                        solve_stats().note_warm_hit();
+                        p
+                    }
+                    _ => {
+                        solve_stats().note_warm_miss();
+                        FitcPrecond::new(x, kernel, cfg.fitc_k, &w, cfg.seed ^ 0x5eed)
+                    }
+                };
+                (None, Some(p))
+            }
+            PrecondType::None => (None, None),
+        };
+        WSolver {
+            s,
+            w,
+            mode: mode.clone(),
+            dense: None,
+            vifdu,
+            fitc,
+            vifdu_upgrade: OnceLock::new(),
+            fallback: OnceLock::new(),
+        }
+    }
+
+    /// Hand the owned preconditioners back to the session so the next
+    /// `W` (or the next θ) refreshes them instead of rebuilding. The
+    /// solver must not be used afterwards.
+    pub fn take_preconds(&mut self) -> (Option<VifduPrecond<'a>>, Option<FitcPrecond>) {
+        (self.vifdu.take(), self.fitc.take())
+    }
+
     /// The VIFDU preconditioner to use: the configured one, or — on the
     /// escalated retry when the configuration runs unpreconditioned — a
     /// lazily built upgrade.
@@ -244,25 +330,54 @@ impl<'a> WSolver<'a> {
 
     /// One iterative attempt at `(W + Σ_†⁻¹)⁻¹ v`, classified.
     /// `escalate` raises the CG budget 4× and upgrades a `None`
-    /// preconditioner to VIFDU.
-    fn solve_attempt(&self, cfg: &IterConfig, v: &[f64], escalate: bool) -> (Vec<f64>, SolveDiag) {
+    /// preconditioner to VIFDU. `x0` warm-starts CG from a previous
+    /// solution of a nearby system (`None` reproduces the cold start
+    /// bit for bit).
+    fn solve_attempt(
+        &self,
+        cfg: &IterConfig,
+        v: &[f64],
+        escalate: bool,
+        x0: Option<&[f64]>,
+    ) -> (Vec<f64>, SolveDiag) {
         let max_cg = if escalate { cfg.max_cg * 4 } else { cfg.max_cg };
         match cfg.precond {
             PrecondType::Vifdu | PrecondType::None => {
                 let op = OpWPlusPrec { s: self.s, w: &self.w };
                 let res = match self.vifdu_precond(escalate) {
-                    Some(p) => pcg(&op, p, v, cfg.cg_tol, max_cg, false),
-                    None => pcg(&op, &IdentityPrecond(self.s.n()), v, cfg.cg_tol, max_cg, false),
+                    Some(p) => pcg_with_min_from(&op, p, v, x0, cfg.cg_tol, 0, max_cg, false),
+                    None => pcg_with_min_from(
+                        &op,
+                        &IdentityPrecond(self.s.n()),
+                        v,
+                        x0,
+                        cfg.cg_tol,
+                        0,
+                        max_cg,
+                        false,
+                    ),
                 };
                 let mut diag = res.diag();
                 diag.retried = escalate;
                 (res.x, diag)
             }
             PrecondType::Fitc => {
-                // (W+Σ⁻¹)⁻¹v = W⁻¹ (W⁻¹+Σ)⁻¹ Σ v
+                // (W+Σ⁻¹)⁻¹v = W⁻¹ (W⁻¹+Σ)⁻¹ Σ v. An external guess x0
+                // for the outer system maps to u0 = W·x0 for the inner.
                 let op = OpWinvPlusCov { s: self.s, w: &self.w };
                 let rhs = self.s.apply_sigma_dagger(v);
-                let res = pcg(&op, self.fitc.as_ref().unwrap(), &rhs, cfg.cg_tol, max_cg, false);
+                let u0: Option<Vec<f64>> =
+                    x0.map(|g| g.iter().zip(&self.w).map(|(gi, wi)| gi * wi).collect());
+                let res = pcg_with_min_from(
+                    &op,
+                    self.fitc.as_ref().unwrap(),
+                    &rhs,
+                    u0.as_deref(),
+                    cfg.cg_tol,
+                    0,
+                    max_cg,
+                    false,
+                );
                 let mut diag = res.diag();
                 diag.retried = escalate;
                 (
@@ -331,21 +446,31 @@ impl<'a> WSolver<'a> {
     /// `(W + Σ_†⁻¹)⁻¹ v`, contained: on a classified failure the
     /// escalation ladder runs (retry → dense fallback → best effort).
     pub fn solve(&self, v: &[f64]) -> Vec<f64> {
+        self.solve_from(v, None)
+    }
+
+    /// [`solve`](Self::solve) warm-started from `x0`, a previous
+    /// solution of a nearby system (previous Newton iterate, previous
+    /// θ's solve). Only the *first* attempt uses the guess: the
+    /// escalated retry and the dense backstop always run cold, so the
+    /// containment ladder's behavior is guess-independent. `x0 = None`
+    /// is bitwise identical to [`solve`](Self::solve).
+    pub fn solve_from(&self, v: &[f64], x0: Option<&[f64]>) -> Vec<f64> {
         match &self.mode {
             SolveMode::Cholesky => {
-                // (W+Σ⁻¹)⁻¹ = Σ − ΣW½ B_K⁻¹ W½Σ
+                // (W+Σ⁻¹)⁻¹ = Σ − ΣW½ B_K⁻¹ W½Σ  (direct: x0 is moot)
                 let (sigma, chol) = self.dense.as_ref().unwrap();
                 self.dense_apply(sigma, chol, v)
             }
             SolveMode::Iterative(cfg) => {
-                let (x, diag) = self.solve_attempt(cfg, v, false);
+                let (x, diag) = self.solve_attempt(cfg, v, false, x0);
                 let Some(failure) = diag.failure else {
                     return x;
                 };
                 let stats = solve_stats();
                 stats.note_failure(failure);
                 stats.note_retry();
-                let (x2, diag2) = self.solve_attempt(cfg, v, true);
+                let (x2, diag2) = self.solve_attempt(cfg, v, true, None);
                 if diag2.failure.is_none() {
                     stats.note_retry_success();
                     return x2;

@@ -118,6 +118,43 @@
 //!    mismatches degrade softly and observably
 //!    ([`predict::pred_search_cache_misses`]), mirroring the
 //!    [`predict::lr_panel_cache_misses`] precedent.
+//!
+//! # Warm-start lifecycle (the fit-trajectory analogue of plan/refresh)
+//!
+//! Consecutive L-BFGS objective evaluations sit at nearby θ, so the
+//! expensive iterative state of one evaluation is an excellent starting
+//! point for the next. A [`FitSession`] threads that state along the
+//! whole trajectory, extending the plan/refresh split in time:
+//!
+//! * **CG initial guesses** — the previous evaluation's solutions seed
+//!   [`crate::iterative::pcg_with_min_from`]: the Laplace Newton solves
+//!   start from the current mode iterate, and the `s̃` gradient helper
+//!   starts from the previous θ's `s̃`. SLQ probe solves always run
+//!   cold: their Lanczos tridiagonals need the pure Krylov recurrence
+//!   from `r₀ = b` (enforced by an assert).
+//! * **Preconditioner refresh-in-place** — the FITC preconditioner keeps
+//!   its kMeans++ inducing set `Ẑ` across evaluations
+//!   ([`crate::iterative::FitcPrecond::refresh`]), and successive Newton
+//!   iterations recompute only its weight diagonal
+//!   ([`crate::iterative::FitcPrecond::refresh_weights`]); the VIFDU
+//!   preconditioner refreshes across Newton iterations within one
+//!   evaluation ([`crate::iterative::VifduPrecond::refresh`] — it
+//!   borrows the structure, which the driver refreshes mutably between
+//!   evaluations, so it cannot cross them).
+//! * **Laplace mode carry-over** — each Newton search starts from the
+//!   previous evaluation's converged mode instead of `b = 0`.
+//! * **Per-round probe draws** — the SLQ probe seed is fixed within a
+//!   round (common random numbers keep the stochastic objective smooth
+//!   along the trajectory) and re-drawn at re-selection rounds via
+//!   [`FitSession::probe_tag`].
+//!
+//! Everything carried is a guess or a refreshable cache: the session
+//! changes *where iterative solvers start*, never what they converge
+//! to. The cold path remains the oracle — `VIFGP_WARM_START=0` (or
+//! [`fit_with_reselection_session`] with `warm = false`) reproduces the
+//! legacy fit bit for bit, and warm-start reuse is observable through
+//! the `warm_hits`/`warm_misses`/`cg_iters` counters of
+//! [`crate::iterative::solve_stats`].
 
 pub mod gaussian;
 pub mod laplace;
@@ -1565,8 +1602,18 @@ pub trait FitModel {
     fn adopt_params(&mut self, packed: &[f64]);
     /// Objective value + gradient at `packed`: numerically refresh `s`
     /// (shaped by `plan`) in place and evaluate — no symbolic work and
-    /// no structure-choice clones on this path.
-    fn eval(&self, plan: &VifPlan, s: &mut VifStructure, packed: &[f64]) -> (f64, Vec<f64>);
+    /// no structure-choice clones on this path. `session` carries
+    /// warm-start state across consecutive evaluations (see the
+    /// module-level "Warm-start lifecycle" section); models with direct
+    /// solves (Gaussian) ignore it, and a cold session must reproduce
+    /// the session-free evaluation bit for bit.
+    fn eval(
+        &self,
+        plan: &VifPlan,
+        s: &mut VifStructure,
+        packed: &[f64],
+        session: &mut FitSession,
+    ) -> (f64, Vec<f64>);
     /// Objective at the current parameters on the freshly re-selected
     /// structure (drives the between-round convergence check).
     fn round_nll(&mut self) -> f64;
@@ -1590,18 +1637,119 @@ pub trait FitModel {
     fn compact(&mut self);
 }
 
+/// Warm-start state threaded through [`fit_with_reselection`] across
+/// consecutive L-BFGS objective evaluations (the module-level
+/// "Warm-start lifecycle" section is the overview). A *cold* session
+/// (`warm = false`) carries nothing and tags nothing: evaluations are
+/// bit-for-bit identical to the session-free path, which stays the
+/// oracle for the warm one.
+pub struct FitSession {
+    warm: bool,
+    round: usize,
+    /// Laplace-specific carried state (mode, s̃, FITC preconditioner).
+    pub laplace: laplace::LaplaceSession,
+}
+
+impl FitSession {
+    pub fn new(warm: bool) -> Self {
+        FitSession { warm, round: 0, laplace: laplace::LaplaceSession::default() }
+    }
+
+    /// A session that never carries state (the oracle path).
+    pub fn cold() -> Self {
+        Self::new(false)
+    }
+
+    /// Whether evaluations may reuse state from previous ones.
+    pub fn warm(&self) -> bool {
+        self.warm
+    }
+
+    /// Re-selection round boundary: structure choices changed, so the
+    /// structure-shaped carried state is dropped (the mode and s̃
+    /// survive — they approximate the same posterior latents) and the
+    /// SLQ probe tag advances.
+    pub fn start_round(&mut self) {
+        self.round += 1;
+        self.laplace.clear_for_new_round();
+    }
+
+    /// Per-round SLQ probe-seed tag, XORed into the common-random-number
+    /// seed: 0 when cold *and* in round 0 (reproducing the legacy
+    /// probes), a round-indexed splitmix constant afterwards — probes
+    /// are fixed along a round's trajectory and redrawn only at
+    /// re-selection rounds.
+    pub fn probe_tag(&self) -> u64 {
+        if !self.warm || self.round == 0 {
+            0
+        } else {
+            (self.round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        }
+    }
+
+    /// Per-objective-evaluation CG iteration deltas recorded by the fit
+    /// driver (scalar + batched solves, from the
+    /// [`crate::iterative::solve_stats`] registry).
+    pub fn eval_cg_iters(&self) -> &[u64] {
+        &self.laplace.eval_cg_iters
+    }
+}
+
+/// Whether [`fit_with_reselection`] runs warm-started (`VIFGP_WARM_START`,
+/// default on). Cached after the first read; malformed values panic
+/// loudly rather than guessing.
+pub fn warm_start_enabled() -> bool {
+    use std::sync::OnceLock;
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| match std::env::var("VIFGP_WARM_START") {
+        Ok(v) => parse_warm_start(&v),
+        Err(_) => true,
+    })
+}
+
+/// Parse a `VIFGP_WARM_START` value: `1` = warm-started fitting, `0` =
+/// the cold oracle path. Anything else panics, naming knob and value —
+/// a typo must not silently change which solver path benchmarks run.
+fn parse_warm_start(v: &str) -> bool {
+    match v {
+        "1" => true,
+        "0" => false,
+        other => panic!(
+            "VIFGP_WARM_START must be `0` (cold oracle) or `1` (warm-started), got `{other}`"
+        ),
+    }
+}
+
 /// Shared fit driver (§6 cadence) for Gaussian and Laplace models: up to
 /// `rounds` rounds of {freeze structure choices into a [`VifPlan`] →
 /// L-BFGS with in-place [`VifStructure::refresh`] per evaluation →
 /// adopt parameters → re-select}, stopping early when the re-selected
 /// objective stops moving. Exactly one plan build and one structure
 /// assembly happen per round; every intermediate L-BFGS evaluation
-/// borrows them. Returns the final objective value.
+/// borrows them. Consecutive evaluations share a [`FitSession`]
+/// (warm-started unless `VIFGP_WARM_START=0`). Returns the final
+/// objective value.
 pub fn fit_with_reselection<M: FitModel>(model: &mut M, max_iters: usize, rounds: usize) -> f64 {
+    fit_with_reselection_session(model, max_iters, rounds, warm_start_enabled())
+}
+
+/// [`fit_with_reselection`] with the warm/cold choice made explicitly —
+/// the in-process entry point for tests and benches (the env knob is
+/// cached process-wide, so it cannot be flipped between fits).
+pub fn fit_with_reselection_session<M: FitModel>(
+    model: &mut M,
+    max_iters: usize,
+    rounds: usize,
+    warm: bool,
+) -> f64 {
     model.reselect();
     let mut packed = model.pack_params();
     let mut last = f64::INFINITY;
-    for _round in 0..rounds {
+    let session = RefCell::new(FitSession::new(warm));
+    for round in 0..rounds {
+        if round > 0 {
+            session.borrow_mut().start_round();
+        }
         // Freeze the structure choices for this round: the plan and
         // structure built by `reselect` move out of the model and every
         // objective evaluation below refreshes them in place.
@@ -1613,7 +1761,11 @@ pub fn fit_with_reselection<M: FitModel>(model: &mut M, max_iters: usize, rounds
             let cell = RefCell::new(scratch);
             let f = |p: &[f64]| -> (f64, Vec<f64>) {
                 let mut s = cell.borrow_mut();
-                let (v, mut g) = m.eval(&plan, &mut s, p);
+                let mut sess = session.borrow_mut();
+                let before = crate::iterative::solve_stats().snapshot().cg_iters;
+                let (v, mut g) = m.eval(&plan, &mut s, p, &mut sess);
+                let after = crate::iterative::solve_stats().snapshot().cg_iters;
+                sess.laplace.eval_cg_iters.push(after.saturating_sub(before));
                 // Containment: a non-finite objective or gradient is
                 // sanitized to (+∞, finite gradient) so the L-BFGS line
                 // search rejects the step (it only accepts finite trial

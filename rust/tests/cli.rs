@@ -147,6 +147,46 @@ fn malformed_simd_env_panics_loudly() {
     }
 }
 
+/// `VIFGP_WARM_START` is a strict two-state switch like `VIFGP_SIMD`:
+/// `0` (cold oracle) and `1` (warm-started fitting) are accepted,
+/// anything else must panic at startup naming the knob and the value
+/// rather than silently picking a solver path.
+#[test]
+fn malformed_warm_start_env_panics_loudly() {
+    for bad in ["2", "yes", "true", "on", ""] {
+        let out = vifgp().args(["info"]).env("VIFGP_WARM_START", bad).output().expect("spawn");
+        assert!(!out.status.success(), "VIFGP_WARM_START={bad:?} must fail");
+        let err = stderr(&out);
+        assert!(
+            err.contains("VIFGP_WARM_START") && err.contains(bad),
+            "VIFGP_WARM_START={bad:?} stderr must name the knob and value: {err}"
+        );
+    }
+    for good in ["0", "1"] {
+        let out = vifgp().args(["info"]).env("VIFGP_WARM_START", good).output().expect("spawn");
+        assert!(out.status.success(), "VIFGP_WARM_START={good} must succeed: {}", stderr(&out));
+    }
+}
+
+/// The `--warm-start` flag mirrors the env knob: strict `0`/`1`, exit 2
+/// naming flag and value otherwise.
+#[test]
+fn malformed_warm_start_flag_exits_2() {
+    for bad in ["2", "warm", ""] {
+        let out = run(&["info", "--warm-start", bad]);
+        assert_eq!(out.status.code(), Some(2), "--warm-start {bad:?} should exit 2");
+        let err = stderr(&out);
+        assert!(
+            err.contains("--warm-start") && err.contains(bad),
+            "--warm-start {bad:?} stderr must name the flag and value: {err}"
+        );
+    }
+    for good in ["0", "1"] {
+        let out = run(&["info", "--warm-start", good]);
+        assert!(out.status.success(), "--warm-start {good} must succeed: {}", stderr(&out));
+    }
+}
+
 /// Happy path: simulate a small dataset, train on it, then serve it with
 /// a writer publishing generations under traffic. Exercises the full
 /// flag surface end to end.

@@ -1,0 +1,210 @@
+//! Warm-started fitting (`FitSession`) contract tests: a cold session is
+//! the oracle (Gaussian fits are bitwise identical warm vs cold), a warm
+//! Laplace fit must land on the same final NLL as a cold one to ≤1e-6,
+//! SLQ probes are common-random-number deterministic on identical seeds,
+//! and the per-round probe tag is 0 in round 0 (legacy probes) and
+//! advances only at re-selection rounds.
+
+use vifgp::iterative::{solve_stats, IterConfig, PrecondType};
+use vifgp::kernels::{ArdMatern, Smoothness};
+use vifgp::likelihoods::Likelihood;
+use vifgp::linalg::Mat;
+use vifgp::rng::Rng;
+use vifgp::testing::random_points;
+use vifgp::vecchia::neighbors::NeighborSelection;
+use vifgp::vif::laplace::{self, SolveMode, VifLaplaceModel};
+use vifgp::vif::{
+    fit_with_reselection_session, gaussian, select_inducing, select_neighbors, FitSession,
+    LowRank, VifConfig, VifPlan, VifStructure,
+};
+
+fn small_config(seed: u64) -> VifConfig {
+    VifConfig {
+        num_inducing: 8,
+        num_neighbors: 4,
+        selection: NeighborSelection::EuclideanTransformed,
+        lloyd_iters: 2,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Binary classification targets sampled from a latent GP draw.
+fn binary_problem(n: usize, seed: u64) -> (Mat, Vec<f64>, ArdMatern) {
+    let mut rng = Rng::seed_from(seed);
+    let x = random_points(&mut rng, n, 2);
+    let kernel = ArdMatern::new(1.2, vec![0.3, 0.45], Smoothness::ThreeHalves);
+    let z = select_inducing(&x, &kernel, 8, 2, &mut rng, None);
+    let lr = z.clone().map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+    let nb = select_neighbors(&x, &kernel, lr.as_ref(), 4, NeighborSelection::CorrelationBruteForce);
+    let s = VifStructure::assemble(&x, &kernel, z, nb, 0.0, 1e-10, 0);
+    let b = s.sample(&mut rng);
+    let y: Vec<f64> = b
+        .iter()
+        .map(|bi| {
+            if rng.bernoulli(vifgp::likelihoods::sigmoid(*bi)) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    (x, y, kernel)
+}
+
+/// Gaussian evaluations are direct (Woodbury + Cholesky, no CG), so the
+/// session carries nothing for them: a warm fit must be bitwise
+/// identical to a cold one — final NLL and adopted parameters alike.
+#[test]
+fn gaussian_warm_fit_is_bitwise_identical_to_cold() {
+    let build = || {
+        let mut rng = Rng::seed_from(31);
+        let x = random_points(&mut rng, 60, 2);
+        let kernel = ArdMatern::new(1.1, vec![0.35, 0.4], Smoothness::ThreeHalves);
+        let latent = vifgp::data::simulate_latent_gp(&mut rng, &x, &kernel);
+        let y: Vec<f64> = latent.iter().map(|l| l + 0.2 * rng.normal()).collect();
+        let start = gaussian::GaussianParams {
+            kernel: ArdMatern::new(0.7, vec![0.6, 0.3], Smoothness::ThreeHalves),
+            noise: 0.3,
+        };
+        gaussian::VifRegression::new(x, y, small_config(3), start)
+    };
+    let mut warm_model = build();
+    let mut cold_model = build();
+    let warm_nll = fit_with_reselection_session(&mut warm_model, 10, 2, true);
+    let cold_nll = fit_with_reselection_session(&mut cold_model, 10, 2, false);
+    assert_eq!(
+        warm_nll.to_bits(),
+        cold_nll.to_bits(),
+        "gaussian warm {warm_nll} vs cold {cold_nll}"
+    );
+    let pw = warm_model.params.pack();
+    let pc = cold_model.params.pack();
+    for (a, b) in pw.iter().zip(&pc) {
+        assert_eq!(a.to_bits(), b.to_bits(), "params diverged: {a} vs {b}");
+    }
+}
+
+/// A warm Laplace fit (Newton mode carry-over) must reach the same final
+/// NLL as a cold one to ≤1e-6. Cholesky mode: every solve is exact, so
+/// the only warm/cold difference is the Newton starting point, which the
+/// 1e-8 mode-convergence tolerance bounds.
+#[test]
+fn laplace_warm_fit_matches_cold_nll_cholesky() {
+    let (x, y, _) = binary_problem(40, 7);
+    let init = ArdMatern::new(1.0, vec![0.4, 0.5], Smoothness::ThreeHalves);
+    let build = |x: &Mat, y: &[f64]| {
+        VifLaplaceModel::new(
+            x.clone(),
+            y.to_vec(),
+            small_config(5),
+            SolveMode::Cholesky,
+            init.clone(),
+            Likelihood::BernoulliLogit,
+        )
+    };
+    let mut warm_model = build(&x, &y);
+    let mut cold_model = build(&x, &y);
+    let warm_nll = fit_with_reselection_session(&mut warm_model, 8, 2, true);
+    let cold_nll = fit_with_reselection_session(&mut cold_model, 8, 2, false);
+    assert!(
+        (warm_nll - cold_nll).abs() <= 1e-6 * (1.0 + cold_nll.abs()),
+        "warm {warm_nll} vs cold {cold_nll}"
+    );
+}
+
+/// Same contract on the iterative path (VIFDU + tight CG): warm starts
+/// change iteration counts, not answers. Also checks that the fit
+/// actually reused carried state (warm-hit counter moved).
+#[test]
+fn laplace_warm_fit_matches_cold_nll_iterative() {
+    let (x, y, _) = binary_problem(48, 13);
+    let init = ArdMatern::new(1.0, vec![0.4, 0.5], Smoothness::ThreeHalves);
+    let cfg = IterConfig {
+        precond: PrecondType::Vifdu,
+        ell: 6,
+        cg_tol: 1e-8,
+        slq_min_iter: 10,
+        ..Default::default()
+    };
+    let build = |x: &Mat, y: &[f64]| {
+        VifLaplaceModel::new(
+            x.clone(),
+            y.to_vec(),
+            small_config(5),
+            SolveMode::Iterative(cfg.clone()),
+            init.clone(),
+            Likelihood::BernoulliLogit,
+        )
+    };
+    let mut cold_model = build(&x, &y);
+    let cold_nll = fit_with_reselection_session(&mut cold_model, 6, 1, false);
+    let hits_before = solve_stats().snapshot().warm_hits;
+    let mut warm_model = build(&x, &y);
+    let warm_nll = fit_with_reselection_session(&mut warm_model, 6, 1, true);
+    let hits_after = solve_stats().snapshot().warm_hits;
+    assert!(
+        (warm_nll - cold_nll).abs() <= 1e-6 * (1.0 + cold_nll.abs()),
+        "warm {warm_nll} vs cold {cold_nll}"
+    );
+    assert!(
+        hits_after > hits_before,
+        "a warm fit must reuse carried state (hits {hits_before} -> {hits_after})"
+    );
+}
+
+/// SLQ probes are CRN-deterministic: two evaluations from identical RNG
+/// seeds draw identical probe vectors and produce bitwise-identical
+/// log-determinants — the property the per-round probe tag relies on to
+/// keep probes fixed along a round's L-BFGS trajectory.
+#[test]
+fn slq_probes_are_fixed_on_identical_seeds() {
+    let (x, y, kernel) = binary_problem(44, 23);
+    let mut rng = Rng::seed_from(23);
+    let z = select_inducing(&x, &kernel, 8, 2, &mut rng, None);
+    let lr = z.clone().map(|z| LowRank::build(&x, &kernel, z, 1e-10));
+    let nb = select_neighbors(&x, &kernel, lr.as_ref(), 4, NeighborSelection::CorrelationBruteForce);
+    let plan = VifPlan::build(&x, z, nb);
+    let s = VifStructure::from_plan(&x, &kernel, &plan, 0.0, 1e-10, 0);
+    let lik = Likelihood::BernoulliLogit;
+    let mode = SolveMode::Iterative(IterConfig {
+        precond: PrecondType::Vifdu,
+        ell: 6,
+        cg_tol: 1e-6,
+        slq_min_iter: 10,
+        ..Default::default()
+    });
+    let mut r1 = Rng::seed_from(77);
+    let (v1, _) = laplace::nll(&s, &x, &kernel, &lik, &y, &mode, &mut r1);
+    let mut r2 = Rng::seed_from(77);
+    let (v2, _) = laplace::nll(&s, &x, &kernel, &lik, &y, &mode, &mut r2);
+    assert_eq!(v1.to_bits(), v2.to_bits(), "{v1} vs {v2}");
+    // A different seed must actually draw different probes (the
+    // determinism above is CRN, not probe-independence).
+    let mut r3 = Rng::seed_from(78);
+    let (v3, _) = laplace::nll(&s, &x, &kernel, &lik, &y, &mode, &mut r3);
+    assert_ne!(v1.to_bits(), v3.to_bits(), "distinct seeds should move the SLQ estimate");
+}
+
+/// The probe tag: 0 for cold sessions and for round 0 of warm ones (so
+/// the first warm round reproduces the legacy probe draws bit for bit),
+/// then a distinct nonzero tag per re-selection round.
+#[test]
+fn probe_tag_is_zero_in_round_zero_and_advances_per_round() {
+    let mut warm = FitSession::new(true);
+    assert!(warm.warm());
+    assert_eq!(warm.probe_tag(), 0, "round 0 must reproduce legacy probes");
+    warm.start_round();
+    let t1 = warm.probe_tag();
+    assert_ne!(t1, 0);
+    warm.start_round();
+    let t2 = warm.probe_tag();
+    assert_ne!(t2, 0);
+    assert_ne!(t1, t2, "each round must redraw probes");
+
+    let mut cold = FitSession::cold();
+    assert!(!cold.warm());
+    assert_eq!(cold.probe_tag(), 0);
+    cold.start_round();
+    assert_eq!(cold.probe_tag(), 0, "cold sessions never re-tag probes");
+}
